@@ -1,0 +1,40 @@
+"""Paper Fig. 8/15: attention backward (GQA + MHA, causal/non-causal).
+
+Derived: modeled v5e TFLOP/s for the two-pass flash backward (dq + dkv ≈
+2.5x forward FLOPs); measured: grad of the reference path at scaled shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import perf_model as pm
+from repro.kernels.attention import attention
+from .common import time_fn, emit
+
+
+def main() -> None:
+    for name, h, hkv in (("mha", 16, 16), ("gqa", 64, 8)):
+        for seq in (2048, 4096, 8192, 16384):
+            for causal in (False, True):
+                fwd = pm.attention_step_model(
+                    block_q=128, block_kv=128, head_dim=128, seq_len=seq,
+                    causal=causal, dtype_bytes=2)
+                # flash bwd: dq pass + dkv pass, each ~fwd compute + extra dp
+                modeled = fwd["modeled_tflops"] * (5.0 / 2.0) / 2.9
+                tag = f"attn_bwd_{name}_s{seq}_{'causal' if causal else 'full'}"
+                b_s, s_s, d = 1, min(seq, 512), 128
+                ks = jax.random.split(jax.random.PRNGKey(0), 3)
+                q = jax.random.normal(ks[0], (b_s, 4, s_s, d))
+                k = jax.random.normal(ks[1], (b_s, 2, s_s, d))
+                v = jax.random.normal(ks[2], k.shape)
+                fn = jax.jit(jax.grad(lambda q, k, v: attention(
+                    q, k, v, causal=causal, mode="reference").sum(),
+                    argnums=(0, 1, 2)))
+                us = time_fn(fn, q, k, v, warmup=2, iters=5)
+                emit(tag, us, f"modeled_tflops={modeled:.0f};"
+                     f"bound={fwd['bound']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Paper Fig. 7/16/17: attention forward (MHA + GQA, causal/non-causal,
+head dim 64/128) at the paper's shapes (batch 16, 16/64 q heads).
+
+Derived: modeled v5e TFLOP/s from the flash pipeline model; measured: the
+chunked-XLA reference fwd at a scaled shape (CPU feasibility).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import perf_model as pm
+from repro.kernels.attention import attention
+from .common import time_fn, emit
+
+
+def main() -> None:
+    # paper configuration sweep -> modeled numbers at full scale
+    for name, h, hkv, d in (("mha", 16, 16, 128), ("mha_d64", 16, 16, 64),
+                            ("gqa", 64, 8, 128), ("gqa_d64", 64, 8, 64)):
+        for seq in (2048, 4096, 8192, 16384):
+            for causal in (False, True):
+                m = pm.attention_step_model(
+                    block_q=128, block_kv=128, head_dim=d, seq_len=seq,
+                    causal=causal, dtype_bytes=2)
+                tag = f"attn_fwd_{name}_s{seq}_{'causal' if causal else 'full'}"
+                # measured: scaled-down reference path on CPU
+                b_s, s_s = 1, min(seq, 1024)
+                ks = jax.random.split(jax.random.PRNGKey(0), 3)
+                q = jax.random.normal(ks[0], (b_s, 4, s_s, d), jnp.float32)
+                k = jax.random.normal(ks[1], (b_s, max(1, 4 * hkv // h), s_s, d))
+                v = jax.random.normal(ks[2], k.shape)
+                fn = jax.jit(lambda q, k, v: attention(
+                    q, k, v, causal=causal, mode="reference"))
+                us = time_fn(fn, q, k, v, warmup=2, iters=5)
+                emit(tag, us, f"modeled_tflops={m['modeled_tflops']:.0f};"
+                     f"bound={m['bound']}")
+
+
+if __name__ == "__main__":
+    main()

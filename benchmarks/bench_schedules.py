@@ -1,0 +1,71 @@
+"""Paper Tab. 2 + Tab. 3: scheduling patterns.
+
+Tab. 2 reproduction — wave specialization's producer VMEM tax shrinks the
+feasible output tile and with it arithmetic intensity/TFLOPs; output tile
+size dominates. Tab. 3 reproduction — PINGPONG (large tiles, 2 buffers) vs
+INTERLEAVE (small tiles, deeper pipeline) on GEMM and attention.
+All numbers are the analytic v5e pipeline model (no TPU in this container);
+the structure mirrors the paper's tables.
+"""
+from __future__ import annotations
+
+from repro.core import perf_model as pm
+from repro.core import tiles
+from repro.core.schedule import (PINGPONG, INTERLEAVE, WAVE_SPECIALIZED,
+                                 Schedule)
+from .common import emit
+
+
+def main() -> None:
+    # --- Tab. 2 analogue: producers tax fast memory -> smaller output tile.
+    # FINDING: on v5e the constraint does NOT bind — 128 MiB VMEM holds the
+    # ridge-point tile (512x512) with room to spare at any producer tax, so
+    # wave specialization would not cost TFLOPs here the way it does on
+    # MI355X. The mechanism reappears verbatim under an AMD-LDS-scale fast
+    # memory (4 MiB), which we also report to show the paper's principle
+    # generalizes with a different constant.
+    for fast_bytes, hw in ((tiles.VMEM_BYTES, "v5e_vmem128MiB"),
+                           (4 * 2**20, "lds_scale4MiB")):
+        for producer_frac, label in ((0.0, "0P"), (0.2, "2P"), (0.33, "4P"),
+                                     (0.5, "8P")):
+            budget = int(fast_bytes * (1 - producer_frac))
+            bm, bn = pm.best_output_tile(budget, n_buffers=2, block_k=512)
+            sched = Schedule(f"ws_{label}", 2, bm, bn, 512)
+            m = pm.gemm_step_model(sched, k_total=8192)
+            emit(f"tab2_{hw}_producer_{label}_tile{bm}x{bn}", 0.0,
+                 f"modeled_tflops={m['modeled_tflops']:.0f};"
+                 f"ai={m['arithmetic_intensity']:.0f};bound={m['bound']};"
+                 f"constraint_binds={'yes' if (bm, bn) != (512, 512) else 'no'}")
+
+    # --- output tile sweep (the paper's core Tab. 2 conclusion) ---
+    for bm, bn in ((128, 128), (128, 256), (192, 256), (256, 256),
+                   (384, 384), (512, 512)):
+        sched = Schedule("tile", 2, bm, bn, 512)
+        m = pm.gemm_step_model(sched, k_total=8192)
+        emit(f"tab2_output_tile_{bm}x{bn}", 0.0,
+             f"modeled_tflops={m['modeled_tflops']:.0f};"
+             f"ai={m['arithmetic_intensity']:.0f};bound={m['bound']}")
+
+    # --- Tab. 3 analogue: PINGPONG vs INTERLEAVE on GEMM + attention ---
+    for sched in (PINGPONG, INTERLEAVE, WAVE_SPECIALIZED):
+        m = pm.gemm_step_model(sched, k_total=8192)
+        emit(f"tab3_gemm_{sched.name}", 0.0,
+             f"modeled_tflops={m['modeled_tflops']:.0f};"
+             f"vmem_mib={m['vmem_bytes'] / 2**20:.1f}")
+    for bq, bkv, label in ((128, 128, "pingpong"), (128, 512, "bigkv"),
+                           (256, 256, "interleave_large")):
+        m = pm.attention_step_model(block_q=bq, block_kv=bkv, head_dim=128,
+                                    seq_len=8192, causal=False)
+        emit(f"tab3_attn_{label}", 0.0,
+             f"modeled_tflops={m['modeled_tflops']:.0f};bound={m['bound']}")
+
+    # --- Tab. 1 analogue: pinned scratch accumulators ---
+    # No register file on TPU; the pinned fp32 VMEM accumulator is structural
+    # (always on) — report its budget share for the PINGPONG GEMM tile.
+    acc = PINGPONG.block_m * PINGPONG.block_n * 4
+    emit("tab1_pinned_scratch_accumulator", 0.0,
+         f"acc_bytes={acc};fraction_of_vmem={acc / tiles.VMEM_BYTES:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Shared benchmark utilities.
+
+Each benchmark prints ``name,us_per_call,derived`` CSV rows.
+``us_per_call`` is a real wall-clock measurement of the XLA-CPU reference
+path (interpret-mode Pallas timings are not meaningful); ``derived`` carries
+the modeled TPU-v5e number that reproduces the paper's table/figure
+(TFLOP/s, hit-rates, bandwidths) — this container has no TPU, so modeled
+numbers are the deliverable per the roofline methodology.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, warmup: int = 3, iters: int = 10) -> float:
+    """Median wall time of fn(*args) in microseconds (blocks on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,42 @@
+"""Run every benchmark (one per paper table/figure).
+
+Prints ``name,us_per_call,derived`` CSV. us_per_call is the measured XLA-CPU
+reference path; derived carries the modeled TPU-v5e reproduction numbers
+(this container has no TPU — see DESIGN.md §7 / EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from . import (bench_gemm, bench_attention_fwd, bench_attention_bwd,
+               bench_memory_bound, bench_schedules, bench_grid_swizzle)
+
+BENCHES = [
+    ("Fig6_gemm", bench_gemm.main),
+    ("Fig7_attention_fwd", bench_attention_fwd.main),
+    ("Fig8_attention_bwd", bench_attention_bwd.main),
+    ("Fig9_memory_bound", bench_memory_bound.main),
+    ("Tab2_Tab3_schedules", bench_schedules.main),
+    ("Tab4_grid_swizzle", bench_grid_swizzle.main),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in BENCHES:
+        print(f"# --- {name} ---")
+        try:
+            fn()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+    print("# all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Algorithm 1 (chiplet-aware grid swizzle) demo — paper Fig. 5 / Tab. 4.
+
+Prints ASCII visualizations of the block-to-XCD assignment for row-major vs
+Algorithm-1 schedules and scores each on the two-level cache simulator.
+
+  PYTHONPATH=src python examples/grid_swizzle_demo.py
+"""
+import numpy as np
+
+from repro.core.grid_swizzle import SwizzleConfig, ROW_MAJOR, schedule_order
+from repro.core.cache_model import simulate_gemm_schedule
+
+
+def visualize(cfg, num_rows=12, num_cols=12, n_exec=32, n_xcd=8):
+    """Show the XCD that computes each output block in the first wave."""
+    order = schedule_order(cfg, num_rows, num_cols)
+    grid = np.full((num_rows, num_cols), ".", dtype=object)
+    for slot, (r, c) in enumerate(order[:n_exec]):
+        grid[r, c] = str(slot % n_xcd)
+    return "\n".join(" ".join(row) for row in grid)
+
+
+for name, cfg in (("row-major", ROW_MAJOR),
+                  ("Algorithm 1 (W=4, C=4)", SwizzleConfig(window=4, chunk=4)),
+                  ("Algorithm 1 (W=8, C=64)", SwizzleConfig(window=8, chunk=64))):
+    print(f"\n=== {name} — first 32 blocks by XCD ===")
+    print(visualize(cfg))
+    r = simulate_gemm_schedule(cfg, m=9216, n=9216, k=9216,
+                               block_m=192, block_n=256, block_k=64)
+    print(f"cache sim @9216³: L2 {r.l2_hit:.0%}  LLC {r.llc_hit:.0%}  "
+          f"eff-BW {r.effective_bw/1e12:.1f} TB/s  "
+          f"modeled {r.modeled_tflops:.0f} TFLOP/s")

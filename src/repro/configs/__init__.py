@@ -1,0 +1,57 @@
+"""Config registry: ``get_config('<arch-id>'[, smoke=True])``."""
+from __future__ import annotations
+
+import importlib
+
+from .base import (ModelConfig, MoEConfig, SSMConfig, RGLRUConfig,  # noqa: F401
+                   ShapeConfig, KernelsConfig, ALL_SHAPES, TRAIN_4K,
+                   PREFILL_32K, DECODE_32K, LONG_500K, shape_applicable)
+
+ARCH_IDS = (
+    "whisper-base",
+    "minicpm-2b",
+    "chatglm3-6b",
+    "granite-8b",
+    "qwen2-72b",
+    "llama4-maverick-400b-a17b",
+    "mixtral-8x7b",
+    "mamba2-130m",
+    "recurrentgemma-2b",
+    "internvl2-2b",
+)
+
+_MODULES = {
+    "whisper-base": "whisper_base",
+    "minicpm-2b": "minicpm_2b",
+    "chatglm3-6b": "chatglm3_6b",
+    "granite-8b": "granite_8b",
+    "qwen2-72b": "qwen2_72b",
+    "llama4-maverick-400b-a17b": "llama4_maverick",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "mamba2-130m": "mamba2_130m",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "internvl2-2b": "internvl2_2b",
+    "llama-100m": "llama_paper",
+    "llama-1b": "llama_paper",
+    "bert-110m": "llama_paper",
+}
+
+
+def get_config(name: str, *, smoke: bool = False) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    if name == "llama-100m":
+        return mod.LLAMA_100M
+    if name == "llama-1b":
+        return mod.LLAMA_1B
+    if name == "bert-110m":
+        return mod.BERT_110M
+    return mod.SMOKE_CONFIG if smoke else mod.CONFIG
+
+
+def get_shape(name: str) -> ShapeConfig:
+    for s in ALL_SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)

@@ -1,0 +1,197 @@
+"""Config system: one dataclass describes every supported architecture.
+
+Each assigned architecture gets a ``configs/<id>.py`` exporting ``CONFIG``
+(the exact published dims) and ``SMOKE_CONFIG`` (a reduced same-family config
+for CPU smoke tests). ``repro.configs.get_config(name)`` resolves either.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelsConfig:
+    """Kernel dispatch: 'reference' | 'pallas_interpret' | 'pallas_tpu'."""
+    mode: str = "reference"
+    block_q: int = 128
+    block_kv: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 8
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    impl: str = "auto"  # 'dense' | 'ep' | 'tp' | 'auto'
+    # weight sharding: 'expert' (EP: expert dim over model axis — needs
+    # E % |model| == 0) or 'ffn' (Megatron TP within each expert — for archs
+    # like Mixtral where E=8 < |model|=16)
+    shard: str = "expert"
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    lru_width: Optional[int] = None   # defaults to d_model
+    conv_width: int = 4
+    c_exponent: float = 8.0
+    local_window: int = 2048
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # 'lm' | 'encdec' | 'vlm'
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None          # default d_model // num_heads
+    # block pattern, cycled over layers: 'attn' (dense attn+mlp),
+    # 'moe' (attn + moe ffn), 'ssm' (mamba2 block), 'rg' (RG-LRU block),
+    # 'local' (windowed attn + mlp)
+    block_pattern: Sequence[str] = ("attn",)
+    mlp_act: str = "swiglu"     # 'swiglu' | 'geglu' | 'gelu'
+    norm: str = "rmsnorm"       # 'rmsnorm' | 'layernorm'
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 10000.0
+    rope_style: str = "half"    # 'half' | 'partial' (chatglm 2d: rope on half the head dim) | 'none'
+    attn_window: Optional[int] = None        # sliding-window attention
+    attn_logit_softcap: Optional[float] = None
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    # enc-dec (whisper): encoder stack dims (decoder uses the main fields)
+    encoder_layers: int = 0
+    encoder_seq: int = 1500      # precomputed frame embeddings (frontend stub)
+    max_target_positions: int = 448
+    # vlm: number of prepended patch embeddings (frontend stub)
+    num_patches: int = 0
+    # numerics / training
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    dropout_p: float = 0.0
+    # --- perf levers (EXPERIMENTS.md §Perf; defaults = faithful baseline) ---
+    ce_chunk: int = 0            # >0: chunked CE loss, logits never (B,S,V)
+    remat_policy: str = "full"   # 'full' | 'dots' (save matmul outputs) | 'none'
+    rglru_f32_gates: bool = True # False: bf16 gate matmuls (fp32 carries kept)
+    rglru_chunk: int = 0         # >0: two-level RG-LRU scan (see rglru.py)
+    embed_shard: str = "vocab"   # 'vocab' | 'embed': d-shard the table so the
+                                 # gather ends in an all-gather (1x) instead of
+                                 # an all-reduce (2x); untied archs only
+    kv_shard: bool = True        # False: replicate wk/wv (kv_heads < |model|
+                                 # makes head-sharding impossible; GSPMD then
+                                 # all-gathers KV every layer — replicating the
+                                 # small KV weights removes those collectives)
+    fsdp: bool = False           # shard params over 'data' too (ZeRO-3 —
+                                 # per-layer weight all-gathers inside scan);
+                                 # required where TP-sharded params > HBM
+    vocab_pad_multiple: int = 0  # Megatron-style: pad V up so the embedding/
+                                 # LM head shard over 'model' (minicpm's
+                                 # V=122753 and internvl2's 92553 otherwise
+                                 # replicate the largest matmul in the model)
+
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        if not m:
+            return self.vocab_size
+        return -(-self.vocab_size // m) * m
+    # misc per-arch quirks
+    emb_scale: float = 1.0       # minicpm scale_emb
+    residual_scale: float = 1.0  # minicpm scale_depth / sqrt(L)
+    logit_scale_div: float = 1.0 # minicpm dim_model_base logits scaling
+    max_seq_len: int = 8192
+    sub_quadratic: bool = False  # True => long_500k shape is runnable
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        assert self.num_heads % max(1, self.num_kv_heads) == 0
+
+    def layer_kind(self, i: int) -> str:
+        return self.block_pattern[i % len(self.block_pattern)]
+
+    def param_count(self) -> int:
+        """Approximate parameter count N (for 6·N·D roofline bookkeeping)."""
+        d, f, hd = self.d_model, self.d_ff, self.head_dim
+        h, hkv = self.num_heads, self.num_kv_heads
+        total = self.vocab_size * d            # embed
+        if not self.tie_embeddings:
+            total += self.vocab_size * d       # lm head
+        def attn_p():
+            return d * h * hd + 2 * d * hkv * hd + h * hd * d
+        def mlp_p(ff):
+            n_in = 2 if self.mlp_act in ("swiglu", "geglu") else 1
+            return n_in * d * ff + ff * d
+        for i in range(self.num_layers):
+            kind = self.layer_kind(i)
+            if kind in ("attn", "local"):
+                total += attn_p() + mlp_p(f) + 2 * d
+            elif kind == "moe":
+                e = self.moe.num_experts
+                total += attn_p() + d * e + e * mlp_p(f) + 2 * d
+            elif kind == "ssm":
+                s = self.ssm
+                d_in = s.expand * d
+                nheads = d_in // s.head_dim
+                conv_dim = d_in + 2 * s.n_groups * s.d_state
+                total += d * (2 * d_in + 2 * s.n_groups * s.d_state + nheads)
+                total += conv_dim * s.d_conv + 3 * nheads + d_in + d_in * d + d
+            elif kind == "rg":
+                w = self.rglru.lru_width or d
+                total += 2 * d * w + w * d + 2 * w + w * self.rglru.conv_width
+                total += mlp_p(f) + 2 * d
+        # encoder stack (whisper)
+        for _ in range(self.encoder_layers):
+            total += attn_p() + mlp_p(f) + 2 * d
+        if self.encoder_layers:  # cross-attention in every decoder layer
+            total += self.num_layers * attn_p()
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k of num_experts FFNs)."""
+        if self.moe is None:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        n_in = 2 if self.mlp_act in ("swiglu", "geglu") else 1
+        per_expert = n_in * d * f + f * d
+        n_moe_layers = sum(1 for i in range(self.num_layers)
+                           if self.layer_kind(i) == "moe")
+        inactive = n_moe_layers * (self.moe.num_experts - self.moe.top_k) * per_expert
+        return self.param_count() - inactive
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One of the assigned input-shape cells."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether the (arch, shape) cell is live; else reason (DESIGN.md §4)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention arch: 500k decode needs sub-quadratic attention (documented skip)"
+    return True, ""

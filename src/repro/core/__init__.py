@@ -1,0 +1,12 @@
+"""Core tile-programming primitives (the paper's contribution, TPU-adapted).
+
+* :mod:`repro.core.tiles` — tile types + native-tiling legality + VMEM budget
+* :mod:`repro.core.grid_swizzle` — Algorithm 1 (chiplet/cache-aware grid order)
+* :mod:`repro.core.cache_model` — two-level cache simulator (Tab. 4 / Eq. 1)
+* :mod:`repro.core.schedule` — PINGPONG / INTERLEAVE / WAVE_SPECIALIZED presets
+* :mod:`repro.core.perf_model` — v5e roofline constants + analytic models
+"""
+from .tiles import TileSpec, native_tiling, is_aligned, block_spec  # noqa: F401
+from .grid_swizzle import SwizzleConfig, ROW_MAJOR  # noqa: F401
+from .schedule import Schedule, PINGPONG, INTERLEAVE, WAVE_SPECIALIZED, get_schedule  # noqa: F401
+from .perf_model import V5E, ChipSpec, roofline, RooflineTerms  # noqa: F401

@@ -1,0 +1,148 @@
+"""HipKittens Algorithm 1 — chiplet/cache-aware grid swizzle — TPU-adapted.
+
+The paper remaps flattened GEMM block IDs in two steps:
+  1. *XCD grouping*: chunks of ``C`` consecutive remapped IDs land on the same
+     XCD under the hardware's round-robin dispatch (reduces cross-chiplet L2
+     traffic).
+  2. *Hierarchical windowed traversal*: the flattened ID space is folded into
+     vertical windows of height ``W`` so blocks sharing rows of A / columns of
+     B execute near each other in time (L2 reuse).
+
+On TPU the same permutation controls two real locality levels (DESIGN.md §2):
+  * within a core, the Pallas grid pipeline skips the HBM→VMEM DMA for a block
+    whose index is unchanged between consecutive iterations — so traversal
+    order directly determines DMA traffic (measured by :func:`dma_bytes`);
+  * across the mesh, the analogous assignment problem is handled by
+    ``distributed/sharding.py``.
+
+All functions are pure and work on python ints, numpy arrays, and traced JAX
+values (used inside Pallas ``index_map``s).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+N_XCD_DEFAULT = 8  # paper's MI355X has 8 XCDs; kept as the default cluster count
+
+
+def _is_traced(*xs) -> bool:
+    return any(not isinstance(x, (int, np.integer, np.ndarray)) for x in xs)
+
+
+def _backend(*xs):
+    if _is_traced(*xs):
+        import jax.numpy as jnp
+        return jnp
+    return np
+
+
+def chiplet_transform_chunked(xy, blocks, n_xcd, chunk):
+    """Step 1 of Algorithm 1 (paper's ``chiplet_transform_chunked``).
+
+    Remaps a flattened block id so that, under round-robin dispatch across
+    ``n_xcd`` clusters, chunks of ``chunk`` consecutive *remapped* ids are
+    resident on the same cluster. Bijective on [0, blocks).
+    """
+    xp = _backend(xy)
+    blocks_per_cycle = n_xcd * chunk
+    limit = (blocks // blocks_per_cycle) * blocks_per_cycle
+    xcd = xy % n_xcd
+    local = xy // n_xcd
+    chunk_idx = local // chunk
+    pos = local % chunk
+    remapped = chunk_idx * blocks_per_cycle + xcd * chunk + pos
+    return xp.where(xy >= limit, xy, remapped)
+
+
+def windowed_traversal(xy, num_rows, num_cols, window):
+    """Step 2 of Algorithm 1: fold flattened ids into vertical windows.
+
+    Returns (row, col). Within a window of ``window`` rows the fast index goes
+    *down a column* (so the B column-block is reused by ``window`` consecutive
+    blocks); after ``win_h`` rows we move to the next column.
+    """
+    xp = _backend(xy, num_rows, num_cols)
+    tid_per_group = window * num_cols
+    group_id = xy // tid_per_group
+    first_row = group_id * window
+    win_h = xp.minimum(num_rows - first_row, window)
+    l = xy % tid_per_group
+    row = first_row + (l % win_h)
+    col = l // win_h
+    return row, col
+
+
+@dataclasses.dataclass(frozen=True)
+class SwizzleConfig:
+    """Parameters of Algorithm 1. ``window``/``chunk`` trade L2 vs LLC reuse
+    in the paper; here they trade B-block revisit runs vs A working-set span."""
+
+    window: int = 8
+    chunk: int = 64
+    n_xcd: int = N_XCD_DEFAULT
+    enable_chiplet: bool = True   # step 1 on/off (off for single-core Pallas use)
+    enable_window: bool = True    # step 2 on/off (off => row-major)
+
+    def remap(self, xy, num_rows, num_cols):
+        """Full Algorithm 1: flattened id -> (row, col) block coordinates."""
+        blocks = num_rows * num_cols
+        if self.enable_chiplet:
+            xy = chiplet_transform_chunked(xy, blocks, self.n_xcd, self.chunk)
+        if self.enable_window:
+            return windowed_traversal(xy, num_rows, num_cols, self.window)
+        return xy // num_cols, xy % num_cols
+
+
+ROW_MAJOR = SwizzleConfig(enable_chiplet=False, enable_window=False)
+
+
+def schedule_order(cfg: SwizzleConfig, num_rows: int, num_cols: int) -> np.ndarray:
+    """(blocks, 2) array of (row, col) in execution order — for simulators."""
+    xy = np.arange(num_rows * num_cols)
+    r, c = cfg.remap(xy, num_rows, num_cols)
+    return np.stack([np.asarray(r), np.asarray(c)], axis=1)
+
+
+def is_permutation(cfg: SwizzleConfig, num_rows: int, num_cols: int) -> bool:
+    """Every output block must be produced exactly once (tested w/ hypothesis)."""
+    order = schedule_order(cfg, num_rows, num_cols)
+    flat = order[:, 0] * num_cols + order[:, 1]
+    return (np.sort(flat) == np.arange(num_rows * num_cols)).all() and \
+        (order[:, 0] < num_rows).all() and (order[:, 1] < num_cols).all() and \
+        (order >= 0).all()
+
+
+def dma_bytes(cfg: SwizzleConfig, num_rows: int, num_cols: int,
+              a_block_bytes: int, b_block_bytes: int) -> int:
+    """HBM→VMEM traffic of a full-K blocked GEMM under Pallas revisit rules.
+
+    The pipeline skips an input DMA iff the block index equals the previous
+    iteration's. A blocks are indexed by row, B blocks by col. Note that under
+    this *consecutive-only* revisit rule the optimum degenerates to run-length
+    maximization on the larger operand (W=1 → row-runs reuse A; W=num_rows →
+    column-runs reuse B); the full (W, C) structure of Algorithm 1 pays off at
+    the multi-executor cache level, which :mod:`repro.core.cache_model`
+    evaluates (see DESIGN.md §2).
+    """
+    order = schedule_order(cfg, num_rows, num_cols)
+    rows, cols = order[:, 0], order[:, 1]
+    a_fetches = 1 + int(np.count_nonzero(rows[1:] != rows[:-1]))
+    b_fetches = 1 + int(np.count_nonzero(cols[1:] != cols[:-1]))
+    return a_fetches * a_block_bytes + b_fetches * b_block_bytes
+
+
+def best_window(num_rows: int, num_cols: int, a_block_bytes: int,
+                b_block_bytes: int, candidates=(1, 2, 4, 8, 16, 32)) -> SwizzleConfig:
+    """Pick the window minimizing modeled DMA traffic (autotuning hook)."""
+    best = None
+    for w in candidates:
+        if w > num_rows:
+            continue
+        cfg = SwizzleConfig(window=w, enable_chiplet=False)
+        traffic = dma_bytes(cfg, num_rows, num_cols, a_block_bytes, b_block_bytes)
+        if best is None or traffic < best[0]:
+            best = (traffic, cfg)
+    return best[1] if best else ROW_MAJOR

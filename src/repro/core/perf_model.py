@@ -1,0 +1,159 @@
+"""TPU v5e roofline constants and analytic kernel pipeline model.
+
+Used three ways:
+  * the dry-run roofline terms in EXPERIMENTS.md §Roofline;
+  * the Tab. 2/3 reproduction (`benchmarks/bench_schedules.py`) — modeled
+    TFLOP/s as a function of output tile, pipeline depth and producer VMEM tax;
+  * kernel-level napkin math during the §Perf hillclimb.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from . import tiles
+from .schedule import Schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str = "tpu_v5e"
+    peak_flops_bf16: float = 197e12      # FLOP/s per chip
+    hbm_bw: float = 819e9                # B/s
+    ici_bw_per_link: float = 50e9        # B/s per ICI link (about; 2D torus)
+    ici_links: int = 4                   # links per chip on a 2D torus
+    vmem_bytes: int = tiles.VMEM_BYTES
+    mxu_dim: int = 128
+
+    def peak_flops(self, dtype_bytes: int = 2) -> float:
+        # v5e matrix unit: int8 is 2x bf16; fp32 via passes ≈ 1/4.
+        if dtype_bytes == 1:
+            return 2 * self.peak_flops_bf16
+        if dtype_bytes == 4:
+            return self.peak_flops_bf16 / 4
+        return self.peak_flops_bf16
+
+
+V5E = ChipSpec()
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        # optimistic full-overlap model: the dominant term is the step time
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def fraction_of_roofline(self) -> float:
+        """compute_s / step_time — how close to compute-bound we are."""
+        t = self.step_time_s
+        return self.compute_s / t if t > 0 else 0.0
+
+
+def roofline(flops: float, hbm_bytes: float, collective_bytes: float,
+             *, n_chips: int, chip: ChipSpec = V5E,
+             dtype_bytes: int = 2) -> RooflineTerms:
+    """The three §Roofline terms, in seconds (totals are fleet-wide)."""
+    compute = flops / (n_chips * chip.peak_flops(dtype_bytes))
+    memory = hbm_bytes / (n_chips * chip.hbm_bw)
+    coll = collective_bytes / (n_chips * chip.ici_bw_per_link * chip.ici_links)
+    return RooflineTerms(compute, memory, coll)
+
+
+# ---------------------------------------------------------------------------
+# Analytic GEMM pipeline model (paper Tab. 2 reproduction).
+# ---------------------------------------------------------------------------
+
+def mxu_efficiency(dim_m: int, dim_n: int, dim_k: int, mxu: int = 128) -> float:
+    """Fraction of systolic-array cycles doing useful work for a tile matmul."""
+    eff = 1.0
+    for d in (dim_m, dim_n, dim_k):
+        eff *= d / (math.ceil(d / mxu) * mxu)
+    return eff
+
+
+def gemm_step_model(schedule: Schedule, *, k_total: int, dtype_bytes: int = 2,
+                    chip: ChipSpec = V5E) -> dict:
+    """Model one grid step of the blocked GEMM under ``schedule``.
+
+    Compute time: bm*bn*bk MACs on the MXU at efficiency from alignment.
+    Memory time: (A+B block) DMA at HBM bandwidth.
+    Pipeline: steady-state step time = max(compute, memory) (PINGPONG double
+    buffering); deeper pipelines amortize the prologue but raise VMEM use.
+    """
+    bm, bn, bk = schedule.block_m, schedule.block_n, schedule.block_k
+    flops = 2.0 * bm * bn * bk
+    eff = mxu_efficiency(bm, bn, bk, chip.mxu_dim)
+    compute_s = flops / (chip.peak_flops(dtype_bytes) * eff)
+    dma_bytes = (bm * bk + bk * bn) * dtype_bytes
+    memory_s = dma_bytes / chip.hbm_bw
+
+    acc_bytes = bm * bn * 4  # fp32 accumulator scratch (pinned, see DESIGN §2)
+    vmem = tiles.pipeline_vmem_bytes(
+        [((bm, bk), "bfloat16"), ((bk, bn), "bfloat16")],
+        n_buffers=schedule.n_buffers, scratch_bytes=acc_bytes)
+    feasible = vmem <= schedule.vmem_budget()
+
+    n_steps = max(1, k_total // bk)
+    steady = max(compute_s, memory_s)
+    prologue = memory_s  # first block load not overlapped
+    total = prologue + n_steps * steady
+    tflops = (2.0 * bm * bn * k_total) / total / 1e12
+    return dict(schedule=schedule.name, block=(bm, bn, bk), feasible=feasible,
+                vmem_bytes=vmem, compute_s=compute_s, memory_s=memory_s,
+                arithmetic_intensity=flops / dma_bytes,
+                modeled_tflops=tflops if feasible else 0.0,
+                bound="compute" if compute_s >= memory_s else "memory")
+
+
+def best_output_tile(vmem_budget: int, n_buffers: int, block_k: int,
+                     dtype_bytes: int = 2) -> tuple[int, int]:
+    """Largest square-ish MXU-aligned output tile whose pipeline fits VMEM.
+
+    Reproduces the paper's Tab. 2 argument: VMEM (register) budget bounds the
+    output tile, which bounds arithmetic intensity.
+    """
+    best = (128, 128)
+    for bm in (128, 192, 256, 384, 512):
+        for bn in (128, 192, 256, 384, 512):
+            acc = bm * bn * 4
+            vmem = tiles.pipeline_vmem_bytes(
+                [((bm, block_k), "bfloat16"), ((block_k, bn), "bfloat16")],
+                n_buffers=n_buffers, scratch_bytes=acc)
+            if vmem <= vmem_budget and bm * bn > best[0] * best[1]:
+                best = (bm, bn)
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Flash-attention model (per (batch*heads) × q-block grid step).
+# ---------------------------------------------------------------------------
+
+def attention_step_model(*, block_q: int, block_kv: int, head_dim: int,
+                         seq_len: int, causal: bool, dtype_bytes: int = 2,
+                         chip: ChipSpec = V5E) -> dict:
+    kv_steps = seq_len // block_kv
+    if causal:
+        kv_steps = (kv_steps + 1) / 2  # average over query blocks
+    flops_per_kv = 2 * block_q * block_kv * head_dim * 2  # qk^T and pv
+    vector_ops = block_q * block_kv * 5                   # softmax vector work
+    compute_s = (flops_per_kv / chip.peak_flops(dtype_bytes)
+                 + vector_ops / (chip.peak_flops_bf16 / 16))
+    dma = (block_kv * head_dim * 2) * dtype_bytes          # K and V blocks
+    memory_s = dma / chip.hbm_bw
+    steady = max(compute_s, memory_s)
+    total = memory_s + kv_steps * steady
+    useful_flops = 2 * block_q * seq_len * head_dim * 2 * (0.5 if causal else 1.0)
+    return dict(block=(block_q, block_kv), compute_s=compute_s,
+                memory_s=memory_s, modeled_tflops=useful_flops / total / 1e12,
+                bound="compute" if compute_s >= memory_s else "memory")

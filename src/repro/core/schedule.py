@@ -1,0 +1,65 @@
+"""Kernel schedules (paper §3.3), TPU-adapted.
+
+HipKittens identifies two schedules that reach peak on AMD — 8-WAVE PING-PONG
+(two waves/SIMD alternating compute↔memory over *large* tiles) and 4-WAVE
+INTERLEAVE (one wave/SIMD, fine-grained interleave over *small* tiles) — and
+shows NVIDIA-style wave specialization (producer/consumer) loses because
+producer waves consume statically-partitioned registers without computing.
+
+On TPU a kernel runs on one compute core and overlap is *temporal*: the Pallas
+grid pipeline multi-buffers operand blocks so iteration k's MXU work overlaps
+iteration k+1's DMA. The three schedules map to pipeline/tile presets:
+
+  PINGPONG         2 buffers/operand, large tiles   (default; ≈8-wave)
+  INTERLEAVE       3 buffers/operand, small tiles   (deep pipeline; ≈4-wave)
+  WAVE_SPECIALIZED 2 buffers + extra staging buffers that model the producer
+                   VMEM tax — exists to *reproduce the paper's negative
+                   result* (Tab. 2) in the analytic model: reserved staging
+                   shrinks the feasible output tile and with it arithmetic
+                   intensity.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from . import tiles
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    name: str
+    n_buffers: int                 # pipeline depth per operand
+    block_m: int
+    block_n: int
+    block_k: int
+    producer_fraction: float = 0.0  # VMEM fraction reserved for non-computing staging
+
+    def vmem_budget(self) -> int:
+        return int(tiles.VMEM_BYTES * (1.0 - self.producer_fraction))
+
+    def operand_blocks(self, dtype_bytes: int = 2):
+        return [((self.block_m, self.block_k), "bfloat16" if dtype_bytes == 2 else "float32"),
+                ((self.block_k, self.block_n), "bfloat16" if dtype_bytes == 2 else "float32")]
+
+
+# NOTE (TPU vs AMD): the v5e ridge point is 197e12/819e9 ≈ 240 FLOP/B and — in
+# contrast to MI355X — there is no multi-MB cache raising effective bandwidth,
+# so the paper's "maximize the output tile" principle is *more* extreme here:
+# a 256x256 output tile (AI=128) is memory-bound; 512x512 (AI=256) is the
+# smallest compute-bound square tile. PINGPONG therefore defaults to 512x512.
+PINGPONG = Schedule("pingpong", n_buffers=2, block_m=512, block_n=512, block_k=512)
+INTERLEAVE = Schedule("interleave", n_buffers=3, block_m=256, block_n=256, block_k=512)
+WAVE_SPECIALIZED = Schedule("wave_specialized", n_buffers=2, block_m=256,
+                            block_n=512, block_k=512, producer_fraction=0.33)
+
+_SCHEDULES = {s.name: s for s in (PINGPONG, INTERLEAVE, WAVE_SPECIALIZED)}
+
+
+def get_schedule(name: str) -> Schedule:
+    if name not in _SCHEDULES:
+        raise KeyError(f"unknown schedule {name!r}; have {sorted(_SCHEDULES)}")
+    return _SCHEDULES[name]
+
+
+def all_schedules():
+    return list(_SCHEDULES.values())

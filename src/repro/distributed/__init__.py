@@ -1,0 +1,3 @@
+from .sharding import (LOGICAL_RULES, spec_for, shardings_for_tree,  # noqa: F401
+                       batch_specs, zero1_shardings, cache_specs,
+                       data_axis_names)

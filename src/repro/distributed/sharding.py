@@ -1,0 +1,171 @@
+"""Logical-axis → mesh sharding rules (divisibility-aware).
+
+The cross-chip half of the paper's cache-aware scheduling story (DESIGN.md
+§2): on TPU the 'clusters' are chips and placing the model axes so that the
+heavy collectives stay on the short mesh dimension is the analogue of keeping
+an XCD's working set inside its L2.
+
+Rules (MaxText-style):
+  batch      -> ('pod', 'data')     data parallel (hierarchical across pods)
+  vocab      -> 'model'             embedding/LM-head sharding
+  heads      -> 'model'             TP over attention heads (dim = H*hd)
+  kv_heads   -> 'model'
+  ffn        -> 'model'             TP over MLP hidden
+  expert     -> 'model'             EP (MoE expert dim)
+  embed      -> None                activations replicated over model axis
+  layers     -> None                scan axis
+
+A mesh axis is dropped for a given tensor dim when the dim is not divisible
+by the axis size (e.g. whisper's vocab 51865 on 16-way model) — replicate
+rather than fail, and report it.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+LOGICAL_RULES: dict[Optional[str], tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ffn": ("model",),
+    "expert": ("model",),
+    "embed": (),
+    "layers": (),
+    None: (),
+}
+
+
+def mesh_axes_for(logical: Optional[str], mesh: Mesh) -> tuple[str, ...]:
+    axes = LOGICAL_RULES.get(logical, ())
+    return tuple(a for a in axes if a in mesh.axis_names)
+
+
+def spec_for(shape: tuple[int, ...], logical_axes: tuple, mesh: Mesh,
+             *, report: Optional[list] = None) -> P:
+    parts = []
+    for dim, logical in zip(shape, logical_axes):
+        axes = mesh_axes_for(logical, mesh)
+        size = math.prod(mesh.shape[a] for a in axes) if axes else 1
+        if axes and dim % size == 0:
+            parts.append(axes if len(axes) > 1 else axes[0])
+        else:
+            if axes and report is not None:
+                report.append((shape, logical, dim, size))
+            parts.append(None)
+    return P(*parts)
+
+
+def shardings_for_tree(axes_tree, shape_tree, mesh: Mesh,
+                       *, report: Optional[list] = None):
+    """axes_tree: tree of logical-axes tuples; shape_tree: matching arrays or
+    ShapeDtypeStructs. Returns a tree of NamedShardings."""
+    def one(axes, arr):
+        return NamedSharding(mesh, spec_for(arr.shape, axes, mesh,
+                                            report=report))
+    return jax.tree.map(one, axes_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def batch_specs(batch_tree, mesh: Mesh) -> dict:
+    """Shard dim0 (global batch) over ('pod','data'); rest replicated.
+    Falls back to replication when the batch is smaller than the DP degree
+    (e.g. the long_500k single-sequence decode cell)."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def one(arr):
+        size = math.prod(mesh.shape[a] for a in axes) if axes else 1
+        if axes and arr.shape[0] % size == 0:
+            return NamedSharding(mesh, P(axes, *([None] * (arr.ndim - 1))))
+        return NamedSharding(mesh, P(*([None] * arr.ndim)))
+    return jax.tree.map(one, batch_tree)
+
+
+def data_axis_names(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _shard_free_dim(sh, shape, mesh: Mesh, axis: str = "data"):
+    """Add ``axis`` on the largest unsharded, divisible dim (None if none —
+    including when the axis is already used by another dim)."""
+    size = mesh.shape[axis]
+    spec = list(sh.spec) + [None] * (len(shape) - len(sh.spec))
+    if any(axis == s or (isinstance(s, tuple) and axis in s) for s in spec):
+        return None
+    candidates = [(shape[i], i) for i in range(len(shape))
+                  if spec[i] is None and shape[i] % size == 0
+                  and shape[i] >= size]
+    if not candidates:
+        return None
+    _, dim = max(candidates)
+    spec[dim] = axis
+    return NamedSharding(mesh, P(*spec))
+
+
+def zero1_shardings(param_shardings, shape_tree, mesh: Mesh):
+    """ZeRO-1: additionally shard optimizer moments over the data axis —
+    on the largest unsharded divisible dim of each param (not just dim0, so
+    stacked MoE tensors like (24, 128, 5120, 8192) still shard). Cuts
+    optimizer-state memory |data|-fold; XLA inserts gathers on use."""
+    if "data" not in mesh.axis_names:
+        return param_shardings
+
+    def one(sh, arr):
+        out = _shard_free_dim(sh, arr.shape, mesh)
+        return out if out is not None else sh
+    return jax.tree.map(one, param_shardings, shape_tree)
+
+
+def fsdp_shardings(param_shardings, shape_tree, mesh: Mesh,
+                   min_bytes: int = 2**20):
+    """FSDP/ZeRO-3: shard the *parameters themselves* over the data axis.
+    GSPMD inserts per-layer all-gathers inside the scan (weights are
+    re-gathered per use and freed — the standard scan+fsdp pattern).
+    Required for models whose TP-sharded params exceed HBM (llama4:
+    400B fp32 / 16-way model = 100 GB/chip without this). Small params
+    (< min_bytes) stay as-is — gathering them isn't worth the latency."""
+    if "data" not in mesh.axis_names:
+        return param_shardings
+
+    def one(sh, arr):
+        import numpy as _np
+        nbytes = int(_np.prod(arr.shape)) * jax.numpy.dtype(arr.dtype).itemsize
+        if nbytes < min_bytes:
+            return sh
+        out = _shard_free_dim(sh, arr.shape, mesh)
+        return out if out is not None else sh
+    return jax.tree.map(one, param_shardings, shape_tree)
+
+
+def cache_specs(cache_tree, mesh: Mesh, *, stacked: bool) -> dict:
+    """KV/state caches: shard the batch dim over ('pod','data') and — for
+    attention KV — the *sequence* dim over 'model' (sequence-parallel cache:
+    the decode einsum's softmax over the sharded kv axis lowers to a partial
+    softmax + small all-reduce, while cutting per-chip KV memory |model|-fold;
+    kv_heads are often < |model| so head-sharding can't do it).
+
+    Layouts (``stacked`` ⇒ leading layers dim): attn k/v (L?, B, Hkv, S, hd);
+    ssm conv (L?, B, K, C), state (L?, B, H, P, N); rglru conv/h.
+    """
+    daxes = data_axis_names(mesh)
+    lead = 1 if stacked else 0
+
+    def one(arr):
+        nd = arr.ndim
+        spec = [None] * nd
+        bdim = lead if nd > lead else 0
+        dsize = math.prod(mesh.shape[a] for a in daxes) if daxes else 1
+        if daxes and arr.shape[bdim] % dsize == 0:
+            spec[bdim] = daxes if len(daxes) > 1 else daxes[0]
+        # attention KV caches are the 4(+1)-dim leaves: (..., Hkv, S, hd)
+        if nd == 4 + lead and "model" in mesh.axis_names:
+            sdim = nd - 2
+            if arr.shape[sdim] % mesh.shape["model"] == 0:
+                spec[sdim] = "model"
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree.map(one, cache_tree)

@@ -1,0 +1,10 @@
+"""The paper's kernel suite, TPU-native (Pallas; validated via interpret=True).
+
+Each kernel ships three layers: ``kernel.py`` (pl.pallas_call + BlockSpec),
+``ops.py`` (jit'd public wrapper with mode dispatch), ``ref.py`` (pure-jnp
+oracle used by the tests and the 512-device dry-run).
+"""
+from .gemm import gemm, gemm_ref  # noqa: F401
+from .attention import attention, attention_ref  # noqa: F401
+from .fused_norm import dropout_residual_layernorm  # noqa: F401
+from .rope import rope, rope_ref, rope_tables  # noqa: F401

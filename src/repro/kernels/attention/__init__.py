@@ -1,0 +1,4 @@
+from .ops import attention  # noqa: F401
+from .ref import attention_ref  # noqa: F401
+from .kernel_fwd import flash_attention_fwd  # noqa: F401
+from .kernel_bwd import flash_attention_bwd  # noqa: F401

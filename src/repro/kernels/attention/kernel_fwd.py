@@ -1,0 +1,139 @@
+"""Flash-attention forward Pallas kernel (paper §4.2, listing E.3), TPU-adapted.
+
+The paper's 8-wave ping-pong attention kernel alternates compute clusters
+(MFMA + online-softmax vector ops) with load clusters (K/V tile prefetch).
+On TPU the same alternation is the Pallas grid pipeline: iteration ik's
+QK^T/PV MXU work overlaps iteration ik+1's K/V DMA. Online softmax state
+(m, l, acc) lives in pinned fp32 VMEM scratch (the paper pins AGPRs).
+
+Supports MHA and GQA (kv-head indexing in the BlockSpec index_map), causal
+masking, and sliding-window masking (Mixtral/RecurrentGemma local attention).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+MASK_VALUE = -1e30
+LANES = 128
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, l_ref, acc_ref, m_ref, s_ref,
+                *, nkv: int, block_q: int, block_kv: int, scale: float,
+                causal: bool, window: int | None):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, MASK_VALUE)
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    q_start = iq * block_q
+    kv_start = ik * block_kv
+
+    # Skip kv blocks that are fully masked for every query row of this block.
+    run = True
+    if causal:
+        run = kv_start <= q_start + block_q - 1
+    if window is not None:
+        run = jnp.logical_and(run, q_start - (kv_start + block_kv - 1) < window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = kv_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones(s.shape, jnp.bool_)
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, MASK_VALUE)
+
+        m_prev = m_ref[:, :1]
+        l_prev = s_ref[:, :1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0, 0]
+        pv = jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        s_ref[...] = jnp.broadcast_to(l_new, s_ref.shape)
+
+    @pl.when(ik == nkv - 1)
+    def _store():
+        l = s_ref[:, :1]
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l_safe).astype(o_ref.dtype)
+        # logsumexp residual for the backward pass
+        l_ref[0, 0] = (m_ref[:, 0] + jnp.log(jnp.where(l[:, 0] == 0, 1.0, l[:, 0])))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_kv", "logit_scale",
+                     "interpret"),
+)
+def flash_attention_fwd(q, k, v, *, causal: bool = False,
+                        window: int | None = None, block_q: int = 128,
+                        block_kv: int = 128, logit_scale: float | None = None,
+                        interpret: bool = True):
+    """Returns (out, lse). q: (B,H,Sq,D), k/v: (B,Hkv,Skv,D)."""
+    b, h, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert h % hkv == 0, (h, hkv)
+    group = h // hkv
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, skv)
+    assert sq % block_q == 0 and skv % block_kv == 0, (sq, skv, block_q, block_kv)
+    nq, nkv = sq // block_q, skv // block_kv
+    scale = logit_scale if logit_scale is not None else d ** -0.5
+
+    kernel = functools.partial(
+        _fwd_kernel, nkv=nkv, block_q=block_q, block_kv=block_kv, scale=scale,
+        causal=causal, window=window)
+
+    grid = (b, h, nq, nkv)
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda b_, h_, iq, ik, g=group: (b_, h_ // g, ik, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda b_, h_, iq, ik, g=group: (b_, h_ // g, ik, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b_, h_, iq, ik: (b_, h_, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+            jax.ShapeDtypeStruct((b, h, sq), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),      # acc (pinned, DESIGN §2)
+            pltpu.VMEM((block_q, LANES), jnp.float32),  # running max m
+            pltpu.VMEM((block_q, LANES), jnp.float32),  # running sum l
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)
+    return out, lse

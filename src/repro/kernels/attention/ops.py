@@ -1,0 +1,70 @@
+"""Public attention op with custom VJP through the Pallas kernels.
+
+``attention(q, k, v, causal=..., window=..., mode=...)``:
+  * mode="reference"        — jnp softmax attention, jax autodiff (dry-run path)
+  * mode="pallas_interpret" — flash fwd/bwd kernels, interpret=True
+  * mode="pallas_tpu"       — same kernels lowered for TPU
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel_fwd import flash_attention_fwd
+from .kernel_bwd import flash_attention_bwd
+from .ref import attention_ref, attention_ref_chunked
+
+# above this KV length, 'reference' mode switches to the chunked
+# online-softmax scan so temps stay O(S·chunk) instead of O(S^2)
+_CHUNKED_THRESHOLD = 2048
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash(q, k, v, causal, window, block_q, block_kv, logit_scale, interpret):
+    out, _ = flash_attention_fwd(
+        q, k, v, causal=causal, window=window, block_q=block_q,
+        block_kv=block_kv, logit_scale=logit_scale, interpret=interpret)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, window, block_q, block_kv, logit_scale, interpret):
+    out, lse = flash_attention_fwd(
+        q, k, v, causal=causal, window=window, block_q=block_q,
+        block_kv=block_kv, logit_scale=logit_scale, interpret=interpret)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, block_q, block_kv, logit_scale, interpret,
+               res, do):
+    q, k, v, out, lse = res
+    dq, dk, dv = flash_attention_bwd(
+        q, k, v, out, lse, do, causal=causal, window=window, block_q=block_q,
+        block_kv=block_kv, logit_scale=logit_scale, interpret=interpret)
+    h, hkv = q.shape[1], k.shape[1]
+    if h != hkv:  # GQA: reduce per-query-head dk/dv over the group
+        group = h // hkv
+        b, _, skv, d = dk.shape
+        dk = dk.reshape(b, hkv, group, skv, d).sum(axis=2)
+        dv = dv.reshape(b, hkv, group, skv, d).sum(axis=2)
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def attention(q, k, v, *, causal: bool = False, window: int | None = None,
+              block_q: int = 128, block_kv: int = 128,
+              logit_scale: float | None = None,
+              mode: str = "pallas_interpret"):
+    """Multi-/grouped-query flash attention. q:(B,H,S,D), k/v:(B,Hkv,S,D)."""
+    if mode == "reference":
+        if k.shape[2] > _CHUNKED_THRESHOLD:
+            return attention_ref_chunked(q, k, v, causal=causal,
+                                         window=window,
+                                         logit_scale=logit_scale)
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             logit_scale=logit_scale)
+    return _flash(q, k, v, causal, window, block_q, block_kv, logit_scale,
+                  mode == "pallas_interpret")

@@ -1,0 +1,100 @@
+"""Pure-jnp oracles for MHA/GQA attention (fwd; bwd via jax autodiff).
+
+Two implementations:
+  * :func:`attention_ref` — direct (S_q, S_kv) einsum; the ground truth for
+    kernel tests at small S.
+  * :func:`attention_ref_chunked` — online-softmax lax.scan over KV chunks
+    with per-chunk remat. O(S·chunk) memory, so 32k-prefill lowers with
+    bounded temps; this is what 'reference' mode uses at long S (it is the
+    flash algorithm expressed in XLA, which is also the honest non-Pallas
+    baseline for the benchmarks).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = False, window: int | None = None,
+                  logit_scale: float | None = None):
+    """q: (B, H, Sq, D); k, v: (B, Hkv, Skv, D) with H % Hkv == 0.
+
+    ``window``: sliding-window size — position i attends to j iff
+    i - j < window (combined with the causal mask when causal=True).
+    """
+    b, h, sq, d = q.shape
+    hkv = k.shape[1]
+    group = h // hkv
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+    scale = logit_scale if logit_scale is not None else d ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    skv = k.shape[2]
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.maximum(l, 1e-30)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention_ref_chunked(q, k, v, *, causal: bool = False,
+                          window: int | None = None,
+                          logit_scale: float | None = None,
+                          chunk: int = 1024):
+    """Online-softmax over KV chunks (flash algorithm in pure XLA)."""
+    b, h, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = h // hkv
+    chunk = min(chunk, skv)
+    while skv % chunk:      # e.g. the VLM's 32512-token prefill
+        chunk //= 2
+    nc = skv // chunk
+    scale = logit_scale if logit_scale is not None else d ** -0.5
+
+    qf = q.astype(jnp.float32).reshape(b, hkv, group, sq, d)
+    ks = k.reshape(b, hkv, nc, chunk, d).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(b, hkv, nc, chunk, d).transpose(2, 0, 1, 3, 4)
+    qpos = jnp.arange(sq)[:, None]
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def body(carry, inp):
+        m, l, acc = carry
+        kc, vc, ci = inp
+        s = jnp.einsum("bgxqd,bgcd->bgxqc", qf, kc.astype(jnp.float32)) * scale
+        kpos = ci * chunk + jnp.arange(chunk)[None, :]
+        mask = jnp.ones((sq, chunk), bool)
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * alpha + jnp.einsum(
+            "bgxqc,bgcd->bgxqd", p, vc.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    from repro.util import scan_unroll
+    m0 = jnp.full((b, hkv, group, sq, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hkv, group, sq, 1), jnp.float32)
+    a0 = jnp.zeros((b, hkv, group, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (ks, vs, jnp.arange(nc)),
+                                  unroll=scan_unroll())
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.reshape(b, h, sq, d).astype(q.dtype)

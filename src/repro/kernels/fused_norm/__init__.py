@@ -1,0 +1,3 @@
+from .ops import dropout_residual_layernorm  # noqa: F401
+from .ref import fused_dropout_residual_layernorm_ref  # noqa: F401
+from .kernel import fused_dropout_residual_layernorm  # noqa: F401

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the fused dropout+residual+layernorm kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _lowbias32(x):
+    x = x.astype(jnp.uint32)
+    x ^= x >> 16
+    x *= jnp.uint32(0x7FEB352D)
+    x ^= x >> 15
+    x *= jnp.uint32(0x846CA68B)
+    x ^= x >> 16
+    return x
+
+
+def dropout_keep_mask_ref(seed, shape, p):
+    rows = jax.lax.broadcasted_iota(jnp.int32, shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, shape, 1)
+    idx = rows.astype(jnp.uint32) * jnp.uint32(shape[1]) + cols.astype(jnp.uint32)
+    bits = _lowbias32(idx ^ _lowbias32(jnp.uint32(seed)))
+    uniform = (bits >> jnp.uint32(8)).astype(jnp.float32) * (1.0 / (1 << 24))
+    return uniform >= p
+
+
+def fused_dropout_residual_layernorm_ref(x, residual, weight, bias, seed,
+                                         *, dropout_p: float = 0.0,
+                                         eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if dropout_p > 0.0:
+        keep = dropout_keep_mask_ref(seed, x.shape, dropout_p)
+        xf = jnp.where(keep, xf * (1.0 / (1.0 - dropout_p)), 0.0)
+    resid = residual.astype(jnp.float32) + xf
+    mean = jnp.mean(resid, axis=1, keepdims=True)
+    centered = resid - mean
+    var = jnp.mean(centered * centered, axis=1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    out = centered * inv * weight.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype), resid.astype(x.dtype)

@@ -1,0 +1,3 @@
+from .ops import gemm  # noqa: F401
+from .ref import gemm_ref  # noqa: F401
+from .kernel import gemm_pallas  # noqa: F401

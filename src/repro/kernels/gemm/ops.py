@@ -1,0 +1,49 @@
+"""Public GEMM op: schedule/swizzle-aware dispatch with a reference path.
+
+``mode``:
+  * "reference"        — jnp.dot (used by the 512-device dry-run; XLA fuses)
+  * "pallas_interpret" — the Pallas kernel, interpret=True (CPU validation)
+  * "pallas_tpu"       — the Pallas kernel lowered for real TPUs
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.grid_swizzle import SwizzleConfig, ROW_MAJOR, best_window
+from repro.core.schedule import Schedule, PINGPONG
+from .kernel import gemm_pallas
+from .ref import gemm_ref
+
+
+def _fit_block(dim: int, want: int, align: int) -> int:
+    """Largest block ≤ want that divides dim and is ``align``-aligned."""
+    want = min(want, dim)
+    for cand in range(want - want % align, 0, -align):
+        if dim % cand == 0:
+            return cand
+    if dim % align == 0:
+        return align
+    raise ValueError(f"dim {dim} not divisible by any {align}-aligned block")
+
+
+def gemm(a, b, *, schedule: Schedule = PINGPONG,
+         swizzle: SwizzleConfig | str | None = "auto",
+         out_dtype=jnp.bfloat16, mode: str = "pallas_interpret"):
+    if mode == "reference":
+        return gemm_ref(a, b, out_dtype)
+    m, k = a.shape
+    _, n = b.shape
+    bm = _fit_block(m, schedule.block_m, 128)
+    bn = _fit_block(n, schedule.block_n, 128)
+    bk = _fit_block(k, schedule.block_k, 128)
+    if swizzle == "auto":
+        num_rows, num_cols = max(1, m // bm), max(1, n // bn)
+        swizzle = best_window(num_rows, num_cols,
+                              bm * k * a.dtype.itemsize,
+                              k * bn * b.dtype.itemsize,
+                              candidates=(1, 2, 4, 8, num_rows))
+    elif swizzle is None:
+        swizzle = ROW_MAJOR
+    return gemm_pallas(a, b, block_m=bm, block_n=bn, block_k=bk,
+                       swizzle=swizzle, out_dtype=out_dtype,
+                       interpret=(mode == "pallas_interpret"))

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the GEMM kernel."""
+import jax.numpy as jnp
+
+
+def gemm_ref(a, b, out_dtype=jnp.bfloat16):
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                   preferred_element_type=jnp.float32).astype(out_dtype)

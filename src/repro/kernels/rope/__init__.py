@@ -1,0 +1,3 @@
+from .ops import rope, rope_tables  # noqa: F401
+from .ref import rope_ref  # noqa: F401
+from .kernel import rope_pallas  # noqa: F401

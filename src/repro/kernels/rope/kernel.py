@@ -1,0 +1,49 @@
+"""Rotary positional embedding Pallas kernel (paper Fig. 9).
+
+Memory-bound elementwise rotate: out = x*cos + rotate_half(x)*sin with the
+(S, D) sin/cos tables streamed once per sequence block and reused across the
+(batch, head) grid dims — the same reuse the paper's RoPE kernel gets from
+keeping the tables resident.
+
+sin/cos are passed *duplicated across halves* (shape (S, D)) so the kernel's
+minor dim stays lane-aligned (128) — the TPU analogue of the paper's "pick
+layouts that keep every access pattern conflict-free" rule.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rope_kernel(x_ref, sin_ref, cos_ref, o_ref):
+    x = x_ref[0, 0].astype(jnp.float32)
+    sin = sin_ref[...].astype(jnp.float32)
+    cos = cos_ref[...].astype(jnp.float32)
+    d = x.shape[-1]
+    x1 = x[:, : d // 2]
+    x2 = x[:, d // 2:]
+    rotated = jnp.concatenate([-x2, x1], axis=-1)
+    o_ref[0, 0] = (x * cos + rotated * sin).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def rope_pallas(x, sin, cos, *, block_s: int = 256, interpret: bool = True):
+    """x: (B, H, S, D); sin/cos: (S, D) duplicated halves. Returns rotated x."""
+    b, h, s, d = x.shape
+    assert sin.shape == (s, d) and cos.shape == (s, d), (sin.shape, x.shape)
+    block_s = min(block_s, s)
+    assert s % block_s == 0
+
+    x_spec = pl.BlockSpec((1, 1, block_s, d), lambda b_, h_, i: (b_, h_, i, 0))
+    t_spec = pl.BlockSpec((block_s, d), lambda b_, h_, i: (i, 0))
+    return pl.pallas_call(
+        _rope_kernel,
+        grid=(b, h, s // block_s),
+        in_specs=[x_spec, t_spec, t_spec],
+        out_specs=x_spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x, sin, cos)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for RoPE + table construction helpers."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_tables(positions, dim: int, theta: float = 10000.0):
+    """Return (sin, cos) of shape (len(positions), dim) — duplicated halves."""
+    half = dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    sin = jnp.concatenate([jnp.sin(angles), jnp.sin(angles)], axis=-1)
+    cos = jnp.concatenate([jnp.cos(angles), jnp.cos(angles)], axis=-1)
+    return sin, cos
+
+
+def rope_ref(x, sin, cos):
+    """x: (..., S, D); sin/cos: (S, D)."""
+    xf = x.astype(jnp.float32)
+    d = x.shape[-1]
+    x1, x2 = xf[..., : d // 2], xf[..., d // 2:]
+    rotated = jnp.concatenate([-x2, x1], axis=-1)
+    return (xf * cos + rotated * sin).astype(x.dtype)

@@ -1,0 +1,266 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count on first init). Everything below is ordinary code — including the
+# docstring, which therefore can't use `from __future__` afterwards.
+
+_DOC = """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell we build the *real* step function (train_step = loss + grads +
+AdamW update; serve_step = prefill or one-token decode with the KV cache),
+give it ShapeDtypeStruct inputs with production shardings, and
+``.lower().compile()`` it for the 16x16 (single-pod, 256-chip) and 2x16x16
+(multi-pod, 512-chip) meshes. The compiled artifact yields
+``memory_analysis()`` (proves it fits) and ``cost_analysis()`` + HLO text
+(feeds §Roofline). Failures here are sharding bugs in the system.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCH_IDS, ALL_SHAPES, get_config, get_shape,
+                           shape_applicable)
+from repro.models import build_model
+from repro.models.lm import _is_uniform
+from repro.distributed.sharding import (batch_specs, cache_specs,
+                                        data_axis_names, shardings_for_tree)
+from repro.optim import AdamWConfig, adamw_update, constant_schedule
+from repro.train.state import abstract_state, state_shardings
+from repro.launch.mesh import make_production_mesh
+from repro.launch import roofline as rf
+
+
+def _abstract_cache(model, batch: int, max_len: int):
+    return jax.eval_shape(lambda: model.init_cache(batch, max_len))
+
+
+def build_cell(arch_or_cfg, shape_name: str, mesh, *, zero1: bool = True):
+    """Returns (jitted_fn, abstract_args) for the cell's step function."""
+    cfg = (get_config(arch_or_cfg) if isinstance(arch_or_cfg, str)
+           else arch_or_cfg)
+    shape = get_shape(shape_name)
+    daxes = data_axis_names(mesh)
+    model = build_model(cfg, mode="reference", mesh=mesh, data_axes=daxes)
+    abs_batch = model.batch_specs(shape)
+    b_sh = batch_specs(abs_batch, mesh)
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(schedule=constant_schedule(1e-4))
+        st_sh = state_shardings(model, mesh, zero1=zero1, fsdp=cfg.fsdp)
+        abs_st = abstract_state(model)
+
+        def train_step(state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: model.loss(p, batch), has_aux=True)(state["params"])
+            new_params, new_opt, om = adamw_update(
+                opt_cfg, grads, state["opt"], state["params"])
+            return {"params": new_params, "opt": new_opt,
+                    "step": state["step"] + 1}, {"loss": loss, **om}
+
+        fn = jax.jit(train_step, in_shardings=(st_sh, b_sh),
+                     out_shardings=(st_sh, None), donate_argnums=(0,))
+        return fn, (abs_st, abs_batch)
+
+    # serving cells: params only (no optimizer state)
+    p_sh = shardings_for_tree(model.axes(), model.abstract(), mesh)
+    abs_params = model.abstract()
+
+    if shape.kind == "prefill":
+        abs_cache = _abstract_cache(model, shape.global_batch, shape.seq_len)
+        c_sh = cache_specs(abs_cache, mesh,
+                           stacked=(cfg.family == "encdec"
+                                    or _is_uniform(cfg)))
+
+        def prefill_step(params, batch, cache):
+            return model.prefill(params, batch, cache)
+
+        fn = jax.jit(prefill_step, in_shardings=(p_sh, b_sh, c_sh),
+                     out_shardings=(c_sh, None), donate_argnums=(2,))
+        return fn, (abs_params, abs_batch, abs_cache)
+
+    # decode: one new token against a KV cache of seq_len
+    abs_cache = _abstract_cache(model, shape.global_batch, shape.seq_len)
+    c_sh = cache_specs(abs_cache, mesh,
+                       stacked=(cfg.family == "encdec" or _is_uniform(cfg)))
+    tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    tok_sh = batch_specs(tok, mesh)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def decode_step(params, token, cache, pos):
+        return model.decode_step(params, token, cache, pos)
+
+    fn = jax.jit(decode_step, in_shardings=(p_sh, tok_sh, c_sh, None),
+                 out_shardings=(c_sh, None), donate_argnums=(2,))
+    return fn, (abs_params, tok, abs_cache, pos)
+
+
+def _cost_once(cfg, shape_name: str, mesh) -> rf.Roofline:
+    fn, args = build_cell(cfg, shape_name, mesh)
+    with mesh:
+        compiled = fn.lower(*args).compile()
+    return rf.roofline_from_compiled(compiled)
+
+
+def _extrapolated_costs(cfg, shape_name: str, mesh) -> rf.Roofline:
+    """XLA cost_analysis counts a rolled scan body ONCE (verified: exactly
+    1/L), so the layer-scan's work must be recovered. We cost the model at
+    L=pattern and L=2·pattern layers and extrapolate linearly — exact for
+    stacked-scan layouts. Inner scans are unrolled via REPRO_COSTING.
+    Loop-layout archs (recurrentgemma) are already unrolled — cost directly.
+    """
+    from repro.models.lm import _layout
+    layout = (_layout(cfg) if cfg.family != "encdec" else
+              ("scan", ("encdec",), cfg.num_layers))
+    os.environ["REPRO_COSTING"] = "1"
+    try:
+        if layout[0] != "scan" or layout[2] <= 2:
+            return _cost_once(cfg, shape_name, mesh)
+        _, pattern, n_groups = layout
+        plen = len(pattern)
+        if cfg.family == "encdec":
+            cfg1 = dataclasses.replace(cfg, num_layers=plen,
+                                       encoder_layers=max(1, cfg.encoder_layers
+                                                          // cfg.num_layers))
+            cfg2 = dataclasses.replace(cfg, num_layers=2 * plen,
+                                       encoder_layers=max(2, 2 * cfg.encoder_layers
+                                                          // cfg.num_layers))
+        else:
+            cfg1 = dataclasses.replace(cfg, num_layers=plen)
+            cfg2 = dataclasses.replace(cfg, num_layers=2 * plen)
+        r1 = _cost_once(cfg1, shape_name, mesh)
+        r2 = _cost_once(cfg2, shape_name, mesh)
+
+        def extrap(a, b):
+            per = max(0.0, b - a)
+            return a + (n_groups - 1) * per
+
+        flops = extrap(r1.flops_per_chip, r2.flops_per_chip)
+        hbm = extrap(r1.hbm_bytes_per_chip, r2.hbm_bytes_per_chip)
+        coll = extrap(r1.collective_bytes_per_chip,
+                      r2.collective_bytes_per_chip)
+        by_kind = {k: extrap(r1.by_kind.get(k, 0.0), r2.by_kind.get(k, 0.0))
+                   for k in set(r1.by_kind) | set(r2.by_kind)}
+        compute_s = flops / rf.PEAK_FLOPS
+        memory_s = hbm / rf.HBM_BW
+        collective_s = coll / (rf.ICI_LINK_BW * rf.ICI_LINKS)
+        terms = {"compute": compute_s, "memory": memory_s,
+                 "collective": collective_s}
+        return rf.Roofline(flops, hbm, coll, compute_s, memory_s,
+                           collective_s, max(terms, key=terms.get), by_kind)
+    finally:
+        os.environ.pop("REPRO_COSTING", None)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             *, verbose: bool = True, overrides: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = get_shape(shape_name)
+    ok, reason = shape_applicable(cfg, shape)
+    record: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind}
+    if not ok:
+        record.update(status="skipped", reason=reason)
+        return record
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    # full compile: proves the production config lowers + memory analysis
+    fn, args = build_cell(cfg, shape_name, mesh)
+    with mesh:
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+        mem = rf.memory_dict(compiled)
+    # costing compiles: scan-corrected roofline terms
+    roof = _extrapolated_costs(cfg, shape_name, mesh)
+    dt = time.time() - t0
+    model_flops = rf.model_flops_per_step(cfg, shape)
+    hlo_flops_total = roof.flops_per_chip * n_chips
+    record.update(
+        status="ok", n_chips=n_chips, compile_s=round(dt, 1),
+        memory=mem, roofline=roof.as_dict(),
+        model_flops=model_flops,
+        useful_flops_ratio=(model_flops / hlo_flops_total
+                            if hlo_flops_total else None),
+        params=cfg.param_count(), active_params=cfg.active_param_count(),
+    )
+    if verbose:
+        print(f"[dryrun] {arch} × {shape_name} × {mesh_kind}: "
+              f"bound={roof.bound} compute={roof.compute_s*1e3:.2f}ms "
+              f"memory={roof.memory_s*1e3:.2f}ms "
+              f"collective={roof.collective_s*1e3:.2f}ms "
+              f"temp={mem.get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+              f"(compiled in {dt:.0f}s)")
+        print(f"  memory_analysis: {mem}")
+        print(f"  cost_analysis: flops/chip={roof.flops_per_chip:.3e} "
+              f"bytes/chip={roof.hbm_bytes_per_chip:.3e} "
+              f"coll_bytes/chip={roof.collective_bytes_per_chip:.3e} "
+              f"by_kind={ {k: f'{v:.2e}' for k, v in roof.by_kind.items()} }")
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS))
+    ap.add_argument("--shape", choices=[s.name for s in ALL_SHAPES])
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch × shape) cell")
+    ap.add_argument("--out", default=None, help="write JSON records here")
+    ap.add_argument("--set", default="", dest="overrides",
+                    help="perf levers, e.g. ce_chunk=512,remat_policy=dots,"
+                         "rglru_f32_gates=False")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in filter(None, args.overrides.split(",")):
+        k, v = kv.split("=")
+        overrides[k] = (int(v) if v.lstrip("-").isdigit()
+                        else v == "True" if v in ("True", "False") else v)
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [(a, s.name) for a in ARCH_IDS for s in ALL_SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells = [(args.arch, args.shape)]
+
+    records = []
+    failures = 0
+    for arch, shape in cells:
+        for mesh_kind in meshes:
+            try:
+                rec = run_cell(arch, shape, mesh_kind, overrides=overrides)
+            except Exception as e:  # a failure here is a sharding bug
+                failures += 1
+                rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                       "status": "FAILED", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]}
+                print(f"[dryrun] FAILED {arch} × {shape} × {mesh_kind}: {e}")
+            records.append(rec)
+            if args.out:
+                os.makedirs(args.out, exist_ok=True)
+                name = f"{arch}__{shape}__{mesh_kind}.json"
+                with open(os.path.join(args.out, name), "w") as f:
+                    json.dump(rec, f, indent=1)
+    ok = sum(1 for r in records if r["status"] == "ok")
+    skipped = sum(1 for r in records if r["status"] == "skipped")
+    print(f"[dryrun] done: {ok} ok, {skipped} skipped (documented), "
+          f"{failures} failed of {len(records)} cells")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Build the EXPERIMENTS.md §Dry-run/§Roofline tables from dryrun JSONs.
+
+  PYTHONPATH=src python -m repro.launch.report experiments/dryrun
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def load(dirname: str) -> list[dict]:
+    recs = []
+    for f in sorted(os.listdir(dirname)):
+        if f.endswith(".json"):
+            recs.append(json.load(open(os.path.join(dirname, f))))
+    return recs
+
+
+def fmt_bytes(b: float) -> str:
+    return f"{b / 2**30:.2f}"
+
+
+def roofline_table(recs: list[dict], mesh: str) -> str:
+    rows = ["| arch | shape | bound | compute ms | memory ms | coll ms | "
+            "HLO GFLOP/chip | HBM GiB/chip | coll GiB/chip | temp GiB | "
+            "6ND/HLO | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | — skipped: "
+                        f"{r['reason'][:60]}… | | | | | | | | | |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | **FAILED** | | | | | | | | | |")
+            continue
+        rf = r["roofline"]
+        step = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        frac = rf["compute_s"] / step if step else 0
+        ratio = r.get("useful_flops_ratio")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {rf['bound']} "
+            f"| {rf['compute_s']*1e3:.1f} | {rf['memory_s']*1e3:.1f} "
+            f"| {rf['collective_s']*1e3:.1f} "
+            f"| {rf['flops_per_chip']/1e9:.0f} "
+            f"| {fmt_bytes(rf['hbm_bytes_per_chip'])} "
+            f"| {fmt_bytes(rf['collective_bytes_per_chip'])} "
+            f"| {fmt_bytes(r['memory']['temp_size_in_bytes'])} "
+            f"| {ratio:.2f} | {frac:.2f} |" if ratio is not None else
+            f"| {r['arch']} | {r['shape']} | {rf['bound']} | | | | | | | | | |")
+    return "\n".join(rows)
+
+
+def summary(recs: list[dict]) -> str:
+    ok = sum(1 for r in recs if r["status"] == "ok")
+    sk = sum(1 for r in recs if r["status"] == "skipped")
+    fl = sum(1 for r in recs if r["status"] not in ("ok", "skipped"))
+    return f"{ok} compiled OK, {sk} documented skips, {fl} failures"
+
+
+def main() -> None:
+    d = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    recs = load(d)
+    print(f"## Summary: {summary(recs)}\n")
+    for mesh in ("single", "multi"):
+        print(f"### Mesh: {mesh} "
+              f"({'16x16=256 chips' if mesh == 'single' else '2x16x16=512 chips'})\n")
+        print(roofline_table(recs, mesh))
+        print()
+
+
+if __name__ == "__main__":
+    main()

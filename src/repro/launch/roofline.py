@@ -1,0 +1,130 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+compute  = HLO_FLOPs_per_chip   / peak_FLOP/s            (197e12 bf16, v5e)
+memory   = HLO_bytes_per_chip   / HBM_bw                 (819e9 B/s)
+collective = wire_bytes_per_chip / (links × link_bw)     (4 × 50e9 B/s)
+
+HLO_FLOPs/bytes come from ``compiled.cost_analysis()`` (the SPMD module is
+the per-device program, so these are already per-chip). Collective wire
+bytes are parsed from the optimized HLO text: for each collective op we take
+the largest tensor shape appearing on the op line as the logical full
+payload and weight it ×2 for all-reduce (ring: send+receive each ~payload),
+×1 otherwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*[^=]*\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute|ragged-all-to-all)(-start)?\(")
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_LINK_BW = 50e9           # B/s per link
+ICI_LINKS = 4                # 2D torus
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    total_bytes: float = 0.0
+    by_kind: dict = dataclasses.field(default_factory=dict)
+    count: int = 0
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        shapes = [_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(line)]
+        if not shapes:
+            continue
+        payload = max(shapes)
+        mult = 2.0 if kind == "all-reduce" else 1.0
+        b = payload * mult
+        stats.total_bytes += b
+        stats.by_kind[kind] = stats.by_kind.get(kind, 0.0) + b
+        stats.count += 1
+    return stats
+
+
+def cost_dict(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return dict(ca)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bound: str
+    by_kind: dict
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def roofline_from_compiled(compiled, *, peak=PEAK_FLOPS, hbm=HBM_BW,
+                           link_bw=ICI_LINK_BW, links=ICI_LINKS) -> Roofline:
+    costs = cost_dict(compiled)
+    flops = float(costs.get("flops", 0.0))
+    hbm_bytes = float(costs.get("bytes accessed", 0.0))
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    compute_s = flops / peak
+    memory_s = hbm_bytes / hbm
+    collective_s = coll.total_bytes / (link_bw * links)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    return Roofline(flops, hbm_bytes, coll.total_bytes, compute_s, memory_s,
+                    collective_s, max(terms, key=terms.get), coll.by_kind)
+
+
+def memory_dict(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    out = {}
+    for key in ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "alias_size_in_bytes",
+                "generated_code_size_in_bytes"):
+        val = getattr(ma, key, None)
+        if val is not None:
+            out[key] = int(val)
+    return out
+
+
+def model_flops_per_step(cfg, shape) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE) per optimizer step; decode counts
+    one token per sequence; prefill counts forward-only (2·N·D)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: 1 new token/seq

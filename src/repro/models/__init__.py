@@ -1,0 +1,2 @@
+"""Model substrate: the 10 assigned architectures in pure JAX."""
+from .api import Model, build_model, make_batch  # noqa: F401

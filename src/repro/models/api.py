@@ -1,0 +1,150 @@
+"""Unified model API: one object per architecture family.
+
+``build_model(cfg)`` returns a :class:`Model` whose methods close over the
+kernel mode / mesh, giving every arch the same surface:
+  init, param_defs, loss, forward, init_cache, prefill, decode_step,
+  make_batch (ShapeDtypeStructs OR real random arrays for a given ShapeConfig)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from . import lm as _lm
+from . import encdec as _ed
+from . import vlm as _vlm
+from .common import abstract_params, init_params, logical_axes
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    defs: dict
+    loss: Callable            # (params, batch) -> (loss, metrics)
+    forward: Callable         # (params, batch-or-tokens) -> (logits, aux)
+    init_cache: Callable      # (batch, max_len) -> cache
+    prefill: Callable         # (params, batch, cache) -> (cache, logits)
+    decode_step: Callable     # (params, token, cache, pos) -> (cache, logits)
+
+    def init(self, rng) -> dict:
+        return init_params(self.defs, rng)
+
+    def abstract(self) -> dict:
+        return abstract_params(self.defs)
+
+    def axes(self) -> dict:
+        return logical_axes(self.defs)
+
+    # ---- batch construction --------------------------------------------
+    def batch_specs(self, shape: ShapeConfig) -> dict:
+        """ShapeDtypeStruct inputs for the dry-run (no allocation)."""
+        return make_batch(self.cfg, shape, abstract=True)
+
+    def make_batch(self, shape: ShapeConfig, rng) -> dict:
+        return make_batch(self.cfg, shape, abstract=False, rng=rng)
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, *, abstract: bool,
+               rng=None) -> dict:
+    """Inputs for train ({'inputs','targets','loss_mask', frontends...})."""
+    b, s = shape.global_batch, shape.seq_len
+    out: dict[str, Any] = {}
+
+    def toks(shp):
+        if abstract:
+            return jax.ShapeDtypeStruct(shp, jnp.int32)
+        return jax.random.randint(rng, shp, 0, cfg.vocab_size, jnp.int32)
+
+    def arr(shp):
+        if abstract:
+            return jax.ShapeDtypeStruct(shp, jnp.dtype(cfg.compute_dtype))
+        return jax.random.normal(rng, shp, jnp.dtype(cfg.compute_dtype))
+
+    if cfg.family == "encdec":
+        out["encoder_embeds"] = arr((b, cfg.encoder_seq, cfg.d_model))
+        out["inputs"] = toks((b, s))
+        out["targets"] = toks((b, s))
+    elif cfg.family == "vlm":
+        p = cfg.num_patches
+        out["patch_embeds"] = arr((b, p, cfg.d_model))
+        out["inputs"] = toks((b, s - p))
+        out["targets"] = toks((b, s - p))
+    else:
+        out["inputs"] = toks((b, s))
+        out["targets"] = toks((b, s))
+    mask_shape = out["targets"].shape
+    out["loss_mask"] = (jax.ShapeDtypeStruct(mask_shape, jnp.float32)
+                        if abstract else jnp.ones(mask_shape, jnp.float32))
+    return out
+
+
+def build_model(cfg: ModelConfig, *, mode: Optional[str] = None, mesh=None,
+                data_axes=("data",)) -> Model:
+    mode = mode if mode is not None else "reference"
+    kw = dict(mode=mode, mesh=mesh, data_axes=data_axes)
+
+    if cfg.family == "encdec":
+        defs = _ed.encdec_param_defs(cfg)
+        return Model(
+            cfg=cfg, defs=defs,
+            loss=functools.partial(_ed.encdec_loss, cfg, **kw),
+            forward=functools.partial(_ed.encdec_forward, cfg, **kw),
+            init_cache=functools.partial(_ed.encdec_init_cache, cfg),
+            prefill=functools.partial(_ed.encdec_prefill, cfg, mode=mode),
+            decode_step=functools.partial(_ed.encdec_decode_step, cfg,
+                                          mesh=mesh, data_axes=data_axes),
+        )
+    if cfg.family == "encoder":
+        from . import encoder as _enc
+
+        def _no_decode(*a, **k):
+            raise NotImplementedError("encoder-only archs have no decode step")
+
+        defs = _enc.encoder_param_defs(cfg)
+        return Model(
+            cfg=cfg, defs=defs,
+            loss=functools.partial(_enc.encoder_loss, cfg, **kw),
+            forward=functools.partial(_enc.encoder_forward, cfg, **kw),
+            init_cache=_no_decode, prefill=_no_decode, decode_step=_no_decode,
+        )
+    if cfg.family == "vlm":
+        defs = _vlm.vlm_param_defs(cfg)
+
+        def vlm_prefill(params, batch, cache):
+            # prepend patch embeds by running lm_prefill over combined tokens
+            raise NotImplementedError(
+                "vlm serving uses text-only prefill on the LM backbone")
+
+        return Model(
+            cfg=cfg, defs=defs,
+            loss=functools.partial(_vlm.vlm_loss, cfg, **kw),
+            forward=functools.partial(_vlm.vlm_forward, cfg, **kw),
+            init_cache=functools.partial(_lm.lm_init_cache, cfg),
+            prefill=lambda params, batch, cache: _lm.lm_prefill(
+                cfg, params,
+                batch["inputs"] if isinstance(batch, dict) else batch,
+                cache, **kw),
+            decode_step=functools.partial(_lm.lm_decode_step, cfg, mesh=mesh,
+                                          data_axes=data_axes),
+        )
+
+    defs = _lm.lm_param_defs(cfg)
+    return Model(
+        cfg=cfg, defs=defs,
+        loss=functools.partial(_lm.lm_loss, cfg, **kw),
+        forward=lambda params, batch, **k: _lm.lm_forward(
+            cfg, params,
+            batch["inputs"] if isinstance(batch, dict) else batch, **kw, **k),
+        init_cache=functools.partial(_lm.lm_init_cache, cfg),
+        prefill=lambda params, tokens, cache: _lm.lm_prefill(
+            cfg, params,
+            tokens["inputs"] if isinstance(tokens, dict) else tokens,
+            cache, **kw),
+        decode_step=functools.partial(_lm.lm_decode_step, cfg, mesh=mesh,
+                                      data_axes=data_axes),
+    )

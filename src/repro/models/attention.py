@@ -1,0 +1,187 @@
+"""GQA/MHA attention layer: projections + RoPE + flash kernel + KV cache.
+
+Train/prefill route through the Pallas flash kernel (or its jnp oracle in
+'reference' mode — the dry-run path). Single-token decode uses a jnp
+einsum over the cache (memory-bound gather; XLA's bread and butter).
+Sliding-window archs (Mixtral SWA, RecurrentGemma local attention) keep a
+ring-buffer cache of ``window`` slots so the 500k-decode cell stays O(window).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.attention import attention as attention_op
+from repro.kernels.rope import rope as rope_op, rope_ref, rope_tables
+from .common import ParamDef
+
+
+def attn_defs(cfg, prefix: str, *, stack: int | None = None,
+              cross: bool = False) -> dict:
+    d, h, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    lead = (stack,) if stack else ()
+    lx = ("layers",) if stack else ()
+    dt = cfg.param_dtype
+    kv_ax = "kv_heads" if getattr(cfg, "kv_shard", True) else None
+    defs = {
+        f"{prefix}/wq": ParamDef(lead + (d, h * hd), lx + ("embed", "heads"), dtype=dt),
+        f"{prefix}/wk": ParamDef(lead + (d, hkv * hd), lx + ("embed", kv_ax), dtype=dt),
+        f"{prefix}/wv": ParamDef(lead + (d, hkv * hd), lx + ("embed", kv_ax), dtype=dt),
+        f"{prefix}/wo": ParamDef(lead + (h * hd, d), lx + ("heads", "embed"), dtype=dt),
+    }
+    if cfg.qkv_bias and not cross:
+        defs[f"{prefix}/bq"] = ParamDef(lead + (h * hd,), lx + ("heads",), init="zeros", dtype=dt)
+        defs[f"{prefix}/bk"] = ParamDef(lead + (hkv * hd,), lx + (kv_ax,), init="zeros", dtype=dt)
+        defs[f"{prefix}/bv"] = ParamDef(lead + (hkv * hd,), lx + (kv_ax,), init="zeros", dtype=dt)
+    return defs
+
+
+def _split_heads(x, n_heads, head_dim):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, head_dim).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, s, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+
+
+def _apply_rope(cfg, q, k, positions, mode: str):
+    """q/k: (B, H, S, hd). positions: (S,) absolute positions."""
+    if cfg.rope_style == "none":
+        return q, k
+    hd = q.shape[-1]
+    rot = hd // 2 if cfg.rope_style == "partial" else hd
+    sin, cos = rope_tables(positions, rot, cfg.rope_theta)
+
+    def rot_fn(x):
+        xr = x[..., :rot]
+        # the Pallas rope kernel wants contiguous full-seq blocks; decode and
+        # partial-dim cases use the (identical) jnp reference.
+        if mode != "reference" and cfg.rope_style == "half" and xr.shape[2] >= 128:
+            out = rope_op(xr, sin, cos, mode=mode)
+        else:
+            out = rope_ref(xr, sin, cos)
+        if rot == hd:
+            return out
+        return jnp.concatenate([out, x[..., rot:]], axis=-1)
+
+    return rot_fn(q), rot_fn(k)
+
+
+def project_qkv(cfg, p, x, kv_input=None):
+    kv_src = x if kv_input is None else kv_input
+    q = x @ p["wq"]
+    k = kv_src @ p["wk"]
+    v = kv_src @ p["wv"]
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = _split_heads(q, cfg.num_heads, cfg.head_dim)
+    k = _split_heads(k, cfg.num_kv_heads, cfg.head_dim)
+    v = _split_heads(v, cfg.num_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def attention_layer(cfg, p, x, *, causal: bool = True,
+                    window: int | None = None, kv_input=None,
+                    positions=None, mode: str = "reference",
+                    use_rope: bool = True):
+    """Full-sequence attention (train/prefill). x: (B, S, D)."""
+    s = x.shape[1]
+    q, k, v = project_qkv(cfg, p, x, kv_input)
+    if use_rope and kv_input is None:
+        if positions is None:
+            positions = jnp.arange(s)
+        q, k = _apply_rope(cfg, q, k, positions, mode)
+    out = attention_op(q, k, v, causal=causal, window=window,
+                       block_q=min(128, q.shape[2]),
+                       block_kv=min(128, k.shape[2]), mode=mode)
+    return _merge_heads(out) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode path)
+# ---------------------------------------------------------------------------
+
+def cache_len(cfg, max_len: int, window: int | None) -> int:
+    return min(max_len, window) if window else max_len
+
+
+def init_attn_cache(cfg, batch: int, max_len: int, window: int | None,
+                    dtype) -> dict:
+    slots = cache_len(cfg, max_len, window)
+    shape = (batch, cfg.num_kv_heads, slots, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def prefill_attn_cache(cfg, cache: dict, k, v, seq_len: int,
+                       window: int | None) -> dict:
+    """Insert full-prefill k/v (B, Hkv, S, hd) into (possibly ring) cache."""
+    slots = cache["k"].shape[2]
+    if seq_len <= slots:
+        k_c = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=2)
+        v_c = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=2)
+        return {"k": k_c, "v": v_c}
+    # ring: keep the last ``slots`` positions at slot = pos % slots
+    tail_k = k[:, :, -slots:]
+    tail_v = v[:, :, -slots:]
+    pos = jnp.arange(seq_len - slots, seq_len)
+    idx = pos % slots
+    k_c = cache["k"].at[:, :, idx].set(tail_k)
+    v_c = cache["v"].at[:, :, idx].set(tail_v)
+    return {"k": k_c, "v": v_c}
+
+
+def decode_attention_layer(cfg, p, x, cache: dict, pos, *,
+                           window: int | None = None, cross: bool = False,
+                           update_cache: bool = True,
+                           use_rope: bool = True):
+    """One-token decode. x: (B, 1, D); pos: scalar int32 (current position).
+
+    ``cross=True``: q from x, k/v from the static (cross-attention) cache.
+    Returns (out (B,1,D), new_cache).
+    """
+    if cross:
+        q = x @ p["wq"]
+        if "bq" in p:
+            q = q + p["bq"]
+        q = _split_heads(q, cfg.num_heads, cfg.head_dim)
+        k, v = cache["k"], cache["v"]  # static cross-attention cache
+        valid = jnp.ones(k.shape[2], bool)
+    else:
+        q, k_new, v_new = project_qkv(cfg, p, x)
+        if use_rope:
+            positions = jnp.asarray(pos).reshape(1)
+            q, k_new = _apply_rope(cfg, q, k_new, positions, "reference")
+        slots = cache["k"].shape[2]
+        pos = jnp.asarray(pos, jnp.int32)
+        slot = pos % slots
+        if update_cache:
+            k_c = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=2)
+            v_c = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=2)
+            cache = {"k": k_c, "v": v_c}
+        k, v = cache["k"], cache["v"]
+        # per-slot absolute position (ring-aware)
+        i = jnp.arange(slots)
+        cur = pos % slots
+        actual = jnp.where(i <= cur, pos - cur + i, pos - cur - slots + i)
+        valid = (actual >= 0) & (actual <= pos)
+        if window is not None:
+            valid &= (pos - actual) < window
+
+    b, h, _, hd = q.shape
+    hkv = k.shape[1]
+    group = h // hkv
+    qf = q.astype(jnp.float32).reshape(b, hkv, group, hd)
+    scale = hd ** -0.5
+    s = jnp.einsum("bgxd,bgkd->bgxk", qf, k.astype(jnp.float32)) * scale
+    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    pmax = jnp.max(s, axis=-1, keepdims=True)
+    pexp = jnp.exp(s - pmax)
+    den = jnp.sum(pexp, axis=-1, keepdims=True)
+    out = jnp.einsum("bgxk,bgkd->bgxd", pexp / jnp.maximum(den, 1e-30),
+                     v.astype(jnp.float32))
+    out = out.reshape(b, h, 1, hd).astype(x.dtype)
+    return _merge_heads(out) @ p["wo"], cache

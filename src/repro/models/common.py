@@ -1,0 +1,167 @@
+"""Parameter declaration machinery + shared numerics.
+
+A model is described by a flat dict ``{path: ParamDef}`` — one source of
+truth for (a) initialization, (b) logical sharding axes, (c) the dry-run's
+ShapeDtypeStructs. The nested param pytree is derived from the flat paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]   # logical axis names, len == len(shape)
+    init: str = "normal"              # 'normal' | 'zeros' | 'ones' | 'lru_a'
+    scale: float = 1.0                # stddev multiplier (normal init)
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def nest(flat: Mapping[str, object]) -> dict:
+    """{'a/b/c': v} -> {'a': {'b': {'c': v}}}"""
+    tree: dict = {}
+    for path, value in flat.items():
+        parts = path.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = value
+    return tree
+
+
+def init_params(defs: Mapping[str, ParamDef], rng: jax.Array) -> dict:
+    keys = jax.random.split(rng, max(1, len(defs)))
+    flat = {}
+    for key, (path, d) in zip(keys, sorted(defs.items())):
+        dtype = jnp.dtype(d.dtype)
+        if d.init == "zeros":
+            flat[path] = jnp.zeros(d.shape, dtype)
+        elif d.init == "ones":
+            flat[path] = jnp.ones(d.shape, dtype)
+        elif d.init == "lru_a":
+            # RG-LRU Λ init: a = sigmoid(Λ) uniform in [0.9, 0.999] (Griffin)
+            u = jax.random.uniform(key, d.shape, jnp.float32, 0.9, 0.999)
+            flat[path] = jnp.log(u / (1 - u)).astype(dtype)
+        else:
+            fan_in = d.shape[0] if len(d.shape) > 1 else d.shape[-1]
+            std = d.scale / math.sqrt(max(1, fan_in))
+            flat[path] = (jax.random.normal(key, d.shape, jnp.float32) * std
+                          ).astype(dtype)
+    return nest(flat)
+
+
+def abstract_params(defs: Mapping[str, ParamDef]) -> dict:
+    return nest({p: jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype))
+                 for p, d in defs.items()})
+
+
+def logical_axes(defs: Mapping[str, ParamDef]) -> dict:
+    return nest({p: d.axes for p, d in defs.items()})
+
+
+def param_bytes(defs: Mapping[str, ParamDef]) -> int:
+    return sum(math.prod(d.shape) * jnp.dtype(d.dtype).itemsize
+               for d in defs.values())
+
+
+def cast_params(params, dtype):
+    """Cast float params to the compute dtype (fp32 masters live in the
+    train state; norms/softmax upcast internally regardless)."""
+    dtype = jnp.dtype(dtype)
+    return jax.tree.map(
+        lambda x: x.astype(dtype)
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating) else x,
+        params)
+
+
+# ---------------------------------------------------------------------------
+# Shared numerics (always fp32 internally).
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    c = xf - mean
+    var = jnp.mean(c * c, axis=-1, keepdims=True)
+    out = c * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def apply_norm(cfg, x, p, prefix: str):
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, p[f"{prefix}_scale"])
+    return layernorm(x, p[f"{prefix}_scale"], p.get(f"{prefix}_bias"))
+
+
+def act_fn(name: str):
+    if name == "swiglu" or name == "silu":
+        return jax.nn.silu
+    if name == "geglu" or name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    raise ValueError(name)
+
+
+def mlp_forward(cfg, p, x):
+    """Gated (swiglu/geglu) or plain MLP. p: params subtree with w_in/w_gate/w_out."""
+    act = act_fn(cfg.mlp_act)
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        h = act(x @ p["w_gate"]) * (x @ p["w_in"])
+    else:
+        h = act(x @ p["w_in"])
+    return h @ p["w_out"]
+
+
+def mlp_defs(cfg, prefix: str, *, stack: int | None = None,
+             d_in: int | None = None, d_ff: int | None = None) -> dict:
+    d = d_in or cfg.d_model
+    f = d_ff or cfg.d_ff
+    lead = (stack,) if stack else ()
+    lax_ = ("layers",) if stack else ()
+    dt = cfg.param_dtype
+    defs = {f"{prefix}/w_in": ParamDef(lead + (d, f), lax_ + ("embed", "ffn"), dtype=dt),
+            f"{prefix}/w_out": ParamDef(lead + (f, d), lax_ + ("ffn", "embed"), dtype=dt)}
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        defs[f"{prefix}/w_gate"] = ParamDef(lead + (d, f), lax_ + ("embed", "ffn"), dtype=dt)
+    return defs
+
+
+def norm_defs(cfg, prefix: str, *, stack: int | None = None,
+              width: int | None = None) -> dict:
+    d = width or cfg.d_model
+    lead = (stack,) if stack else ()
+    lax_ = ("layers",) if stack else ()
+    dt = cfg.param_dtype
+    defs = {f"{prefix}_scale": ParamDef(lead + (d,), lax_ + (None,), init="ones", dtype=dt)}
+    if cfg.norm == "layernorm":
+        defs[f"{prefix}_bias"] = ParamDef(lead + (d,), lax_ + (None,), init="zeros", dtype=dt)
+    return defs
+
+
+def cross_entropy_loss(logits, labels, mask=None):
+    """Mean CE over valid positions. logits (..., V) fp32-cast internally."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

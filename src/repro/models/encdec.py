@@ -1,0 +1,196 @@
+"""Encoder-decoder transformer (Whisper backbone; conv frontend is a STUB —
+``input_specs`` provides precomputed frame embeddings per the assignment).
+
+Encoder: bidirectional self-attention blocks over (B, S_enc, D) embeddings
+with sinusoidal positions. Decoder: causal self-attention + cross-attention +
+MLP, learned positions. LayerNorm + GELU, tied embedding/LM head (Whisper).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import (ParamDef, apply_norm, cast_params, cross_entropy_loss,
+                     mlp_defs, mlp_forward, norm_defs)
+from .attention import (attn_defs, attention_layer, decode_attention_layer,
+                        init_attn_cache, prefill_attn_cache, project_qkv,
+                        _merge_heads)
+from repro.kernels.attention import attention as attention_op
+
+
+def sinusoidal_positions(length: int, dim: int):
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    idx = jnp.arange(dim // 2, dtype=jnp.float32)[None, :]
+    angles = pos / jnp.power(10000.0, 2 * idx / dim)
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)], axis=-1)
+
+
+def encdec_param_defs(cfg) -> dict:
+    d, v = cfg.d_model, cfg.vocab_size
+    dt = cfg.param_dtype
+    defs = {
+        "embed": ParamDef((v, d), ("vocab", "embed"), dtype=dt),
+        "dec_pos": ParamDef((cfg.max_seq_len, d), (None, "embed"),
+                            scale=0.02, dtype=dt),
+    }
+    enc = cfg.encoder_layers
+    defs.update(attn_defs(cfg, "enc/attn", stack=enc))
+    defs.update(mlp_defs(cfg, "enc/mlp", stack=enc))
+    defs.update(norm_defs(cfg, "enc/ln1", stack=enc))
+    defs.update(norm_defs(cfg, "enc/ln2", stack=enc))
+    defs.update(norm_defs(cfg, "enc_final_norm"))
+
+    dec = cfg.num_layers
+    defs.update(attn_defs(cfg, "dec/attn", stack=dec))
+    defs.update(attn_defs(cfg, "dec/xattn", stack=dec, cross=True))
+    defs.update(mlp_defs(cfg, "dec/mlp", stack=dec))
+    defs.update(norm_defs(cfg, "dec/ln1", stack=dec))
+    defs.update(norm_defs(cfg, "dec/lnx", stack=dec))
+    defs.update(norm_defs(cfg, "dec/ln2", stack=dec))
+    defs.update(norm_defs(cfg, "final_norm"))
+    return defs
+
+
+def encode(cfg, params, enc_embeds, *, mode="reference", remat=False):
+    """enc_embeds: (B, S_enc, D) stub-frontend output -> (B, S_enc, D)."""
+    s = enc_embeds.shape[1]
+    x = enc_embeds.astype(cfg.compute_dtype) + \
+        sinusoidal_positions(s, cfg.d_model).astype(cfg.compute_dtype)
+
+    def body(h, layer_params):
+        p = layer_params
+        a = attention_layer(cfg, p["attn"], apply_norm(cfg, h, p, "ln1"),
+                            causal=False, mode=mode, use_rope=False)
+        h = h + a
+        h = h + mlp_forward(cfg, p["mlp"], apply_norm(cfg, h, p, "ln2"))
+        return h, None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    from repro.util import scan_unroll
+    x, _ = jax.lax.scan(body, x, params["enc"], unroll=scan_unroll())
+    return apply_norm(cfg, x, params, "enc_final_norm")
+
+
+def _dec_block(cfg, p, x, enc_out, *, mode="reference"):
+    a = attention_layer(cfg, p["attn"], apply_norm(cfg, x, p, "ln1"),
+                        causal=True, mode=mode, use_rope=False)
+    x = x + a
+    c = attention_layer(cfg, p["xattn"], apply_norm(cfg, x, p, "lnx"),
+                        causal=False, kv_input=enc_out, mode=mode,
+                        use_rope=False)
+    x = x + c
+    x = x + mlp_forward(cfg, p["mlp"], apply_norm(cfg, x, p, "ln2"))
+    return x
+
+
+def encdec_forward(cfg, params, batch, *, mode="reference", remat=False,
+                   mesh=None, data_axes=("data",)):
+    """batch: {'encoder_embeds': (B,S_enc,D), 'inputs': (B,S)} -> logits."""
+    params = cast_params(params, cfg.compute_dtype)
+    enc_out = encode(cfg, params, batch["encoder_embeds"], mode=mode,
+                     remat=remat)
+    tokens = batch["inputs"]
+    s = tokens.shape[1]
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    x = x + params["dec_pos"][:s].astype(cfg.compute_dtype)
+
+    def body(h, layer_params):
+        return _dec_block(cfg, layer_params, h, enc_out, mode=mode), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    from repro.util import scan_unroll
+    x, _ = jax.lax.scan(body, x, params["dec"], unroll=scan_unroll())
+    x = apply_norm(cfg, x, params, "final_norm")
+    logits = x.astype(jnp.float32) @ params["embed"].T.astype(jnp.float32)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def encdec_loss(cfg, params, batch, *, mode="reference", remat=True,
+                mesh=None, data_axes=("data",), aux_weight=0.0):
+    logits, _ = encdec_forward(cfg, params, batch, mode=mode, remat=remat)
+    ce = cross_entropy_loss(logits, batch["targets"], batch.get("loss_mask"))
+    return ce, {"ce": ce, "aux": jnp.zeros(())}
+
+
+# ---------------------------------------------------------------------------
+# Serving: encoder runs once; decoder self-KV grows, cross-KV is static.
+# ---------------------------------------------------------------------------
+
+def encdec_init_cache(cfg, batch: int, max_len: int):
+    dtype = jnp.dtype(cfg.compute_dtype)
+    self_c = init_attn_cache(cfg, batch, max_len, None, dtype)
+    cross_shape = (batch, cfg.num_kv_heads, cfg.encoder_seq, cfg.head_dim)
+    cross_c = {"k": jnp.zeros(cross_shape, dtype),
+               "v": jnp.zeros(cross_shape, dtype)}
+    stack = lambda t: jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.num_layers,) + x.shape), t)
+    return {"self": stack(self_c), "cross": stack(cross_c)}
+
+
+def encdec_prefill(cfg, params, batch, cache, *, mode="reference"):
+    """Encode + decoder prefill on batch['inputs']. Returns (cache, logits)."""
+    params = cast_params(params, cfg.compute_dtype)
+    enc_out = encode(cfg, params, batch["encoder_embeds"], mode=mode)
+    tokens = batch["inputs"]
+    s = tokens.shape[1]
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    x = x + params["dec_pos"][:s].astype(cfg.compute_dtype)
+
+    def body(h, xs):
+        p, self_c, cross_c = xs
+        hn = apply_norm(cfg, h, p, "ln1")
+        q, k, v = project_qkv(cfg, p["attn"], hn)
+        o = attention_op(q, k, v, causal=True, block_q=min(128, s),
+                         block_kv=min(128, s), mode=mode)
+        self_c = prefill_attn_cache(cfg, self_c, k, v, s, None)
+        h = h + _merge_heads(o) @ p["attn"]["wo"]
+        hn = apply_norm(cfg, h, p, "lnx")
+        qx, kx, vx = project_qkv(cfg, p["xattn"], hn, kv_input=enc_out)
+        ox = attention_op(qx, kx, vx, causal=False, block_q=min(128, s),
+                          block_kv=min(128, enc_out.shape[1]), mode=mode)
+        cross_c = {"k": kx, "v": vx}
+        h = h + _merge_heads(ox) @ p["xattn"]["wo"]
+        h = h + mlp_forward(cfg, p["mlp"], apply_norm(cfg, h, p, "ln2"))
+        return h, (self_c, cross_c)
+
+    from repro.util import scan_unroll
+    x, (self_c, cross_c) = jax.lax.scan(body, x, (params["dec"],
+                                                  cache["self"],
+                                                  cache["cross"]),
+                                        unroll=scan_unroll())
+    x = apply_norm(cfg, x, params, "final_norm")
+    logits = x[:, -1].astype(jnp.float32) @ params["embed"].T.astype(jnp.float32)
+    return {"self": self_c, "cross": cross_c}, logits
+
+
+def encdec_decode_step(cfg, params, token, cache, pos, *, mesh=None,
+                       data_axes=("data",)):
+    params = cast_params(params, cfg.compute_dtype)
+    x = params["embed"][token].astype(cfg.compute_dtype)
+    x = x + jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1, axis=0
+                                         ).astype(cfg.compute_dtype)
+
+    def body(h, xs):
+        p, self_c, cross_c = xs
+        hn = apply_norm(cfg, h, p, "ln1")
+        a, self_c = decode_attention_layer(cfg, p["attn"], hn, self_c, pos,
+                                           use_rope=False)
+        h = h + a
+        hn = apply_norm(cfg, h, p, "lnx")
+        c, _ = decode_attention_layer(cfg, p["xattn"], hn, cross_c, pos,
+                                      cross=True, update_cache=False,
+                                      use_rope=False)
+        h = h + c
+        h = h + mlp_forward(cfg, p["mlp"], apply_norm(cfg, h, p, "ln2"))
+        return h, (self_c, cross_c)
+
+    from repro.util import scan_unroll
+    x, (self_c, cross_c) = jax.lax.scan(body, x, (params["dec"],
+                                                  cache["self"],
+                                                  cache["cross"]),
+                                        unroll=scan_unroll())
+    x = apply_norm(cfg, x, params, "final_norm")
+    logits = x[:, 0].astype(jnp.float32) @ params["embed"].T.astype(jnp.float32)
+    return {"self": self_c, "cross": cross_c}, logits

@@ -1,0 +1,64 @@
+"""Encoder-only MLM (BERT family — the paper's second §4 validation model).
+
+Bidirectional self-attention blocks (reusing the enc-dec encoder blocks),
+learned positions, tied MLM head. No decode step (encoder-only archs skip
+the decode shapes per the assignment).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import (ParamDef, apply_norm, cast_params, cross_entropy_loss,
+                     mlp_defs, mlp_forward, norm_defs)
+from .attention import attn_defs, attention_layer
+
+
+def encoder_param_defs(cfg) -> dict:
+    d, v = cfg.d_model, cfg.vocab_size
+    dt = cfg.param_dtype
+    n = cfg.num_layers
+    defs = {
+        "embed": ParamDef((v, d), ("vocab", "embed"), dtype=dt),
+        "pos": ParamDef((cfg.max_seq_len, d), (None, "embed"), scale=0.02,
+                        dtype=dt),
+    }
+    defs.update(attn_defs(cfg, "enc/attn", stack=n))
+    defs.update(mlp_defs(cfg, "enc/mlp", stack=n))
+    defs.update(norm_defs(cfg, "enc/ln1", stack=n))
+    defs.update(norm_defs(cfg, "enc/ln2", stack=n))
+    defs.update(norm_defs(cfg, "final_norm"))
+    return defs
+
+
+def encoder_forward(cfg, params, batch, *, mode="reference", remat=False,
+                    mesh=None, data_axes=("data",)):
+    """batch['inputs']: (B, S) (with [MASK] ids) -> logits (B, S, V)."""
+    params = cast_params(params, cfg.compute_dtype)
+    tokens = batch["inputs"] if isinstance(batch, dict) else batch
+    s = tokens.shape[1]
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    x = x + params["pos"][:s].astype(cfg.compute_dtype)
+
+    def body(h, p):
+        a = attention_layer(cfg, p["attn"], apply_norm(cfg, h, p, "ln1"),
+                            causal=False, mode=mode, use_rope=False)
+        h = h + a
+        h = h + mlp_forward(cfg, p["mlp"], apply_norm(cfg, h, p, "ln2"))
+        return h, None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    from repro.util import scan_unroll
+    x, _ = jax.lax.scan(body, x, params["enc"], unroll=scan_unroll())
+    x = apply_norm(cfg, x, params, "final_norm")
+    logits = x.astype(jnp.float32) @ params["embed"].T.astype(jnp.float32)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def encoder_loss(cfg, params, batch, *, mode="reference", remat=True,
+                 mesh=None, data_axes=("data",), aux_weight=0.0):
+    """Masked-LM loss: CE only on positions where loss_mask=1."""
+    logits, _ = encoder_forward(cfg, params, batch, mode=mode, remat=remat)
+    ce = cross_entropy_loss(logits, batch["targets"], batch.get("loss_mask"))
+    return ce, {"ce": ce, "aux": jnp.zeros(())}

@@ -1,0 +1,439 @@
+"""Decoder-only LM assembly: dense / MoE / SSM / RG-LRU / local-attn blocks.
+
+Uniform-pattern archs (llama-family, qwen2, mixtral, mamba2, ...) stack their
+layer params with a leading 'layers' axis and run under one ``lax.scan`` so
+the 80-layer qwen2-72b compiles to a small HLO. Hybrid archs
+(recurrentgemma's 2:1 recurrent:attention pattern) unroll a python loop.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .common import (ParamDef, apply_norm, cast_params, cross_entropy_loss,
+                     init_params, mlp_defs, mlp_forward, norm_defs)
+from .attention import (attn_defs, attention_layer, decode_attention_layer,
+                        init_attn_cache, prefill_attn_cache, project_qkv,
+                        _apply_rope, _merge_heads)
+from repro.kernels.attention import attention as attention_op
+from .moe import moe_defs, moe_forward
+from .ssm import (ssm_defs, ssm_forward, ssm_prefill, ssm_decode_step,
+                  init_ssm_cache)
+from .rglru import (rglru_defs, rglru_forward, rglru_prefill,
+                    rglru_decode_step, init_rglru_cache)
+
+
+def _layout(cfg) -> tuple:
+    """How layers are stacked for scan:
+    ('scan', pattern, n_groups) — layers grouped by the block pattern and
+    scanned (pattern length 1 = classic uniform stack); ('loop',) — unrolled
+    python loop (pattern doesn't divide num_layers, e.g. recurrentgemma's
+    26 = 8x3 + 2)."""
+    kinds = [cfg.layer_kind(i) for i in range(cfg.num_layers)]
+    if len(set(kinds)) == 1:
+        return ("scan", (kinds[0],), cfg.num_layers)
+    pat = tuple(cfg.block_pattern)
+    if cfg.num_layers % len(pat) == 0:
+        return ("scan", pat, cfg.num_layers // len(pat))
+    return ("loop",)
+
+
+def _is_uniform(cfg) -> bool:
+    return _layout(cfg)[0] == "scan"
+
+
+def _block_window(cfg, kind: str):
+    if kind == "local":
+        return (cfg.rglru.local_window if cfg.rglru is not None
+                else cfg.attn_window)
+    return cfg.attn_window
+
+
+def block_defs(cfg, kind: str, prefix: str, *, stack=None) -> dict:
+    defs = {}
+    if kind in ("attn", "local", "moe"):
+        defs.update(attn_defs(cfg, f"{prefix}/attn", stack=stack))
+        defs.update(norm_defs(cfg, f"{prefix}/ln1", stack=stack))
+        defs.update(norm_defs(cfg, f"{prefix}/ln2", stack=stack))
+        if kind == "moe":
+            defs.update(moe_defs(cfg, f"{prefix}/moe", stack=stack))
+        else:
+            defs.update(mlp_defs(cfg, f"{prefix}/mlp", stack=stack))
+    elif kind == "ssm":
+        defs.update(ssm_defs(cfg, f"{prefix}/ssm", stack=stack))
+        defs.update(norm_defs(cfg, f"{prefix}/ln1", stack=stack))
+    elif kind == "rg":
+        defs.update(rglru_defs(cfg, f"{prefix}/rec", stack=stack))
+        defs.update(mlp_defs(cfg, f"{prefix}/mlp", stack=stack))
+        defs.update(norm_defs(cfg, f"{prefix}/ln1", stack=stack))
+        defs.update(norm_defs(cfg, f"{prefix}/ln2", stack=stack))
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    return defs
+
+
+def lm_param_defs(cfg) -> dict:
+    d, v = cfg.d_model, cfg.padded_vocab()
+    dt = cfg.param_dtype
+    emb_axes = (("vocab", "embed") if cfg.embed_shard == "vocab"
+                else (None, "ffn"))  # 'ffn' -> model axis on the d dim
+    if cfg.tie_embeddings and cfg.embed_shard != "vocab":
+        raise ValueError("embed d-sharding requires an untied LM head "
+                         "(tied logits would contract over a sharded dim)")
+    defs = {"embed": ParamDef((v, d), emb_axes, dtype=dt)}
+    layout = _layout(cfg)
+    if layout[0] == "scan":
+        _, pattern, n_groups = layout
+        if len(pattern) == 1:
+            defs.update(block_defs(cfg, pattern[0], "blocks", stack=n_groups))
+        else:
+            for i, kind in enumerate(pattern):
+                defs.update(block_defs(cfg, kind, f"blocks_{i}",
+                                       stack=n_groups))
+    else:
+        for i in range(cfg.num_layers):
+            defs.update(block_defs(cfg, cfg.layer_kind(i), f"layer_{i:03d}"))
+    defs.update(norm_defs(cfg, "final_norm"))
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((d, v), ("embed", "vocab"), dtype=dt)
+    return defs
+
+
+def _scan_params(cfg, params, layout):
+    """xs pytree for lax.scan: tuple over pattern positions."""
+    _, pattern, _ = layout
+    if len(pattern) == 1:
+        return (params["blocks"],)
+    return tuple(params[f"blocks_{i}"] for i in range(len(pattern)))
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def block_forward(cfg, kind: str, p, x, *, positions=None,
+                  mode: str = "reference", mesh=None, data_axes=("data",)):
+    """Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    rs = cfg.residual_scale
+    if kind in ("attn", "local", "moe"):
+        h = apply_norm(cfg, x, p, "ln1")
+        a = attention_layer(cfg, p["attn"], h, causal=True,
+                            window=_block_window(cfg, kind),
+                            positions=positions, mode=mode)
+        x = x + rs * a
+        h = apply_norm(cfg, x, p, "ln2")
+        if kind == "moe":
+            m, aux = moe_forward(cfg, p["moe"], h, mesh=mesh,
+                                 data_axes=data_axes)
+        else:
+            m = mlp_forward(cfg, p["mlp"], h)
+        x = x + rs * m
+    elif kind == "ssm":
+        h = apply_norm(cfg, x, p, "ln1")
+        x = x + rs * ssm_forward(cfg, p["ssm"], h)
+    elif kind == "rg":
+        h = apply_norm(cfg, x, p, "ln1")
+        x = x + rs * rglru_forward(cfg, p["rec"], h)
+        h = apply_norm(cfg, x, p, "ln2")
+        x = x + rs * mlp_forward(cfg, p["mlp"], h)
+    return x, aux
+
+
+def _logits(cfg, params, x):
+    x = apply_norm(cfg, x, params, "final_norm")
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x.astype(jnp.float32) @ head.astype(jnp.float32)
+    if cfg.padded_vocab() != cfg.vocab_size:
+        # mask the padding columns so they carry no probability mass
+        pad_mask = jnp.arange(cfg.padded_vocab()) < cfg.vocab_size
+        logits = jnp.where(pad_mask, logits, -1e30)
+    return logits / cfg.logit_scale_div
+
+
+def _remat(cfg, fn):
+    if cfg.remat_policy == "none":
+        return fn
+    policy = None
+    if cfg.remat_policy == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    return jax.checkpoint(fn, prevent_cse=False, policy=policy)
+
+
+def lm_forward(cfg, params, tokens, *, mode: str = "reference", mesh=None,
+               data_axes=("data",), remat: bool = False,
+               return_hidden: bool = False):
+    """tokens: (B, S) int32 -> logits (B, S, V) fp32 (or hidden states)."""
+    params = cast_params(params, cfg.compute_dtype)
+    x = params["embed"][tokens].astype(cfg.compute_dtype) * cfg.emb_scale
+    positions = jnp.arange(tokens.shape[1])
+
+    layout = _layout(cfg)
+    if layout[0] == "scan":
+        _, pattern, _ = layout
+
+        def body(carry, group_params):
+            h, aux = carry
+            for kind, layer_params in zip(pattern, group_params):
+                h, aux_l = block_forward(cfg, kind, layer_params,
+                                         h, positions=positions, mode=mode,
+                                         mesh=mesh, data_axes=data_axes)
+                aux = aux + aux_l
+            return (h, aux), None
+
+        if remat:
+            body = _remat(cfg, body)
+        from repro.util import scan_unroll
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   _scan_params(cfg, params, layout),
+                                   unroll=scan_unroll())
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(cfg.num_layers):
+            kind = cfg.layer_kind(i)
+            fn = functools.partial(block_forward, cfg, kind,
+                                   positions=positions, mode=mode, mesh=mesh,
+                                   data_axes=data_axes)
+            if remat:
+                fn = _remat(cfg, fn)
+            x, aux_l = fn(params[f"layer_{i:03d}"], x)
+            aux = aux + aux_l
+    if return_hidden:
+        return x, aux
+    return _logits(cfg, params, x), aux
+
+
+def _chunked_ce(cfg, params, hidden, targets, mask, chunk: int):
+    """CE over sequence chunks — the (B, S, V) logits are never materialized
+    (per-chunk remat keeps the backward bounded too). §Perf lever."""
+    from repro.util import scan_unroll
+    b, s, d = hidden.shape
+    while s % chunk:
+        chunk //= 2
+    nc = s // chunk
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+
+    hs = hidden.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    ts = targets.reshape(b, nc, chunk).transpose(1, 0, 2)
+    ms = mask.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def body(carry, inp):
+        nll_sum, m_sum = carry
+        h, t, m = inp
+        logits = _logits(cfg, params, h)
+        lf = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        gold = jnp.take_along_axis(lf, t[..., None], axis=-1)[..., 0]
+        mf = m.astype(jnp.float32)
+        return (nll_sum + jnp.sum((lse - gold) * mf), m_sum + jnp.sum(mf)), None
+
+    (nll, msum), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                  (hs, ts, ms), unroll=scan_unroll())
+    return nll / jnp.maximum(msum, 1.0)
+
+
+def lm_loss(cfg, params, batch, *, mode="reference", mesh=None,
+            data_axes=("data",), remat: bool = True, aux_weight: float = 0.01):
+    if cfg.ce_chunk:
+        hidden, aux = lm_forward(cfg, params, batch["inputs"], mode=mode,
+                                 mesh=mesh, data_axes=data_axes, remat=remat,
+                                 return_hidden=True)
+        ce = _chunked_ce(cfg, cast_params(params, cfg.compute_dtype), hidden,
+                         batch["targets"], batch.get("loss_mask"),
+                         cfg.ce_chunk)
+    else:
+        logits, aux = lm_forward(cfg, params, batch["inputs"], mode=mode,
+                                 mesh=mesh, data_axes=data_axes, remat=remat)
+        ce = cross_entropy_loss(logits, batch["targets"],
+                                batch.get("loss_mask"))
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode path
+# ---------------------------------------------------------------------------
+
+def _block_cache(cfg, kind, batch, max_len, dtype):
+    if kind in ("attn", "local", "moe"):
+        return init_attn_cache(cfg, batch, max_len, _block_window(cfg, kind),
+                               dtype)
+    if kind == "ssm":
+        return init_ssm_cache(cfg, batch, dtype)
+    if kind == "rg":
+        return init_rglru_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def lm_init_cache(cfg, batch: int, max_len: int):
+    dtype = jnp.dtype(cfg.compute_dtype)
+    layout = _layout(cfg)
+    if layout[0] == "scan":
+        _, pattern, n_groups = layout
+
+        def stacked(kind):
+            one = _block_cache(cfg, kind, batch, max_len, dtype)
+            return jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (n_groups,) + x.shape),
+                one)
+        if len(pattern) == 1:
+            return stacked(pattern[0])
+        return {f"blocks_{i}": stacked(kind)
+                for i, kind in enumerate(pattern)}
+    return {f"layer_{i:03d}": _block_cache(cfg, cfg.layer_kind(i), batch,
+                                           max_len, dtype)
+            for i in range(cfg.num_layers)}
+
+
+def _scan_cache(cfg, cache, layout):
+    _, pattern, _ = layout
+    if len(pattern) == 1:
+        return (cache,)
+    return tuple(cache[f"blocks_{i}"] for i in range(len(pattern)))
+
+
+def _unscan_cache(cfg, cache_tuple, layout):
+    _, pattern, _ = layout
+    if len(pattern) == 1:
+        return cache_tuple[0]
+    return {f"blocks_{i}": c for i, c in enumerate(cache_tuple)}
+
+
+def block_prefill(cfg, kind, p, x, cache, *, positions, mode="reference",
+                  mesh=None, data_axes=("data",)):
+    """Full-seq forward that also fills the decode cache. Returns (x, cache)."""
+    s = x.shape[1]
+    if kind in ("attn", "local", "moe"):
+        window = _block_window(cfg, kind)
+        h = apply_norm(cfg, x, p, "ln1")
+        q, k, v = project_qkv(cfg, p["attn"], h)
+        q, k = _apply_rope(cfg, q, k, positions, mode)
+        o = attention_op(q, k, v, causal=True, window=window,
+                         block_q=min(128, s), block_kv=min(128, s), mode=mode)
+        cache = prefill_attn_cache(cfg, cache, k, v, s, window)
+        x = x + cfg.residual_scale * (_merge_heads(o) @ p["attn"]["wo"])
+        h = apply_norm(cfg, x, p, "ln2")
+        if kind == "moe":
+            m, _ = moe_forward(cfg, p["moe"], h, mesh=mesh, data_axes=data_axes)
+        else:
+            m = mlp_forward(cfg, p["mlp"], h)
+        x = x + cfg.residual_scale * m
+    elif kind == "ssm":
+        h = apply_norm(cfg, x, p, "ln1")
+        o, cache = ssm_prefill(cfg, p["ssm"], h)
+        x = x + cfg.residual_scale * o
+    elif kind == "rg":
+        h = apply_norm(cfg, x, p, "ln1")
+        o, cache = rglru_prefill(cfg, p["rec"], h)
+        x = x + cfg.residual_scale * o
+        h = apply_norm(cfg, x, p, "ln2")
+        x = x + cfg.residual_scale * mlp_forward(cfg, p["mlp"], h)
+    return x, cache
+
+
+def block_decode(cfg, kind, p, x, cache, pos, *, mesh=None,
+                 data_axes=("data",)):
+    rs = cfg.residual_scale
+    if kind in ("attn", "local", "moe"):
+        h = apply_norm(cfg, x, p, "ln1")
+        a, cache = decode_attention_layer(cfg, p["attn"], h, cache, pos,
+                                          window=_block_window(cfg, kind))
+        x = x + rs * a
+        h = apply_norm(cfg, x, p, "ln2")
+        if kind == "moe":
+            m, _ = moe_forward(cfg, p["moe"], h, mesh=mesh,
+                               data_axes=data_axes)
+        else:
+            m = mlp_forward(cfg, p["mlp"], h)
+        x = x + rs * m
+    elif kind == "ssm":
+        h = apply_norm(cfg, x, p, "ln1")
+        o, cache = ssm_decode_step(cfg, p["ssm"], h, cache)
+        x = x + rs * o
+    elif kind == "rg":
+        h = apply_norm(cfg, x, p, "ln1")
+        o, cache = rglru_decode_step(cfg, p["rec"], h, cache)
+        x = x + rs * o
+        h = apply_norm(cfg, x, p, "ln2")
+        x = x + rs * mlp_forward(cfg, p["mlp"], h)
+    return x, cache
+
+
+def lm_prefill(cfg, params, tokens, cache, *, mode="reference", mesh=None,
+               data_axes=("data",)):
+    """Returns (cache, last-position logits (B, V))."""
+    params = cast_params(params, cfg.compute_dtype)
+    x = params["embed"][tokens].astype(cfg.compute_dtype) * cfg.emb_scale
+    positions = jnp.arange(tokens.shape[1])
+    layout = _layout(cfg)
+    if layout[0] == "scan":
+        _, pattern, _ = layout
+
+        def body(h, xs):
+            group_params, group_cache = xs
+            new = []
+            for kind, layer_params, layer_cache in zip(pattern, group_params,
+                                                       group_cache):
+                h, nc = block_prefill(cfg, kind, layer_params, h,
+                                      layer_cache, positions=positions,
+                                      mode=mode, mesh=mesh,
+                                      data_axes=data_axes)
+                new.append(nc)
+            return h, tuple(new)
+
+        from repro.util import scan_unroll
+        x, cache_t = jax.lax.scan(body, x, (_scan_params(cfg, params, layout),
+                                            _scan_cache(cfg, cache, layout)),
+                                  unroll=scan_unroll())
+        cache = _unscan_cache(cfg, cache_t, layout)
+    else:
+        new = {}
+        for i in range(cfg.num_layers):
+            key = f"layer_{i:03d}"
+            x, new[key] = block_prefill(cfg, cfg.layer_kind(i), params[key], x,
+                                        cache[key], positions=positions,
+                                        mode=mode, mesh=mesh,
+                                        data_axes=data_axes)
+        cache = new
+    logits = _logits(cfg, params, x[:, -1:, :])
+    return cache, logits[:, 0]
+
+
+def lm_decode_step(cfg, params, token, cache, pos, *, mesh=None,
+                   data_axes=("data",)):
+    """token: (B, 1) int32; pos: scalar. Returns (cache, logits (B, V))."""
+    params = cast_params(params, cfg.compute_dtype)
+    x = params["embed"][token].astype(cfg.compute_dtype) * cfg.emb_scale
+    layout = _layout(cfg)
+    if layout[0] == "scan":
+        _, pattern, _ = layout
+
+        def body(h, xs):
+            group_params, group_cache = xs
+            new = []
+            for kind, layer_params, layer_cache in zip(pattern, group_params,
+                                                       group_cache):
+                h, nc = block_decode(cfg, kind, layer_params, h,
+                                     layer_cache, pos, mesh=mesh,
+                                     data_axes=data_axes)
+                new.append(nc)
+            return h, tuple(new)
+
+        from repro.util import scan_unroll
+        x, cache_t = jax.lax.scan(body, x, (_scan_params(cfg, params, layout),
+                                            _scan_cache(cfg, cache, layout)),
+                                  unroll=scan_unroll())
+        cache = _unscan_cache(cfg, cache_t, layout)
+    else:
+        new = {}
+        for i in range(cfg.num_layers):
+            key = f"layer_{i:03d}"
+            x, new[key] = block_decode(cfg, cfg.layer_kind(i), params[key], x,
+                                       cache[key], pos, mesh=mesh,
+                                       data_axes=data_axes)
+        cache = new
+    logits = _logits(cfg, params, x)
+    return cache, logits[:, 0]

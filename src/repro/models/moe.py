@@ -1,0 +1,251 @@
+"""Mixture-of-Experts FFN: top-k routing with two implementations.
+
+* ``dense`` — every expert computed for every token (tiny smoke configs only).
+* ``ep``    — production expert parallelism via shard_map: tokens are
+  sequence-split across the 'model' axis, dispatched into capacity buckets,
+  all_to_all'd to their expert's owner, FFN'd with the locally-resident
+  expert weights, all_to_all'd back and combined. This is the standard
+  MoE a2a pattern (Switch/COMET) mapped to jax.lax collectives per the
+  hardware-adaptation rule in DESIGN.md.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from .common import ParamDef, act_fn
+
+
+def moe_defs(cfg, prefix: str, *, stack: int | None = None) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe.num_experts
+    lead = (stack,) if stack else ()
+    lx = ("layers",) if stack else ()
+    dt = cfg.param_dtype
+    if cfg.moe.shard == "expert":          # EP: expert dim over the model axis
+        in_axes = lx + ("expert", "embed", None)
+        out_axes = lx + ("expert", None, "embed")
+    else:                                   # TP: FFN hidden dim over model axis
+        in_axes = lx + (None, "embed", "ffn")
+        out_axes = lx + (None, "ffn", "embed")
+    defs = {
+        f"{prefix}/router": ParamDef(lead + (d, e), lx + ("embed", None), dtype=dt),
+        f"{prefix}/w_in": ParamDef(lead + (e, d, f), in_axes, dtype=dt),
+        f"{prefix}/w_out": ParamDef(lead + (e, f, d), out_axes, dtype=dt),
+    }
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        defs[f"{prefix}/w_gate"] = ParamDef(lead + (e, d, f), in_axes, dtype=dt)
+    return defs
+
+
+def _expert_ffn(cfg, p, x):
+    """x: (E, T, D) grouped tokens; expert weights (E, D, F)/(E, F, D)."""
+    act = act_fn(cfg.mlp_act)
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        h = act(jnp.einsum("etd,edf->etf", x, p["w_gate"])) * \
+            jnp.einsum("etd,edf->etf", x, p["w_in"])
+    else:
+        h = act(jnp.einsum("etd,edf->etf", x, p["w_in"]))
+    return jnp.einsum("etf,efd->etd", h, p["w_out"])
+
+
+def _route(cfg, x_flat, router_w):
+    """x_flat: (T, D). Returns (weights (T,K), ids (T,K), aux_loss)."""
+    logits = (x_flat.astype(jnp.float32) @ router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    k = cfg.moe.top_k
+    weights, ids = jax.lax.top_k(probs, k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balancing auxiliary loss
+    e = cfg.moe.num_experts
+    me = jnp.mean(jax.nn.one_hot(ids[:, 0], e), axis=0)
+    ce = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(me * ce)
+    return weights.astype(x_flat.dtype), ids, aux
+
+
+def moe_dense(cfg, p, x):
+    """All-experts einsum. x: (B, S, D). For reduced smoke configs."""
+    b, s, d = x.shape
+    xf = x.reshape(-1, d)
+    weights, ids, aux = _route(cfg, xf, p["router"])
+    e = cfg.moe.num_experts
+    outs = _expert_ffn(cfg, p, jnp.broadcast_to(xf, (e,) + xf.shape))  # (E,T,D)
+    gate = jnp.zeros((xf.shape[0], e), x.dtype)
+    gate = gate.at[jnp.arange(xf.shape[0])[:, None], ids].add(weights)
+    out = jnp.einsum("te,etd->td", gate, outs)
+    return out.reshape(b, s, d), aux
+
+
+def _capacity(tokens_per_shard: int, cfg) -> int:
+    c = math.ceil(tokens_per_shard * cfg.moe.top_k * cfg.moe.capacity_factor
+                  / cfg.moe.num_experts)
+    return max(8, -(-c // 8) * 8)  # round up to sublane multiple
+
+
+def _bspec(x, mesh, data_axes):
+    """Batch-dim spec for shard_map: data axes when divisible, else None."""
+    import math as _math
+    size = _math.prod(mesh.shape[a] for a in data_axes) if data_axes else 1
+    if data_axes and x.shape[0] % size == 0:
+        return data_axes
+    return None
+
+
+def moe_ep(cfg, p, x, *, mesh, data_axes=("data",), model_axis="model"):
+    """Expert-parallel MoE. x: (B, S, D) sharded (data, None, None).
+
+    Expert weights are sharded over ``model_axis`` (axis 0 = experts).
+    Tokens are sequence-split across ``model_axis`` inside the shard, so each
+    device routes S/ep_size of the sequence and the a2a volume per device is
+    O(T/ep · D) — the COMET/Switch dispatch pattern.
+    """
+    e = cfg.moe.num_experts
+    bspec = _bspec(x, mesh, data_axes)
+    in_specs = (P(bspec, None, None),                     # x
+                P(None, None),                            # router (replicated)
+                P(model_axis, None, None),                # w_in
+                P(model_axis, None, None),                # w_out
+                P(model_axis, None, None))                # w_gate
+    out_specs = (P(bspec, None, None), P())
+
+    has_gate = "w_gate" in p
+    w_gate = p["w_gate"] if has_gate else p["w_in"]
+
+    @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_rep=False)
+    def inner(x, router, w_in, w_out, w_gate):
+        ep = mesh.shape[model_axis]
+        rank = jax.lax.axis_index(model_axis)
+        bl, s, d = x.shape
+        e_loc = e // ep
+        seq_split = s % ep == 0 and s >= ep
+
+        if seq_split:
+            s_loc = s // ep
+            xs = jax.lax.dynamic_slice_in_dim(x, rank * s_loc, s_loc, axis=1)
+        else:
+            xs = x  # tiny token counts (decode): route replicated
+        t = xs.reshape(-1, d)                              # (T, D) local tokens
+        weights, ids, aux = _route(cfg, t, router)
+        cap = _capacity(t.shape[0], cfg)
+
+        # slot assignment: token-major cumulative position per expert
+        k = cfg.moe.top_k
+        flat_ids = ids.reshape(-1)                         # (T*K,)
+        onehot = jax.nn.one_hot(flat_ids, e, dtype=jnp.int32)
+        pos = jnp.cumsum(onehot, axis=0) * onehot          # 1-based
+        slot = jnp.sum(pos, axis=1) - 1                    # (T*K,)
+        keep = (slot >= 0) & (slot < cap)
+
+        buf = jnp.zeros((e, cap, d), x.dtype)
+        tok_idx = jnp.repeat(jnp.arange(t.shape[0]), k)
+        buf = buf.at[flat_ids, jnp.clip(slot, 0, cap - 1)].add(
+            t[tok_idx] * keep[:, None].astype(x.dtype))
+
+        ew = {"w_in": w_in, "w_out": w_out, "w_gate": w_gate}
+        if seq_split:
+            # dispatch: (E, C, D) -> (E_loc, ep*C, D) on the expert's owner
+            recv = jax.lax.all_to_all(buf, model_axis, split_axis=0,
+                                      concat_axis=1, tiled=True)
+            out = _expert_ffn(cfg, ew, recv)
+            # return: (E_loc, ep*C, D) -> (E, C, D) back on the source rank
+            back = jax.lax.all_to_all(out, model_axis, split_axis=1,
+                                      concat_axis=0, tiled=True)
+        else:
+            # replicated dispatch: slice own experts, compute, all_gather
+            mine = jax.lax.dynamic_slice_in_dim(buf, rank * e_loc, e_loc, axis=0)
+            out = _expert_ffn(cfg, ew, mine)
+            back = jax.lax.all_gather(out, model_axis, axis=0, tiled=True)
+
+        # combine: gather each token's k slots, weight, sum
+        gathered = back.reshape(e * cap, d)[
+            flat_ids * cap + jnp.clip(slot, 0, cap - 1)]
+        gathered = gathered * (keep[:, None] * weights.reshape(-1)[:, None]
+                               ).astype(x.dtype)
+        y = jnp.sum(gathered.reshape(-1, k, d), axis=1)    # (T, D)
+        if seq_split:
+            ys = y.reshape(bl, s // ep, d)
+            full = jax.lax.all_gather(ys, model_axis, axis=1, tiled=True)
+        else:
+            full = y.reshape(bl, s, d)
+        aux = jax.lax.pmean(aux, model_axis)
+        aux = jax.lax.pmean(aux, data_axes)
+        return full, aux
+
+    return inner(x, p["router"], p["w_in"], p["w_out"], w_gate)
+
+
+def moe_tp(cfg, p, x, *, mesh, data_axes=("data",), model_axis="model"):
+    """Megatron-TP MoE: every expert's FFN hidden dim is sharded over the
+    model axis; tokens are replicated across it. The block ends with one
+    activation psum — the same wire cost as a dense Megatron MLP layer.
+    Used when E < |model| (Mixtral's 8 experts on a 16-way axis).
+    """
+    e = cfg.moe.num_experts
+    bspec = _bspec(x, mesh, data_axes)
+    in_specs = (P(bspec, None, None),
+                P(None, None),
+                P(None, None, model_axis),                # w_in: F sharded
+                P(None, model_axis, None),                # w_out
+                P(None, None, model_axis))                # w_gate
+    out_specs = (P(bspec, None, None), P())
+    has_gate = "w_gate" in p
+    w_gate = p["w_gate"] if has_gate else p["w_in"]
+
+    @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_rep=False)
+    def inner(x, router, w_in, w_out, w_gate):
+        bl, s, d = x.shape
+        t = x.reshape(-1, d)
+        weights, ids, aux = _route(cfg, t, router)
+        cap = _capacity(t.shape[0], cfg)
+        k = cfg.moe.top_k
+        flat_ids = ids.reshape(-1)
+        onehot = jax.nn.one_hot(flat_ids, e, dtype=jnp.int32)
+        pos = jnp.cumsum(onehot, axis=0) * onehot
+        slot = jnp.sum(pos, axis=1) - 1
+        keep = (slot >= 0) & (slot < cap)
+        buf = jnp.zeros((e, cap, d), x.dtype)
+        tok_idx = jnp.repeat(jnp.arange(t.shape[0]), k)
+        buf = buf.at[flat_ids, jnp.clip(slot, 0, cap - 1)].add(
+            t[tok_idx] * keep[:, None].astype(x.dtype))
+
+        out = _expert_ffn(cfg, {"w_in": w_in, "w_out": w_out,
+                                "w_gate": w_gate}, buf)   # partial over F
+        gathered = out.reshape(e * cap, d)[
+            flat_ids * cap + jnp.clip(slot, 0, cap - 1)]
+        gathered = gathered * (keep[:, None] * weights.reshape(-1)[:, None]
+                               ).astype(x.dtype)
+        y = jnp.sum(gathered.reshape(-1, k, d), axis=1)
+        y = jax.lax.psum(y, model_axis)                   # Megatron-style AR
+        aux = jax.lax.pmean(aux, data_axes)
+        return y.reshape(bl, s, d), aux
+
+    return inner(x, p["router"], p["w_in"], p["w_out"], w_gate)
+
+
+def moe_forward(cfg, p, x, *, mesh=None, data_axes=("data",),
+                model_axis="model"):
+    """Dispatch between implementations (cfg.moe.impl / mesh availability)."""
+    impl = cfg.moe.impl
+    if impl == "auto":
+        if (mesh is None or model_axis not in mesh.axis_names
+                or mesh.shape[model_axis] == 1):
+            impl = "dense"
+        elif (cfg.moe.shard == "expert"
+              and cfg.moe.num_experts % mesh.shape[model_axis] == 0):
+            impl = "ep"
+        else:
+            impl = "tp"
+    if impl == "ep":
+        return moe_ep(cfg, p, x, mesh=mesh, data_axes=data_axes,
+                      model_axis=model_axis)
+    if impl == "tp":
+        return moe_tp(cfg, p, x, mesh=mesh, data_axes=data_axes,
+                      model_axis=model_axis)
+    return moe_dense(cfg, p, x)

@@ -1,0 +1,157 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Gated linear recurrence: h_t = a_t · h_{t-1} + √(1−a_t²) · (i_t ⊙ u_t) with
+a_t = σ(Λ)^(c·r_t). Trained with an associative scan (log-depth, sub-quadratic
+— this is what makes the long_500k cell runnable); decode carries a (B, W)
+state. Attention kernels are inapplicable to these layers (attention-free);
+the 1-in-3 local-attention layers use the flash kernel with a window.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamDef
+
+
+def rg_width(cfg) -> int:
+    return cfg.rglru.lru_width or cfg.d_model
+
+
+def rglru_defs(cfg, prefix: str, *, stack: int | None = None) -> dict:
+    d, w = cfg.d_model, rg_width(cfg)
+    kw = cfg.rglru.conv_width
+    lead = (stack,) if stack else ()
+    lx = ("layers",) if stack else ()
+    dt = cfg.param_dtype
+    return {
+        f"{prefix}/proj_x": ParamDef(lead + (d, w), lx + ("embed", "ffn"), dtype=dt),
+        f"{prefix}/proj_gate": ParamDef(lead + (d, w), lx + ("embed", "ffn"), dtype=dt),
+        f"{prefix}/conv_w": ParamDef(lead + (w, kw), lx + (None, None), dtype=dt),
+        f"{prefix}/conv_b": ParamDef(lead + (w,), lx + (None,), init="zeros", dtype=dt),
+        f"{prefix}/w_a": ParamDef(lead + (w, w), lx + ("ffn", None), dtype=dt),
+        f"{prefix}/b_a": ParamDef(lead + (w,), lx + (None,), init="zeros", dtype=dt),
+        f"{prefix}/w_i": ParamDef(lead + (w, w), lx + ("ffn", None), dtype=dt),
+        f"{prefix}/b_i": ParamDef(lead + (w,), lx + (None,), init="zeros", dtype=dt),
+        f"{prefix}/lambda": ParamDef(lead + (w,), lx + (None,), init="lru_a", dtype=dt),
+        f"{prefix}/proj_out": ParamDef(lead + (w, d), lx + ("ffn", "embed"), dtype=dt),
+    }
+
+
+def _causal_conv(x, w, b):
+    k = w.shape[-1]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32), w.astype(jnp.float32)[:, None, :],
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NHC", "OIH", "NHC"),
+        feature_group_count=w.shape[0])
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _gates(cfg, p, u):
+    """u: (B, L, W) conv output. Returns (log_a, gated_input) both fp32.
+
+    ``cfg.rglru_f32_gates=False`` runs the two (W, W) gate matmuls in bf16
+    (§Perf lever — the fp32 gate GEMMs are 4x the MXU cost and 2x the bytes;
+    the recurrence carries stay fp32 either way)."""
+    gd = jnp.float32 if cfg.rglru_f32_gates else u.dtype
+    ug = u.astype(gd)
+    r = jax.nn.sigmoid((ug @ p["w_a"].astype(gd) +
+                        p["b_a"].astype(gd)).astype(jnp.float32))
+    i = jax.nn.sigmoid((ug @ p["w_i"].astype(gd) +
+                        p["b_i"].astype(gd)).astype(jnp.float32))
+    # log a_t = c · r_t · log σ(Λ) = −c · r_t · softplus(−Λ)
+    log_a = -cfg.rglru.c_exponent * r * jax.nn.softplus(
+        -p["lambda"].astype(jnp.float32))
+    a2 = jnp.exp(2.0 * log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * (i * u.astype(jnp.float32))
+    return log_a, gated
+
+
+def _combine(c1, c2):
+    a1, b1 = c1
+    a2, b2 = c2
+    return a1 + a2, jnp.exp(a2) * b1 + b2
+
+
+def rglru_scan(log_a, x, chunk: int = 0):
+    """Scan of h_t = a_t h_{t-1} + x_t over axis 1 (time).
+
+    ``chunk=0``: single associative scan — log2(L) levels of (B, L, W)
+    intermediates. ``chunk>0`` (§Perf lever): two-level SSD-style scan —
+    associative within chunks (log2(C) levels) + a tiny sequential scan over
+    the L/C chunk boundaries, cutting scan-intermediate traffic by
+    ~log2(L)/log2(C) while computing the identical recurrence.
+    """
+    if not chunk or x.shape[1] % chunk or x.shape[1] <= chunk:
+        la, h = jax.lax.associative_scan(_combine, (log_a, x), axis=1)
+        return h
+    b, l, w = x.shape
+    nc = l // chunk
+    la_c = log_a.reshape(b, nc, chunk, w)
+    x_c = x.reshape(b, nc, chunk, w)
+    cum_a, h_local = jax.lax.associative_scan(_combine, (la_c, x_c), axis=2)
+
+    # carry chunk-boundary states: H_c = exp(a_end_c) * H_{c-1} + h_end_c
+    a_end = cum_a[:, :, -1]            # (B, nc, W)
+    h_end = h_local[:, :, -1]
+
+    from repro.util import scan_unroll
+
+    def step(carry, inp):
+        ae, he = inp
+        new = jnp.exp(ae) * carry + he
+        return new, carry                # emit the PREVIOUS chunk's state
+
+    h0 = jnp.zeros((b, w), x.dtype)
+    _, h_prev = jax.lax.scan(step, h0, (a_end.transpose(1, 0, 2),
+                                        h_end.transpose(1, 0, 2)),
+                             unroll=scan_unroll())
+    h_prev = h_prev.transpose(1, 0, 2)  # (B, nc, W) state entering each chunk
+    h = h_local + jnp.exp(cum_a) * h_prev[:, :, None, :]
+    return h.reshape(b, l, w)
+
+
+def rglru_forward(cfg, p, x):
+    """Full recurrent block. x: (B, L, D) -> (B, L, D)."""
+    gate = jax.nn.gelu(x @ p["proj_gate"], approximate=True)
+    u = _causal_conv(x @ p["proj_x"], p["conv_w"], p["conv_b"])
+    log_a, gated = _gates(cfg, p, u)
+    h = rglru_scan(log_a, gated,
+                   chunk=getattr(cfg, "rglru_chunk", 0)).astype(x.dtype)
+    return (h * gate) @ p["proj_out"]
+
+
+def init_rglru_cache(cfg, batch: int, dtype) -> dict:
+    w = rg_width(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.rglru.conv_width - 1, w), dtype),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }
+
+
+def rglru_decode_step(cfg, p, x, cache):
+    """x: (B, 1, D). Returns (out (B,1,D), new_cache)."""
+    gate = jax.nn.gelu(x[:, 0] @ p["proj_gate"], approximate=True)
+    ux = x[:, 0] @ p["proj_x"]
+    window = jnp.concatenate([cache["conv"], ux[:, None, :]], axis=1)
+    u = (jnp.einsum("bkc,ck->bc", window.astype(jnp.float32),
+                    p["conv_w"].astype(jnp.float32)) +
+         p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    log_a, gated = _gates(cfg, p, u[:, None, :])
+    h = jnp.exp(log_a[:, 0]) * cache["h"] + gated[:, 0]
+    out = ((h.astype(x.dtype) * gate) @ p["proj_out"])[:, None, :]
+    return out, {"conv": window[:, 1:], "h": h}
+
+
+def rglru_prefill(cfg, p, x):
+    """Full forward returning the decode cache at the end of x."""
+    gate = jax.nn.gelu(x @ p["proj_gate"], approximate=True)
+    ux = x @ p["proj_x"]
+    conv_tail = ux[:, -(cfg.rglru.conv_width - 1):, :]
+    u = _causal_conv(ux, p["conv_w"], p["conv_b"])
+    log_a, gated = _gates(cfg, p, u)
+    h_seq = rglru_scan(log_a, gated)
+    out = (h_seq.astype(x.dtype) * gate) @ p["proj_out"]
+    return out, {"conv": conv_tail, "h": h_seq[:, -1]}

@@ -1,0 +1,244 @@
+"""Mamba2 SSD (state-space duality) block — chunked, sub-quadratic, pure JAX.
+
+Implements the minimal SSD algorithm (Dao & Gu 2024, arXiv:2405.21060):
+within-chunk quadratic attention-like term + across-chunk linear recurrence.
+The paper's attention kernels are inapplicable here (attention-free — see
+DESIGN.md §Arch-applicability); the SSD chunk matmuls are GEMM-shaped and
+inherit the tile/scheduling treatment.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamDef, rmsnorm
+
+
+def ssm_dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    d_in_proj = 2 * d_inner + 2 * s.n_groups * s.d_state + n_heads
+    return d_inner, n_heads, conv_dim, d_in_proj
+
+
+def ssm_defs(cfg, prefix: str, *, stack: int | None = None) -> dict:
+    s = cfg.ssm
+    d_inner, n_heads, conv_dim, d_in_proj = ssm_dims(cfg)
+    lead = (stack,) if stack else ()
+    lx = ("layers",) if stack else ()
+    dt = cfg.param_dtype
+    return {
+        f"{prefix}/in_proj": ParamDef(lead + (cfg.d_model, d_in_proj),
+                                      lx + ("embed", "ffn"), dtype=dt),
+        f"{prefix}/conv_w": ParamDef(lead + (conv_dim, s.d_conv),
+                                     lx + (None, None), scale=1.0, dtype=dt),
+        f"{prefix}/conv_b": ParamDef(lead + (conv_dim,), lx + (None,),
+                                     init="zeros", dtype=dt),
+        f"{prefix}/a_log": ParamDef(lead + (n_heads,), lx + (None,),
+                                    init="ones", dtype=dt),
+        f"{prefix}/d_skip": ParamDef(lead + (n_heads,), lx + (None,),
+                                     init="ones", dtype=dt),
+        f"{prefix}/dt_bias": ParamDef(lead + (n_heads,), lx + (None,),
+                                      init="zeros", dtype=dt),
+        f"{prefix}/norm_scale": ParamDef(lead + (d_inner,), lx + (None,),
+                                         init="ones", dtype=dt),
+        f"{prefix}/out_proj": ParamDef(lead + (d_inner, cfg.d_model),
+                                       lx + ("ffn", "embed"), dtype=dt),
+    }
+
+
+def _segsum(x):
+    """x: (..., T) -> (..., T, T) lower-triangular segment sums."""
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), k=0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B, L, C); w: (C, K); b: (C,)."""
+    k = w.shape[-1]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32), w.astype(jnp.float32)[:, None, :],
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NHC", "OIH", "NHC"),
+        feature_group_count=w.shape[0])
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_chunked(x, a, b_mat, c_mat, chunk: int, initial_state=None):
+    """SSD scan. x: (B,L,H,P); a: (B,L,H) log-decay; b/c: (B,L,G,N).
+
+    Returns (y (B,L,H,P), final_state (B,H,P,N)).
+    """
+    bsz, l_orig, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    chunk = min(chunk, l_orig)
+    pad = (-l_orig) % chunk
+    if pad:
+        # zero-pad the tail: a=0 (decay exp(0)=1) and x=0 leave the state
+        # untouched, so the final state is exact; padded y rows are dropped.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    l = l_orig + pad
+    c_ = l // chunk
+
+    def ch(t):  # (B, L, ...) -> (B, C, Q, ...)
+        return t.reshape(bsz, c_, chunk, *t.shape[2:])
+
+    xc = ch(x).astype(jnp.float32)
+    ac = ch(a).transpose(0, 3, 1, 2).astype(jnp.float32)     # (B,H,C,Q)
+    bc = ch(b_mat).astype(jnp.float32)                       # (B,C,Q,G,N)
+    cc = ch(c_mat).astype(jnp.float32)
+
+    a_cum = jnp.cumsum(ac, axis=-1)                          # (B,H,C,Q)
+    # 1. within-chunk (attention-like) term
+    l_mat = jnp.exp(_segsum(ac))                             # (B,H,C,Q,Q)
+    bh = jnp.repeat(bc, rep, axis=3)                         # (B,C,Q,H,N)
+    chh = jnp.repeat(cc, rep, axis=3)
+    y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp", chh, bh, l_mat, xc)
+
+    # 2. chunk states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)          # (B,H,C,Q)
+    states = jnp.einsum("bcshn,bhcs,bcshp->bchpn", bh, decay_states, xc)
+
+    # 3. inter-chunk recurrence
+    chunk_decay = jnp.exp(a_cum[..., -1])                    # (B,H,C)
+    s0 = (jnp.zeros((bsz, h, p, n), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[:, :, None, None] + st
+        return new, carry  # emit the *previous* state for this chunk
+
+    from repro.util import scan_unroll
+    final, prev_states = jax.lax.scan(
+        step, s0, (states.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(2, 0, 1)), unroll=scan_unroll())
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)       # (B,C,H,P,N)
+
+    # 4. state -> output within chunk
+    state_decay = jnp.exp(a_cum)                             # (B,H,C,Q)
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", chh, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(bsz, l, h, p)[:, :l_orig]
+    return y.astype(x.dtype), final
+
+
+def ssm_forward(cfg, p, x):
+    """Full Mamba2 block. x: (B, L, D) -> (B, L, D)."""
+    s = cfg.ssm
+    d_inner, n_heads, conv_dim, _ = ssm_dims(cfg)
+    bsz, l, _ = x.shape
+
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    xs, b_mat, c_mat = jnp.split(
+        xbc, [d_inner, d_inner + s.n_groups * s.d_state], axis=-1)
+    xs = xs.reshape(bsz, l, n_heads, s.head_dim)
+    b_mat = b_mat.reshape(bsz, l, s.n_groups, s.d_state)
+    c_mat = c_mat.reshape(bsz, l, s.n_groups, s.d_state)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))             # (H,)
+
+    y, _ = ssd_chunked(xs * dt[..., None].astype(xs.dtype),
+                       dt * a[None, None, :], b_mat, c_mat, s.chunk)
+    y = y + p["d_skip"].astype(y.dtype)[None, None, :, None] * xs
+    y = y.reshape(bsz, l, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                p["norm_scale"])
+    return y @ p["out_proj"]
+
+
+# ---------------------------------------------------------------------------
+# Decode path: O(1) per-token state update.
+# ---------------------------------------------------------------------------
+
+def init_ssm_cache(cfg, batch: int, dtype) -> dict:
+    s = cfg.ssm
+    d_inner, n_heads, conv_dim, _ = ssm_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, n_heads, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def ssm_decode_step(cfg, p, x, cache):
+    """x: (B, 1, D). Returns (out (B,1,D), new_cache)."""
+    s = cfg.ssm
+    d_inner, n_heads, conv_dim, _ = ssm_dims(cfg)
+    bsz = x.shape[0]
+
+    zxbcdt = x[:, 0] @ p["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
+
+    window = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)  # (B,K,C)
+    conv_out = jnp.einsum("bkc,ck->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + \
+        p["conv_b"].astype(jnp.float32)
+    xbc_t = jax.nn.silu(conv_out).astype(x.dtype)
+    new_conv = window[:, 1:]
+
+    xs, b_mat, c_mat = jnp.split(
+        xbc_t, [d_inner, d_inner + s.n_groups * s.d_state], axis=-1)
+    xs = xs.reshape(bsz, n_heads, s.head_dim)
+    b_mat = b_mat.reshape(bsz, s.n_groups, s.d_state)
+    c_mat = c_mat.reshape(bsz, s.n_groups, s.d_state)
+    rep = n_heads // s.n_groups
+    bh = jnp.repeat(b_mat, rep, axis=1)                       # (B,H,N)
+    chh = jnp.repeat(c_mat, rep, axis=1)
+
+    dt_f = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt_f * a[None, :])                           # (B,H)
+
+    state = cache["state"] * da[:, :, None, None] + \
+        jnp.einsum("bh,bhn,bhp->bhpn", dt_f, bh.astype(jnp.float32),
+                   xs.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bhn->bhp", state, chh.astype(jnp.float32))
+    y = y + p["d_skip"].astype(jnp.float32)[None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(bsz, d_inner)
+    y = rmsnorm(y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                p["norm_scale"])
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, {"conv": new_conv, "state": state}
+
+
+def ssm_prefill(cfg, p, x):
+    """Full forward that also returns the decode cache at the end of x."""
+    s = cfg.ssm
+    d_inner, n_heads, conv_dim, _ = ssm_dims(cfg)
+    bsz, l, _ = x.shape
+
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
+    conv_tail = xbc[:, -(s.d_conv - 1):, :]
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    xs, b_mat, c_mat = jnp.split(
+        xbc, [d_inner, d_inner + s.n_groups * s.d_state], axis=-1)
+    xs = xs.reshape(bsz, l, n_heads, s.head_dim)
+    b_mat = b_mat.reshape(bsz, l, s.n_groups, s.d_state)
+    c_mat = c_mat.reshape(bsz, l, s.n_groups, s.d_state)
+
+    dt_f = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    y, final_state = ssd_chunked(xs * dt_f[..., None].astype(xs.dtype),
+                                 dt_f * a[None, None, :], b_mat, c_mat, s.chunk)
+    y = y + p["d_skip"].astype(y.dtype)[None, None, :, None] * xs
+    y = y.reshape(bsz, l, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                p["norm_scale"])
+    out = y @ p["out_proj"]
+    cache = {"conv": conv_tail, "state": final_state}
+    return out, cache

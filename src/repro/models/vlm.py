@@ -1,0 +1,59 @@
+"""VLM (InternVL2) — LM backbone with a stubbed vision frontend.
+
+Per the assignment, the modality frontend is a STUB: ``input_specs()``
+provides precomputed patch embeddings (B, P, D) which are prepended to the
+token embeddings; the LM stack (InternLM2-family GQA transformer) runs over
+the combined sequence and loss is taken on text positions only.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import cast_params, cross_entropy_loss
+from .lm import (lm_param_defs, lm_forward, lm_init_cache, lm_prefill,
+                 lm_decode_step, _logits, _is_uniform, block_forward)
+
+
+def vlm_param_defs(cfg) -> dict:
+    return lm_param_defs(cfg)  # frontend stubbed; projector folded into stub
+
+
+def _combined_embeds(cfg, params, batch):
+    patches = batch["patch_embeds"].astype(cfg.compute_dtype)   # (B, P, D)
+    tokens = batch["inputs"]                                    # (B, S_text)
+    tok_emb = params["embed"][tokens].astype(cfg.compute_dtype) * cfg.emb_scale
+    return jnp.concatenate([patches, tok_emb], axis=1)
+
+
+def vlm_forward(cfg, params, batch, *, mode="reference", mesh=None,
+                data_axes=("data",), remat=False):
+    """Returns logits over the *text* positions: (B, S_text, V)."""
+    params = cast_params(params, cfg.compute_dtype)
+    x = _combined_embeds(cfg, params, batch)
+    positions = jnp.arange(x.shape[1])
+    kind = cfg.layer_kind(0)
+    assert _is_uniform(cfg), "vlm backbone assumed uniform"
+
+    def body(carry, layer_params):
+        h, aux = carry
+        h, aux_l = block_forward(cfg, kind, layer_params, h,
+                                 positions=positions, mode=mode, mesh=mesh,
+                                 data_axes=data_axes)
+        return (h, aux + aux_l), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    from repro.util import scan_unroll
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["blocks"], unroll=scan_unroll())
+    logits = _logits(cfg, params, x[:, cfg.num_patches:, :])
+    return logits, aux
+
+
+def vlm_loss(cfg, params, batch, *, mode="reference", mesh=None,
+             data_axes=("data",), remat=True, aux_weight=0.0):
+    logits, aux = vlm_forward(cfg, params, batch, mode=mode, mesh=mesh,
+                              data_axes=data_axes, remat=remat)
+    ce = cross_entropy_loss(logits, batch["targets"], batch.get("loss_mask"))
+    return ce, {"ce": ce, "aux": aux}

@@ -1,0 +1,4 @@
+from .optimizer import (AdamWConfig, adamw_init, adamw_update,  # noqa: F401
+                        cosine_schedule, wsd_schedule, constant_schedule,
+                        global_norm, clip_by_global_norm)
+from .compression import ef_compress, ef_init, compressed_psum  # noqa: F401

@@ -1,0 +1,107 @@
+"""AdamW + LR schedules (incl. MiniCPM's WSD) + global-norm clipping.
+
+Pure-pytree implementation (no optax dependency). Optimizer state layout is
+{'m': tree, 'v': tree, 'count': scalar}; ZeRO-1 sharding of m/v over the data
+axis is decided by distributed/sharding.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# LR schedules
+# ---------------------------------------------------------------------------
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(1, warmup)
+        frac = jnp.clip((step - warmup) / jnp.maximum(1, total - warmup), 0, 1)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, peak_lr * cos)
+    return lr
+
+
+def wsd_schedule(peak_lr: float, warmup: int, total: int,
+                 decay_frac: float = 0.1, min_ratio: float = 0.01) -> Callable:
+    """Warmup-Stable-Decay (MiniCPM, arXiv:2404.06395): linear warmup, long
+    constant plateau, sharp exponential-style decay over the last
+    ``decay_frac`` of training."""
+    decay_steps = max(1, int(total * decay_frac))
+    stable_end = total - decay_steps
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(1, warmup)
+        frac = jnp.clip((step - stable_end) / decay_steps, 0, 1)
+        decay = peak_lr * jnp.power(min_ratio, frac)  # exp decay to min_ratio
+        out = jnp.where(step < warmup, warm,
+                        jnp.where(step < stable_end, peak_lr, decay))
+        return out
+    return lr
+
+
+def constant_schedule(lr_value: float) -> Callable:
+    return lambda step: jnp.asarray(lr_value, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    schedule: Callable
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def adamw_init(params) -> dict:
+    zeros = lambda t: jax.tree.map(jnp.zeros_like, t)
+    return {"m": zeros(params), "v": zeros(params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    sq = jax.tree.map(lambda g: jnp.sum(g.astype(jnp.float32) ** 2), tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq, jnp.zeros((), jnp.float32)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+def adamw_update(cfg: AdamWConfig, grads, state, params):
+    """Returns (new_params, new_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    count = state["count"] + 1
+    cf = count.astype(jnp.float32)
+    lr = cfg.schedule(count)
+
+    m = jax.tree.map(lambda m_, g: cfg.b1 * m_ + (1 - cfg.b1) * g,
+                     state["m"], grads)
+    v = jax.tree.map(lambda v_, g: cfg.b2 * v_ + (1 - cfg.b2) * g * g,
+                     state["v"], grads)
+    bc1 = 1 - cfg.b1 ** cf
+    bc2 = 1 - cfg.b2 ** cf
+
+    def upd(p, m_, v_):
+        step = m_ / bc1 / (jnp.sqrt(v_ / bc2) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "count": count}, \
+        {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,115 @@
+"""Batched serving engine: prefill + jitted decode loop + request queue.
+
+The engine serves fixed-shape batches (the production pattern for TPU
+serving: one compiled prefill and one compiled decode_step per bucket).
+``RequestQueue`` adds a continuous-batching-lite layer: requests are bucketed
+by padded prompt length and flushed as full batches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray          # (B, prompt + generated)
+    prompt_len: int
+    steps: int
+
+
+class Engine:
+    def __init__(self, model, params, *, max_len: int = 4096, mesh=None,
+                 donate_cache: bool = True):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.mesh = mesh
+        self._decode = jax.jit(
+            lambda params, tok, cache, pos: model.decode_step(
+                params, tok, cache, pos),
+            donate_argnums=(2,) if donate_cache else ())
+        self._prefill = jax.jit(
+            lambda params, batch, cache: model.prefill(params, batch, cache))
+
+    def _sample(self, logits, temperature: float, rng):
+        if temperature == 0.0:
+            return jnp.argmax(logits, axis=-1)
+        return jax.random.categorical(rng, logits / temperature, axis=-1)
+
+    def generate(self, prompts, max_new_tokens: int, *,
+                 temperature: float = 0.0, rng=None,
+                 extra_batch: Optional[dict] = None) -> GenerationResult:
+        """prompts: (B, S) int32. Greedy (T=0) or temperature sampling."""
+        prompts = jnp.asarray(prompts, jnp.int32)
+        b, s = prompts.shape
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        cache = self.model.init_cache(b, self.max_len)
+        if self.model.cfg.family == "encdec":
+            batch = dict(extra_batch or {}, inputs=prompts)
+            cache, logits = self._prefill(self.params, batch, cache)
+        else:
+            cache, logits = self._prefill(self.params, prompts, cache)
+        toks = [prompts]
+        rngs = jax.random.split(rng, max_new_tokens)
+        next_tok = self._sample(logits, temperature, rngs[0])[:, None]
+        for i in range(max_new_tokens):
+            toks.append(next_tok)
+            if i == max_new_tokens - 1:
+                break
+            cache, logits = self._decode(self.params, next_tok, cache, s + i)
+            next_tok = self._sample(logits, temperature, rngs[i + 1])[:, None]
+        out = np.asarray(jnp.concatenate(toks, axis=1))
+        return GenerationResult(out, s, max_new_tokens)
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+
+
+class RequestQueue:
+    """Continuous-batching-lite: bucket by padded length, flush full batches."""
+
+    def __init__(self, engine: Engine, batch_size: int,
+                 buckets=(128, 512, 2048)):
+        self.engine = engine
+        self.batch_size = batch_size
+        self.buckets = sorted(buckets)
+        self.pending: dict[int, list[Request]] = {b: [] for b in self.buckets}
+        self.results: dict[int, np.ndarray] = {}
+
+    def _bucket(self, n: int) -> int:
+        for b in self.buckets:
+            if n <= b:
+                return b
+        raise ValueError(f"prompt length {n} exceeds largest bucket")
+
+    def submit(self, req: Request) -> None:
+        self.pending[self._bucket(len(req.prompt))].append(req)
+
+    def flush(self, *, force: bool = False) -> int:
+        served = 0
+        for bucket, reqs in self.pending.items():
+            while len(reqs) >= self.batch_size or (force and reqs):
+                group = reqs[: self.batch_size]
+                del reqs[: self.batch_size]
+                while len(group) < self.batch_size:   # pad the last batch
+                    group.append(group[-1])
+                prompts = np.stack([
+                    np.pad(r.prompt, (bucket - len(r.prompt), 0))
+                    for r in group])
+                max_new = max(r.max_new_tokens for r in group)
+                result = self.engine.generate(prompts, max_new)
+                for r, row in zip(group, result.tokens):
+                    self.results.setdefault(
+                        r.uid, row[bucket - len(r.prompt):])
+                served += len(group)
+        return served

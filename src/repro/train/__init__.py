@@ -1,0 +1,4 @@
+from .state import init_state, abstract_state, state_shardings, sharded_init  # noqa: F401
+from .trainer import (make_train_step, train_loop, FailureInjector,  # noqa: F401
+                      StragglerWatchdog, SimulatedFailure, TrainLoopResult)
+from . import checkpoint  # noqa: F401

@@ -1,0 +1,66 @@
+"""Train state: params + AdamW moments + step (+ optional EF buffers).
+
+Plain-dict pytree so checkpointing stays trivially portable. Sharding of
+every leaf is decided once here (logical rules + optional ZeRO-1) and reused
+by the jitted step, the checkpoint restore path, and the dry-run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import (shardings_for_tree, zero1_shardings,
+                                        fsdp_shardings)
+from repro.optim import adamw_init, ef_init
+
+
+def init_state(model, rng, *, grad_compress: bool = False) -> dict:
+    params = model.init(rng)
+    state = {"params": params, "opt": adamw_init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if grad_compress:
+        state["ef"] = ef_init(params)
+    return state
+
+
+def abstract_state(model, *, grad_compress: bool = False) -> dict:
+    params = model.abstract()
+    zeros = lambda t: jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), t)
+    state = {"params": params,
+             "opt": {"m": zeros(params), "v": zeros(params),
+                     "count": jax.ShapeDtypeStruct((), jnp.int32)},
+             "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    if grad_compress:
+        state["ef"] = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, jnp.float32), params)
+    return state
+
+
+def state_shardings(model, mesh, *, zero1: bool = True, fsdp: bool = False,
+                    grad_compress: bool = False, report=None) -> dict:
+    axes = model.axes()
+    abs_params = model.abstract()
+    p_sh = shardings_for_tree(axes, abs_params, mesh, report=report)
+    if fsdp:
+        p_sh = fsdp_shardings(p_sh, abs_params, mesh)
+    moments = zero1_shardings(p_sh, abs_params, mesh) if zero1 else p_sh
+    rep = NamedSharding(mesh, P())
+    sh = {"params": p_sh,
+          "opt": {"m": moments, "v": moments, "count": rep},
+          "step": rep}
+    if grad_compress:
+        sh["ef"] = p_sh
+    return sh
+
+
+def sharded_init(model, rng, mesh, *, zero1: bool = True,
+                 grad_compress: bool = False) -> dict:
+    """Initialize directly into the sharded layout (jit with out_shardings —
+    no single-host materialization of the full state)."""
+    shardings = state_shardings(model, mesh, zero1=zero1,
+                                grad_compress=grad_compress)
+    fn = jax.jit(lambda r: init_state(model, r, grad_compress=grad_compress),
+                 out_shardings=shardings)
+    return fn(rng)

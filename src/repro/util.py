@@ -1,0 +1,20 @@
+"""Small shared utilities."""
+from __future__ import annotations
+
+import os
+
+
+def costing_mode() -> bool:
+    """True while the dry-run is costing HLO.
+
+    XLA's cost_analysis counts a rolled ``lax.scan`` body ONCE, not
+    trip-count times (verified empirically — exactly 1/L). Under costing
+    mode, inner scans (chunked attention, SSD chunk scan) unroll so their
+    work is counted; the *layer* scan is handled by the dry-run's L=1/L=2
+    extrapolation instead (see launch/dryrun.py).
+    """
+    return os.environ.get("REPRO_COSTING", "0") == "1"
+
+
+def scan_unroll() -> bool | int:
+    return True if costing_mode() else 1

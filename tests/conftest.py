@@ -1,0 +1,25 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches see
+1 device; multi-device tests spawn subprocesses with their own flags."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+def run_subprocess(code: str, *, devices: int = 8, timeout: int = 600) -> str:
+    """Run ``code`` in a fresh python with N fake devices; return stdout."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}")
+    return proc.stdout
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_subprocess

@@ -1,0 +1,213 @@
+"""Per-kernel correctness: shape/dtype sweeps, Pallas (interpret) vs ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.grid_swizzle import SwizzleConfig
+from repro.core.schedule import Schedule
+from repro.kernels.gemm import gemm, gemm_ref
+from repro.kernels.attention import (attention, attention_ref,
+                                     flash_attention_fwd)
+from repro.kernels.attention.ref import attention_ref_chunked
+from repro.kernels.fused_norm import (dropout_residual_layernorm,
+                                      fused_dropout_residual_layernorm_ref)
+from repro.kernels.fused_norm.ref import dropout_keep_mask_ref
+from repro.kernels.rope import rope, rope_ref, rope_tables
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestGemm:
+    @pytest.mark.parametrize("m,n,k", [(128, 128, 128), (256, 512, 384),
+                                       (512, 256, 1280), (384, 384, 256)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, m, n, k, dtype):
+        a = jax.random.normal(KEY, (m, k), dtype)
+        b = jax.random.normal(jax.random.PRNGKey(1), (k, n), dtype)
+        s = Schedule("t", 2, 256, 256, 256)
+        out = gemm(a, b, schedule=s, out_dtype=jnp.float32)
+        ref = gemm_ref(a, b, jnp.float32)
+        # k-blocked accumulation reassociates adds; tolerance covers that
+        tol = 1e-3 if dtype == jnp.float32 else 3e-2
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=tol, atol=tol)
+
+    @pytest.mark.parametrize("swizzle", [
+        SwizzleConfig(window=2, chunk=4),
+        SwizzleConfig(window=4, chunk=2, enable_chiplet=False), "auto"])
+    def test_swizzle_invariance(self, swizzle):
+        """Grid order must never change the numbers — Algorithm 1 is a pure
+        scheduling transform, so every swizzle is BITWISE identical to the
+        row-major traversal."""
+        a = jax.random.normal(KEY, (512, 256), jnp.float32)
+        b = jax.random.normal(jax.random.PRNGKey(1), (256, 512), jnp.float32)
+        s = Schedule("t", 2, 128, 128, 128)
+        base = gemm(a, b, schedule=s, swizzle=None, out_dtype=jnp.float32)
+        out = gemm(a, b, schedule=s, swizzle=swizzle, out_dtype=jnp.float32)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(base))
+
+
+class TestAttention:
+    @pytest.mark.parametrize("h,hkv", [(2, 2), (4, 1), (8, 2)])
+    @pytest.mark.parametrize("d", [64, 128])
+    @pytest.mark.parametrize("causal", [False, True])
+    def test_fwd_matches_ref(self, h, hkv, d, causal):
+        b, s = 2, 256
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (b, h, s, d))
+        k = jax.random.normal(ks[1], (b, hkv, s, d))
+        v = jax.random.normal(ks[2], (b, hkv, s, d))
+        out, _ = flash_attention_fwd(q, k, v, causal=causal)
+        ref = attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("window", [64, 128, 1000])
+    def test_sliding_window(self, window):
+        b, h, s, d = 1, 2, 384, 64
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (b, h, s, d))
+        k = jax.random.normal(ks[1], (b, h, s, d))
+        v = jax.random.normal(ks[2], (b, h, s, d))
+        out, _ = flash_attention_fwd(q, k, v, causal=True, window=window)
+        ref = attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("h,hkv,causal,window", [
+        (2, 2, False, None), (4, 2, True, None), (4, 1, True, 128)])
+    def test_bwd_matches_autodiff(self, h, hkv, causal, window):
+        b, s, d = 1, 256, 64
+        ks = jax.random.split(KEY, 4)
+        q = jax.random.normal(ks[0], (b, h, s, d))
+        k = jax.random.normal(ks[1], (b, hkv, s, d))
+        v = jax.random.normal(ks[2], (b, hkv, s, d))
+        do = jax.random.normal(ks[3], (b, h, s, d))
+
+        def f_kernel(q, k, v):
+            return (attention(q, k, v, causal=causal, window=window) * do).sum()
+
+        def f_ref(q, k, v):
+            return (attention(q, k, v, causal=causal, window=window,
+                              mode="reference") * do).sum()
+
+        gk = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+        gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+        for a, b_ in zip(gk, gr):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       rtol=1e-3, atol=1e-3)
+
+    def test_bf16_inputs(self):
+        b, h, s, d = 1, 2, 256, 64
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (b, h, s, d), jnp.bfloat16)
+        k = jax.random.normal(ks[1], (b, h, s, d), jnp.bfloat16)
+        v = jax.random.normal(ks[2], (b, h, s, d), jnp.bfloat16)
+        out, _ = flash_attention_fwd(q, k, v, causal=True)
+        ref = attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=3e-2, atol=3e-2)
+
+    def test_chunked_ref_matches_direct(self):
+        b, h, s, d = 1, 4, 512, 64
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (b, h, s, d))
+        k = jax.random.normal(ks[1], (b, h, s, d))
+        v = jax.random.normal(ks[2], (b, h, s, d))
+        o1 = attention_ref(q, k, v, causal=True)
+        o2 = attention_ref_chunked(q, k, v, causal=True, chunk=128)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   rtol=1e-5, atol=1e-5)
+
+    @given(sq=st.sampled_from([128, 256]), skv=st.sampled_from([128, 256, 384]))
+    @settings(max_examples=10, deadline=None)
+    def test_cross_lengths(self, sq, skv):
+        """Property: works for Sq != Skv (cross-attention shapes)."""
+        b, h, d = 1, 2, 64
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (b, h, sq, d))
+        k = jax.random.normal(ks[1], (b, h, skv, d))
+        v = jax.random.normal(ks[2], (b, h, skv, d))
+        out, _ = flash_attention_fwd(q, k, v, causal=False)
+        ref = attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+
+class TestFusedNorm:
+    @pytest.mark.parametrize("rows,d", [(256, 128), (512, 1024), (128, 768)])
+    @pytest.mark.parametrize("p", [0.0, 0.1, 0.5])
+    def test_matches_ref(self, rows, d, p):
+        ks = jax.random.split(KEY, 4)
+        x = jax.random.normal(ks[0], (rows, d))
+        r = jax.random.normal(ks[1], (rows, d))
+        w = jax.random.normal(ks[2], (d,))
+        b = jax.random.normal(ks[3], (d,))
+        o1, r1 = dropout_residual_layernorm(x, r, w, b, 7, dropout_p=p)
+        o2, r2 = fused_dropout_residual_layernorm_ref(x, r, w, b, 7,
+                                                      dropout_p=p)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), atol=1e-5)
+
+    def test_normalization_property(self):
+        """Output rows (pre-affine) have mean≈0, var≈1."""
+        x = jax.random.normal(KEY, (64, 512))
+        r = jnp.zeros((64, 512))
+        o, _ = dropout_residual_layernorm(x, r, jnp.ones(512), jnp.zeros(512))
+        of = np.asarray(o, np.float64)
+        np.testing.assert_allclose(of.mean(1), 0, atol=1e-4)
+        np.testing.assert_allclose(of.var(1), 1, atol=1e-2)
+
+    @given(p=st.floats(0.05, 0.9), seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_dropout_rate_property(self, p, seed):
+        """Keep rate ≈ 1-p, and the mask is deterministic in the seed."""
+        mask1 = dropout_keep_mask_ref(seed, (256, 512), p)
+        mask2 = dropout_keep_mask_ref(seed, (256, 512), p)
+        assert (np.asarray(mask1) == np.asarray(mask2)).all()
+        rate = float(np.asarray(mask1).mean())
+        assert abs(rate - (1 - p)) < 0.02
+
+    def test_dropout_scaling_preserves_mean(self):
+        x = jnp.ones((512, 512))
+        r = jnp.zeros((512, 512))
+        _, resid = dropout_residual_layernorm(x, r, jnp.ones(512),
+                                              jnp.zeros(512), 3, dropout_p=0.3)
+        assert abs(float(jnp.mean(resid)) - 1.0) < 0.05
+
+
+class TestRope:
+    @pytest.mark.parametrize("b,h,s,d", [(2, 4, 256, 128), (1, 2, 512, 64)])
+    def test_matches_ref(self, b, h, s, d):
+        x = jax.random.normal(KEY, (b, h, s, d))
+        sin, cos = rope_tables(jnp.arange(s), d)
+        np.testing.assert_allclose(np.asarray(rope(x, sin, cos)),
+                                   np.asarray(rope_ref(x, sin, cos)),
+                                   atol=1e-5)
+
+    def test_norm_preservation_property(self):
+        """Rotation preserves the norm of each (x_i, x_{i+d/2}) pair."""
+        x = jax.random.normal(KEY, (1, 1, 256, 64))
+        sin, cos = rope_tables(jnp.arange(256), 64)
+        y = np.asarray(rope(x, sin, cos), np.float64)
+        xn = np.asarray(x, np.float64)
+        n_in = xn[..., :32] ** 2 + xn[..., 32:] ** 2
+        n_out = y[..., :32] ** 2 + y[..., 32:] ** 2
+        np.testing.assert_allclose(n_in, n_out, atol=1e-5)
+
+    def test_relative_property(self):
+        """<rope(q,m), rope(k,n)> depends only on m-n (the RoPE guarantee)."""
+        d = 64
+        q = jax.random.normal(KEY, (1, 1, 1, d))
+        k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, d))
+        def dot_at(m, n):
+            sin_m, cos_m = rope_tables(jnp.asarray([m]), d)
+            sin_n, cos_n = rope_tables(jnp.asarray([n]), d)
+            qm = rope_ref(q, sin_m, cos_m)
+            kn = rope_ref(k, sin_n, cos_n)
+            return float(jnp.sum(qm * kn))
+        assert abs(dot_at(5, 3) - dot_at(102, 100)) < 1e-4
+        assert abs(dot_at(7, 7) - dot_at(0, 0)) < 1e-4

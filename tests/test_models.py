@@ -1,0 +1,184 @@
+"""Per-arch smoke tests (required: one reduced-config per assigned arch,
+forward/train step on CPU, output shapes + no NaNs) + decode consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import ShapeConfig
+from repro.models import build_model
+from repro.models.lm import lm_forward
+
+SMOKE_SHAPE = ShapeConfig("smoke", 32, 2, "train")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+class TestArchSmoke:
+    def test_forward_and_train_step(self, arch):
+        cfg = get_config(arch, smoke=True)
+        model = build_model(cfg, mode="reference")
+        params = model.init(jax.random.PRNGKey(0))
+        batch = model.make_batch(SMOKE_SHAPE, jax.random.PRNGKey(1))
+
+        logits, aux = model.forward(params, batch)
+        expect_s = batch["targets"].shape[1]
+        assert logits.shape == (2, expect_s, cfg.vocab_size)
+        assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+
+        loss, metrics = model.loss(params, batch)
+        assert np.isfinite(float(loss))
+        grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+        leaves = jax.tree.leaves(grads)
+        assert all(np.isfinite(np.asarray(l, np.float32)).all()
+                   for l in leaves), arch
+        gnorm = sum(float(jnp.sum(l.astype(jnp.float32) ** 2))
+                    for l in leaves) ** 0.5
+        assert gnorm > 0
+
+    def test_full_config_param_count(self, arch):
+        """Full configs are never instantiated, but N must be sane."""
+        cfg = get_config(arch)
+        n = cfg.param_count()
+        expected = {
+            "whisper-base": (5e7, 2e8),
+            "minicpm-2b": (2e9, 4e9),
+            "chatglm3-6b": (5e9, 8e9),
+            "granite-8b": (7e9, 9.5e9),
+            "qwen2-72b": (6.5e10, 8.5e10),
+            "llama4-maverick-400b-a17b": (3e11, 5e11),
+            "mixtral-8x7b": (4e10, 5.5e10),
+            "mamba2-130m": (1e8, 2e8),
+            "recurrentgemma-2b": (2e9, 3.5e9),
+            "internvl2-2b": (1.5e9, 3e9),
+        }[arch]
+        assert expected[0] <= n <= expected[1], (arch, f"{n:.3e}")
+
+
+DECODE_ARCHS = ["granite-8b", "qwen2-72b", "mixtral-8x7b", "mamba2-130m",
+                "recurrentgemma-2b", "chatglm3-6b", "minicpm-2b"]
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_prefill_decode_matches_forward(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg, mode="reference")
+    params = model.init(jax.random.PRNGKey(0))
+    b, s = 2, 24
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                              cfg.vocab_size)
+    logits_full, _ = model.forward(params, toks)
+    cache = model.init_cache(b, 64)
+    cache, lg = model.prefill(params, toks[:, : s - 4], cache)
+    errs = [float(jnp.abs(lg - logits_full[:, s - 5]).max())]
+    for i in range(s - 4, s):
+        cache, lg = model.decode_step(params, toks[:, i:i + 1], cache, i)
+        errs.append(float(jnp.abs(lg - logits_full[:, i]).max()))
+    assert max(errs) < 2e-1, (arch, errs)
+
+
+def test_whisper_decode_consistency():
+    cfg = get_config("whisper-base", smoke=True)
+    model = build_model(cfg, mode="reference")
+    params = model.init(jax.random.PRNGKey(0))
+    b, s = 2, 16
+    batch = {
+        "encoder_embeds": jax.random.normal(
+            jax.random.PRNGKey(2), (b, cfg.encoder_seq, cfg.d_model),
+            jnp.bfloat16),
+        "inputs": jax.random.randint(jax.random.PRNGKey(3), (b, s), 0,
+                                     cfg.vocab_size)}
+    logits_full, _ = model.forward(params, batch)
+    cache = model.init_cache(b, 64)
+    cache, lg = model.prefill(
+        params, {**batch, "inputs": batch["inputs"][:, : s - 4]}, cache)
+    errs = [float(jnp.abs(lg - logits_full[:, s - 5]).max())]
+    for i in range(s - 4, s):
+        cache, lg = model.decode_step(params, batch["inputs"][:, i:i + 1],
+                                      cache, i)
+        errs.append(float(jnp.abs(lg - logits_full[:, i]).max()))
+    assert max(errs) < 2e-1
+
+
+def test_sliding_window_ring_cache():
+    """Decode past the window with the ring buffer == full-cache attention."""
+    cfg = get_config("mixtral-8x7b", smoke=True)   # window 32
+    model = build_model(cfg, mode="reference")
+    params = model.init(jax.random.PRNGKey(0))
+    b, s = 1, 48                                   # prompt longer than window
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                              cfg.vocab_size)
+    logits_full, _ = model.forward(params, toks)
+    cache = model.init_cache(b, cfg.max_seq_len)   # ring: 32 slots
+    assert jax.tree.leaves(cache)[0].shape[3] == 32  # (L, B, Hkv, slots, hd)
+    cache, lg = model.prefill(params, toks[:, : s - 4], cache)
+    errs = [float(jnp.abs(lg - logits_full[:, s - 5]).max())]
+    for i in range(s - 4, s):
+        cache, lg = model.decode_step(params, toks[:, i:i + 1], cache, i)
+        errs.append(float(jnp.abs(lg - logits_full[:, i]).max()))
+    assert max(errs) < 2e-1, errs
+
+
+def test_ssm_chunk_invariance():
+    """SSD output must not depend on the chunk size (property of the
+    state-space duality)."""
+    cfg = get_config("mamba2-130m", smoke=True)
+    model = build_model(cfg, mode="reference")
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                              cfg.vocab_size)
+    l1, _ = model.forward(params, toks)
+    cfg2 = dataclasses.replace(cfg, ssm=dataclasses.replace(cfg.ssm, chunk=8))
+    l2, _ = lm_forward(cfg2, params, toks)
+    np.testing.assert_allclose(np.asarray(l1, np.float32),
+                               np.asarray(l2, np.float32), atol=5e-2)
+
+
+def test_bert_mlm_smoke():
+    """Paper §4's second validation model (BERT-110M family): encoder-only
+    MLM trains on masked positions only."""
+    cfg = dataclasses.replace(get_config("bert-110m"), num_layers=2,
+                              d_model=64, num_heads=4, num_kv_heads=4,
+                              d_ff=128, vocab_size=256, max_seq_len=64)
+    model = build_model(cfg, mode="reference")
+    params = model.init(jax.random.PRNGKey(0))
+    b, s = 2, 32
+    rng = jax.random.PRNGKey(1)
+    targets = jax.random.randint(rng, (b, s), 0, cfg.vocab_size)
+    mask = (jax.random.uniform(jax.random.PRNGKey(2), (b, s)) < 0.15)
+    inputs = jnp.where(mask, 0, targets)      # 0 = [MASK]
+    batch = {"inputs": inputs, "targets": targets,
+             "loss_mask": mask.astype(jnp.float32)}
+    loss, _ = model.loss(params, batch)
+    assert np.isfinite(float(loss))
+    g = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    assert all(np.isfinite(np.asarray(l, np.float32)).all()
+               for l in jax.tree.leaves(g))
+    with pytest.raises(NotImplementedError):
+        model.init_cache(2, 64)
+
+
+def test_pallas_vs_reference_model_parity():
+    """Paper §4 stability validation (scaled down): the same model computes
+    the same loss through the Pallas kernels and the XLA reference path."""
+    cfg = get_config("granite-8b", smoke=True)
+    ref_model = build_model(cfg, mode="reference")
+    pk_model = build_model(cfg, mode="pallas_interpret")
+    params = ref_model.init(jax.random.PRNGKey(0))
+    batch = ref_model.make_batch(ShapeConfig("t", 128, 2, "train"),
+                                 jax.random.PRNGKey(1))
+    l_ref, _ = ref_model.loss(params, batch)
+    l_pk, _ = pk_model.loss(params, batch)
+    assert abs(float(l_ref) - float(l_pk)) < 5e-2, (float(l_ref), float(l_pk))
+    g_ref = jax.grad(lambda p: ref_model.loss(p, batch)[0])(params)
+    g_pk = jax.grad(lambda p: pk_model.loss(p, batch)[0])(params)
+    for (ka, a), (kb, b) in zip(
+            sorted(jax.tree_util.tree_flatten_with_path(g_ref)[0][:8],
+                   key=str),
+            sorted(jax.tree_util.tree_flatten_with_path(g_pk)[0][:8],
+                   key=str)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=0.1, atol=0.1)
