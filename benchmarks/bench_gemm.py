@@ -1,19 +1,20 @@
 """Paper Fig. 6 / Fig. 14: GEMM throughput across square sizes.
 
-Derived column: modeled v5e TFLOP/s from the pipeline model (per schedule) +
-the measured XLA-CPU reference time for scale. Also validates the Pallas
+Derived column: modeled v5e TFLOP/s per candidate KernelPolicy from the
+autotuner's candidate set (replacing the old private PINGPONG/INTERLEAVE
+pair) + the measured XLA-CPU reference time for scale. The autotuner's
+selected policy is marked ``selected=yes``. Also validates the Pallas
 kernel once per size (interpret) so the benchmark exercises the real code.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.schedule import PINGPONG, INTERLEAVE
+from repro.core import autotune
 from repro.core import perf_model as pm
 from repro.kernels.gemm import gemm, gemm_ref
-from .common import time_fn, emit
+from .common import time_fn, emit, gemm_candidate_sweep
 
 
 SIZES = (1024, 2048, 4096, 8192)
@@ -25,12 +26,15 @@ def main() -> None:
         b = jax.random.normal(jax.random.PRNGKey(1), (n, n), jnp.bfloat16)
         ref = jax.jit(lambda a, b: gemm_ref(a, b))
         us = time_fn(ref, a, b)
-        for sched in (PINGPONG, INTERLEAVE):
-            m = pm.gemm_step_model(sched, k_total=n)
-            emit(f"gemm_bf16_{n}x{n}x{n}_{sched.name}", us,
+        for pol, selected in gemm_candidate_sweep((n, n, n)):
+            m = pm.gemm_step_model(pol.schedule, k_total=n)
+            emit(f"gemm_bf16_{n}x{n}x{n}_b{pol.block_m}x{pol.block_n}"
+                 f"x{pol.block_k}x{pol.n_buffers}", us,
                  f"modeled_tflops={m['modeled_tflops']:.0f};"
-                 f"bound={m['bound']};ai={m['arithmetic_intensity']:.0f}")
-    # correctness spot-check through the Pallas kernel (small size)
+                 f"bound={m['bound']};ai={m['arithmetic_intensity']:.0f};"
+                 f"selected={'yes' if selected else 'no'}")
+    # correctness spot-check through the Pallas kernel (small size), using
+    # the autotuner-selected policy end to end
     n = 512
     a = jax.random.normal(jax.random.PRNGKey(0), (n, n), jnp.bfloat16)
     b = jax.random.normal(jax.random.PRNGKey(1), (n, n), jnp.bfloat16)
@@ -38,7 +42,9 @@ def main() -> None:
     ref = gemm_ref(a, b, jnp.float32)
     err = float(jnp.abs(out - ref).max())
     assert err < 0.5, err
-    emit("gemm_pallas_interpret_check_512", 0.0, f"max_err={err:.2e}")
+    pol = autotune.select_policy("gemm", (n, n, n), str(a.dtype))
+    emit("gemm_pallas_interpret_check_512", 0.0,
+         f"max_err={err:.2e};policy={pol.describe()['blocks']}")
 
 
 if __name__ == "__main__":

@@ -2,18 +2,19 @@
 
 Tab. 2 reproduction — wave specialization's producer VMEM tax shrinks the
 feasible output tile and with it arithmetic intensity/TFLOPs; output tile
-size dominates. Tab. 3 reproduction — PINGPONG (large tiles, 2 buffers) vs
-INTERLEAVE (small tiles, deeper pipeline) on GEMM and attention.
-All numbers are the analytic v5e pipeline model (no TPU in this container);
+size dominates. Tab. 3 reproduction — the autotuner's full candidate set
+(schedule × pipeline depth × traversal) on GEMM and attention, replacing the
+old private PINGPONG/INTERLEAVE lists; the selected policy is marked. All
+numbers are the analytic v5e pipeline model (no TPU in this container);
 the structure mirrors the paper's tables.
 """
 from __future__ import annotations
 
+from repro.core import autotune
 from repro.core import perf_model as pm
 from repro.core import tiles
-from repro.core.schedule import (PINGPONG, INTERLEAVE, WAVE_SPECIALIZED,
-                                 Schedule)
-from .common import emit
+from repro.core.schedule import PINGPONG, Schedule
+from .common import emit, gemm_candidate_sweep
 
 
 def main() -> None:
@@ -46,18 +47,32 @@ def main() -> None:
              f"modeled_tflops={m['modeled_tflops']:.0f};"
              f"ai={m['arithmetic_intensity']:.0f};bound={m['bound']}")
 
-    # --- Tab. 3 analogue: PINGPONG vs INTERLEAVE on GEMM + attention ---
-    for sched in (PINGPONG, INTERLEAVE, WAVE_SPECIALIZED):
-        m = pm.gemm_step_model(sched, k_total=8192)
-        emit(f"tab3_gemm_{sched.name}", 0.0,
+    # --- Tab. 3 analogue: the autotuner's GEMM candidate set, scored ---
+    n = 8192
+    sig = autotune.OpSignature("gemm", (n, n, n))
+    for pol, selected in gemm_candidate_sweep((n, n, n)):
+        score = autotune.score_policy(sig, pol)
+        m = pm.gemm_step_model(pol.schedule, k_total=n)
+        emit(f"tab3_gemm_{pol.block_m}x{pol.block_n}x{pol.block_k}"
+             f"_nbuf{pol.n_buffers}", 0.0,
              f"modeled_tflops={m['modeled_tflops']:.0f};"
-             f"vmem_mib={m['vmem_bytes'] / 2**20:.1f}")
-    for bq, bkv, label in ((128, 128, "pingpong"), (128, 512, "bigkv"),
-                           (256, 256, "interleave_large")):
-        m = pm.attention_step_model(block_q=bq, block_kv=bkv, head_dim=128,
+             f"vmem_mib={m['vmem_bytes'] / 2**20:.1f};"
+             f"modeled_time_ms={score.time_s * 1e3:.2f};"
+             f"selected={'yes' if selected else 'no'}")
+
+    # --- Tab. 3 attention: the autotuner's candidate set for a Fig. 7 shape
+    attn_sig = autotune.OpSignature("attention_fwd", (1, 16, 8192, 8192, 128))
+    attn_chosen = autotune.select_policy("attention_fwd",
+                                         (1, 16, 8192, 8192, 128))
+    for pol in autotune.candidate_policies(attn_sig):
+        m = pm.attention_step_model(block_q=pol.block_q,
+                                    block_kv=pol.block_kv, head_dim=128,
                                     seq_len=8192, causal=False)
-        emit(f"tab3_attn_{label}", 0.0,
-             f"modeled_tflops={m['modeled_tflops']:.0f};bound={m['bound']}")
+        sel = "yes" if (pol.block_q, pol.block_kv) == \
+            (attn_chosen.block_q, attn_chosen.block_kv) else "no"
+        emit(f"tab3_attn_q{pol.block_q}_kv{pol.block_kv}", 0.0,
+             f"modeled_tflops={m['modeled_tflops']:.0f};bound={m['bound']};"
+             f"selected={sel}")
 
     # --- Tab. 1 analogue: pinned scratch accumulators ---
     # No register file on TPU; the pinned fp32 VMEM accumulator is structural

@@ -29,3 +29,28 @@ def time_fn(fn, *args, warmup: int = 3, iters: int = 10) -> float:
 
 def emit(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.1f},{derived}")
+
+
+def gemm_candidate_sweep(shape: tuple):
+    """The autotuner's GEMM candidate set for ``shape`` = (m, n, k), deduped
+    by (block_m, block_n, block_k, n_buffers) — the swizzle axis moves DMA
+    traffic, not the step model's TFLOPs. Yields (policy, selected: bool).
+    Shared by bench_gemm and bench_schedules so their tables agree."""
+    from repro.core import autotune
+
+    sig = autotune.OpSignature("gemm", shape)
+    chosen = autotune.select_policy("gemm", shape)
+    chosen_key = (chosen.block_m, chosen.block_n, chosen.block_k,
+                  chosen.n_buffers)
+    seen = set()
+    for pol in autotune.candidate_policies(sig):
+        key = (pol.block_m, pol.block_n, pol.block_k, pol.n_buffers)
+        if key in seen:
+            continue
+        seen.add(key)
+        if key == chosen_key:
+            # report the actually-selected policy (its swizzle included),
+            # not whichever swizzle variant happened to come first
+            yield chosen, True
+        else:
+            yield pol, False

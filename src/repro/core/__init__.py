@@ -5,8 +5,14 @@
 * :mod:`repro.core.cache_model` — two-level cache simulator (Tab. 4 / Eq. 1)
 * :mod:`repro.core.schedule` — PINGPONG / INTERLEAVE / WAVE_SPECIALIZED presets
 * :mod:`repro.core.perf_model` — v5e roofline constants + analytic models
+* :mod:`repro.core.policy` — KernelPolicy: schedule × swizzle × dtypes × legality
+* :mod:`repro.core.autotune` — analytic policy autotuner + in-process cache
 """
 from .tiles import TileSpec, native_tiling, is_aligned, block_spec  # noqa: F401
 from .grid_swizzle import SwizzleConfig, ROW_MAJOR  # noqa: F401
 from .schedule import Schedule, PINGPONG, INTERLEAVE, WAVE_SPECIALIZED, get_schedule  # noqa: F401
 from .perf_model import V5E, ChipSpec, roofline, RooflineTerms  # noqa: F401
+from .policy import KernelPolicy, make_policy  # noqa: F401
+from .autotune import (OpSignature, candidate_policies, score_policy,  # noqa: F401
+                       select_policy, policy_cache_stats, clear_policy_cache,
+                       policies_for_model)

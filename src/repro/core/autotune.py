@@ -1,0 +1,350 @@
+"""Analytic policy autotuner (paper §3.3-3.4; Tab. 2-4 models as the cost fn).
+
+Lurati et al. ("Bringing Auto-tuning to HIP", 2024) show that most of the
+AMD-vs-baseline gap lives in tuning-parameter search; HipKittens' answer is a
+small, structured search space (schedule × tile × traversal). This module is
+that search, run against the repo's *analytic* models instead of hardware:
+
+  1. :func:`candidate_policies` enumerates every VMEM-legal
+     :class:`~repro.core.policy.KernelPolicy` whose blocks tile the problem
+     shape (divisibility + native alignment via the Schedule blocks);
+  2. :func:`score_policy` ranks a candidate with the existing models —
+     ``perf_model.gemm_step_model`` / ``attention_step_model`` for pipeline
+     time, ``grid_swizzle.dma_bytes`` for the Pallas-revisit HBM traffic of
+     its traversal order (and optionally ``cache_model.simulate_gemm_schedule``
+     for the multi-executor hierarchy, see :func:`refine_with_cache_model`);
+  3. :func:`select_policy` memoizes the winner in an in-process cache keyed by
+     (kernel kind, shape-bucket, dtype) so model tracing re-resolves for free.
+
+Deterministic by construction: candidates are scored with pure functions and
+ties break on (modeled time, modeled DMA bytes, policy key).
+
+See DESIGN.md §5 for where this sits in the policy resolution order.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, Optional
+
+from . import perf_model as pm
+from . import tiles
+from .grid_swizzle import ROW_MAJOR, SwizzleConfig, dma_bytes
+from .policy import KernelPolicy, OP_KINDS, make_policy
+from .schedule import Schedule
+
+_DTYPE_BYTES = {"bfloat16": 2, "float16": 2, "float32": 4, "int8": 1,
+                "float8_e4m3fn": 1, "float8_e5m2": 1}
+
+# Per-grid-step fixed cost (s): models the pipeline bubble / bookkeeping of a
+# Pallas grid step. Only its *relative* effect matters: it breaks ties toward
+# fewer, larger blocks for memory-bound 1-D ops.
+_STEP_OVERHEAD_S = 1e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class OpSignature:
+    """What the autotuner needs to know about one kernel launch.
+
+    ``shape`` per op kind:
+      gemm           (m, n, k)
+      attention_fwd  (batch, heads, seq_q, seq_kv, head_dim)
+      attention_bwd  (batch, heads, seq_q, seq_kv, head_dim)
+      fused_norm     (rows, d)
+      rope           (batch, heads, seq, head_dim)
+    """
+
+    op: str
+    shape: tuple
+    dtype: str = "bfloat16"
+    causal: bool = False
+
+    def __post_init__(self):
+        if self.op not in OP_KINDS:
+            raise ValueError(f"unknown op kind {self.op!r}")
+
+    def bucket(self) -> tuple:
+        """Policy-cache key. Tile-constrained dims stay exact (a block must
+        divide them); pure batch-like dims round up to the next power of two
+        so e.g. batch 48 and 64 share one compiled bucket."""
+        def pow2(x: int) -> int:
+            return 1 << max(0, (x - 1).bit_length())
+
+        if self.op in ("attention_fwd", "attention_bwd"):
+            b, h, sq, skv, d = self.shape
+            shape = (pow2(b), pow2(h), sq, skv, d)
+        elif self.op == "rope":
+            b, h, s, d = self.shape
+            shape = (pow2(b), pow2(h), s, d)
+        else:
+            shape = tuple(self.shape)
+        return (self.op, shape, self.dtype, self.causal)
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyScore:
+    time_s: float        # modeled wall time of the whole op (lower is better)
+    dma_bytes: int       # modeled HBM→VMEM traffic under the traversal order
+    detail: tuple = ()   # (key, value) pairs for reports
+
+    def rank_key(self, policy: KernelPolicy) -> tuple:
+        return (self.time_s, self.dma_bytes, repr(policy.cache_key()))
+
+
+# ---------------------------------------------------------------------------
+# Candidate enumeration
+# ---------------------------------------------------------------------------
+
+def _block_candidates(dim: int, align: int, cap: int) -> list:
+    """Aligned divisors of ``dim`` up to ``cap``; always non-empty.
+
+    When no aligned divisor exists (dim itself unaligned), falls back to the
+    whole dim / largest divisor — the kernels accept those because a block
+    covering an unaligned problem dim pads exactly once (the same padding
+    the pre-policy raw BlockSpecs produced); see tiles.block_spec callers.
+    """
+    cands = [b for b in range(align, min(dim, cap) + 1, align) if dim % b == 0]
+    if dim <= cap and dim not in cands:
+        cands.append(dim)  # the whole dim always tiles itself
+    if not cands:
+        cands = [max(b for b in range(1, cap + 1) if dim % b == 0)]
+    return sorted(set(cands))
+
+
+def _sublane(dtype: str) -> int:
+    return tiles.native_tiling(
+        dtype if dtype in _DTYPE_BYTES else "bfloat16")[0]
+
+
+def _swizzle_candidates(num_rows: int, num_cols: int) -> list:
+    """Traversal orders worth scoring for a 2-D block grid: row-major plus
+    Algorithm-1 windows (chiplet step off — single-core Pallas use)."""
+    cands = [ROW_MAJOR]
+    seen = set()
+    for w in (2, 4, 8, num_rows):
+        if 1 < w <= num_rows and w not in seen:
+            seen.add(w)
+            cands.append(SwizzleConfig(window=w, enable_chiplet=False))
+    return cands
+
+
+def candidate_policies(sig: OpSignature) -> list:
+    """Every legal candidate for ``sig``: blocks tile the shape AND the
+    pipelined working set fits VMEM (Tab. 2's feasibility rule)."""
+    dtype = "bfloat16" if sig.dtype not in _DTYPE_BYTES else sig.dtype
+    out = []
+
+    if sig.op == "gemm":
+        m, n, k = sig.shape
+        for bm in _block_candidates(m, 128, 512):
+            for bn in _block_candidates(n, 128, 512):
+                for bk in _block_candidates(k, 128, 512):
+                    for nbuf in (2, 3):
+                        sched = Schedule(f"auto_g{nbuf}", nbuf, bm, bn, bk)
+                        rows, cols = m // bm, n // bn
+                        for sw in _swizzle_candidates(rows, cols):
+                            pol = KernelPolicy("gemm", sched, sw,
+                                               in_dtype=dtype)
+                            if pol.is_legal():
+                                out.append(pol)
+
+    elif sig.op in ("attention_fwd", "attention_bwd"):
+        b, h, sq, skv, d = sig.shape
+        for bq in _block_candidates(sq, 128, 512):
+            for bkv in _block_candidates(skv, 128, 512):
+                sched = Schedule("auto_a", 2, bq, bkv, d)
+                pol = KernelPolicy(sig.op, sched, ROW_MAJOR, in_dtype=dtype)
+                if pol.is_legal():
+                    out.append(pol)
+
+    elif sig.op == "fused_norm":
+        rows, d = sig.shape
+        for br in _block_candidates(rows, _sublane(dtype), 1024):
+            pol = make_policy("fused_norm", block_m=br, block_k=d,
+                              in_dtype=dtype, name="auto_n")
+            if pol.is_legal():
+                out.append(pol)
+
+    elif sig.op == "rope":
+        b, h, s, d = sig.shape
+        for bs in _block_candidates(s, _sublane(dtype), 1024):
+            pol = make_policy("rope", block_m=bs, block_k=d,
+                              in_dtype=dtype, name="auto_r")
+            if pol.is_legal():
+                out.append(pol)
+
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Scoring
+# ---------------------------------------------------------------------------
+
+def gemm_traffic_bytes(policy: KernelPolicy, m: int, n: int, k: int,
+                       dtype_bytes: int) -> int:
+    """Modeled HBM→VMEM bytes of the full GEMM under the policy's traversal
+    (full-K panels, Pallas consecutive-revisit rule — grid_swizzle.dma_bytes)."""
+    rows, cols = m // policy.block_m, n // policy.block_n
+    a_panel = policy.block_m * k * dtype_bytes
+    b_panel = k * policy.block_n * dtype_bytes
+    return dma_bytes(policy.swizzle, rows, cols, a_panel, b_panel)
+
+
+def score_policy(sig: OpSignature, policy: KernelPolicy,
+                 chip: pm.ChipSpec = pm.V5E) -> PolicyScore:
+    dtype_bytes = _DTYPE_BYTES.get(sig.dtype, 2)
+
+    if sig.op == "gemm":
+        m, n, k = sig.shape
+        step = pm.gemm_step_model(policy.schedule, k_total=k,
+                                  dtype_bytes=dtype_bytes, chip=chip)
+        if not step["feasible"]:
+            return PolicyScore(math.inf, 2**62)
+        n_blocks = (m // policy.block_m) * (n // policy.block_n)
+        tflops = step["modeled_tflops"]
+        compute_s = 2.0 * m * n * k / (tflops * 1e12) if tflops else math.inf
+        traffic = gemm_traffic_bytes(policy, m, n, k, dtype_bytes)
+        memory_s = traffic / chip.hbm_bw
+        time_s = max(compute_s, memory_s) + n_blocks * _STEP_OVERHEAD_S
+        return PolicyScore(time_s, traffic,
+                           (("bound", step["bound"]),
+                            ("ai", round(step["arithmetic_intensity"], 1))))
+
+    if sig.op in ("attention_fwd", "attention_bwd"):
+        b, h, sq, skv, d = sig.shape
+        step = pm.attention_step_model(
+            block_q=policy.block_q, block_kv=policy.block_kv, head_dim=d,
+            seq_len=skv, causal=sig.causal, dtype_bytes=dtype_bytes, chip=chip)
+        nq = sq // policy.block_q
+        useful = 4.0 * b * h * sq * skv * d * (0.5 if sig.causal else 1.0)
+        tflops = step["modeled_tflops"]
+        time_s = useful / (tflops * 1e12) if tflops else math.inf
+        # K/V are re-streamed once per q block; q/o stream once.
+        kv_frac = (0.5 if sig.causal else 1.0)
+        traffic = int(b * h * (nq * kv_frac * 2 * skv * d
+                               + 2 * sq * d) * dtype_bytes)
+        if sig.op == "attention_bwd":
+            time_s *= 2.5   # dq + dkv passes re-read everything
+            traffic *= 2
+        time_s += b * h * nq * (skv // policy.block_kv) * _STEP_OVERHEAD_S
+        return PolicyScore(time_s, traffic, (("bound", step["bound"]),))
+
+    if sig.op == "fused_norm":
+        rows, d = sig.shape
+        traffic = 4 * rows * d * dtype_bytes
+        steps = rows // policy.block_rows
+        return PolicyScore(traffic / chip.hbm_bw + steps * _STEP_OVERHEAD_S,
+                           traffic)
+
+    if sig.op == "rope":
+        b, h, s, d = sig.shape
+        traffic = b * h * s * d * (2 * dtype_bytes + 8)  # x/out + f32 tables
+        steps = b * h * (s // policy.block_rows)
+        return PolicyScore(traffic / chip.hbm_bw + steps * _STEP_OVERHEAD_S,
+                           traffic)
+
+    raise AssertionError(sig.op)
+
+
+def refine_with_cache_model(sig: OpSignature, policies: Iterable[KernelPolicy],
+                            hw=None) -> list:
+    """Re-rank GEMM finalists with the two-level cache simulator (Tab. 4).
+
+    Slow (explicit LRU sim) — used by the schedule benchmarks and available
+    as ``select_policy(..., cache_sim=True)``; the memoized fast path ranks
+    analytically only.
+    """
+    from .cache_model import CacheHW, simulate_gemm_schedule
+    hw = hw if hw is not None else CacheHW.tpu_v5e()
+    m, n, k = sig.shape
+    scored = []
+    for pol in policies:
+        r = simulate_gemm_schedule(pol.swizzle, m=m, n=n, k=k,
+                                   block_m=pol.block_m, block_n=pol.block_n,
+                                   block_k=pol.block_k, hw=hw)
+        scored.append((r.modeled_time_s, repr(pol.cache_key()), pol, r))
+    scored.sort(key=lambda t: t[:2])
+    return [(pol, r) for _, _, pol, r in scored]
+
+
+# ---------------------------------------------------------------------------
+# Memoized selection
+# ---------------------------------------------------------------------------
+
+_POLICY_CACHE: dict = {}
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def select_policy(op: str, shape, dtype="bfloat16", *, causal: bool = False,
+                  cache_sim: bool = False,
+                  chip: pm.ChipSpec = pm.V5E) -> KernelPolicy:
+    """The tuned policy for an op signature; memoized per shape-bucket.
+
+    Raises ValueError if no candidate is legal (should be impossible for
+    realistic shapes — the smallest aligned block always fits VMEM).
+    """
+    sig = OpSignature(op, tuple(int(x) for x in shape), str(dtype),
+                      causal=causal)
+    key = sig.bucket() + (bool(cache_sim), chip.name)
+    hit = _POLICY_CACHE.get(key)
+    if hit is not None:
+        _CACHE_STATS["hits"] += 1
+        return hit
+    _CACHE_STATS["misses"] += 1
+
+    cands = candidate_policies(sig)
+    if not cands:
+        raise ValueError(f"no legal policy for {sig}")
+    scored = sorted(cands,
+                    key=lambda p: score_policy(sig, p, chip).rank_key(p))
+    best = scored[0]
+    if cache_sim and sig.op == "gemm":
+        finalists = scored[: min(8, len(scored))]
+        best = refine_with_cache_model(sig, finalists)[0][0]
+    _POLICY_CACHE[key] = best
+    return best
+
+
+def policy_cache_stats() -> dict:
+    return dict(_CACHE_STATS, size=len(_POLICY_CACHE))
+
+
+def clear_policy_cache() -> None:
+    _POLICY_CACHE.clear()
+    _CACHE_STATS.update(hits=0, misses=0)
+
+
+# ---------------------------------------------------------------------------
+# Model-level resolution (used by models/api, dryrun, serve, trainer)
+# ---------------------------------------------------------------------------
+
+def policies_for_model(cfg, *, batch: int, seq_len: int,
+                       dtype: Optional[str] = None) -> dict:
+    """Resolve the kernel policies a model built from ``cfg`` will use for a
+    (batch, seq_len) bucket. Returns {op_kind: KernelPolicy}; attention-free
+    architectures get only the 1-D policies."""
+    dtype = dtype or getattr(cfg, "compute_dtype", "bfloat16")
+    h = getattr(cfg, "num_heads", 0)
+    d = getattr(cfg, "head_dim", 0) or 0
+    dm = getattr(cfg, "d_model", 0)
+    out = {}
+    kinds = set(getattr(cfg, "block_pattern", ("attn",)))
+    has_attn = bool(kinds & {"attn", "local", "moe"}) or \
+        getattr(cfg, "family", "lm") in ("encdec", "vlm")
+    if has_attn and h and d:
+        attn_shape = (batch, h, seq_len, seq_len, d)
+        out["attention_fwd"] = select_policy("attention_fwd", attn_shape,
+                                             dtype, causal=True)
+        out["attention_bwd"] = select_policy("attention_bwd", attn_shape,
+                                             dtype, causal=True)
+        if getattr(cfg, "rope_style", "none") != "none":
+            out["rope"] = select_policy("rope", (batch, h, seq_len, d), dtype)
+    if dm:
+        out["fused_norm"] = select_policy("fused_norm",
+                                          (batch * seq_len, dm), dtype)
+    return out
+
+
+def describe_policies(policies: dict) -> dict:
+    """JSON-able {op: describe()} for dryrun/report cells."""
+    return {op: pol.describe() for op, pol in sorted(policies.items())}

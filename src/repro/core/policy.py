@@ -1,0 +1,273 @@
+"""KernelPolicy: one object that fully determines a kernel's tiling strategy.
+
+HipKittens' central claim (§3.3-3.4, Tab. 2-3) is that peak AMD performance
+comes from choosing the right *schedule* (8-wave ping-pong vs 4-wave
+interleave) and *traversal order* (Algorithm-1 swizzle) per workload. In this
+repo those two axes — plus tile dtypes and the VMEM-budget legality rule that
+bounds them (Tab. 2's register-budget argument, TPU-adapted) — compose into a
+single frozen, hashable :class:`KernelPolicy`:
+
+    policy = KernelPolicy(op="gemm",
+                          schedule=Schedule(...),   # pipeline depth + blocks
+                          swizzle=SwizzleConfig(...),  # Algorithm 1 params
+                          in_dtype="bfloat16", acc_dtype="float32")
+
+Every Pallas kernel in ``repro.kernels`` consumes a policy instead of loose
+block ints; :mod:`repro.core.autotune` enumerates legal policies for an op
+signature and ranks them with the analytic models. A policy is *inspectable*
+(``describe()``), *legal by construction* (``check()`` routes through
+``tiles.check_vmem_budget``) and *static-argument friendly* (frozen/hashable,
+so ``jax.jit`` can close over it).
+
+Block-field conventions per op kind (the Schedule's three block dims are
+reused so one Schedule type serves every kernel family):
+
+  op              block_m        block_n         block_k
+  --------------  -------------  --------------  -------------------
+  gemm            output rows    output cols     contraction block
+  attention_fwd   block_q        block_kv        head_dim
+  attention_bwd   block_q        block_kv        head_dim
+  fused_norm      block_rows     (unused: 0)     feature dim d
+  rope            block_s        (unused: 0)     head_dim
+
+See DESIGN.md §5 for the policy resolution order.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional
+
+from . import tiles
+from .grid_swizzle import ROW_MAJOR, SwizzleConfig
+from .schedule import PINGPONG, Schedule
+
+# Kernel kinds a policy can describe. attention fwd/bwd are separate kinds
+# because the bwd pass has a ~2.5x larger scratch working set (dk+dv or dq
+# accumulators) and may legally need smaller tiles than fwd.
+OP_KINDS = ("gemm", "attention_fwd", "attention_bwd", "fused_norm", "rope")
+
+_ACC_BYTES = {"float32": 4, "bfloat16": 2}
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPolicy:
+    """A complete, legal-by-construction tiling strategy for one kernel kind."""
+
+    op: str
+    schedule: Schedule
+    swizzle: SwizzleConfig = ROW_MAJOR
+    in_dtype: str = "bfloat16"
+    acc_dtype: str = "float32"
+
+    def __post_init__(self):
+        if self.op not in OP_KINDS:
+            raise ValueError(f"unknown op kind {self.op!r}; have {OP_KINDS}")
+        if self.acc_dtype not in _ACC_BYTES:
+            raise ValueError(f"unsupported acc_dtype {self.acc_dtype!r}")
+
+    # -- block accessors (names per the op-kind table in the module doc) ----
+    @property
+    def block_m(self) -> int:
+        return self.schedule.block_m
+
+    @property
+    def block_n(self) -> int:
+        return self.schedule.block_n
+
+    @property
+    def block_k(self) -> int:
+        return self.schedule.block_k
+
+    @property
+    def block_q(self) -> int:
+        return self.schedule.block_m
+
+    @property
+    def block_kv(self) -> int:
+        return self.schedule.block_n
+
+    @property
+    def block_rows(self) -> int:
+        return self.schedule.block_m
+
+    @property
+    def n_buffers(self) -> int:
+        return self.schedule.n_buffers
+
+    # -- working-set accounting --------------------------------------------
+    def operand_blocks(self) -> list:
+        """(shape, dtype) of each pipelined operand block, per op kind."""
+        s = self.schedule
+        if self.op == "gemm":
+            return [((s.block_m, s.block_k), self.in_dtype),
+                    ((s.block_k, s.block_n), self.in_dtype)]
+        if self.op in ("attention_fwd", "attention_bwd"):
+            d = s.block_k  # head_dim by convention
+            blocks = [((s.block_m, d), self.in_dtype),   # q (or do) block
+                      ((s.block_n, d), self.in_dtype),   # k block
+                      ((s.block_n, d), self.in_dtype)]   # v block
+            if self.op == "attention_bwd":
+                blocks.append(((s.block_m, d), self.in_dtype))  # do block
+            return blocks
+        if self.op == "fused_norm":
+            # x + residual in, normed + residual out: 4 row-blocks in flight
+            return [((s.block_m, s.block_k), self.in_dtype)] * 4
+        if self.op == "rope":
+            # x block + sin/cos tables + out block
+            return [((s.block_m, s.block_k), self.in_dtype),
+                    ((s.block_m, s.block_k), "float32"),
+                    ((s.block_m, s.block_k), "float32"),
+                    ((s.block_m, s.block_k), self.in_dtype)]
+        raise AssertionError(self.op)
+
+    def scratch_bytes(self) -> int:
+        """Pinned accumulator scratch (the TPU analogue of HK's pinned AGPRs)."""
+        s = self.schedule
+        acc = _ACC_BYTES[self.acc_dtype]
+        if self.op == "gemm":
+            return s.block_m * s.block_n * acc
+        if self.op == "attention_fwd":
+            # acc (bq, d) + running max/sum (bq, LANE) each
+            return s.block_m * s.block_k * acc + 2 * s.block_m * tiles.LANE * acc
+        if self.op == "attention_bwd":
+            # dq pass: (bq, d); dkv pass: 2x (bkv, d) — budget for the larger
+            return max(s.block_m * s.block_k, 2 * s.block_n * s.block_k) * acc
+        return 0  # fused_norm / rope keep no cross-iteration scratch
+
+    def vmem_bytes(self) -> int:
+        """Modeled VMEM working set of the pipelined pallas_call."""
+        return tiles.pipeline_vmem_bytes(
+            self.operand_blocks(), n_buffers=self.schedule.n_buffers,
+            scratch_bytes=self.scratch_bytes())
+
+    def is_legal(self, budget: Optional[int] = None) -> bool:
+        """True iff the working set fits the (producer-taxed) VMEM budget."""
+        budget = budget if budget is not None else self.schedule.vmem_budget()
+        try:
+            self.check(budget=budget)
+        except ValueError:
+            return False
+        return True
+
+    def check(self, budget: Optional[int] = None) -> int:
+        """Raise ValueError on VMEM overflow; returns bytes used otherwise."""
+        budget = budget if budget is not None else self.schedule.vmem_budget()
+        return tiles.check_vmem_budget(
+            self.operand_blocks(), n_buffers=self.schedule.n_buffers,
+            scratch_bytes=self.scratch_bytes(), budget=budget,
+            what=f"{self.op} policy {self.schedule.name!r}")
+
+    # -- shape fitting ------------------------------------------------------
+    def fits(self, *dims: int) -> bool:
+        """True iff each problem dim is divisible by the matching block dim.
+
+        gemm: fits(m, n, k); attention: fits(sq, skv); 1-D ops: fits(rows).
+        """
+        blocks = (self.block_m, self.block_n, self.block_k)
+        return all(d % b == 0 for d, b in zip(dims, blocks) if b)
+
+    def describe(self) -> dict:
+        """JSON-able summary for dryrun/roofline/benchmark reports."""
+        s, sw = self.schedule, self.swizzle
+        return {
+            "op": self.op,
+            "schedule": s.name,
+            "blocks": [s.block_m, s.block_n, s.block_k],
+            "n_buffers": s.n_buffers,
+            "swizzle": ("row_major" if not (sw.enable_window or sw.enable_chiplet)
+                        else f"W{sw.window}/C{sw.chunk}"
+                             f"{'/xcd' if sw.enable_chiplet else ''}"),
+            "in_dtype": self.in_dtype,
+            "acc_dtype": self.acc_dtype,
+            "vmem_mib": round(self.vmem_bytes() / 2**20, 2),
+        }
+
+    def cache_key(self) -> tuple:
+        return (self.op, self.schedule, self.swizzle, self.in_dtype,
+                self.acc_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Construction helpers + the deprecation shim used by the kernels' old kwargs.
+# ---------------------------------------------------------------------------
+
+def make_policy(op: str, *, block_m: int, block_n: int = 0, block_k: int = 0,
+                n_buffers: int = 2, swizzle: SwizzleConfig = ROW_MAJOR,
+                in_dtype: str = "bfloat16", acc_dtype: str = "float32",
+                name: str = "explicit") -> KernelPolicy:
+    """Build a policy from explicit block dims (no legality enforcement —
+    call .check() to enforce; the autotuner only emits legal ones)."""
+    sched = Schedule(name, n_buffers=n_buffers, block_m=block_m,
+                     block_n=block_n, block_k=block_k)
+    return KernelPolicy(op=op, schedule=sched, swizzle=swizzle,
+                        in_dtype=in_dtype, acc_dtype=acc_dtype)
+
+
+def legacy_policy(op: str, *, warn_what: str = "", **blocks) -> KernelPolicy:
+    """Deprecation shim: construct an explicit policy from the pre-policy
+    loose-int keyword arguments (block_m/block_n/block_k/block_q/block_kv/
+    block_rows/block_s + swizzle). Emits a DeprecationWarning so call sites
+    migrate to passing a KernelPolicy."""
+    warnings.warn(
+        f"{warn_what or op}: raw block-size keywords are deprecated; pass "
+        "policy=KernelPolicy(...) (or let repro.core.autotune select one)",
+        DeprecationWarning, stacklevel=3)
+    swizzle = blocks.pop("swizzle", None) or ROW_MAJOR
+    if op == "gemm":
+        bm, bn, bk = blocks["block_m"], blocks["block_n"], blocks["block_k"]
+    elif op in ("attention_fwd", "attention_bwd"):
+        bm, bn, bk = blocks["block_q"], blocks["block_kv"], blocks["head_dim"]
+    elif op == "fused_norm":
+        bm, bn, bk = blocks["block_rows"], 0, blocks["d"]
+    elif op == "rope":
+        bm, bn, bk = blocks["block_s"], 0, blocks["d"]
+    else:
+        raise ValueError(f"unknown op kind {op!r}")
+    return make_policy(op, block_m=bm, block_n=bn, block_k=bk,
+                       swizzle=swizzle, name="legacy",
+                       in_dtype=blocks.get("in_dtype", "bfloat16"))
+
+
+def legacy_attention_blocks(block_q, block_kv, sq: int, skv: int,
+                            d: int) -> Optional[dict]:
+    """The attention deprecation-shim clamp, shared by flash fwd/bwd and the
+    public attention op: None when no legacy block keywords were passed,
+    else the clamped block dict for :func:`resolve_policy`'s legacy path."""
+    if block_q is None and block_kv is None:
+        return None
+    return dict(block_q=min(block_q or 128, sq),
+                block_kv=min(block_kv or 128, skv), head_dim=d)
+
+
+def resolve_policy(op: str, shape, dtype="bfloat16", *, causal: bool = False,
+                   legacy_blocks: Optional[dict] = None,
+                   warn_what: str = "") -> KernelPolicy:
+    """Steps 2-3 of the DESIGN.md §5 resolution order, shared by every
+    kernel entry point: explicit legacy block keywords build a shim policy
+    (with a DeprecationWarning); otherwise the autotuner selects one,
+    memoized per (op, shape-bucket, dtype).
+
+    ``legacy_blocks`` is None when the caller received no legacy keywords;
+    otherwise it holds the op-specific block kwargs already clamped to the
+    problem (the clamp is the only per-kernel part of the old duplicated
+    resolution blocks).
+    """
+    if legacy_blocks is not None:
+        return legacy_policy(op, warn_what=warn_what, **legacy_blocks)
+    from . import autotune  # function-level: autotune imports this module
+
+    return autotune.select_policy(op, shape, str(dtype), causal=causal)
+
+
+# Conservative defaults per op kind — used only as the last-resort fallback
+# when the autotuner is bypassed (see DESIGN.md §5 resolution order).
+DEFAULT_GEMM = KernelPolicy("gemm", PINGPONG)
+DEFAULT_ATTENTION_FWD = make_policy("attention_fwd", block_m=128, block_n=128,
+                                    block_k=128, name="default_attn")
+DEFAULT_ATTENTION_BWD = make_policy("attention_bwd", block_m=128, block_n=128,
+                                    block_k=128, name="default_attn_bwd")
+DEFAULT_FUSED_NORM = make_policy("fused_norm", block_m=256, block_k=1024,
+                                 name="default_norm")
+DEFAULT_ROPE = make_policy("rope", block_m=256, block_k=128,
+                           name="default_rope")

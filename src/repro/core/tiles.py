@@ -21,6 +21,7 @@ from typing import Callable, Sequence
 
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 # ---------------------------------------------------------------------------
 # TPU v5e hardware constants (single core).
@@ -107,9 +108,12 @@ def block_spec(shape: Sequence[int], index_map: Callable, dtype="bfloat16",
                *, allow_ragged_minor: bool = False) -> pl.BlockSpec:
     """Build a Pallas BlockSpec, enforcing native-tiling legality.
 
-    ``allow_ragged_minor`` permits a final dim < LANE (e.g. head_dim=64 tiles),
-    which Pallas pads — we account for the padding in vmem_bytes but allow it
-    since head_dim 64 attention is a paper workload (Fig. 7).
+    ``allow_ragged_minor`` permits a final dim that is not a LANE multiple
+    (e.g. head_dim=64 tiles), which Pallas pads — we account for the padding
+    in vmem_bytes but allow it since head_dim 64 attention is a paper
+    workload (Fig. 7). With the flag off the contract is strict: *every*
+    non-multiple minor dim is rejected, including the lane/2 case (callers on
+    the head-dim-64 path must opt in explicitly).
     """
     shape = tuple(shape)
     if not allow_ragged_minor:
@@ -118,11 +122,32 @@ def block_spec(shape: Sequence[int], index_map: Callable, dtype="bfloat16",
         if len(trailing) >= 2:
             sub, lane = native_tiling(dtype)
             r, c = trailing[-2], trailing[-1]
-            if c % lane != 0 and c != lane // 2:  # allow 64 for hd=64 workloads
-                raise ValueError(f"block minor dim {c} not {lane}-aligned")
+            if c % lane != 0:
+                raise ValueError(f"block minor dim {c} not {lane}-aligned "
+                                 f"(pass allow_ragged_minor=True to accept "
+                                 f"padded tiles, e.g. head_dim 64)")
             if r % sub != 0:
                 raise ValueError(f"block sublane dim {r} not {sub}-aligned")
     return pl.BlockSpec(shape, index_map)
+
+
+def shape_ragged(rows_dim: int, minor_dim: int, dtype) -> bool:
+    """True when the *problem* dims themselves are not native-tile aligned.
+
+    Any tiling of an unaligned problem dim pads, so kernels waive
+    :func:`block_spec`'s strict gate for exactly these shapes (reproducing
+    the padding the pre-policy raw BlockSpecs accepted) while keeping the
+    gate active for aligned problems, where a misaligned *block* is a bug.
+    """
+    sub, lane = native_tiling(dtype)
+    return rows_dim % sub != 0 or minor_dim % lane != 0
+
+
+def compiler_params(*, dimension_semantics: tuple):
+    """pltpu compiler params across jax versions (CompilerParams was named
+    TPUCompilerParams before jax 0.5)."""
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(dimension_semantics=dimension_semantics)
 
 
 def padded_tile_bytes(shape: Sequence[int], dtype) -> int:

@@ -7,6 +7,13 @@ flash-bwd way — a dq pass and a dk/dv pass — with pinned fp32 VMEM scratch
 accumulators playing the role of the pinned register tiles, and the Pallas
 pipeline providing the compute/memory alternation.
 
+Block sizes come from a :class:`~repro.core.policy.KernelPolicy`
+(``attention_bwd`` kind — its scratch accounting covers the dk+dv
+accumulator pair, so a legal bwd policy may be smaller than the fwd one).
+Traversal stays row-major: both passes accumulate over a full inner sweep
+per output block, so the consecutive-revisit DMA model shows no gain from
+reordering the outer dimension (DESIGN.md §5).
+
 GQA: dk/dv are computed per *query* head and the (Hkv, group) reduction is
 done by the caller (ops.py) — same strategy as the paper's 1.8-2.3x GQA-bwd
 kernel, which parallelizes over query heads.
@@ -19,6 +26,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import tiles
+from repro.core.policy import (KernelPolicy, legacy_attention_blocks,
+                               resolve_policy)
 
 MASK_VALUE = -1e30
 
@@ -118,28 +129,36 @@ def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("causal", "window", "block_q", "block_kv", "logit_scale",
-                     "interpret"),
+    static_argnames=("policy", "causal", "window", "logit_scale", "interpret"),
 )
-def flash_attention_bwd(q, k, v, out, lse, do, *, causal: bool = False,
-                        window: int | None = None, block_q: int = 128,
-                        block_kv: int = 128, logit_scale: float | None = None,
-                        interpret: bool = True):
-    """Returns (dq, dk, dv) with dk/dv per *query* head: (B, H, Skv, D)."""
+def _flash_bwd(q, k, v, out, lse, do, *, policy: KernelPolicy,
+               causal: bool, window: int | None,
+               logit_scale: float | None, interpret: bool):
     b, h, sq, d = q.shape
     _, hkv, skv, _ = k.shape
     group = h // hkv
-    block_q = min(block_q, sq)
-    block_kv = min(block_kv, skv)
+    block_q = min(policy.block_q, sq)
+    block_kv = min(policy.block_kv, skv)
     nq, nkv = sq // block_q, skv // block_kv
     scale = logit_scale if logit_scale is not None else d ** -0.5
+    # ragged when the problem dims themselves are unaligned (see kernel_fwd)
+    ragged_q = tiles.shape_ragged(sq, d, q.dtype)
+    ragged_kv = tiles.shape_ragged(skv, d, k.dtype)
+
+    policy.check()  # budget covers the larger of the two passes' scratch
 
     # delta = rowsum(dO * O): cheap, memory-bound; jnp preprocess (as in FA2/3)
     delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
 
-    q_spec = pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0))
-    kv_spec = pl.BlockSpec((1, 1, block_kv, d),
-                           lambda b_, h_, iq, ik, g=group: (b_, h_ // g, ik, 0))
+    def tile(shape, index_map, dtype, *, ragged):
+        return tiles.block_spec(shape, index_map, dtype,
+                                allow_ragged_minor=ragged)
+
+    q_spec = tile((1, 1, block_q, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0),
+                  q.dtype, ragged=ragged_q)
+    kv_spec = tile((1, 1, block_kv, d),
+                   lambda b_, h_, iq, ik, g=group: (b_, h_ // g, ik, 0),
+                   k.dtype, ragged=ragged_kv)
     vec_spec = pl.BlockSpec((1, 1, block_q), lambda b_, h_, iq, ik: (b_, h_, iq))
 
     dq = pl.pallas_call(
@@ -151,17 +170,20 @@ def flash_attention_bwd(q, k, v, out, lse, do, *, causal: bool = False,
         out_specs=q_spec,
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         scratch_shapes=[pltpu.VMEM((block_q, d), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tiles.compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v, do, lse, delta)
 
     # dk/dv pass: grid transposed (kv outer, q inner), per query head.
-    q_spec2 = pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, ik, iq: (b_, h_, iq, 0))
-    kv_spec2 = pl.BlockSpec((1, 1, block_kv, d),
-                            lambda b_, h_, ik, iq, g=group: (b_, h_ // g, ik, 0))
-    kv_out_spec = pl.BlockSpec((1, 1, block_kv, d),
-                               lambda b_, h_, ik, iq: (b_, h_, ik, 0))
+    q_spec2 = tile((1, 1, block_q, d), lambda b_, h_, ik, iq: (b_, h_, iq, 0),
+                   q.dtype, ragged=ragged_q)
+    kv_spec2 = tile((1, 1, block_kv, d),
+                    lambda b_, h_, ik, iq, g=group: (b_, h_ // g, ik, 0),
+                    k.dtype, ragged=ragged_kv)
+    kv_out_spec = tile((1, 1, block_kv, d),
+                       lambda b_, h_, ik, iq: (b_, h_, ik, 0), k.dtype,
+                       ragged=ragged_kv)
     vec_spec2 = pl.BlockSpec((1, 1, block_q), lambda b_, h_, ik, iq: (b_, h_, iq))
 
     dk, dv = pl.pallas_call(
@@ -175,8 +197,29 @@ def flash_attention_bwd(q, k, v, out, lse, do, *, causal: bool = False,
                    jax.ShapeDtypeStruct((b, h, skv, d), v.dtype)],
         scratch_shapes=[pltpu.VMEM((block_kv, d), jnp.float32),
                         pltpu.VMEM((block_kv, d), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tiles.compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v, do, lse, delta)
     return dq, dk, dv
+
+
+def flash_attention_bwd(q, k, v, out, lse, do, *,
+                        policy: KernelPolicy | None = None,
+                        causal: bool = False, window: int | None = None,
+                        block_q: int | None = None,
+                        block_kv: int | None = None,
+                        logit_scale: float | None = None,
+                        interpret: bool = True):
+    """Returns (dq, dk, dv) with dk/dv per *query* head: (B, H, Skv, D)."""
+    if policy is None:
+        b, h, sq, d = q.shape
+        skv = k.shape[2]
+        policy = resolve_policy(
+            "attention_bwd", (b, h, sq, skv, d), q.dtype, causal=causal,
+            legacy_blocks=legacy_attention_blocks(block_q, block_kv, sq,
+                                                  skv, d),
+            warn_what="flash_attention_bwd")
+    return _flash_bwd(q, k, v, out, lse, do, policy=policy, causal=causal,
+                      window=window, logit_scale=logit_scale,
+                      interpret=interpret)

@@ -6,6 +6,13 @@ On TPU the same alternation is the Pallas grid pipeline: iteration ik's
 QK^T/PV MXU work overlaps iteration ik+1's K/V DMA. Online softmax state
 (m, l, acc) lives in pinned fp32 VMEM scratch (the paper pins AGPRs).
 
+Block sizes AND traversal order come from a
+:class:`~repro.core.policy.KernelPolicy`: the (head, q-block) pair is fused
+into one grid dimension and remapped by the policy's SwizzleConfig (the same
+Algorithm-1 permutation the GEMM uses), so e.g. short-KV shapes can run
+same-head q-blocks back-to-back and hit the Pallas K/V revisit fast path.
+ROW_MAJOR reproduces the classic (b, h, iq, ik) traversal exactly.
+
 Supports MHA and GQA (kv-head indexing in the BlockSpec index_map), causal
 masking, and sliding-window masking (Mixtral/RecurrentGemma local attention).
 """
@@ -18,15 +25,21 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import tiles
+from repro.core.policy import (KernelPolicy, legacy_attention_blocks,
+                               resolve_policy)
+
 MASK_VALUE = -1e30
 LANES = 128
 
 
 def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, l_ref, acc_ref, m_ref, s_ref,
-                *, nkv: int, block_q: int, block_kv: int, scale: float,
-                causal: bool, window: int | None):
-    iq = pl.program_id(2)
-    ik = pl.program_id(3)
+                *, nq: int, nkv: int, n_heads: int, block_q: int,
+                block_kv: int, scale: float, causal: bool,
+                window: int | None, swizzle):
+    hq = pl.program_id(1)
+    ik = pl.program_id(2)
+    _, iq = swizzle.remap(hq, n_heads, nq)
 
     @pl.when(ik == 0)
     def _init():
@@ -86,42 +99,65 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, l_ref, acc_ref, m_ref, s_ref,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("causal", "window", "block_q", "block_kv", "logit_scale",
-                     "interpret"),
+    static_argnames=("policy", "causal", "window", "logit_scale", "interpret"),
 )
-def flash_attention_fwd(q, k, v, *, causal: bool = False,
-                        window: int | None = None, block_q: int = 128,
-                        block_kv: int = 128, logit_scale: float | None = None,
-                        interpret: bool = True):
-    """Returns (out, lse). q: (B,H,Sq,D), k/v: (B,Hkv,Skv,D)."""
+def _flash_fwd(q, k, v, *, policy: KernelPolicy, causal: bool,
+               window: int | None, logit_scale: float | None,
+               interpret: bool):
     b, h, sq, d = q.shape
     _, hkv, skv, _ = k.shape
     assert h % hkv == 0, (h, hkv)
     group = h // hkv
-    block_q = min(block_q, sq)
-    block_kv = min(block_kv, skv)
+    block_q = min(policy.block_q, sq)
+    block_kv = min(policy.block_kv, skv)
     assert sq % block_q == 0 and skv % block_kv == 0, (sq, skv, block_q, block_kv)
     nq, nkv = sq // block_q, skv // block_kv
     scale = logit_scale if logit_scale is not None else d ** -0.5
+    swizzle = policy.swizzle
+    # ragged when the problem dims themselves are unaligned (head_dim 64
+    # tiles — paper Fig. 7 — or short/odd sequences): Pallas pads those.
+    ragged_q = tiles.shape_ragged(sq, d, q.dtype)
+    ragged_kv = tiles.shape_ragged(skv, d, k.dtype)
+
+    policy.check()  # Tab. 2 feasibility at the policy's pipeline depth
+
+    def hq_coords(i):
+        """Fused (head, q-block) grid index -> (head, q-block) via Algorithm 1."""
+        return swizzle.remap(i, h, nq)
+
+    def q_map(b_, i, ik):
+        hh, iq = hq_coords(i)
+        return (b_, hh, iq, 0)
+
+    def kv_map(b_, i, ik):
+        hh, _ = hq_coords(i)
+        return (b_, hh // group, ik, 0)
+
+    def lse_map(b_, i, ik):
+        hh, iq = hq_coords(i)
+        return (b_, hh, iq)
 
     kernel = functools.partial(
-        _fwd_kernel, nkv=nkv, block_q=block_q, block_kv=block_kv, scale=scale,
-        causal=causal, window=window)
+        _fwd_kernel, nq=nq, nkv=nkv, n_heads=h, block_q=block_q,
+        block_kv=block_kv, scale=scale, causal=causal, window=window,
+        swizzle=swizzle)
 
-    grid = (b, h, nq, nkv)
+    grid = (b, h * nq, nkv)
     out, lse = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
-            pl.BlockSpec((1, 1, block_kv, d),
-                         lambda b_, h_, iq, ik, g=group: (b_, h_ // g, ik, 0)),
-            pl.BlockSpec((1, 1, block_kv, d),
-                         lambda b_, h_, iq, ik, g=group: (b_, h_ // g, ik, 0)),
+            tiles.block_spec((1, 1, block_q, d), q_map, q.dtype,
+                             allow_ragged_minor=ragged_q),
+            tiles.block_spec((1, 1, block_kv, d), kv_map, k.dtype,
+                             allow_ragged_minor=ragged_kv),
+            tiles.block_spec((1, 1, block_kv, d), kv_map, v.dtype,
+                             allow_ragged_minor=ragged_kv),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
-            pl.BlockSpec((1, 1, block_q), lambda b_, h_, iq, ik: (b_, h_, iq)),
+            tiles.block_spec((1, 1, block_q, d), q_map, q.dtype,
+                             allow_ragged_minor=ragged_q),
+            pl.BlockSpec((1, 1, block_q), lse_map),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
@@ -132,8 +168,32 @@ def flash_attention_fwd(q, k, v, *, causal: bool = False,
             pltpu.VMEM((block_q, LANES), jnp.float32),  # running max m
             pltpu.VMEM((block_q, LANES), jnp.float32),  # running sum l
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
+        compiler_params=tiles.compiler_params(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(q, k, v)
     return out, lse
+
+
+def flash_attention_fwd(q, k, v, *, policy: KernelPolicy | None = None,
+                        causal: bool = False, window: int | None = None,
+                        block_q: int | None = None,
+                        block_kv: int | None = None,
+                        logit_scale: float | None = None,
+                        interpret: bool = True):
+    """Returns (out, lse). q: (B,H,Sq,D), k/v: (B,Hkv,Skv,D).
+
+    Explicit ``block_q``/``block_kv`` is the deprecated pre-policy surface
+    (builds an equivalent explicit row-major policy); with neither a policy
+    nor blocks, the autotuner resolves one per shape-bucket.
+    """
+    if policy is None:
+        b, h, sq, d = q.shape
+        skv = k.shape[2]
+        policy = resolve_policy(
+            "attention_fwd", (b, h, sq, skv, d), q.dtype, causal=causal,
+            legacy_blocks=legacy_attention_blocks(block_q, block_kv, sq,
+                                                  skv, d),
+            warn_what="flash_attention_fwd")
+    return _flash_fwd(q, k, v, policy=policy, causal=causal, window=window,
+                      logit_scale=logit_scale, interpret=interpret)

@@ -4,6 +4,11 @@
   * mode="reference"        — jnp softmax attention, jax autodiff (dry-run path)
   * mode="pallas_interpret" — flash fwd/bwd kernels, interpret=True
   * mode="pallas_tpu"       — same kernels lowered for TPU
+
+Policy resolution order (DESIGN.md §5): explicit ``policy``/``bwd_policy`` >
+legacy ``block_q``/``block_kv`` keywords (deprecation shim) > the analytic
+autotuner, which resolves fwd and bwd policies independently (the bwd pass
+has a larger scratch working set and may legally need smaller tiles).
 """
 from __future__ import annotations
 
@@ -12,6 +17,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import autotune
+from repro.core.policy import (KernelPolicy, legacy_attention_blocks,
+                               resolve_policy)
 from .kernel_fwd import flash_attention_fwd
 from .kernel_bwd import flash_attention_bwd
 from .ref import attention_ref, attention_ref_chunked
@@ -22,26 +30,28 @@ _CHUNKED_THRESHOLD = 2048
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
-def _flash(q, k, v, causal, window, block_q, block_kv, logit_scale, interpret):
+def _flash(q, k, v, causal, window, policy, bwd_policy, logit_scale,
+           interpret):
     out, _ = flash_attention_fwd(
-        q, k, v, causal=causal, window=window, block_q=block_q,
-        block_kv=block_kv, logit_scale=logit_scale, interpret=interpret)
+        q, k, v, policy=policy, causal=causal, window=window,
+        logit_scale=logit_scale, interpret=interpret)
     return out
 
 
-def _flash_fwd(q, k, v, causal, window, block_q, block_kv, logit_scale, interpret):
+def _flash_fwd(q, k, v, causal, window, policy, bwd_policy, logit_scale,
+               interpret):
     out, lse = flash_attention_fwd(
-        q, k, v, causal=causal, window=window, block_q=block_q,
-        block_kv=block_kv, logit_scale=logit_scale, interpret=interpret)
+        q, k, v, policy=policy, causal=causal, window=window,
+        logit_scale=logit_scale, interpret=interpret)
     return out, (q, k, v, out, lse)
 
 
-def _flash_bwd(causal, window, block_q, block_kv, logit_scale, interpret,
+def _flash_bwd(causal, window, policy, bwd_policy, logit_scale, interpret,
                res, do):
     q, k, v, out, lse = res
     dq, dk, dv = flash_attention_bwd(
-        q, k, v, out, lse, do, causal=causal, window=window, block_q=block_q,
-        block_kv=block_kv, logit_scale=logit_scale, interpret=interpret)
+        q, k, v, out, lse, do, policy=bwd_policy, causal=causal,
+        window=window, logit_scale=logit_scale, interpret=interpret)
     h, hkv = q.shape[1], k.shape[1]
     if h != hkv:  # GQA: reduce per-query-head dk/dv over the group
         group = h // hkv
@@ -54,8 +64,23 @@ def _flash_bwd(causal, window, block_q, block_kv, logit_scale, interpret,
 _flash.defvjp(_flash_fwd, _flash_bwd)
 
 
+def resolve_attention_policies(q_shape, kv_shape, dtype, *,
+                               causal: bool = False) -> tuple:
+    """(fwd, bwd) tuned policies for a (B,H,Sq,D) x (B,Hkv,Skv,D) launch."""
+    b, h, sq, d = q_shape
+    skv = kv_shape[2]
+    sig = (b, h, sq, skv, d)
+    fwd = autotune.select_policy("attention_fwd", sig, str(dtype),
+                                 causal=causal)
+    bwd = autotune.select_policy("attention_bwd", sig, str(dtype),
+                                 causal=causal)
+    return fwd, bwd
+
+
 def attention(q, k, v, *, causal: bool = False, window: int | None = None,
-              block_q: int = 128, block_kv: int = 128,
+              policy: KernelPolicy | None = None,
+              bwd_policy: KernelPolicy | None = None,
+              block_q: int | None = None, block_kv: int | None = None,
               logit_scale: float | None = None,
               mode: str = "pallas_interpret"):
     """Multi-/grouped-query flash attention. q:(B,H,S,D), k/v:(B,Hkv,S,D)."""
@@ -66,5 +91,25 @@ def attention(q, k, v, *, causal: bool = False, window: int | None = None,
                                          logit_scale=logit_scale)
         return attention_ref(q, k, v, causal=causal, window=window,
                              logit_scale=logit_scale)
-    return _flash(q, k, v, causal, window, block_q, block_kv, logit_scale,
+    if policy is None:
+        b, h, sq, d = q.shape
+        skv = k.shape[2]
+        legacy = legacy_attention_blocks(block_q, block_kv, sq, skv, d)
+        if legacy is not None:
+            # legacy keyword surface -> explicit policy (deprecation shim)
+            sig = (b, h, sq, skv, d)
+            policy = resolve_policy("attention_fwd", sig, q.dtype,
+                                    causal=causal, legacy_blocks=legacy,
+                                    warn_what="attention")
+            bwd_policy = bwd_policy or resolve_policy(
+                "attention_bwd", sig, q.dtype, causal=causal,
+                legacy_blocks=legacy, warn_what="attention")
+        else:
+            policy, auto_bwd = resolve_attention_policies(
+                q.shape, k.shape, q.dtype, causal=causal)
+            bwd_policy = bwd_policy or auto_bwd
+    elif bwd_policy is None:
+        _, bwd_policy = resolve_attention_policies(
+            q.shape, k.shape, q.dtype, causal=causal)
+    return _flash(q, k, v, causal, window, policy, bwd_policy, logit_scale,
                   mode == "pallas_interpret")

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.policy import KernelPolicy, resolve_policy
+
 
 def _lowbias32(x: jax.Array) -> jax.Array:
     """Counter-based 32-bit mix (lowbias32); identical fn lives in ref.py."""
@@ -61,15 +63,12 @@ def _fused_kernel(seed_ref, x_ref, res_ref, w_ref, b_ref, o_ref, oresid_ref,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("dropout_p", "eps", "block_rows", "interpret"),
+    static_argnames=("dropout_p", "eps", "policy", "interpret"),
 )
-def fused_dropout_residual_layernorm(x, residual, weight, bias, seed,
-                                     *, dropout_p: float = 0.0,
-                                     eps: float = 1e-5, block_rows: int = 256,
-                                     interpret: bool = True):
-    """x, residual: (rows, d); weight/bias: (d,). Returns (normed, new_residual)."""
+def _fused(x, residual, weight, bias, seed, *, policy: KernelPolicy,
+           dropout_p: float, eps: float, interpret: bool):
     rows, d = x.shape
-    block_rows = min(block_rows, rows)
+    block_rows = min(policy.block_rows, rows)
     assert rows % block_rows == 0, (rows, block_rows)
     grid = (rows // block_rows,)
     seed_arr = jnp.asarray([seed], jnp.int32) if jnp.ndim(seed) == 0 else seed
@@ -88,3 +87,24 @@ def fused_dropout_residual_layernorm(x, residual, weight, bias, seed,
         interpret=interpret,
     )(seed_arr, x, residual, weight.reshape(1, d), bias.reshape(1, d))
     return out, new_resid
+
+
+def fused_dropout_residual_layernorm(x, residual, weight, bias, seed,
+                                     *, policy: KernelPolicy | None = None,
+                                     dropout_p: float = 0.0,
+                                     eps: float = 1e-5,
+                                     block_rows: int | None = None,
+                                     interpret: bool = True):
+    """x, residual: (rows, d); weight/bias: (d,). Returns (normed, new_residual).
+
+    Explicit ``block_rows`` is the deprecated pre-policy surface; with
+    neither a policy nor a block, the autotuner selects the row block.
+    """
+    rows, d = x.shape
+    if policy is None:
+        legacy = (None if block_rows is None
+                  else dict(block_rows=min(block_rows, rows), d=d))
+        policy = resolve_policy("fused_norm", (rows, d), x.dtype,
+                                legacy_blocks=legacy, warn_what="fused_norm")
+    return _fused(x, residual, weight, bias, seed, policy=policy,
+                  dropout_p=dropout_p, eps=eps, interpret=interpret)

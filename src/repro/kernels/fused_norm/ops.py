@@ -1,24 +1,24 @@
 """Public fused dropout+residual+layernorm op with mode dispatch."""
 from __future__ import annotations
 
+from repro.core.policy import KernelPolicy
 from .kernel import fused_dropout_residual_layernorm
 from .ref import fused_dropout_residual_layernorm_ref
 
 
 def dropout_residual_layernorm(x, residual, weight, bias, seed=0, *,
+                               policy: KernelPolicy | None = None,
                                dropout_p: float = 0.0, eps: float = 1e-5,
                                mode: str = "pallas_interpret"):
     """Fuses prenorm-transformer glue: (dropout(x) + residual) -> LN.
 
-    Returns (normed, new_residual). Shapes: x/residual (rows, d).
+    Returns (normed, new_residual). Shapes: x/residual (rows, d). The row
+    block comes from ``policy`` (or the autotuner when None — the memoized
+    1-D row-block selection, DESIGN.md §5).
     """
     if mode == "reference":
         return fused_dropout_residual_layernorm_ref(
             x, residual, weight, bias, seed, dropout_p=dropout_p, eps=eps)
-    rows = x.shape[0]
-    block_rows = 256
-    while rows % block_rows:
-        block_rows //= 2
     return fused_dropout_residual_layernorm(
-        x, residual, weight, bias, seed, dropout_p=dropout_p, eps=eps,
-        block_rows=block_rows, interpret=(mode == "pallas_interpret"))
+        x, residual, weight, bias, seed, policy=policy, dropout_p=dropout_p,
+        eps=eps, interpret=(mode == "pallas_interpret"))

@@ -2,11 +2,16 @@
 
 Structure mirrors the paper's BF16 GEMM listing (Fig. 21), TPU-adapted:
   * the thread-block output tile        → the per-grid-step output block
-  * the 8-wave ping-pong double buffer  → the Pallas grid pipeline (2 buffers)
+  * the 8-wave ping-pong double buffer  → the Pallas grid pipeline (the
+    policy's ``n_buffers`` deep — PINGPONG=2, INTERLEAVE=3)
   * chiplet_transform_chunked + window  → the same Algorithm 1 permutation,
     applied in the BlockSpec index_maps so traversal order (and with it the
-    DMA revisit pattern) matches the requested SwizzleConfig
+    DMA revisit pattern) matches the policy's SwizzleConfig
   * pinned AGPR accumulators            → pinned fp32 VMEM scratch accumulator
+
+Every grid/BlockSpec dimension here is derived from a
+:class:`~repro.core.policy.KernelPolicy`; the old ``block_m/n/k`` + ``swizzle``
+keywords survive as a deprecation shim that builds an explicit policy.
 """
 from __future__ import annotations
 
@@ -17,8 +22,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.grid_swizzle import SwizzleConfig, ROW_MAJOR
 from repro.core import tiles
+from repro.core.grid_swizzle import SwizzleConfig, ROW_MAJOR
+from repro.core.policy import KernelPolicy, resolve_policy
 
 
 def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int, out_dtype):
@@ -39,30 +45,34 @@ def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int, out_dtype):
         o_ref[...] = acc_ref[...].astype(out_dtype)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("block_m", "block_n", "block_k", "swizzle", "out_dtype",
-                     "interpret"),
-)
-def gemm_pallas(a: jax.Array, b: jax.Array, *, block_m: int = 512,
-                block_n: int = 512, block_k: int = 512,
-                swizzle: SwizzleConfig = ROW_MAJOR,
-                out_dtype=jnp.bfloat16, interpret: bool = True) -> jax.Array:
-    """C = A @ B with grid order given by ``swizzle`` (Algorithm 1)."""
+def _fit_policy(policy: KernelPolicy, m: int, n: int, k: int) -> tuple:
+    """Clamp the policy's blocks to the problem (paper tiles assume the
+    problem tiles the blocks; small problems shrink to a single block)."""
+    bm = min(policy.block_m, m)
+    bn = min(policy.block_n, n)
+    bk = min(policy.block_k, k)
+    if m % bm or n % bn or k % bk:
+        raise ValueError(f"problem {m}x{n}x{k} not divisible by policy blocks "
+                         f"{bm}x{bn}x{bk}")
+    return bm, bn, bk
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("policy", "out_dtype", "interpret"))
+def _gemm_pallas(a: jax.Array, b: jax.Array, *, policy: KernelPolicy,
+                 out_dtype, interpret: bool) -> jax.Array:
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
-    block_m = min(block_m, m)
-    block_n = min(block_n, n)
-    block_k = min(block_k, k)
-    if m % block_m or n % block_n or k % block_k:
-        raise ValueError(f"problem {m}x{n}x{k} not divisible by blocks "
-                         f"{block_m}x{block_n}x{block_k}")
+    block_m, block_n, block_k = _fit_policy(policy, m, n, k)
     num_rows, num_cols, nk = m // block_m, n // block_n, k // block_k
+    swizzle = policy.swizzle
 
+    # Tab. 2 feasibility rule at the policy's pipeline depth.
     tiles.check_vmem_budget(
         [((block_m, block_k), a.dtype), ((block_k, block_n), b.dtype)],
-        n_buffers=2, scratch_bytes=block_m * block_n * 4, what="gemm")
+        n_buffers=policy.n_buffers,
+        scratch_bytes=block_m * block_n * 4, what="gemm")
 
     def row_col(i):
         return swizzle.remap(i, num_rows, num_cols)
@@ -84,13 +94,45 @@ def gemm_pallas(a: jax.Array, b: jax.Array, *, block_m: int = 512,
         kernel,
         grid=(num_rows * num_cols, nk),
         in_specs=[
-            pl.BlockSpec((block_m, block_k), a_map),
-            pl.BlockSpec((block_k, block_n), b_map),
+            tiles.block_spec((block_m, block_k), a_map, a.dtype,
+                             allow_ragged_minor=tiles.shape_ragged(
+                                 m, k, a.dtype)),
+            tiles.block_spec((block_k, block_n), b_map, b.dtype,
+                             allow_ragged_minor=tiles.shape_ragged(
+                                 k, n, b.dtype)),
         ],
-        out_specs=pl.BlockSpec((block_m, block_n), o_map),
+        out_specs=tiles.block_spec((block_m, block_n), o_map, out_dtype,
+                                   allow_ragged_minor=tiles.shape_ragged(
+                                       m, n, out_dtype)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tiles.compiler_params(
             dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
     )(a, b)
+
+
+def gemm_pallas(a: jax.Array, b: jax.Array, *,
+                policy: KernelPolicy | None = None,
+                block_m: int | None = None, block_n: int | None = None,
+                block_k: int | None = None,
+                swizzle: SwizzleConfig = ROW_MAJOR,
+                out_dtype=jnp.bfloat16, interpret: bool = True) -> jax.Array:
+    """C = A @ B with tiling + grid order given by ``policy`` (Algorithm 1).
+
+    Explicit ``block_*``/``swizzle`` is the deprecated pre-policy surface
+    (builds an equivalent explicit policy); with neither a policy nor blocks,
+    the autotuner resolves one per shape-bucket.
+    """
+    if policy is None:
+        m, k = a.shape
+        _, n = b.shape
+        legacy = None
+        if block_m is not None or block_n is not None or block_k is not None:
+            legacy = dict(block_m=min(block_m or 512, m),
+                          block_n=min(block_n or 512, n),
+                          block_k=min(block_k or 512, k), swizzle=swizzle)
+        policy = resolve_policy("gemm", (m, n, k), a.dtype,
+                                legacy_blocks=legacy, warn_what="gemm_pallas")
+    return _gemm_pallas(a, b, policy=policy, out_dtype=out_dtype,
+                        interpret=interpret)

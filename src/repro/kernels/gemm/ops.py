@@ -1,16 +1,22 @@
-"""Public GEMM op: schedule/swizzle-aware dispatch with a reference path.
+"""Public GEMM op: policy-aware dispatch with a reference path.
 
 ``mode``:
   * "reference"        — jnp.dot (used by the 512-device dry-run; XLA fuses)
   * "pallas_interpret" — the Pallas kernel, interpret=True (CPU validation)
   * "pallas_tpu"       — the Pallas kernel lowered for real TPUs
+
+Policy resolution order (DESIGN.md §5): explicit ``policy`` > legacy
+``schedule``/``swizzle`` keywords (deprecation shim) > the analytic autotuner
+(``autotune.select_policy``, memoized per shape-bucket).
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core import autotune
 from repro.core.grid_swizzle import SwizzleConfig, ROW_MAJOR, best_window
-from repro.core.schedule import Schedule, PINGPONG
+from repro.core.policy import KernelPolicy, make_policy
+from repro.core.schedule import Schedule
 from .kernel import gemm_pallas
 from .ref import gemm_ref
 
@@ -26,24 +32,48 @@ def _fit_block(dim: int, want: int, align: int) -> int:
     raise ValueError(f"dim {dim} not divisible by any {align}-aligned block")
 
 
-def gemm(a, b, *, schedule: Schedule = PINGPONG,
+def _policy_from_schedule(schedule: Schedule, swizzle, m, n, k,
+                          dtype) -> KernelPolicy:
+    """Deprecation shim: fit a legacy Schedule's blocks to the problem and
+    wrap them (plus the requested/auto swizzle) in an explicit policy."""
+    import warnings
+    warnings.warn(
+        "gemm: the schedule=/swizzle= keywords are deprecated; pass "
+        "policy=KernelPolicy(...) (or neither, to use the autotuner)",
+        DeprecationWarning, stacklevel=3)
+    bm = _fit_block(m, schedule.block_m, 128)
+    bn = _fit_block(n, schedule.block_n, 128)
+    bk = _fit_block(k, schedule.block_k, 128)
+    if swizzle == "auto":
+        num_rows, num_cols = max(1, m // bm), max(1, n // bn)
+        itemsize = jnp.dtype(dtype).itemsize
+        swizzle = best_window(num_rows, num_cols, bm * k * itemsize,
+                              k * bn * itemsize,
+                              candidates=(1, 2, 4, 8, num_rows))
+    elif swizzle is None:
+        swizzle = ROW_MAJOR
+    return make_policy("gemm", block_m=bm, block_n=bn, block_k=bk,
+                       n_buffers=schedule.n_buffers, swizzle=swizzle,
+                       name=f"shim_{schedule.name}")
+
+
+def gemm(a, b, *, policy: KernelPolicy | None = None,
+         schedule: Schedule | None = None,
          swizzle: SwizzleConfig | str | None = "auto",
          out_dtype=jnp.bfloat16, mode: str = "pallas_interpret"):
     if mode == "reference":
         return gemm_ref(a, b, out_dtype)
     m, k = a.shape
     _, n = b.shape
-    bm = _fit_block(m, schedule.block_m, 128)
-    bn = _fit_block(n, schedule.block_n, 128)
-    bk = _fit_block(k, schedule.block_k, 128)
-    if swizzle == "auto":
-        num_rows, num_cols = max(1, m // bm), max(1, n // bn)
-        swizzle = best_window(num_rows, num_cols,
-                              bm * k * a.dtype.itemsize,
-                              k * bn * b.dtype.itemsize,
-                              candidates=(1, 2, 4, 8, num_rows))
-    elif swizzle is None:
-        swizzle = ROW_MAJOR
-    return gemm_pallas(a, b, block_m=bm, block_n=bn, block_k=bk,
-                       swizzle=swizzle, out_dtype=out_dtype,
+    if policy is None:
+        if schedule is not None or isinstance(swizzle, SwizzleConfig) or \
+                swizzle is None:
+            # legacy keyword surface -> explicit policy (deprecation shim)
+            policy = _policy_from_schedule(
+                schedule if schedule is not None else
+                Schedule("pingpong", 2, 512, 512, 512),
+                swizzle, m, n, k, a.dtype)
+        else:
+            policy = autotune.select_policy("gemm", (m, n, k), str(a.dtype))
+    return gemm_pallas(a, b, policy=policy, out_dtype=out_dtype,
                        interpret=(mode == "pallas_interpret"))

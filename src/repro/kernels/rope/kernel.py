@@ -8,6 +8,9 @@ keeping the tables resident.
 sin/cos are passed *duplicated across halves* (shape (S, D)) so the kernel's
 minor dim stays lane-aligned (128) — the TPU analogue of the paper's "pick
 layouts that keep every access pattern conflict-free" rule.
+
+The sequence block comes from a 1-D :class:`~repro.core.policy.KernelPolicy`
+(``rope`` kind; block_m = block_s, block_k = head_dim).
 """
 from __future__ import annotations
 
@@ -16,6 +19,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.core import tiles
+from repro.core.policy import KernelPolicy, resolve_policy
 
 
 def _rope_kernel(x_ref, sin_ref, cos_ref, o_ref):
@@ -29,16 +35,21 @@ def _rope_kernel(x_ref, sin_ref, cos_ref, o_ref):
     o_ref[0, 0] = (x * cos + rotated * sin).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
-def rope_pallas(x, sin, cos, *, block_s: int = 256, interpret: bool = True):
-    """x: (B, H, S, D); sin/cos: (S, D) duplicated halves. Returns rotated x."""
+@functools.partial(jax.jit, static_argnames=("policy", "interpret"))
+def _rope(x, sin, cos, *, policy: KernelPolicy, interpret: bool):
     b, h, s, d = x.shape
     assert sin.shape == (s, d) and cos.shape == (s, d), (sin.shape, x.shape)
-    block_s = min(block_s, s)
+    block_s = min(policy.block_rows, s)
     assert s % block_s == 0
 
-    x_spec = pl.BlockSpec((1, 1, block_s, d), lambda b_, h_, i: (b_, h_, i, 0))
-    t_spec = pl.BlockSpec((block_s, d), lambda b_, h_, i: (i, 0))
+    x_spec = tiles.block_spec((1, 1, block_s, d),
+                              lambda b_, h_, i: (b_, h_, i, 0), x.dtype,
+                              allow_ragged_minor=tiles.shape_ragged(
+                                  s, d, x.dtype))
+    t_spec = tiles.block_spec((block_s, d), lambda b_, h_, i: (i, 0),
+                              sin.dtype,
+                              allow_ragged_minor=tiles.shape_ragged(
+                                  s, d, sin.dtype))
     return pl.pallas_call(
         _rope_kernel,
         grid=(b, h, s // block_s),
@@ -47,3 +58,19 @@ def rope_pallas(x, sin, cos, *, block_s: int = 256, interpret: bool = True):
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
         interpret=interpret,
     )(x, sin, cos)
+
+
+def rope_pallas(x, sin, cos, *, policy: KernelPolicy | None = None,
+                block_s: int | None = None, interpret: bool = True):
+    """x: (B, H, S, D); sin/cos: (S, D) duplicated halves. Returns rotated x.
+
+    Explicit ``block_s`` is the deprecated pre-policy surface; with neither
+    a policy nor a block, the autotuner selects the sequence block.
+    """
+    if policy is None:
+        b, h, s, d = x.shape
+        legacy = (None if block_s is None
+                  else dict(block_s=min(block_s, s), d=d))
+        policy = resolve_policy("rope", (b, h, s, d), x.dtype,
+                                legacy_blocks=legacy, warn_what="rope_pallas")
+    return _rope(x, sin, cos, policy=policy, interpret=interpret)

@@ -1,7 +1,8 @@
 """Public RoPE op with mode dispatch + custom VJP.
 
 RoPE is linear in x and the rotation is orthogonal, so the VJP is simply the
-rotation by −θ — the same kernel with negated sin.
+rotation by −θ — the same kernel with negated sin (run under the same policy:
+the cotangent has the forward's shape, so the forward's tuned block applies).
 """
 from __future__ import annotations
 
@@ -9,37 +10,31 @@ import functools
 
 import jax
 
+from repro.core.policy import KernelPolicy
 from .kernel import rope_pallas
 from .ref import rope_ref, rope_tables  # noqa: F401
 
 
-def _run(x, sin, cos, interpret: bool):
-    s = x.shape[2]
-    block_s = 256
-    while s % block_s:
-        block_s //= 2
-    return rope_pallas(x, sin, cos, block_s=block_s, interpret=interpret)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _rope(x, sin, cos, policy, interpret):
+    return rope_pallas(x, sin, cos, policy=policy, interpret=interpret)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
-def _rope(x, sin, cos, interpret):
-    return _run(x, sin, cos, interpret)
+def _rope_fwd(x, sin, cos, policy, interpret):
+    return rope_pallas(x, sin, cos, policy=policy, interpret=interpret), (sin, cos)
 
 
-def _rope_fwd(x, sin, cos, interpret):
-    return _run(x, sin, cos, interpret), (sin, cos)
-
-
-def _rope_bwd(interpret, res, g):
+def _rope_bwd(policy, interpret, res, g):
     sin, cos = res
-    return _run(g, -sin, cos, interpret), None, None
+    return rope_pallas(g, -sin, cos, policy=policy, interpret=interpret), None, None
 
 
 _rope.defvjp(_rope_fwd, _rope_bwd)
 
 
-def rope(x, sin, cos, *, mode: str = "pallas_interpret"):
+def rope(x, sin, cos, *, policy: KernelPolicy | None = None,
+         mode: str = "pallas_interpret"):
     """Apply rotary embedding. x: (B, H, S, D); sin/cos: (S, D)."""
     if mode == "reference":
         return rope_ref(x, sin, cos)
-    return _rope(x, sin, cos, mode == "pallas_interpret")
+    return _rope(x, sin, cos, policy, mode == "pallas_interpret")

@@ -186,6 +186,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     dt = time.time() - t0
     model_flops = rf.model_flops_per_step(cfg, shape)
     hlo_flops_total = roof.flops_per_chip * n_chips
+    # the kernel policies this cell resolves to (autotuner choice per bucket)
+    policies = rf.policy_cell_report(cfg, shape)
     record.update(
         status="ok", n_chips=n_chips, compile_s=round(dt, 1),
         memory=mem, roofline=roof.as_dict(),
@@ -193,6 +195,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         useful_flops_ratio=(model_flops / hlo_flops_total
                             if hlo_flops_total else None),
         params=cfg.param_count(), active_params=cfg.active_param_count(),
+        policies=policies,
     )
     if verbose:
         print(f"[dryrun] {arch} × {shape_name} × {mesh_kind}: "
@@ -206,6 +209,10 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
               f"bytes/chip={roof.hbm_bytes_per_chip:.3e} "
               f"coll_bytes/chip={roof.collective_bytes_per_chip:.3e} "
               f"by_kind={ {k: f'{v:.2e}' for k, v in roof.by_kind.items()} }")
+        pol_str = "; ".join(
+            f"{op}: {p['schedule']}{tuple(p['blocks'])} {p['swizzle']}"
+            for op, p in policies.items())
+        print(f"  policies: {pol_str or 'none (attention-free, no norm)'}")
     return record
 
 

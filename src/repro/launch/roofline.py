@@ -117,6 +117,47 @@ def memory_dict(compiled) -> dict:
     return out
 
 
+def policy_cell_report(cfg, shape) -> dict:
+    """The KernelPolicy each kernel family resolves to for an (arch, shape)
+    cell, with the policy's own modeled roofline position. This is what the
+    dry-run records next to the HLO-derived terms: the HLO terms say where
+    the *model* sits, these say how each *kernel* plans to get there."""
+    from repro.core import autotune
+
+    policies = autotune.policies_for_model(
+        cfg, batch=shape.global_batch, seq_len=shape.seq_len)
+    dtype = getattr(cfg, "compute_dtype", "bfloat16")
+    report = {}
+    for op, pol in sorted(policies.items()):
+        entry = pol.describe()
+        sig = _policy_signature(cfg, shape, op, dtype)
+        if sig is not None:
+            score = autotune.score_policy(sig, pol)
+            entry["modeled_time_s"] = score.time_s
+            entry["modeled_dma_bytes"] = score.dma_bytes
+            entry.update(dict(score.detail))
+        report[op] = entry
+    return report
+
+
+def _policy_signature(cfg, shape, op, dtype):
+    from repro.core.autotune import OpSignature
+
+    b, s = shape.global_batch, shape.seq_len
+    h = getattr(cfg, "num_heads", 0)
+    d = getattr(cfg, "head_dim", 0) or 0
+    try:
+        if op in ("attention_fwd", "attention_bwd"):
+            return OpSignature(op, (b, h, s, s, d), dtype, causal=True)
+        if op == "rope":
+            return OpSignature(op, (b, h, s, d), dtype)
+        if op == "fused_norm":
+            return OpSignature(op, (b * s, cfg.d_model), dtype)
+    except ValueError:
+        return None
+    return None
+
+
 def model_flops_per_step(cfg, shape) -> float:
     """6·N·D (dense) / 6·N_active·D (MoE) per optimizer step; decode counts
     one token per sequence; prefill counts forward-only (2·N·D)."""

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import autotune
 from . import lm as _lm
 from . import encdec as _ed
 from . import vlm as _vlm
@@ -30,9 +31,30 @@ class Model:
     init_cache: Callable      # (batch, max_len) -> cache
     prefill: Callable         # (params, batch, cache) -> (cache, logits)
     decode_step: Callable     # (params, token, cache, pos) -> (cache, logits)
+    # {op: KernelPolicy} resolved at build time for the config's default
+    # bucket — inspectable summary of what the kernels will do; exact
+    # (batch, seq) buckets re-resolve via the memoized autotuner cache
+    # (serve/engine and train/trainer pin those).
+    default_policies: dict = dataclasses.field(default_factory=dict)
 
     def init(self, rng) -> dict:
         return init_params(self.defs, rng)
+
+    # ---- kernel policies -----------------------------------------------
+    def resolve_policies(self, shape: Optional[ShapeConfig] = None,
+                         *, batch: int = 1,
+                         seq_len: Optional[int] = None) -> dict:
+        """Resolve (and warm the autotuner cache with) the KernelPolicies
+        this model's kernels will use for a (batch, seq) bucket. Called at
+        model-build time with the config's max shape; callers with a known
+        bucket (dryrun cells, serve buckets, trainer) re-resolve exactly.
+        Returns {op_kind: KernelPolicy}."""
+        if shape is not None:
+            batch, seq_len = shape.global_batch, shape.seq_len
+        seq_len = seq_len if seq_len is not None else \
+            min(self.cfg.max_seq_len, 4096)
+        return autotune.policies_for_model(self.cfg, batch=batch,
+                                           seq_len=seq_len)
 
     def abstract(self) -> dict:
         return abstract_params(self.defs)
@@ -85,6 +107,19 @@ def make_batch(cfg: ModelConfig, shape: ShapeConfig, *, abstract: bool,
 
 def build_model(cfg: ModelConfig, *, mode: Optional[str] = None, mesh=None,
                 data_axes=("data",)) -> Model:
+    """Build the model. For kernel modes, also resolve the config's default
+    bucket into :attr:`Model.default_policies` — an inspectable summary of
+    the tiling strategy; launch-time callers (serve buckets, trainer steps)
+    re-resolve their exact (batch, seq) buckets through the same memoized
+    autotuner, so this is a preview, not the binding choice."""
+    model = _build_model(cfg, mode=mode, mesh=mesh, data_axes=data_axes)
+    if mode not in (None, "reference"):
+        model.default_policies = model.resolve_policies()
+    return model
+
+
+def _build_model(cfg: ModelConfig, *, mode: Optional[str] = None, mesh=None,
+                 data_axes=("data",)) -> Model:
     mode = mode if mode is not None else "reference"
     kw = dict(mode=mode, mesh=mesh, data_axes=data_axes)
 

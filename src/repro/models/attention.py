@@ -87,8 +87,14 @@ def project_qkv(cfg, p, x, kv_input=None):
 def attention_layer(cfg, p, x, *, causal: bool = True,
                     window: int | None = None, kv_input=None,
                     positions=None, mode: str = "reference",
-                    use_rope: bool = True):
-    """Full-sequence attention (train/prefill). x: (B, S, D)."""
+                    use_rope: bool = True, policy=None):
+    """Full-sequence attention (train/prefill). x: (B, S, D).
+
+    Block sizes are no longer hard-coded here: with ``policy=None`` the op
+    resolves a KernelPolicy from the analytic autotuner per shape-bucket
+    (memoized), so model-build-time resolution (models/api.py) and the
+    trace-time call agree (DESIGN.md §5).
+    """
     s = x.shape[1]
     q, k, v = project_qkv(cfg, p, x, kv_input)
     if use_rope and kv_input is None:
@@ -96,8 +102,7 @@ def attention_layer(cfg, p, x, *, causal: bool = True,
             positions = jnp.arange(s)
         q, k = _apply_rope(cfg, q, k, positions, mode)
     out = attention_op(q, k, v, causal=causal, window=window,
-                       block_q=min(128, q.shape[2]),
-                       block_kv=min(128, k.shape[2]), mode=mode)
+                       policy=policy, mode=mode)
     return _merge_heads(out) @ p["wo"]
 
 

@@ -142,14 +142,12 @@ def encdec_prefill(cfg, params, batch, cache, *, mode="reference"):
         p, self_c, cross_c = xs
         hn = apply_norm(cfg, h, p, "ln1")
         q, k, v = project_qkv(cfg, p["attn"], hn)
-        o = attention_op(q, k, v, causal=True, block_q=min(128, s),
-                         block_kv=min(128, s), mode=mode)
+        o = attention_op(q, k, v, causal=True, mode=mode)
         self_c = prefill_attn_cache(cfg, self_c, k, v, s, None)
         h = h + _merge_heads(o) @ p["attn"]["wo"]
         hn = apply_norm(cfg, h, p, "lnx")
         qx, kx, vx = project_qkv(cfg, p["xattn"], hn, kv_input=enc_out)
-        ox = attention_op(qx, kx, vx, causal=False, block_q=min(128, s),
-                          block_kv=min(128, enc_out.shape[1]), mode=mode)
+        ox = attention_op(qx, kx, vx, causal=False, mode=mode)
         cross_c = {"k": kx, "v": vx}
         h = h + _merge_heads(ox) @ p["xattn"]["wo"]
         h = h + mlp_forward(cfg, p["mlp"], apply_norm(cfg, h, p, "ln2"))

@@ -311,8 +311,7 @@ def block_prefill(cfg, kind, p, x, cache, *, positions, mode="reference",
         h = apply_norm(cfg, x, p, "ln1")
         q, k, v = project_qkv(cfg, p["attn"], h)
         q, k = _apply_rope(cfg, q, k, positions, mode)
-        o = attention_op(q, k, v, causal=True, window=window,
-                         block_q=min(128, s), block_kv=min(128, s), mode=mode)
+        o = attention_op(q, k, v, causal=True, window=window, mode=mode)
         cache = prefill_attn_cache(cfg, cache, k, v, s, window)
         x = x + cfg.residual_scale * (_merge_heads(o) @ p["attn"]["wo"])
         h = apply_norm(cfg, x, p, "ln2")

@@ -2,18 +2,25 @@
 
 The engine serves fixed-shape batches (the production pattern for TPU
 serving: one compiled prefill and one compiled decode_step per bucket).
+Each (batch, prompt_len) bucket also pins the KernelPolicy set its compiled
+functions resolve to — the autotuner's per-shape-bucket memoization means
+the pinned policy and the policy the kernels trace with are the same object
+(DESIGN.md §5), so the report in :attr:`Engine.bucket_policies` is exact.
+
 ``RequestQueue`` adds a continuous-batching-lite layer: requests are bucketed
 by padded prompt length and flushed as full batches.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
+import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core import autotune
 
 
 @dataclasses.dataclass
@@ -30,12 +37,22 @@ class Engine:
         self.params = params
         self.max_len = max_len
         self.mesh = mesh
+        # (batch, prompt_len) bucket -> {op: KernelPolicy} pinned at first use
+        self.bucket_policies: dict[tuple, dict] = {}
         self._decode = jax.jit(
             lambda params, tok, cache, pos: model.decode_step(
                 params, tok, cache, pos),
             donate_argnums=(2,) if donate_cache else ())
         self._prefill = jax.jit(
             lambda params, batch, cache: model.prefill(params, batch, cache))
+
+    def _pin_bucket(self, batch: int, prompt_len: int) -> dict:
+        """Resolve + memoize the kernel policies for a compiled bucket."""
+        key = (batch, prompt_len)
+        if key not in self.bucket_policies:
+            self.bucket_policies[key] = autotune.policies_for_model(
+                self.model.cfg, batch=batch, seq_len=prompt_len)
+        return self.bucket_policies[key]
 
     def _sample(self, logits, temperature: float, rng):
         if temperature == 0.0:
@@ -48,6 +65,7 @@ class Engine:
         """prompts: (B, S) int32. Greedy (T=0) or temperature sampling."""
         prompts = jnp.asarray(prompts, jnp.int32)
         b, s = prompts.shape
+        self._pin_bucket(b, s)
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         cache = self.model.init_cache(b, self.max_len)
         if self.model.cfg.family == "encdec":
@@ -96,11 +114,20 @@ class RequestQueue:
         self.pending[self._bucket(len(req.prompt))].append(req)
 
     def flush(self, *, force: bool = False) -> int:
+        """Serve full (or, with ``force``, padded partial) batches.
+
+        Returns the number of *real* requests served — padding duplicates of
+        the last request (which fill out a forced partial batch to the
+        compiled batch size) are not counted. A resubmitted uid overwrites
+        its previous result with a warning rather than being silently
+        dropped.
+        """
         served = 0
         for bucket, reqs in self.pending.items():
             while len(reqs) >= self.batch_size or (force and reqs):
                 group = reqs[: self.batch_size]
                 del reqs[: self.batch_size]
+                n_real = len(group)
                 while len(group) < self.batch_size:   # pad the last batch
                     group.append(group[-1])
                 prompts = np.stack([
@@ -108,8 +135,11 @@ class RequestQueue:
                     for r in group])
                 max_new = max(r.max_new_tokens for r in group)
                 result = self.engine.generate(prompts, max_new)
-                for r, row in zip(group, result.tokens):
-                    self.results.setdefault(
-                        r.uid, row[bucket - len(r.prompt):])
-                served += len(group)
+                for r, row in zip(group[:n_real], result.tokens[:n_real]):
+                    if r.uid in self.results:
+                        warnings.warn(
+                            f"RequestQueue: duplicate uid {r.uid} — "
+                            "overwriting previous result", stacklevel=2)
+                    self.results[r.uid] = row[bucket - len(r.prompt):]
+                served += n_real
         return served

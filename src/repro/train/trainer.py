@@ -17,6 +17,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import autotune
 from repro.optim import AdamWConfig, adamw_update, ef_compress
 from repro.distributed.sharding import batch_specs
 from . import checkpoint as ckpt_lib
@@ -126,6 +127,31 @@ class TrainLoopResult:
     losses: list
     restarts: int
     straggler_events: list
+    # {(batch, seq): {op: KernelPolicy}} — one entry per compiled bucket
+    policies: dict = dataclasses.field(default_factory=dict)
+
+
+def pin_bucket_policies(model, batch: dict, pinned: dict,
+                        log: Callable = print) -> dict:
+    """Resolve + pin the kernel policies for this batch's compiled bucket.
+
+    XLA compiles one step function per input shape; the autotuner memoizes
+    one policy set per shape-bucket — pinning here makes the pairing
+    explicit and reproducible in the training log (DESIGN.md §5).
+    """
+    inputs = batch.get("inputs") if isinstance(batch, dict) else batch
+    if inputs is None or getattr(inputs, "ndim", 0) < 2:
+        return pinned
+    key = (int(inputs.shape[0]), int(inputs.shape[1]))
+    if key not in pinned:
+        pols = autotune.policies_for_model(model.cfg, batch=key[0],
+                                           seq_len=key[1])
+        pinned[key] = pols
+        desc = "; ".join(f"{op}={p.schedule.name}{tuple(p.describe()['blocks'])}"
+                         for op, p in sorted(pols.items()))
+        log(f"[trainer] bucket {key}: pinned kernel policies "
+            f"{desc or '(none)'}")
+    return pinned
 
 
 def train_loop(model, data_iter, num_steps: int, opt_cfg: AdamWConfig, *,
@@ -167,10 +193,12 @@ def train_loop(model, data_iter, num_steps: int, opt_cfg: AdamWConfig, *,
 
     losses: list = []
     restarts = 0
+    pinned_policies: dict = {}
     step = int(jax.device_get(state["step"]))
     while step < num_steps:
         try:
             batch = next(data_iter)
+            pin_bucket_policies(model, batch, pinned_policies, log=log)
             t0 = time.perf_counter()
             if failure_injector is not None:
                 failure_injector.maybe_fail(step)
@@ -216,4 +244,5 @@ def train_loop(model, data_iter, num_steps: int, opt_cfg: AdamWConfig, *,
         checkpointer.wait()
     return TrainLoopResult(state, losses,
                            restarts,
-                           watchdog.events if watchdog else [])
+                           watchdog.events if watchdog else [],
+                           policies=pinned_policies)

@@ -1,7 +1,11 @@
-"""Unit + property tests for the core tile framework."""
+"""Unit + property tests for the core tile framework.
+
+Property tests use hypothesis when installed (requirements-dev.txt) and fall
+back to a fixed deterministic case table otherwise (_hypothesis_compat).
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import tiles
 from repro.core.grid_swizzle import (SwizzleConfig, ROW_MAJOR, dma_bytes,

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.data.pipeline import DataConfig, DataIterator, batch_at, batch_rows
 from repro.optim import (AdamWConfig, adamw_init, adamw_update,
