@@ -9,9 +9,55 @@ numbers are the deliverable per the roofline methodology.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
+
+# When non-None, emit() also appends structured rows here (benchmarks.run
+# uses this to write machine-readable BENCH_<key>.json artifacts next to
+# the CSV stream, so the perf trajectory is diffable across commits).
+_CAPTURE: list | None = None
+
+
+def begin_capture() -> None:
+    global _CAPTURE
+    _CAPTURE = []
+
+
+def end_capture() -> list:
+    global _CAPTURE
+    rows, _CAPTURE = _CAPTURE or [], None
+    return rows
+
+
+def parse_derived(derived: str) -> dict:
+    """'k=v;k2=v2' -> {k: float-or-str}; bare tokens keep their string."""
+    out = {}
+    for part in str(derived).split(";"):
+        part = part.strip()
+        if not part:
+            continue
+        if "=" in part:
+            key, val = part.split("=", 1)
+            try:
+                out[key] = float(val.rstrip("x%"))
+            except ValueError:
+                out[key] = val
+        else:
+            out[part] = True
+    return out
+
+
+def write_bench_json(key: str, rows: list, out_dir: str | None = None) -> str:
+    """Write BENCH_<key>.json (dir from $BENCH_OUT, default cwd)."""
+    out_dir = out_dir or os.environ.get("BENCH_OUT", ".")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{key}.json")
+    with open(path, "w") as f:
+        json.dump({"bench": key, "rows": rows}, f, indent=1, sort_keys=True)
+    return path
 
 
 def time_fn(fn, *args, warmup: int = 3, iters: int = 10) -> float:
@@ -29,6 +75,10 @@ def time_fn(fn, *args, warmup: int = 3, iters: int = 10) -> float:
 
 def emit(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.1f},{derived}")
+    if _CAPTURE is not None:
+        _CAPTURE.append({"name": name, "us_per_call": round(us, 1),
+                         "derived": str(derived),
+                         "derived_parsed": parse_derived(derived)})
 
 
 def gemm_candidate_sweep(shape: tuple):

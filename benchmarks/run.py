@@ -3,6 +3,11 @@
 Prints ``name,us_per_call,derived`` CSV. us_per_call is the measured XLA-CPU
 reference path; derived carries the modeled TPU-v5e reproduction numbers
 (this container has no TPU — see DESIGN.md §7 / EXPERIMENTS.md §Roofline).
+
+Each bench also writes a machine-readable ``BENCH_<key>.json`` (rows +
+parsed derived fields; directory from ``$BENCH_OUT``, default cwd) so the
+perf trajectory can be tracked across commits — CI uploads them as
+artifacts.
 """
 from __future__ import annotations
 
@@ -10,28 +15,36 @@ import sys
 import traceback
 
 from . import (bench_gemm, bench_attention_fwd, bench_attention_bwd,
-               bench_memory_bound, bench_schedules, bench_grid_swizzle)
+               bench_decode, bench_memory_bound, bench_schedules,
+               bench_grid_swizzle)
+from .common import begin_capture, end_capture, write_bench_json
 
+# (display name, json key, entry point)
 BENCHES = [
-    ("Fig6_gemm", bench_gemm.main),
-    ("Fig7_attention_fwd", bench_attention_fwd.main),
-    ("Fig8_attention_bwd", bench_attention_bwd.main),
-    ("Fig9_memory_bound", bench_memory_bound.main),
-    ("Tab2_Tab3_schedules", bench_schedules.main),
-    ("Tab4_grid_swizzle", bench_grid_swizzle.main),
+    ("Fig6_gemm", "gemm", bench_gemm.main),
+    ("Fig7_attention_fwd", "attention_fwd", bench_attention_fwd.main),
+    ("Fig8_attention_bwd", "attention_bwd", bench_attention_bwd.main),
+    ("Fig9_memory_bound", "memory_bound", bench_memory_bound.main),
+    ("Fig9b_decode", "decode", bench_decode.main),
+    ("Tab2_Tab3_schedules", "schedules", bench_schedules.main),
+    ("Tab4_grid_swizzle", "grid_swizzle", bench_grid_swizzle.main),
 ]
 
 
 def main() -> None:
     print("name,us_per_call,derived")
     failed = []
-    for name, fn in BENCHES:
+    for name, key, fn in BENCHES:
         print(f"# --- {name} ---")
+        begin_capture()
         try:
             fn()
         except Exception:
             failed.append(name)
             traceback.print_exc()
+        finally:
+            path = write_bench_json(key, end_capture())
+            print(f"# wrote {path}")
     if failed:
         print(f"# FAILED: {failed}", file=sys.stderr)
         raise SystemExit(1)

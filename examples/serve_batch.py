@@ -1,5 +1,6 @@
-"""Batched serving demo: prefill + decode with the request queue over a
-sliding-window (Mixtral-family) model — exercises the ring-buffer KV cache.
+"""Continuous-batching demo: paged KV cache + split-KV decode over a
+sliding-window (Mixtral-family) model — mixed-length prompts join free
+batch slots as others retire, sharing one compiled decode step.
 
   PYTHONPATH=src python examples/serve_batch.py
 """
@@ -8,22 +9,25 @@ import jax
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serve import Engine, Request, RequestQueue
+from repro.serve import PagedEngine, Request
 
 cfg = get_config("mixtral-8x7b", smoke=True)
 model = build_model(cfg, mode="reference")
 params = model.init(jax.random.PRNGKey(0))
 
-engine = Engine(model, params, max_len=128)
-queue = RequestQueue(engine, batch_size=4, buckets=(16, 48))
+engine = PagedEngine(model, params, batch_slots=4, page_size=8,
+                     max_pages_per_seq=8)
 
 rng = np.random.default_rng(0)
 for uid in range(10):
     plen = int(rng.integers(8, 48))
-    queue.submit(Request(uid, rng.integers(0, cfg.vocab_size, plen)
-                         .astype(np.int32), max_new_tokens=12))
+    engine.submit(Request(uid, rng.integers(0, cfg.vocab_size, plen)
+                          .astype(np.int32), max_new_tokens=12))
 
-served = queue.flush(force=True)
-print(f"served {served} requests; sample completions:")
-for uid in sorted(queue.results)[:5]:
-    print(f"  req {uid}: ...{queue.results[uid][-12:]}")
+results = engine.run()
+print(f"served {len(results)} requests in {engine.steps} decode steps "
+      f"over {engine.batch_slots} slots; sample completions:")
+for uid in sorted(results)[:5]:
+    print(f"  req {uid}: ...{results[uid][-12:]}")
+print("pinned decode/prefill buckets:",
+      [k for k in engine.bucket_policies])

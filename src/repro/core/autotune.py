@@ -47,11 +47,12 @@ class OpSignature:
     """What the autotuner needs to know about one kernel launch.
 
     ``shape`` per op kind:
-      gemm           (m, n, k)
-      attention_fwd  (batch, heads, seq_q, seq_kv, head_dim)
-      attention_bwd  (batch, heads, seq_q, seq_kv, head_dim)
-      fused_norm     (rows, d)
-      rope           (batch, heads, seq, head_dim)
+      gemm             (m, n, k)
+      attention_fwd    (batch, heads, seq_q, seq_kv, head_dim)
+      attention_bwd    (batch, heads, seq_q, seq_kv, head_dim)
+      attention_decode (batch, kv_heads, group, kv_len, head_dim)
+      fused_norm       (rows, d)
+      rope             (batch, heads, seq, head_dim)
     """
 
     op: str
@@ -73,6 +74,12 @@ class OpSignature:
         if self.op in ("attention_fwd", "attention_bwd"):
             b, h, sq, skv, d = self.shape
             shape = (pow2(b), pow2(h), sq, skv, d)
+        elif self.op == "attention_decode":
+            # kv_len stays exact (the split size must divide it); batch and
+            # kv_heads are batch-like; group is tiny and kept exact (it is
+            # the q-tile row count).
+            b, hkv, g, skv, d = self.shape
+            shape = (pow2(b), pow2(hkv), g, skv, d)
         elif self.op == "rope":
             b, h, s, d = self.shape
             shape = (pow2(b), pow2(h), s, d)
@@ -157,6 +164,16 @@ def candidate_policies(sig: OpSignature) -> list:
                 if pol.is_legal():
                     out.append(pol)
 
+    elif sig.op == "attention_decode":
+        b, hkv, g, skv, d = sig.shape
+        # block_n is the KV-split size: one split per grid step. The q tile
+        # holds the packed GQA group (block_m = group; tiny, Pallas pads it).
+        for bkv in _block_candidates(skv, _sublane(dtype), 2048):
+            pol = make_policy("attention_decode", block_m=g, block_n=bkv,
+                              block_k=d, in_dtype=dtype, name="auto_d")
+            if pol.is_legal():
+                out.append(pol)
+
     elif sig.op == "fused_norm":
         rows, d = sig.shape
         for br in _block_candidates(rows, _sublane(dtype), 1024):
@@ -228,6 +245,17 @@ def score_policy(sig: OpSignature, policy: KernelPolicy,
             traffic *= 2
         time_s += b * h * nq * (skv // policy.block_kv) * _STEP_OVERHEAD_S
         return PolicyScore(time_s, traffic, (("bound", step["bound"]),))
+
+    if sig.op == "attention_decode":
+        b, hkv, g, skv, d = sig.shape
+        step = pm.decode_step_model(
+            batch=b, kv_heads=hkv, group=g, kv_len=skv, head_dim=d,
+            block_kv=policy.block_kv, dtype_bytes=dtype_bytes, chip=chip)
+        return PolicyScore(step["time_s"],
+                           step["kv_bytes"] + step["partial_bytes"],
+                           (("bound", step["bound"]),
+                            ("n_splits", step["n_splits"]),
+                            ("utilization", round(step["utilization"], 2))))
 
     if sig.op == "fused_norm":
         rows, d = sig.shape
@@ -319,10 +347,16 @@ def clear_policy_cache() -> None:
 # ---------------------------------------------------------------------------
 
 def policies_for_model(cfg, *, batch: int, seq_len: int,
-                       dtype: Optional[str] = None) -> dict:
+                       dtype: Optional[str] = None,
+                       decode_len: Optional[int] = None) -> dict:
     """Resolve the kernel policies a model built from ``cfg`` will use for a
     (batch, seq_len) bucket. Returns {op_kind: KernelPolicy}; attention-free
-    architectures get only the 1-D policies."""
+    architectures get only the 1-D policies.
+
+    ``decode_len`` is the KV-cache slot count of the decode step (an engine
+    passes its max_len); the split-KV decode policy resolves against it.
+    Windowed layers keep a smaller ring cache and re-resolve their exact
+    shape through the same memoized autotuner at trace time."""
     dtype = dtype or getattr(cfg, "compute_dtype", "bfloat16")
     h = getattr(cfg, "num_heads", 0)
     d = getattr(cfg, "head_dim", 0) or 0
@@ -337,6 +371,10 @@ def policies_for_model(cfg, *, batch: int, seq_len: int,
                                              dtype, causal=True)
         out["attention_bwd"] = select_policy("attention_bwd", attn_shape,
                                              dtype, causal=True)
+        hkv = getattr(cfg, "num_kv_heads", h) or h
+        out["attention_decode"] = select_policy(
+            "attention_decode",
+            (batch, hkv, h // hkv, decode_len or seq_len, d), dtype)
         if getattr(cfg, "rope_style", "none") != "none":
             out["rope"] = select_policy("rope", (batch, h, seq_len, d), dtype)
     if dm:

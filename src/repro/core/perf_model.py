@@ -136,6 +136,54 @@ def best_output_tile(vmem_budget: int, n_buffers: int, block_k: int,
 
 
 # ---------------------------------------------------------------------------
+# Split-KV flash-decode model (bandwidth-dominated; paper Fig. 9 regime).
+# ---------------------------------------------------------------------------
+
+# Grid steps needed before the Pallas pipeline hides the HBM latency of the
+# next K/V block behind the current (tiny) compute step. Below this the
+# prologue/epilogue bubbles dominate — the reason split-KV exists: when
+# batch*kv_heads is small, splitting the KV axis manufactures grid
+# parallelism so the DMA engine stays busy.
+DECODE_SATURATION_STEPS = 8
+# Per-grid-step fixed cost (s): pipeline bookkeeping per Pallas step. Matches
+# the autotuner's step-overhead scale.
+DECODE_STEP_OVERHEAD_S = 1e-6
+
+
+def decode_step_model(*, batch: int, kv_heads: int, group: int,
+                      kv_len: int, head_dim: int, block_kv: int,
+                      dtype_bytes: int = 2, chip: ChipSpec = V5E) -> dict:
+    """Model one split-KV flash-decode launch (q_len=1, GQA group packed).
+
+    Unlike the GEMM/attention models this one is bandwidth-, not FLOP-,
+    dominated: each of the ``batch * kv_heads * n_splits`` grid cells streams
+    one (block_kv, head_dim) K and V block exactly once, does O(group *
+    block_kv * head_dim) MACs (negligible: group <= 16), and writes a
+    (group, head_dim) partial + (group,) m/l stats that a jnp log-sum-exp
+    combine reduces. Split count trades per-step overhead against pipeline
+    fill: too few steps and the DMA queue never saturates HBM.
+    """
+    n_splits = max(1, kv_len // block_kv)
+    n_steps = batch * kv_heads * n_splits
+    kv_bytes = 2 * batch * kv_heads * kv_len * head_dim * dtype_bytes
+    # q/o traffic + the per-split partials the combine step re-reads
+    partial_bytes = batch * kv_heads * n_splits * (group * head_dim + 2 * group) * 4
+    qo_bytes = 2 * batch * kv_heads * group * head_dim * dtype_bytes
+    util = min(1.0, n_steps / DECODE_SATURATION_STEPS)
+    stream_s = kv_bytes / (chip.hbm_bw * util)
+    combine_s = 2 * partial_bytes / chip.hbm_bw  # written then re-read
+    total = (stream_s + qo_bytes / chip.hbm_bw + combine_s
+             + n_steps * DECODE_STEP_OVERHEAD_S)
+    flops = 4.0 * batch * kv_heads * group * kv_len * head_dim
+    return dict(block_kv=block_kv, n_splits=n_splits, n_steps=n_steps,
+                kv_bytes=kv_bytes, partial_bytes=partial_bytes,
+                utilization=util, time_s=total,
+                achieved_bw=kv_bytes / total if total else 0.0,
+                modeled_tflops=flops / total / 1e12 if total else 0.0,
+                bound="memory")
+
+
+# ---------------------------------------------------------------------------
 # Flash-attention model (per (batch*heads) × q-block grid step).
 # ---------------------------------------------------------------------------
 

@@ -22,13 +22,15 @@ so ``jax.jit`` can close over it).
 Block-field conventions per op kind (the Schedule's three block dims are
 reused so one Schedule type serves every kernel family):
 
-  op              block_m        block_n         block_k
-  --------------  -------------  --------------  -------------------
-  gemm            output rows    output cols     contraction block
-  attention_fwd   block_q        block_kv        head_dim
-  attention_bwd   block_q        block_kv        head_dim
-  fused_norm      block_rows     (unused: 0)     feature dim d
-  rope            block_s        (unused: 0)     head_dim
+  op               block_m        block_n         block_k
+  ---------------  -------------  --------------  -------------------
+  gemm             output rows    output cols     contraction block
+  attention_fwd    block_q        block_kv        head_dim
+  attention_bwd    block_q        block_kv        head_dim
+  attention_decode q rows (GQA    KV-split size   head_dim
+                   group, padded) (slots/step)
+  fused_norm       block_rows     (unused: 0)     feature dim d
+  rope             block_s        (unused: 0)     head_dim
 
 See DESIGN.md §5 for the policy resolution order.
 """
@@ -45,7 +47,11 @@ from .schedule import PINGPONG, Schedule
 # Kernel kinds a policy can describe. attention fwd/bwd are separate kinds
 # because the bwd pass has a ~2.5x larger scratch working set (dk+dv or dq
 # accumulators) and may legally need smaller tiles than fwd.
-OP_KINDS = ("gemm", "attention_fwd", "attention_bwd", "fused_norm", "rope")
+# attention_decode is the split-KV flash-decode kind (q_len=1, GQA group
+# packed into the q tile): its perf model is bandwidth-, not FLOP-,
+# dominated, and block_n carries the KV-split size (one split per grid step).
+OP_KINDS = ("gemm", "attention_fwd", "attention_bwd", "attention_decode",
+            "fused_norm", "rope")
 
 _ACC_BYTES = {"float32": 4, "bfloat16": 2}
 
@@ -102,7 +108,7 @@ class KernelPolicy:
         if self.op == "gemm":
             return [((s.block_m, s.block_k), self.in_dtype),
                     ((s.block_k, s.block_n), self.in_dtype)]
-        if self.op in ("attention_fwd", "attention_bwd"):
+        if self.op in ("attention_fwd", "attention_bwd", "attention_decode"):
             d = s.block_k  # head_dim by convention
             blocks = [((s.block_m, d), self.in_dtype),   # q (or do) block
                       ((s.block_n, d), self.in_dtype),   # k block
@@ -133,7 +139,10 @@ class KernelPolicy:
         if self.op == "attention_bwd":
             # dq pass: (bq, d); dkv pass: 2x (bkv, d) — budget for the larger
             return max(s.block_m * s.block_k, 2 * s.block_n * s.block_k) * acc
-        return 0  # fused_norm / rope keep no cross-iteration scratch
+        # fused_norm / rope / attention_decode keep no cross-iteration
+        # scratch (decode grid cells are independent: partials + m/l stats
+        # are written straight out and merged by the jnp combine step).
+        return 0
 
     def vmem_bytes(self) -> int:
         """Modeled VMEM working set of the pipelined pallas_call."""
@@ -267,6 +276,9 @@ DEFAULT_ATTENTION_FWD = make_policy("attention_fwd", block_m=128, block_n=128,
                                     block_k=128, name="default_attn")
 DEFAULT_ATTENTION_BWD = make_policy("attention_bwd", block_m=128, block_n=128,
                                     block_k=128, name="default_attn_bwd")
+DEFAULT_ATTENTION_DECODE = make_policy("attention_decode", block_m=8,
+                                       block_n=128, block_k=128,
+                                       name="default_attn_decode")
 DEFAULT_FUSED_NORM = make_policy("fused_norm", block_m=256, block_k=1024,
                                  name="default_norm")
 DEFAULT_ROPE = make_policy("rope", block_m=256, block_k=128,

@@ -1,4 +1,7 @@
-from .ops import attention  # noqa: F401
-from .ref import attention_ref  # noqa: F401
+from .ops import (attention, attention_decode, attention_decode_paged,  # noqa: F401
+                  resolve_decode_policy)
+from .ref import attention_ref, decode_ref, ring_positions  # noqa: F401
 from .kernel_fwd import flash_attention_fwd  # noqa: F401
 from .kernel_bwd import flash_attention_bwd  # noqa: F401
+from .kernel_decode import (combine_splits, flash_decode,  # noqa: F401
+                            flash_decode_paged)

@@ -1,0 +1,242 @@
+"""Split-KV flash-decode Pallas kernel (q_len = 1), contiguous and paged.
+
+Autoregressive decode is the paper's memory-bound regime (Fig. 9, Tab. 1's
+GQA rows): per generated token every KV byte is read exactly once, so the
+kernel's only job is to stream the cache at full HBM bandwidth. The split-KV
+shape does that with a grid over (batch, kv_head, kv_split): each grid cell
+streams one KV split, computes a partial softmax-attention over it with the
+whole GQA group packed into the q tile rows (q is (group, head_dim) — MHA is
+group == 1), and writes an unnormalized partial output plus its online-
+softmax (m, l) statistics. A cheap jnp log-sum-exp combine merges the splits
+exactly. Splitting the KV axis manufactures grid parallelism when
+batch * kv_heads alone is too small to keep the DMA pipeline saturated —
+the same reason GPU implementations split KV across SMs.
+
+Two cache layouts share the kernel body:
+
+* :func:`flash_decode` — contiguous (B, Hkv, S, D) caches, ring-buffer
+  aware: per-sequence ``lengths`` (scalar-prefetched) give each slot its
+  absolute position (slot = pos % S), which drives the validity and
+  sliding-window masks.
+* :func:`flash_decode_paged` — a (P, Hkv, page, D) page pool indexed
+  through a scalar-prefetched per-sequence page table: grid dim 2 walks the
+  table and the K/V BlockSpec index_map dereferences it, so each step DMAs
+  one physical page (block_kv == page_size by construction). Never-written
+  table entries point at the reserved null page 0; the length mask zeroes
+  their contribution in the combine.
+
+Policies come from ``repro.core.policy`` (op kind ``attention_decode``,
+bandwidth-dominated perf model); block_n is the split size.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import tiles
+from repro.core.policy import KernelPolicy
+
+MASK_VALUE = -1e30
+
+
+def _split_partials(q, k, v, valid, scale):
+    """Partial attention of one KV split.
+
+    q: (G, D) f32, k/v: (bkv, D), valid: (bkv,) bool. Returns unnormalized
+    (o (G, D) f32, m (G,), l (G,)); a fully-masked split yields
+    (0, MASK_VALUE, 0) which the combine weights to zero.
+    """
+    s = jax.lax.dot_general(q, k.astype(jnp.float32), (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid[None, :], s, MASK_VALUE)
+    m = jnp.max(s, axis=1)
+    p = jnp.exp(s - m[:, None])
+    p = jnp.where(valid[None, :], p, 0.0)
+    l = jnp.sum(p, axis=1)
+    o = jax.lax.dot_general(p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    return o, m, l
+
+
+def combine_splits(o, m, l):
+    """Log-sum-exp merge of per-split partials (the split-KV epilogue).
+
+    o: (..., NS, G, D) f32 unnormalized partials; m, l: (..., NS, G).
+    Exact: rescales every split to the global running max before summing,
+    so the result is independent of the split count. Rows whose every split
+    was fully masked (empty sequences) return zeros.
+    """
+    m_max = jnp.max(m, axis=-2, keepdims=True)
+    alpha = jnp.exp(m - m_max)                       # (..., NS, G)
+    den = jnp.sum(l * alpha, axis=-2)                # (..., G)
+    num = jnp.sum(o * alpha[..., None], axis=-3)     # (..., G, D)
+    out = num / jnp.maximum(den, 1e-30)[..., None]
+    return jnp.where((den > 0.0)[..., None], out, 0.0)
+
+
+def _decode_kernel(lengths_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+                   block_kv: int, slots: int, scale: float,
+                   window: int | None):
+    """Contiguous/ring variant: grid (B, Hkv, n_splits)."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    length = lengths_ref[b]
+    pos = length - 1                                 # last written position
+    cur = jax.lax.rem(jax.lax.rem(pos, slots) + slots, slots)
+    idx = j * block_kv + jax.lax.broadcasted_iota(jnp.int32, (block_kv,), 0)
+    # ring-aware absolute position of each slot (dense caches degenerate to
+    # actual == idx); empty rows (length == 0) mask everything.
+    actual = jnp.where(idx <= cur, pos - cur + idx, pos - cur - slots + idx)
+    valid = (actual >= 0) & (actual <= pos)
+    if window is not None:
+        valid &= (pos - actual) < window
+    o, m, l = _split_partials(q_ref[0, 0].astype(jnp.float32),
+                              k_ref[0, 0], v_ref[0, 0], valid, scale)
+    o_ref[0, 0, 0] = o
+    m_ref[0, 0, 0] = m
+    l_ref[0, 0, 0] = l
+
+
+def _decode_kernel_paged(page_table_ref, lengths_ref, q_ref, k_ref, v_ref,
+                         o_ref, m_ref, l_ref, *, page_size: int, scale: float,
+                         window: int | None):
+    """Paged variant: grid (B, Hkv, max_pages); one physical page per step."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    length = lengths_ref[b]
+    idx = j * page_size + jax.lax.broadcasted_iota(jnp.int32, (page_size,), 0)
+    valid = idx < length
+    if window is not None:
+        valid &= (length - 1 - idx) < window
+    o, m, l = _split_partials(q_ref[0, 0].astype(jnp.float32),
+                              k_ref[0, 0], v_ref[0, 0], valid, scale)
+    o_ref[0, 0, 0] = o
+    m_ref[0, 0, 0] = m
+    l_ref[0, 0, 0] = l
+
+
+def _partial_specs(b, hkv, n_splits, g, d):
+    """(out_specs, out_shapes) of the per-split partials + stats."""
+    part_map = lambda b_, h_, j_, *_: (b_, h_, j_, 0, 0)
+    stat_map = lambda b_, h_, j_, *_: (b_, h_, j_, 0)
+    out_specs = [
+        tiles.block_spec((1, 1, 1, g, d), part_map, jnp.float32,
+                         allow_ragged_minor=True),   # q rows = GQA group
+        pl.BlockSpec((1, 1, 1, g), stat_map),
+        pl.BlockSpec((1, 1, 1, g), stat_map),
+    ]
+    out_shapes = [
+        jax.ShapeDtypeStruct((b, hkv, n_splits, g, d), jnp.float32),
+        jax.ShapeDtypeStruct((b, hkv, n_splits, g), jnp.float32),
+        jax.ShapeDtypeStruct((b, hkv, n_splits, g), jnp.float32),
+    ]
+    return out_specs, out_shapes
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("policy", "window", "logit_scale", "interpret"),
+)
+def flash_decode(q, k, v, lengths, *, policy: KernelPolicy,
+                 window: int | None = None,
+                 logit_scale: float | None = None,
+                 interpret: bool = True):
+    """Split-KV decode over a contiguous (possibly ring) KV cache.
+
+    q: (B, Hkv, G, D) group-packed queries; k/v: (B, Hkv, S, D);
+    lengths: (B,) int32 tokens written so far (ring semantics when
+    lengths > S). Returns (B, Hkv, G, D) in q.dtype.
+    """
+    b, hkv, g, d = q.shape
+    slots = k.shape[2]
+    block_kv = min(policy.block_kv, slots)
+    assert slots % block_kv == 0, (slots, block_kv)
+    n_splits = slots // block_kv
+    scale = logit_scale if logit_scale is not None else d ** -0.5
+    policy.check()
+    lengths = jnp.asarray(lengths, jnp.int32).reshape(b)
+
+    ragged_kv = tiles.shape_ragged(slots, d, k.dtype)
+    q_map = lambda b_, h_, j_, *_: (b_, h_, 0, 0)
+    kv_map = lambda b_, h_, j_, *_: (b_, h_, j_, 0)
+    out_specs, out_shapes = _partial_specs(b, hkv, n_splits, g, d)
+
+    kernel = functools.partial(_decode_kernel, block_kv=block_kv, slots=slots,
+                               scale=scale, window=window)
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, hkv, n_splits),
+            in_specs=[
+                tiles.block_spec((1, 1, g, d), q_map, q.dtype,
+                                 allow_ragged_minor=True),  # tiny q tile
+                tiles.block_spec((1, 1, block_kv, d), kv_map, k.dtype,
+                                 allow_ragged_minor=ragged_kv),
+                tiles.block_spec((1, 1, block_kv, d), kv_map, v.dtype,
+                                 allow_ragged_minor=ragged_kv),
+            ],
+            out_specs=out_specs,
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(lengths, q, k, v)
+    return combine_splits(o, m, l).astype(q.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("policy", "window", "logit_scale", "interpret"),
+)
+def flash_decode_paged(q, k_pages, v_pages, page_table, lengths, *,
+                       policy: KernelPolicy, window: int | None = None,
+                       logit_scale: float | None = None,
+                       interpret: bool = True):
+    """Split-KV decode over a paged KV pool (one split == one page).
+
+    q: (B, Hkv, G, D); k_pages/v_pages: (P, Hkv, page_size, D) physical
+    pools; page_table: (B, MP) int32 physical page ids (0 = reserved null
+    page for never-written entries); lengths: (B,) tokens written so far.
+    Returns (B, Hkv, G, D) in q.dtype.
+    """
+    b, hkv, g, d = q.shape
+    n_pages, _, page_size, _ = k_pages.shape
+    mp = page_table.shape[1]
+    assert policy.block_kv == page_size, (policy.block_kv, page_size)
+    scale = logit_scale if logit_scale is not None else d ** -0.5
+    policy.check()
+    page_table = jnp.asarray(page_table, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32).reshape(b)
+
+    ragged_kv = tiles.shape_ragged(page_size, d, k_pages.dtype)
+    q_map = lambda b_, h_, j_, *_: (b_, h_, 0, 0)
+    # the paged-attention indirection: the K/V block for grid step (b, h, j)
+    # is whatever physical page the (scalar-prefetched) table names
+    kv_map = lambda b_, h_, j_, pt_ref, len_ref: (pt_ref[b_, j_], h_, 0, 0)
+    out_specs, out_shapes = _partial_specs(b, hkv, mp, g, d)
+
+    kernel = functools.partial(_decode_kernel_paged, page_size=page_size,
+                               scale=scale, window=window)
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b, hkv, mp),
+            in_specs=[
+                tiles.block_spec((1, 1, g, d), q_map, q.dtype,
+                                 allow_ragged_minor=True),
+                tiles.block_spec((1, 1, page_size, d), kv_map, k_pages.dtype,
+                                 allow_ragged_minor=ragged_kv),
+                tiles.block_spec((1, 1, page_size, d), kv_map, v_pages.dtype,
+                                 allow_ragged_minor=ragged_kv),
+            ],
+            out_specs=out_specs,
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(page_table, lengths, q, k_pages, v_pages)
+    return combine_splits(o, m, l).astype(q.dtype)

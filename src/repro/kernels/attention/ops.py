@@ -19,10 +19,11 @@ import jax.numpy as jnp
 
 from repro.core import autotune
 from repro.core.policy import (KernelPolicy, legacy_attention_blocks,
-                               resolve_policy)
+                               make_policy, resolve_policy)
 from .kernel_fwd import flash_attention_fwd
 from .kernel_bwd import flash_attention_bwd
-from .ref import attention_ref, attention_ref_chunked
+from .kernel_decode import flash_decode, flash_decode_paged
+from .ref import attention_ref, attention_ref_chunked, decode_ref
 
 # above this KV length, 'reference' mode switches to the chunked
 # online-softmax scan so temps stay O(S·chunk) instead of O(S^2)
@@ -113,3 +114,99 @@ def attention(q, k, v, *, causal: bool = False, window: int | None = None,
             q.shape, k.shape, q.dtype, causal=causal)
     return _flash(q, k, v, causal, window, policy, bwd_policy, logit_scale,
                   mode == "pallas_interpret")
+
+
+# ---------------------------------------------------------------------------
+# Decode path (q_len = 1): split-KV flash-decode + paged-attention variant.
+# ---------------------------------------------------------------------------
+
+def resolve_decode_policy(batch: int, kv_heads: int, group: int, kv_len: int,
+                          head_dim: int, dtype, *,
+                          page_size: int | None = None) -> KernelPolicy:
+    """The decode policy for a launch signature (DESIGN.md §5 / §8).
+
+    Contiguous caches go through the autotuner (the split size is the one
+    free axis of the bandwidth-dominated model). Paged caches have their
+    split size fixed by the physical page (one page per grid step by
+    construction), so the policy is built directly — deterministically, so
+    an engine's pinned policy and the traced policy are the same object
+    semantics as the autotuner's memoized path.
+    """
+    if page_size is None:
+        return autotune.select_policy(
+            "attention_decode", (batch, kv_heads, group, kv_len, head_dim),
+            str(dtype))
+    pol = make_policy("attention_decode", block_m=group, block_n=page_size,
+                      block_k=head_dim, in_dtype=str(jnp.dtype(dtype)),
+                      name="paged")
+    pol.check()
+    return pol
+
+
+def attention_decode(q, k, v, lengths, *, window: int | None = None,
+                     policy: KernelPolicy | None = None,
+                     logit_scale: float | None = None,
+                     mode: str = "pallas_interpret"):
+    """Single-token decode attention over a contiguous (ring) KV cache.
+
+    q: (B, H, 1, D) with H % Hkv == 0; k/v: (B, Hkv, S, D);
+    ``lengths``: scalar or (B,) int32 — tokens written so far (ring
+    semantics when lengths > S). Returns (B, H, 1, D) in q.dtype.
+
+    mode="reference" is the jnp einsum oracle (the pre-subsystem decode
+    path, bitwise); the pallas modes run the split-KV kernel whose split
+    size comes from the resolved ``attention_decode`` policy.
+    """
+    b, h, _, d = q.shape
+    hkv, slots = k.shape[1], k.shape[2]
+    group = h // hkv
+    qg = q.reshape(b, hkv, group, d)
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32).reshape(-1),
+                               (b,))
+    if mode == "reference":
+        out = decode_ref(qg, k, v, lengths, window=window,
+                         logit_scale=logit_scale)
+    else:
+        if policy is None:
+            policy = resolve_decode_policy(b, hkv, group, slots, d, q.dtype)
+        out = flash_decode(qg, k, v, lengths, policy=policy, window=window,
+                           logit_scale=logit_scale,
+                           interpret=mode == "pallas_interpret")
+    return out.reshape(b, h, 1, d)
+
+
+def attention_decode_paged(q, k_pages, v_pages, page_table, lengths, *,
+                           window: int | None = None,
+                           policy: KernelPolicy | None = None,
+                           logit_scale: float | None = None,
+                           mode: str = "pallas_interpret"):
+    """Single-token decode attention over a paged KV pool.
+
+    q: (B, H, 1, D); k_pages/v_pages: (P, Hkv, page_size, D);
+    page_table: (B, MP) physical page ids (0 = reserved null page);
+    lengths: (B,). Returns (B, H, 1, D) in q.dtype. mode="reference"
+    gathers the pages into a contiguous view and runs the einsum oracle.
+    """
+    b, h, _, d = q.shape
+    hkv, page_size = k_pages.shape[1], k_pages.shape[2]
+    mp = page_table.shape[1]
+    group = h // hkv
+    qg = q.reshape(b, hkv, group, d)
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32).reshape(-1),
+                               (b,))
+    if mode == "reference":
+        # function-level import: serve sits above kernels in the layering
+        from repro.serve.kv_cache import gather_pages
+
+        out = decode_ref(qg, gather_pages(k_pages, page_table),
+                         gather_pages(v_pages, page_table), lengths,
+                         window=window, logit_scale=logit_scale)
+    else:
+        if policy is None:
+            policy = resolve_decode_policy(b, hkv, group, mp * page_size, d,
+                                           q.dtype, page_size=page_size)
+        out = flash_decode_paged(qg, k_pages, v_pages, page_table, lengths,
+                                 policy=policy, window=window,
+                                 logit_scale=logit_scale,
+                                 interpret=mode == "pallas_interpret")
+    return out.reshape(b, h, 1, d)

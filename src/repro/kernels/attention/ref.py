@@ -49,6 +49,57 @@ def attention_ref(q, k, v, *, causal: bool = False, window: int | None = None,
     return out.astype(q.dtype)
 
 
+def ring_positions(lengths, slots: int):
+    """Per-slot absolute positions and validity of a ring-buffer KV cache.
+
+    ``lengths``: (B,) int32 — tokens written so far per sequence (the cache
+    holds the last ``slots`` of them at slot = pos % slots; a dense cache is
+    the special case lengths <= slots). Returns (actual, valid), both
+    (B, slots): ``actual[b, j]`` is the absolute position stored in slot j
+    and ``valid[b, j]`` is False for never-written slots (including the
+    whole row when lengths[b] == 0).
+    """
+    lengths = jnp.asarray(lengths, jnp.int32)
+    pos = lengths[:, None] - 1                      # last written position
+    cur = jnp.mod(pos, slots)                       # its slot
+    i = jnp.arange(slots)[None, :]
+    actual = jnp.where(i <= cur, pos - cur + i, pos - cur - slots + i)
+    valid = (actual >= 0) & (actual <= pos)
+    return actual, valid
+
+
+def decode_ref(q, k, v, lengths, *, window: int | None = None,
+               logit_scale: float | None = None):
+    """Single-token decode oracle over a (possibly ring) KV cache.
+
+    q: (B, Hkv, G, D) — the GQA group packed into the q rows (G = H // Hkv;
+    MHA is G == 1 with Hkv == H). k, v: (B, Hkv, S, D) ring cache;
+    ``lengths``: (B,) tokens written so far. Returns (B, Hkv, G, D) in
+    q.dtype. Matches the pre-subsystem einsum decode path bitwise for
+    non-empty sequences; empty rows (lengths == 0) return zeros.
+    """
+    b, hkv, g, d = q.shape
+    slots = k.shape[2]
+    actual, valid = ring_positions(lengths, slots)
+    if window is not None:
+        pos = jnp.asarray(lengths, jnp.int32)[:, None] - 1
+        valid &= (pos - actual) < window
+    scale = logit_scale if logit_scale is not None else d ** -0.5
+    s = jnp.einsum("bgxd,bgkd->bgxk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    # -1e30 (not -inf) so fully-masked rows stay NaN-free; for rows with at
+    # least one valid slot exp(-1e30 - max) underflows to exactly 0.0, so
+    # the result is bitwise identical to -inf masking.
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    pmax = jnp.max(s, axis=-1, keepdims=True)
+    pexp = jnp.exp(s - pmax)
+    pexp = jnp.where(valid[:, None, None, :], pexp, 0.0)
+    den = jnp.sum(pexp, axis=-1, keepdims=True)
+    out = jnp.einsum("bgxk,bgkd->bgxd", pexp / jnp.maximum(den, 1e-30),
+                     v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
 def attention_ref_chunked(q, k, v, *, causal: bool = False,
                           window: int | None = None,
                           logit_scale: float | None = None,

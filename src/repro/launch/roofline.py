@@ -149,6 +149,9 @@ def _policy_signature(cfg, shape, op, dtype):
     try:
         if op in ("attention_fwd", "attention_bwd"):
             return OpSignature(op, (b, h, s, s, d), dtype, causal=True)
+        if op == "attention_decode":
+            hkv = getattr(cfg, "num_kv_heads", h) or h
+            return OpSignature(op, (b, hkv, h // hkv, s, d), dtype)
         if op == "rope":
             return OpSignature(op, (b, h, s, d), dtype)
         if op == "fused_norm":

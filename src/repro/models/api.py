@@ -31,6 +31,13 @@ class Model:
     init_cache: Callable      # (batch, max_len) -> cache
     prefill: Callable         # (params, batch, cache) -> (cache, logits)
     decode_step: Callable     # (params, token, cache, pos) -> (cache, logits)
+    # paged decode surface (decoder-only LM/VLM backbones; DESIGN.md §8):
+    #   init_paged_cache(batch_slots, n_pages, page_size) -> cache
+    #   prefill_paged(params, tokens, cache, page_rows, slot, true_len)
+    #   decode_step_paged(params, token, cache, page_table, lengths)
+    init_paged_cache: Optional[Callable] = None
+    prefill_paged: Optional[Callable] = None
+    decode_step_paged: Optional[Callable] = None
     # {op: KernelPolicy} resolved at build time for the config's default
     # bucket — inspectable summary of what the kernels will do; exact
     # (batch, seq) buckets re-resolve via the memoized autotuner cache
@@ -132,7 +139,8 @@ def _build_model(cfg: ModelConfig, *, mode: Optional[str] = None, mesh=None,
             init_cache=functools.partial(_ed.encdec_init_cache, cfg),
             prefill=functools.partial(_ed.encdec_prefill, cfg, mode=mode),
             decode_step=functools.partial(_ed.encdec_decode_step, cfg,
-                                          mesh=mesh, data_axes=data_axes),
+                                          mode=mode, mesh=mesh,
+                                          data_axes=data_axes),
         )
     if cfg.family == "encoder":
         from . import encoder as _enc
@@ -164,8 +172,11 @@ def _build_model(cfg: ModelConfig, *, mode: Optional[str] = None, mesh=None,
                 cfg, params,
                 batch["inputs"] if isinstance(batch, dict) else batch,
                 cache, **kw),
-            decode_step=functools.partial(_lm.lm_decode_step, cfg, mesh=mesh,
-                                          data_axes=data_axes),
+            decode_step=functools.partial(_lm.lm_decode_step, cfg, **kw),
+            init_paged_cache=functools.partial(_lm.lm_init_paged_cache, cfg),
+            prefill_paged=functools.partial(_lm.lm_prefill_paged, cfg, **kw),
+            decode_step_paged=functools.partial(_lm.lm_decode_step_paged,
+                                                cfg, **kw),
         )
 
     defs = _lm.lm_param_defs(cfg)
@@ -180,6 +191,9 @@ def _build_model(cfg: ModelConfig, *, mode: Optional[str] = None, mesh=None,
             cfg, params,
             tokens["inputs"] if isinstance(tokens, dict) else tokens,
             cache, **kw),
-        decode_step=functools.partial(_lm.lm_decode_step, cfg, mesh=mesh,
-                                      data_axes=data_axes),
+        decode_step=functools.partial(_lm.lm_decode_step, cfg, **kw),
+        init_paged_cache=functools.partial(_lm.lm_init_paged_cache, cfg),
+        prefill_paged=functools.partial(_lm.lm_prefill_paged, cfg, **kw),
+        decode_step_paged=functools.partial(_lm.lm_decode_step_paged,
+                                            cfg, **kw),
     )

@@ -1,17 +1,25 @@
 """GQA/MHA attention layer: projections + RoPE + flash kernel + KV cache.
 
 Train/prefill route through the Pallas flash kernel (or its jnp oracle in
-'reference' mode — the dry-run path). Single-token decode uses a jnp
-einsum over the cache (memory-bound gather; XLA's bread and butter).
+'reference' mode — the dry-run path). Single-token decode routes through
+``attention_decode`` — the split-KV flash-decode kernel in the pallas
+modes, its jnp einsum oracle in 'reference' mode (DESIGN.md §8).
 Sliding-window archs (Mixtral SWA, RecurrentGemma local attention) keep a
 ring-buffer cache of ``window`` slots so the 500k-decode cell stays O(window).
+
+Two decode cache layouts coexist: the dense per-bucket (B, Hkv, S, D) cache
+below, and the paged layout (``paged_*`` functions) whose physical pages
+live in a shared pool managed by ``repro.serve.kv_cache`` — that one lets
+sequences of different lengths share one compiled decode step.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.attention import attention as attention_op
+from repro.kernels.attention import (attention as attention_op,
+                                     attention_decode,
+                                     attention_decode_paged)
 from repro.kernels.rope import rope as rope_op, rope_ref, rope_tables
 from .common import ParamDef
 
@@ -142,19 +150,24 @@ def prefill_attn_cache(cfg, cache: dict, k, v, seq_len: int,
 def decode_attention_layer(cfg, p, x, cache: dict, pos, *,
                            window: int | None = None, cross: bool = False,
                            update_cache: bool = True,
-                           use_rope: bool = True):
+                           use_rope: bool = True, mode: str = "reference",
+                           policy=None):
     """One-token decode. x: (B, 1, D); pos: scalar int32 (current position).
 
     ``cross=True``: q from x, k/v from the static (cross-attention) cache.
+    ``mode`` selects the attention_decode implementation ('reference' is
+    the einsum oracle; pallas modes run the split-KV flash-decode kernel).
     Returns (out (B,1,D), new_cache).
     """
+    b = x.shape[0]
     if cross:
         q = x @ p["wq"]
         if "bq" in p:
             q = q + p["bq"]
         q = _split_heads(q, cfg.num_heads, cfg.head_dim)
         k, v = cache["k"], cache["v"]  # static cross-attention cache
-        valid = jnp.ones(k.shape[2], bool)
+        lengths = jnp.full((b,), k.shape[2], jnp.int32)  # all slots valid
+        window = None
     else:
         q, k_new, v_new = project_qkv(cfg, p, x)
         if use_rope:
@@ -168,25 +181,69 @@ def decode_attention_layer(cfg, p, x, cache: dict, pos, *,
             v_c = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=2)
             cache = {"k": k_c, "v": v_c}
         k, v = cache["k"], cache["v"]
-        # per-slot absolute position (ring-aware)
-        i = jnp.arange(slots)
-        cur = pos % slots
-        actual = jnp.where(i <= cur, pos - cur + i, pos - cur - slots + i)
-        valid = (actual >= 0) & (actual <= pos)
-        if window is not None:
-            valid &= (pos - actual) < window
+        lengths = jnp.broadcast_to(pos + 1, (b,))
 
-    b, h, _, hd = q.shape
-    hkv = k.shape[1]
-    group = h // hkv
-    qf = q.astype(jnp.float32).reshape(b, hkv, group, hd)
-    scale = hd ** -0.5
-    s = jnp.einsum("bgxd,bgkd->bgxk", qf, k.astype(jnp.float32)) * scale
-    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
-    pmax = jnp.max(s, axis=-1, keepdims=True)
-    pexp = jnp.exp(s - pmax)
-    den = jnp.sum(pexp, axis=-1, keepdims=True)
-    out = jnp.einsum("bgxk,bgkd->bgxd", pexp / jnp.maximum(den, 1e-30),
-                     v.astype(jnp.float32))
-    out = out.reshape(b, h, 1, hd).astype(x.dtype)
+    out = attention_decode(q, k, v, lengths, window=window, policy=policy,
+                           mode=mode).astype(x.dtype)
+    return _merge_heads(out) @ p["wo"], cache
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache (decode path over a shared page pool; DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def init_paged_attn_cache(cfg, n_pages: int, page_size: int, dtype) -> dict:
+    from repro.serve.kv_cache import init_page_pool
+    return init_page_pool(n_pages, cfg.num_kv_heads, page_size,
+                          cfg.head_dim, dtype)
+
+
+def paged_prefill_attn_cache(cfg, cache: dict, k, v, page_rows) -> dict:
+    """Write one sequence's prefill k/v (1, Hkv, S, hd) into its pages."""
+    from repro.serve.kv_cache import write_prefill_pages
+    k_pages, v_pages = write_prefill_pages(cache["k_pages"], cache["v_pages"],
+                                           k, v, page_rows)
+    return {"k_pages": k_pages, "v_pages": v_pages}
+
+
+def _apply_rope_positions(cfg, q, k, positions):
+    """RoPE with one position per batch element (the paged decode step,
+    where each sequence sits at its own length). q/k: (B, H, 1, hd);
+    positions: (B,). Matches ``_apply_rope``'s reference path exactly for
+    uniform positions."""
+    if cfg.rope_style == "none":
+        return q, k
+    hd = q.shape[-1]
+    rot = hd // 2 if cfg.rope_style == "partial" else hd
+    sin, cos = rope_tables(positions, rot, cfg.rope_theta)
+    sin, cos = sin[:, None, None, :], cos[:, None, None, :]
+
+    def rot_fn(x):
+        out = rope_ref(x[..., :rot], sin, cos)
+        if rot == hd:
+            return out
+        return jnp.concatenate([out, x[..., rot:]], axis=-1)
+
+    return rot_fn(q), rot_fn(k)
+
+
+def paged_decode_attention_layer(cfg, p, x, cache: dict, page_table, lengths,
+                                 *, window: int | None = None,
+                                 use_rope: bool = True,
+                                 mode: str = "reference", policy=None):
+    """One-token decode over the paged cache. x: (B, 1, D); ``lengths``:
+    (B,) tokens written so far (this token lands at position lengths[b]).
+    Inactive slots (empty page-table rows) write into the reserved null
+    page and read back zeros. Returns (out (B,1,D), new_cache)."""
+    from repro.serve.kv_cache import append_paged_kv
+    q, k_new, v_new = project_qkv(cfg, p, x)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    if use_rope:
+        q, k_new = _apply_rope_positions(cfg, q, k_new, lengths)
+    k_pages, v_pages = append_paged_kv(cache["k_pages"], cache["v_pages"],
+                                       k_new, v_new, page_table, lengths)
+    cache = {"k_pages": k_pages, "v_pages": v_pages}
+    out = attention_decode_paged(q, k_pages, v_pages, page_table, lengths + 1,
+                                 window=window, policy=policy,
+                                 mode=mode).astype(x.dtype)
     return _merge_heads(out) @ p["wo"], cache

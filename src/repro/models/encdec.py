@@ -163,8 +163,8 @@ def encdec_prefill(cfg, params, batch, cache, *, mode="reference"):
     return {"self": self_c, "cross": cross_c}, logits
 
 
-def encdec_decode_step(cfg, params, token, cache, pos, *, mesh=None,
-                       data_axes=("data",)):
+def encdec_decode_step(cfg, params, token, cache, pos, *, mode="reference",
+                       mesh=None, data_axes=("data",)):
     params = cast_params(params, cfg.compute_dtype)
     x = params["embed"][token].astype(cfg.compute_dtype)
     x = x + jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1, axis=0
@@ -174,12 +174,12 @@ def encdec_decode_step(cfg, params, token, cache, pos, *, mesh=None,
         p, self_c, cross_c = xs
         hn = apply_norm(cfg, h, p, "ln1")
         a, self_c = decode_attention_layer(cfg, p["attn"], hn, self_c, pos,
-                                           use_rope=False)
+                                           use_rope=False, mode=mode)
         h = h + a
         hn = apply_norm(cfg, h, p, "lnx")
         c, _ = decode_attention_layer(cfg, p["xattn"], hn, cross_c, pos,
                                       cross=True, update_cache=False,
-                                      use_rope=False)
+                                      use_rope=False, mode=mode)
         h = h + c
         h = h + mlp_forward(cfg, p["mlp"], apply_norm(cfg, h, p, "ln2"))
         return h, (self_c, cross_c)

@@ -15,7 +15,9 @@ import jax.numpy as jnp
 from .common import (ParamDef, apply_norm, cast_params, cross_entropy_loss,
                      init_params, mlp_defs, mlp_forward, norm_defs)
 from .attention import (attn_defs, attention_layer, decode_attention_layer,
-                        init_attn_cache, prefill_attn_cache, project_qkv,
+                        init_attn_cache, init_paged_attn_cache,
+                        paged_decode_attention_layer, paged_prefill_attn_cache,
+                        prefill_attn_cache, project_qkv,
                         _apply_rope, _merge_heads)
 from repro.kernels.attention import attention as attention_op
 from .moe import moe_defs, moe_forward
@@ -333,13 +335,14 @@ def block_prefill(cfg, kind, p, x, cache, *, positions, mode="reference",
     return x, cache
 
 
-def block_decode(cfg, kind, p, x, cache, pos, *, mesh=None,
+def block_decode(cfg, kind, p, x, cache, pos, *, mode="reference", mesh=None,
                  data_axes=("data",)):
     rs = cfg.residual_scale
     if kind in ("attn", "local", "moe"):
         h = apply_norm(cfg, x, p, "ln1")
         a, cache = decode_attention_layer(cfg, p["attn"], h, cache, pos,
-                                          window=_block_window(cfg, kind))
+                                          window=_block_window(cfg, kind),
+                                          mode=mode)
         x = x + rs * a
         h = apply_norm(cfg, x, p, "ln2")
         if kind == "moe":
@@ -401,8 +404,8 @@ def lm_prefill(cfg, params, tokens, cache, *, mode="reference", mesh=None,
     return cache, logits[:, 0]
 
 
-def lm_decode_step(cfg, params, token, cache, pos, *, mesh=None,
-                   data_axes=("data",)):
+def lm_decode_step(cfg, params, token, cache, pos, *, mode="reference",
+                   mesh=None, data_axes=("data",)):
     """token: (B, 1) int32; pos: scalar. Returns (cache, logits (B, V))."""
     params = cast_params(params, cfg.compute_dtype)
     x = params["embed"][token].astype(cfg.compute_dtype) * cfg.emb_scale
@@ -416,7 +419,7 @@ def lm_decode_step(cfg, params, token, cache, pos, *, mesh=None,
             for kind, layer_params, layer_cache in zip(pattern, group_params,
                                                        group_cache):
                 h, nc = block_decode(cfg, kind, layer_params, h,
-                                     layer_cache, pos, mesh=mesh,
+                                     layer_cache, pos, mode=mode, mesh=mesh,
                                      data_axes=data_axes)
                 new.append(nc)
             return h, tuple(new)
@@ -431,8 +434,212 @@ def lm_decode_step(cfg, params, token, cache, pos, *, mesh=None,
         for i in range(cfg.num_layers):
             key = f"layer_{i:03d}"
             x, new[key] = block_decode(cfg, cfg.layer_kind(i), params[key], x,
-                                       cache[key], pos, mesh=mesh,
+                                       cache[key], pos, mode=mode, mesh=mesh,
                                        data_axes=data_axes)
+        cache = new
+    logits = _logits(cfg, params, x)
+    return cache, logits[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Paged decode path (shared page pool; DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def _block_paged_cache(cfg, kind, batch_slots, n_pages, page_size, dtype):
+    """Attention layers share a physical page pool; recurrent layers keep
+    their constant-size per-slot state (continuous batching resets a slot's
+    state at admission, so no paging is needed there)."""
+    if kind in ("attn", "local", "moe"):
+        return init_paged_attn_cache(cfg, n_pages, page_size, dtype)
+    if kind == "ssm":
+        return init_ssm_cache(cfg, batch_slots, dtype)
+    if kind == "rg":
+        return init_rglru_cache(cfg, batch_slots, dtype)
+    raise ValueError(kind)
+
+
+def lm_init_paged_cache(cfg, batch_slots: int, n_pages: int, page_size: int):
+    """Paged analogue of :func:`lm_init_cache`: same pytree layout, but
+    attention leaves are (n_pages, Hkv, page_size, hd) pools instead of
+    (B, Hkv, max_len, hd) dense caches."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    layout = _layout(cfg)
+
+    def one(kind):
+        return _block_paged_cache(cfg, kind, batch_slots, n_pages,
+                                  page_size, dtype)
+
+    if layout[0] == "scan":
+        _, pattern, n_groups = layout
+
+        def stacked(kind):
+            return jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (n_groups,) + x.shape),
+                one(kind))
+        if len(pattern) == 1:
+            return stacked(pattern[0])
+        return {f"blocks_{i}": stacked(kind)
+                for i, kind in enumerate(pattern)}
+    return {f"layer_{i:03d}": one(cfg.layer_kind(i))
+            for i in range(cfg.num_layers)}
+
+
+def block_prefill_paged(cfg, kind, p, x, cache, *, page_rows, slot,
+                        positions, mode="reference", mesh=None,
+                        data_axes=("data",)):
+    """Single-sequence (B=1) prefill that fills the paged cache: attention
+    k/v land in the sequence's pages; recurrent state lands in its batch
+    slot. Returns (x, cache)."""
+    if kind in ("attn", "local", "moe"):
+        window = _block_window(cfg, kind)
+        h = apply_norm(cfg, x, p, "ln1")
+        q, k, v = project_qkv(cfg, p["attn"], h)
+        q, k = _apply_rope(cfg, q, k, positions, mode)
+        o = attention_op(q, k, v, causal=True, window=window, mode=mode)
+        cache = paged_prefill_attn_cache(cfg, cache, k, v, page_rows)
+        x = x + cfg.residual_scale * (_merge_heads(o) @ p["attn"]["wo"])
+        h = apply_norm(cfg, x, p, "ln2")
+        if kind == "moe":
+            m, _ = moe_forward(cfg, p["moe"], h, mesh=mesh,
+                               data_axes=data_axes)
+        else:
+            m = mlp_forward(cfg, p["mlp"], h)
+        x = x + cfg.residual_scale * m
+    elif kind == "ssm":
+        h = apply_norm(cfg, x, p, "ln1")
+        o, state = ssm_prefill(cfg, p["ssm"], h)
+        cache = jax.tree.map(lambda c, s: c.at[slot].set(s[0]), cache, state)
+        x = x + cfg.residual_scale * o
+    elif kind == "rg":
+        h = apply_norm(cfg, x, p, "ln1")
+        o, state = rglru_prefill(cfg, p["rec"], h)
+        cache = jax.tree.map(lambda c, s: c.at[slot].set(s[0]), cache, state)
+        x = x + cfg.residual_scale * o
+        h = apply_norm(cfg, x, p, "ln2")
+        x = x + cfg.residual_scale * mlp_forward(cfg, p["mlp"], h)
+    return x, cache
+
+
+def lm_prefill_paged(cfg, params, tokens, cache, page_rows, slot, true_len,
+                     *, mode="reference", mesh=None, data_axes=("data",)):
+    """Prefill ONE sequence into the shared paged cache.
+
+    tokens: (1, S); ``page_rows``: (max_pages,) page-table row; ``slot``:
+    the sequence's batch slot (recurrent state lands there). Returns
+    (cache, logits (1, V) at position ``true_len - 1``).
+
+    S may exceed ``true_len`` (a padded bucket) ONLY for attention-only
+    stacks: attention k/v past true_len stay masked by the length until
+    overwritten, but ssm/rglru prefill state is the *final* scan state and
+    would absorb the pad positions — callers serving recurrent/hybrid archs
+    (PagedEngine does) must pass exact-length tokens (S == true_len).
+    """
+    params = cast_params(params, cfg.compute_dtype)
+    x = params["embed"][tokens].astype(cfg.compute_dtype) * cfg.emb_scale
+    positions = jnp.arange(tokens.shape[1])
+    kw = dict(page_rows=page_rows, slot=slot, positions=positions, mode=mode,
+              mesh=mesh, data_axes=data_axes)
+    layout = _layout(cfg)
+    if layout[0] == "scan":
+        _, pattern, _ = layout
+
+        def body(h, xs):
+            group_params, group_cache = xs
+            new = []
+            for kind, layer_params, layer_cache in zip(pattern, group_params,
+                                                       group_cache):
+                h, nc = block_prefill_paged(cfg, kind, layer_params, h,
+                                            layer_cache, **kw)
+                new.append(nc)
+            return h, tuple(new)
+
+        from repro.util import scan_unroll
+        x, cache_t = jax.lax.scan(body, x, (_scan_params(cfg, params, layout),
+                                            _scan_cache(cfg, cache, layout)),
+                                  unroll=scan_unroll())
+        cache = _unscan_cache(cfg, cache_t, layout)
+    else:
+        new = {}
+        for i in range(cfg.num_layers):
+            key = f"layer_{i:03d}"
+            x, new[key] = block_prefill_paged(cfg, cfg.layer_kind(i),
+                                              params[key], x, cache[key],
+                                              **kw)
+        cache = new
+    x_last = jax.lax.dynamic_slice_in_dim(x, true_len - 1, 1, axis=1)
+    logits = _logits(cfg, params, x_last)
+    return cache, logits[:, 0]
+
+
+def block_decode_paged(cfg, kind, p, x, cache, page_table, lengths, *,
+                       mode="reference", mesh=None, data_axes=("data",)):
+    rs = cfg.residual_scale
+    if kind in ("attn", "local", "moe"):
+        h = apply_norm(cfg, x, p, "ln1")
+        a, cache = paged_decode_attention_layer(
+            cfg, p["attn"], h, cache, page_table, lengths,
+            window=_block_window(cfg, kind), mode=mode)
+        x = x + rs * a
+        h = apply_norm(cfg, x, p, "ln2")
+        if kind == "moe":
+            m, _ = moe_forward(cfg, p["moe"], h, mesh=mesh,
+                               data_axes=data_axes)
+        else:
+            m = mlp_forward(cfg, p["mlp"], h)
+        x = x + rs * m
+    elif kind == "ssm":
+        h = apply_norm(cfg, x, p, "ln1")
+        o, cache = ssm_decode_step(cfg, p["ssm"], h, cache)
+        x = x + rs * o
+    elif kind == "rg":
+        h = apply_norm(cfg, x, p, "ln1")
+        o, cache = rglru_decode_step(cfg, p["rec"], h, cache)
+        x = x + rs * o
+        h = apply_norm(cfg, x, p, "ln2")
+        x = x + rs * mlp_forward(cfg, p["mlp"], h)
+    return x, cache
+
+
+def lm_decode_step_paged(cfg, params, token, cache, page_table, lengths, *,
+                         mode="reference", mesh=None, data_axes=("data",)):
+    """One decode step for every batch slot over the paged cache.
+
+    token: (B, 1) int32; page_table: (B, MP); lengths: (B,) tokens written
+    so far per slot (each slot's new token lands at position lengths[b]).
+    Inactive slots decode against the null page and produce ignorable
+    logits. Returns (cache, logits (B, V)).
+    """
+    params = cast_params(params, cfg.compute_dtype)
+    x = params["embed"][token].astype(cfg.compute_dtype) * cfg.emb_scale
+    layout = _layout(cfg)
+    if layout[0] == "scan":
+        _, pattern, _ = layout
+
+        def body(h, xs):
+            group_params, group_cache = xs
+            new = []
+            for kind, layer_params, layer_cache in zip(pattern, group_params,
+                                                       group_cache):
+                h, nc = block_decode_paged(cfg, kind, layer_params, h,
+                                           layer_cache, page_table, lengths,
+                                           mode=mode, mesh=mesh,
+                                           data_axes=data_axes)
+                new.append(nc)
+            return h, tuple(new)
+
+        from repro.util import scan_unroll
+        x, cache_t = jax.lax.scan(body, x, (_scan_params(cfg, params, layout),
+                                            _scan_cache(cfg, cache, layout)),
+                                  unroll=scan_unroll())
+        cache = _unscan_cache(cfg, cache_t, layout)
+    else:
+        new = {}
+        for i in range(cfg.num_layers):
+            key = f"layer_{i:03d}"
+            x, new[key] = block_decode_paged(cfg, cfg.layer_kind(i),
+                                            params[key], x, cache[key],
+                                            page_table, lengths, mode=mode,
+                                            mesh=mesh, data_axes=data_axes)
         cache = new
     logits = _logits(cfg, params, x)
     return cache, logits[:, 0]

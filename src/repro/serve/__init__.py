@@ -1,1 +1,3 @@
-from .engine import Engine, Request, RequestQueue, GenerationResult  # noqa: F401
+from .engine import (Engine, GenerationResult, PagedEngine,  # noqa: F401
+                     Request, RequestQueue)
+from . import kv_cache  # noqa: F401

@@ -1,17 +1,31 @@
-"""Batched serving engine: prefill + jitted decode loop + request queue.
+"""Serving engines: fixed-batch prefill+decode, and paged continuous batching.
 
-The engine serves fixed-shape batches (the production pattern for TPU
-serving: one compiled prefill and one compiled decode_step per bucket).
-Each (batch, prompt_len) bucket also pins the KernelPolicy set its compiled
-functions resolve to — the autotuner's per-shape-bucket memoization means
-the pinned policy and the policy the kernels trace with are the same object
-(DESIGN.md §5), so the report in :attr:`Engine.bucket_policies` is exact.
+Two engines share the request surface (DESIGN.md §8):
 
-``RequestQueue`` adds a continuous-batching-lite layer: requests are bucketed
-by padded prompt length and flushed as full batches.
+* :class:`Engine` serves fixed-shape batches (one compiled prefill and one
+  compiled decode_step per (batch, prompt_len) bucket). Each bucket pins the
+  KernelPolicy set its compiled functions resolve to — the autotuner's
+  per-shape-bucket memoization means the pinned policy and the policy the
+  kernels trace with are the same object (DESIGN.md §5), so the report in
+  :attr:`Engine.bucket_policies` is exact. Compiled buckets are held in an
+  LRU capped by ``max_cached_buckets``: evicting a bucket drops its jitted
+  callables (and with them the compiled executables), so a long-lived engine
+  serving many shapes stays bounded.
+* :class:`PagedEngine` runs continuous batching over the paged KV cache
+  (``serve.kv_cache``): new requests are admitted into free batch slots
+  each step (single-sequence prefill into freshly allocated pages), finished
+  ones retire (pages freed) without disturbing their neighbours, and the
+  one compiled decode step serves every slot regardless of its length.
+  Decode policies are pinned per (batch_slots, page_count) bucket: the page
+  table is sliced to the smallest power-of-two page count covering the
+  active slots, so short-context phases run a smaller split-KV grid.
+
+``RequestQueue`` is the continuous-batching-lite layer over :class:`Engine`:
+requests are bucketed by padded prompt length and flushed as full batches.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import warnings
 from typing import Optional
@@ -21,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import autotune
+from . import kv_cache as kvc
 
 
 @dataclasses.dataclass
@@ -30,29 +45,69 @@ class GenerationResult:
     steps: int
 
 
+def _lru_get(lru: collections.OrderedDict, key, build, cap: int):
+    """Get-or-build with LRU eviction — evicted entries drop their jitted
+    callables (and compiled executables) with them."""
+    entry = lru.get(key)
+    if entry is None:
+        entry = build()
+        lru[key] = entry
+        while len(lru) > cap:
+            lru.popitem(last=False)
+    else:
+        lru.move_to_end(key)
+    return entry
+
+
 class Engine:
     def __init__(self, model, params, *, max_len: int = 4096, mesh=None,
-                 donate_cache: bool = True):
+                 donate_cache: bool = True, max_cached_buckets: int = 8):
         self.model = model
         self.params = params
         self.max_len = max_len
         self.mesh = mesh
-        # (batch, prompt_len) bucket -> {op: KernelPolicy} pinned at first use
-        self.bucket_policies: dict[tuple, dict] = {}
-        self._decode = jax.jit(
-            lambda params, tok, cache, pos: model.decode_step(
-                params, tok, cache, pos),
-            donate_argnums=(2,) if donate_cache else ())
-        self._prefill = jax.jit(
-            lambda params, batch, cache: model.prefill(params, batch, cache))
+        self.donate_cache = donate_cache
+        self.max_cached_buckets = max_cached_buckets
+        # (batch, prompt_len) bucket -> {policies, prefill}; LRU — least-
+        # recently-used buckets are evicted together with their compiled
+        # functions once the cap is exceeded. The decode step's traced
+        # shapes depend only on batch (token (B,1), max_len cache), so its
+        # jits live in a separate per-batch LRU rather than being
+        # re-compiled per prompt length.
+        self._buckets: collections.OrderedDict = collections.OrderedDict()
+        self._decode_jits: collections.OrderedDict = collections.OrderedDict()
 
-    def _pin_bucket(self, batch: int, prompt_len: int) -> dict:
-        """Resolve + memoize the kernel policies for a compiled bucket."""
-        key = (batch, prompt_len)
-        if key not in self.bucket_policies:
-            self.bucket_policies[key] = autotune.policies_for_model(
-                self.model.cfg, batch=batch, seq_len=prompt_len)
-        return self.bucket_policies[key]
+    @property
+    def bucket_policies(self) -> dict:
+        """{(batch, prompt_len): {op: KernelPolicy}} of the live buckets."""
+        return {k: e["policies"] for k, e in self._buckets.items()}
+
+    def _bucket(self, batch: int, prompt_len: int) -> dict:
+        """Resolve-or-evict the compiled bucket for (batch, prompt_len)."""
+        model = self.model
+
+        def build():
+            return {
+                "policies": autotune.policies_for_model(
+                    model.cfg, batch=batch, seq_len=prompt_len,
+                    decode_len=self.max_len),
+                "prefill": jax.jit(
+                    lambda params, batch_, cache: model.prefill(
+                        params, batch_, cache)),
+            }
+        return _lru_get(self._buckets, (batch, prompt_len), build,
+                        self.max_cached_buckets)
+
+    def _decode_fn(self, batch: int):
+        model = self.model
+
+        def build():
+            return jax.jit(
+                lambda params, tok, cache, pos: model.decode_step(
+                    params, tok, cache, pos),
+                donate_argnums=(2,) if self.donate_cache else ())
+        return _lru_get(self._decode_jits, batch, build,
+                        self.max_cached_buckets)
 
     def _sample(self, logits, temperature: float, rng):
         if temperature == 0.0:
@@ -65,22 +120,23 @@ class Engine:
         """prompts: (B, S) int32. Greedy (T=0) or temperature sampling."""
         prompts = jnp.asarray(prompts, jnp.int32)
         b, s = prompts.shape
-        self._pin_bucket(b, s)
+        entry = self._bucket(b, s)
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         cache = self.model.init_cache(b, self.max_len)
         if self.model.cfg.family == "encdec":
             batch = dict(extra_batch or {}, inputs=prompts)
-            cache, logits = self._prefill(self.params, batch, cache)
+            cache, logits = entry["prefill"](self.params, batch, cache)
         else:
-            cache, logits = self._prefill(self.params, prompts, cache)
+            cache, logits = entry["prefill"](self.params, prompts, cache)
         toks = [prompts]
         rngs = jax.random.split(rng, max_new_tokens)
+        decode = self._decode_fn(b)
         next_tok = self._sample(logits, temperature, rngs[0])[:, None]
         for i in range(max_new_tokens):
             toks.append(next_tok)
             if i == max_new_tokens - 1:
                 break
-            cache, logits = self._decode(self.params, next_tok, cache, s + i)
+            cache, logits = decode(self.params, next_tok, cache, s + i)
             next_tok = self._sample(logits, temperature, rngs[i + 1])[:, None]
         out = np.asarray(jnp.concatenate(toks, axis=1))
         return GenerationResult(out, s, max_new_tokens)
@@ -143,3 +199,271 @@ class RequestQueue:
                     self.results[r.uid] = row[bucket - len(r.prompt):]
                 served += n_real
         return served
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching over the paged KV cache
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Slot:
+    """Host-side record of one active batch slot."""
+    req: Request
+    n_pages: int                 # pages currently backing the sequence
+    generated: list              # sampled token ids (ints)
+    next_token: int              # token to feed at the next decode step
+
+
+def _pow2(x: int) -> int:
+    return 1 << max(0, (x - 1).bit_length())
+
+
+class PagedEngine:
+    """Continuous batching: paged KV cache + one compiled decode step.
+
+    Admission: each :meth:`step` first moves pending requests into free
+    batch slots while the allocator can cover their prompt pages (the
+    prefill runs at the exact prompt length, compiled once per length —
+    padding the tokens would contaminate recurrent-layer state). Decode:
+    one compiled ``decode_step_paged`` serves every slot; the page table is
+    sliced to the pinned (batch_slots, page_count) bucket so short-context
+    phases run a smaller split-KV grid. Growth: a slot crossing a page
+    boundary gets its next page just-in-time; if the pool is exhausted the
+    youngest stalled slot is preempted (recompute policy — its pages are
+    freed and a continuation request rejoins the queue front). Retirement:
+    a slot that reaches ``max_new_tokens`` frees its pages and its result
+    appears in :attr:`results` — its neighbours never notice.
+    """
+
+    def __init__(self, model, params, *, batch_slots: int = 4,
+                 page_size: int = 64, max_pages_per_seq: int = 8,
+                 n_pages: Optional[int] = None, temperature: float = 0.0,
+                 rng=None, max_cached_buckets: int = 8):
+        if model.init_paged_cache is None:
+            raise ValueError(
+                f"{model.cfg.name}: no paged decode surface (decoder-only "
+                "LM/VLM backbones only)")
+        self.model = model
+        self.params = params
+        self.batch_slots = batch_slots
+        self.page_size = page_size
+        self.max_pages_per_seq = max_pages_per_seq
+        # +1: physical page 0 is the reserved null page
+        self.n_pages = (n_pages if n_pages is not None
+                        else batch_slots * max_pages_per_seq + 1)
+        self.temperature = temperature
+        self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self.max_cached_buckets = max_cached_buckets
+
+        self.cache = model.init_paged_cache(batch_slots, self.n_pages,
+                                            page_size)
+        self.alloc = kvc.PageAllocator(self.n_pages)
+        self.state = kvc.init_page_state(batch_slots, max_pages_per_seq)
+        self.slots: dict[int, _Slot] = {}       # slot id -> active record
+        self.pending: collections.deque = collections.deque()
+        self.results: dict[int, np.ndarray] = {}
+        self.steps = 0
+        self.preemptions = 0
+        # (batch_slots, page_count) -> {policies, decode}; ("prefill", S)
+        # -> {policies, prefill}. LRU, compiled fns evicted with the entry.
+        self._buckets: collections.OrderedDict = collections.OrderedDict()
+
+    # -- bucket pinning ----------------------------------------------------
+    @property
+    def bucket_policies(self) -> dict:
+        return {k: e["policies"] for k, e in self._buckets.items()}
+
+    def _touch(self, key, build) -> dict:
+        return _lru_get(self._buckets, key, build, self.max_cached_buckets)
+
+    def _decode_bucket(self, mp_bucket: int) -> dict:
+        """Compiled decode + pinned split-KV policy for a page-count bucket."""
+        from repro.kernels.attention import resolve_decode_policy
+        model, cfg = self.model, self.model.cfg
+
+        def build():
+            hkv = cfg.num_kv_heads
+            policy = resolve_decode_policy(
+                self.batch_slots, hkv, cfg.num_heads // hkv,
+                mp_bucket * self.page_size, cfg.head_dim, cfg.compute_dtype,
+                page_size=self.page_size)
+            return {
+                "policies": {"attention_decode": policy},
+                "decode": jax.jit(
+                    lambda params, tok, cache, pt, lens:
+                        model.decode_step_paged(params, tok, cache, pt,
+                                                lens),
+                    donate_argnums=(2,)),   # pools are the dominant buffers
+            }
+        return self._touch((self.batch_slots, mp_bucket), build)
+
+    def _prefill_bucket(self, padded_len: int) -> dict:
+        model = self.model
+
+        def build():
+            return {
+                "policies": autotune.policies_for_model(
+                    model.cfg, batch=1, seq_len=padded_len,
+                    decode_len=self.max_pages_per_seq * self.page_size),
+                "prefill": jax.jit(
+                    lambda params, toks, cache, rows, slot, n:
+                        model.prefill_paged(params, toks, cache, rows,
+                                            slot, n),
+                    donate_argnums=(2,)),
+            }
+        return self._touch(("prefill", padded_len), build)
+
+    # -- request lifecycle -------------------------------------------------
+    def submit(self, req: Request) -> None:
+        total = len(req.prompt) + req.max_new_tokens
+        cap = min(self.max_pages_per_seq, self.n_pages - 1) * self.page_size
+        if total > cap:
+            raise ValueError(
+                f"request {req.uid}: {total} tokens exceed per-sequence "
+                f"capacity {cap} (max_pages_per_seq * page_size)")
+        self.pending.append(req)
+
+    def _sample(self, logits) -> np.ndarray:
+        if self.temperature == 0.0:
+            return np.asarray(jnp.argmax(logits, axis=-1))
+        self.rng, sub = jax.random.split(self.rng)
+        return np.asarray(jax.random.categorical(
+            sub, logits / self.temperature, axis=-1))
+
+    def _admit(self) -> int:
+        """Move pending requests into free slots; returns how many joined."""
+        admitted = 0
+        while self.pending:
+            free = [s for s in range(self.batch_slots) if s not in self.slots]
+            if not free:
+                break
+            req = self.pending[0]
+            n = kvc.num_pages_needed(len(req.prompt), self.page_size)
+            if not self.alloc.can_alloc(n):
+                break                       # wait for a retirement
+            self.pending.popleft()
+            slot = free[0]
+            pages = self.alloc.alloc(n)
+            plen = len(req.prompt)
+            self.state = kvc.assign_slot(self.state, slot, pages, plen)
+            # exact-length prefill (compiled per prompt length): padding the
+            # tokens to a page multiple would contaminate recurrent-layer
+            # (ssm/rglru) slot state with the pad positions; the partial
+            # last page is zero-filled by write_prefill_pages instead.
+            toks = np.asarray(req.prompt, np.int32)[None, :]
+            entry = self._prefill_bucket(plen)
+            self.cache, logits = entry["prefill"](
+                self.params, jnp.asarray(toks), self.cache,
+                self.state["page_table"][slot], slot, plen)
+            first = int(self._sample(logits)[0])
+            self.slots[slot] = _Slot(req=req, n_pages=n, generated=[first],
+                                     next_token=first)
+            admitted += 1
+        return admitted
+
+    def _try_grow(self) -> list:
+        """Allocate next pages for slots crossing a page boundary; returns
+        the slots whose growth the exhausted pool could not cover."""
+        stalled = []
+        lengths = np.asarray(self.state["lengths"])   # one host transfer
+        for slot in sorted(self.slots):
+            rec = self.slots[slot]
+            need = int(lengths[slot]) + 1
+            if need > rec.n_pages * self.page_size:
+                if self.alloc.can_alloc(1):
+                    page = self.alloc.alloc(1)[0]
+                    self.state["page_table"] = \
+                        self.state["page_table"].at[slot, rec.n_pages].set(page)
+                    rec.n_pages += 1
+                else:
+                    stalled.append(slot)
+        return stalled
+
+    def _preempt(self, slot: int) -> None:
+        """Recompute preemption (the vLLM policy): free the slot's pages and
+        requeue a continuation — prompt := prompt + generated-so-far, budget
+        := the remaining tokens — at the front of the queue. Re-admission
+        re-prefills the lost KV; greedy decoding makes the continuation
+        exact. Retirement later rebuilds the full result from the
+        continuation's (longer) prompt, so the output is unchanged."""
+        rec = self.slots[slot]
+        row = np.asarray(self.state["page_table"][slot])
+        self.alloc.free([int(p) for p in row[: rec.n_pages]])
+        self.state = kvc.release_slot(self.state, slot)
+        cont = Request(
+            rec.req.uid,
+            np.concatenate([np.asarray(rec.req.prompt, np.int32),
+                            np.asarray(rec.generated, np.int32)]),
+            rec.req.max_new_tokens - len(rec.generated))
+        self.pending.appendleft(cont)
+        self.preemptions += 1
+        del self.slots[slot]
+
+    def _retire(self, slot: int, rec: _Slot) -> None:
+        row = np.asarray(self.state["page_table"][slot])
+        self.alloc.free([int(p) for p in row[: rec.n_pages]])
+        self.state = kvc.release_slot(self.state, slot)
+        self.results[rec.req.uid] = np.concatenate(
+            [np.asarray(rec.req.prompt, np.int32),
+             np.asarray(rec.generated, np.int32)])
+        del self.slots[slot]
+
+    def step(self) -> bool:
+        """Admit, decode one token for every active slot, retire finished.
+
+        Returns False when there is nothing left to do (idle engine).
+        """
+        self._admit()
+        # retire slots that completed at admission (max_new_tokens == 1)
+        for slot in [s for s, r in self.slots.items()
+                     if len(r.generated) >= r.req.max_new_tokens]:
+            self._retire(slot, self.slots[slot])
+        if not self.slots:
+            if self.pending:
+                self._admit()
+                if not self.slots:
+                    raise RuntimeError(
+                        "paged engine stalled: pending requests but no "
+                        "admissible slot (page pool too small?)")
+                return True
+            return False
+
+        # page growth; on pool exhaustion preempt the youngest stalled slot
+        # (freeing its pages) until the survivors fit. A lone slot never
+        # stalls: submit() bounds any single sequence to the pool size.
+        stalled = self._try_grow()
+        while stalled:
+            self._preempt(stalled[-1])
+            stalled = self._try_grow()
+        if not self.slots:
+            return bool(self.pending)   # everything preempted; re-admit next
+        max_pages = max(r.n_pages for r in self.slots.values())
+        mp_bucket = min(self.max_pages_per_seq, _pow2(max_pages))
+        entry = self._decode_bucket(mp_bucket)
+
+        tokens = np.zeros((self.batch_slots, 1), np.int32)
+        for slot, rec in self.slots.items():
+            tokens[slot, 0] = rec.next_token
+        self.cache, logits = entry["decode"](
+            self.params, jnp.asarray(tokens), self.cache,
+            self.state["page_table"][:, :mp_bucket], self.state["lengths"])
+        self.state["lengths"] = self.state["lengths"] + jnp.asarray(
+            [1 if s in self.slots else 0 for s in range(self.batch_slots)],
+            jnp.int32)
+        sampled = self._sample(logits)
+        self.steps += 1
+
+        for slot in list(self.slots):
+            rec = self.slots[slot]
+            tok = int(sampled[slot])
+            rec.generated.append(tok)
+            rec.next_token = tok
+            if len(rec.generated) >= rec.req.max_new_tokens:
+                self._retire(slot, rec)
+        return bool(self.slots or self.pending)
+
+    def run(self) -> dict:
+        """Drive :meth:`step` until idle; returns {uid: tokens} results."""
+        while self.step():
+            pass
+        return self.results

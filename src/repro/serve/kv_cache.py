@@ -1,0 +1,158 @@
+"""Paged KV cache: fixed-size pages, per-sequence page tables (DESIGN.md §8).
+
+The dense per-bucket decode cache allocates batch × max_len slots up front,
+so one long request inflates every sequence in its compiled bucket. The
+paged layout instead backs each layer's KV with a shared physical pool of
+fixed-size pages:
+
+    k_pages, v_pages : (n_pages, kv_heads, page_size, head_dim)   per layer
+    page_table       : (batch_slots, max_pages)  int32  — physical page ids
+    lengths          : (batch_slots,)            int32  — tokens written
+
+Physical **page 0 is reserved as the null page**: never allocated, pointed
+at by every unused page-table entry, harmlessly absorbing the masked writes
+of inactive batch slots. This is what lets sequences of different lengths
+share one compiled decode step — ragged occupancy lives in the page table
+and length mask, not in array shapes.
+
+Split of responsibilities:
+  * array ops (:func:`append_paged_kv`, :func:`write_prefill_pages`,
+    :func:`gather_pages`) are pure jax and jit-safe — they run inside the
+    compiled decode/prefill steps;
+  * bookkeeping (:class:`PageAllocator`, :func:`assign_slot`,
+    :func:`release_slot`) runs on the host between steps, where continuous
+    batching makes its admit/retire decisions.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+NULL_PAGE = 0
+
+
+def num_pages_needed(n_tokens: int, page_size: int) -> int:
+    return max(1, -(-n_tokens // page_size))
+
+
+def init_page_pool(n_pages: int, kv_heads: int, page_size: int,
+                   head_dim: int, dtype) -> dict:
+    """One layer's physical K/V pools (page 0 included, reserved null)."""
+    shape = (n_pages, kv_heads, page_size, head_dim)
+    return {"k_pages": jnp.zeros(shape, dtype),
+            "v_pages": jnp.zeros(shape, dtype)}
+
+
+def init_page_state(batch_slots: int, max_pages: int) -> dict:
+    """Per-sequence table + lengths, all slots empty (null-page rows)."""
+    return {"page_table": jnp.zeros((batch_slots, max_pages), jnp.int32),
+            "lengths": jnp.zeros((batch_slots,), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Pure-jax array ops (run inside compiled steps)
+# ---------------------------------------------------------------------------
+
+def append_paged_kv(k_pages, v_pages, k_new, v_new, page_table, lengths):
+    """Append one token's K/V per sequence at its write position.
+
+    k_new/v_new: (B, kv_heads, 1, head_dim); the write lands in page
+    ``page_table[b, lengths[b] // page_size]`` at offset
+    ``lengths[b] % page_size``. Inactive slots (empty table rows) scatter
+    into the reserved null page — duplicate null-page writes race but the
+    null page is never read unmasked, so the race is benign.
+    """
+    b = k_new.shape[0]
+    page_size = k_pages.shape[2]
+    lengths = jnp.asarray(lengths, jnp.int32)
+    pidx = page_table[jnp.arange(b), lengths // page_size]
+    off = lengths % page_size
+    k_pages = k_pages.at[pidx, :, off].set(k_new[:, :, 0, :])
+    v_pages = v_pages.at[pidx, :, off].set(v_new[:, :, 0, :])
+    return k_pages, v_pages
+
+
+def write_prefill_pages(k_pages, v_pages, k, v, page_rows):
+    """Write one sequence's prefill K/V into its allocated pages.
+
+    k/v: (1, kv_heads, S, head_dim); ``page_rows``: (max_pages,) — the
+    sequence's page-table row (first ceil(S / page_size) entries real).
+    S is padded up to a whole number of pages; tokens past the true length
+    are garbage until overwritten by appends, and stay masked by
+    ``lengths`` until then.
+    """
+    _, hkv, s, d = k.shape
+    page_size = k_pages.shape[2]
+    n = num_pages_needed(s, page_size)
+    pad = n * page_size - s
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    # (1, hkv, n*page, d) -> (n, hkv, page, d)
+    kr = k.reshape(hkv, n, page_size, d).transpose(1, 0, 2, 3)
+    vr = v.reshape(hkv, n, page_size, d).transpose(1, 0, 2, 3)
+    rows = jnp.asarray(page_rows, jnp.int32)[:n]
+    return k_pages.at[rows].set(kr), v_pages.at[rows].set(vr)
+
+
+def gather_pages(pages, page_table):
+    """Contiguous (B, kv_heads, max_pages*page_size, head_dim) view — the
+    einsum-reference path and debugging aid (the kernel never materializes
+    this)."""
+    b, mp = page_table.shape
+    _, hkv, page_size, d = pages.shape
+    return jnp.transpose(pages[page_table], (0, 2, 1, 3, 4)
+                         ).reshape(b, hkv, mp * page_size, d)
+
+
+# ---------------------------------------------------------------------------
+# Host-side bookkeeping (between compiled steps)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PageAllocator:
+    """Free-list allocator over physical pages 1..n_pages-1 (0 = null)."""
+
+    n_pages: int
+
+    def __post_init__(self):
+        self._free = list(range(self.n_pages - 1, 0, -1))  # pop() -> low ids
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> list:
+        if n > len(self._free):
+            raise MemoryError(
+                f"paged KV cache exhausted: need {n} pages, "
+                f"{len(self._free)} free of {self.n_pages - 1}")
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, pages) -> None:
+        for p in pages:
+            if not 0 < p < self.n_pages:
+                raise ValueError(f"freeing invalid page id {p}")
+            if p in self._free:
+                raise ValueError(f"double free of page {p}")
+            self._free.append(p)
+
+
+def assign_slot(state: dict, slot: int, pages, prompt_len: int) -> dict:
+    """Point ``slot``'s table row at freshly allocated ``pages``."""
+    row = jnp.zeros((state["page_table"].shape[1],), jnp.int32)
+    row = row.at[: len(pages)].set(jnp.asarray(pages, jnp.int32))
+    return {"page_table": state["page_table"].at[slot].set(row),
+            "lengths": state["lengths"].at[slot].set(prompt_len)}
+
+
+def release_slot(state: dict, slot: int) -> dict:
+    """Reset ``slot`` to an empty (null-page, zero-length) row."""
+    mp = state["page_table"].shape[1]
+    return {"page_table": state["page_table"].at[slot].set(
+                jnp.zeros((mp,), jnp.int32)),
+            "lengths": state["lengths"].at[slot].set(0)}
