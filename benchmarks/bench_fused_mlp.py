@@ -1,0 +1,73 @@
+"""Fused-MLP megakernel sweep (DESIGN.md §9; paper Fig. 9 regime).
+
+seq × d_model sweep of the transformer MLP hot chain: modeled HBM traffic of
+the fused plan (dual-output SwiGLU up-GEMM + residual-fused down-GEMM) vs
+the unfused eager chain, with the plan the autotuner picks from
+``dma_bytes`` alone (``autotune.select_fusion`` — no hard-coded
+preference). Rows land in ``BENCH_fused_mlp.json`` via benchmarks.run; the
+acceptance bar is ``traffic_reduction >= 1.5`` on every production-shaped
+cell.
+
+Also validates the fused interpret-mode kernels end to end on a small MLP
+(vs the unfused jnp oracle) and times the two jnp chains on CPU for scale.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import autotune
+from repro.models.common import mlp_forward
+from .common import time_fn, emit
+
+
+class _MlpCfg:
+    mlp_act = "swiglu"
+
+
+def main() -> None:
+    smoke = bool(os.environ.get("BENCH_SMOKE"))
+    # seq = tokens per launch (batch × seq of a train/prefill step): at
+    # production token counts the activation round trips dominate the
+    # (fixed) weight traffic, which is where fusion pays (paper Fig. 9).
+    seqs = (2048, 8192) if smoke else (2048, 8192, 32768)
+    dims = (1024, 2048) if smoke else (1024, 2048, 4096)
+    for seq in seqs:
+        for d in dims:
+            f = 4 * d
+            plan = autotune.select_fusion("mlp", (seq, d, f, True))
+            emit(f"fused_mlp_s{seq}_d{d}", 0.0,
+                 f"plan={plan['plan']};"
+                 f"fused_mb={plan['fused_bytes'] / 2**20:.1f};"
+                 f"unfused_mb={plan['unfused_bytes'] / 2**20:.1f};"
+                 f"traffic_reduction={plan['traffic_reduction']:.2f}x;"
+                 f"modeled_fused_us={plan['fused']['time_s'] * 1e6:.1f};"
+                 f"modeled_unfused_us={plan['unfused']['time_s'] * 1e6:.1f};"
+                 f"bound={plan['fused']['bound']}")
+
+    # end-to-end parity + CPU timing on a small MLP: the fused dual-GEMM +
+    # residual-epilogue path (interpret mode) vs the unfused jnp oracle
+    cfg = _MlpCfg()
+    t, d, f = 256, 512, 1024
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (1, t, d), jnp.float32) * 0.5
+    res = jax.random.normal(ks[1], (1, t, d), jnp.float32)
+    p = {"w_gate": jax.random.normal(ks[2], (d, f), jnp.float32) * 0.05,
+         "w_in": jax.random.normal(ks[3], (d, f), jnp.float32) * 0.05,
+         "w_out": jax.random.normal(ks[4], (f, d), jnp.float32) * 0.05}
+    ref_fn = jax.jit(lambda x, res: mlp_forward(
+        cfg, p, x, mode="reference", residual=res, residual_scale=0.5))
+    us_ref = time_fn(ref_fn, x, res)
+    out = mlp_forward(cfg, p, x, mode="pallas_interpret", residual=res,
+                      residual_scale=0.5)
+    err = float(jnp.abs(out - ref_fn(x, res)).max())
+    assert err < 1e-3, err
+    emit(f"fused_mlp_pallas_check_t{t}_d{d}", us_ref,
+         f"max_err={err:.2e};plan="
+         f"{autotune.select_fusion('mlp', (t, d, f, True))['plan']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,6 +5,10 @@ autotuner's candidate set (replacing the old private PINGPONG/INTERLEAVE
 pair) + the measured XLA-CPU reference time for scale. The autotuner's
 selected policy is marked ``selected=yes``. Also validates the Pallas
 kernel once per size (interpret) so the benchmark exercises the real code.
+
+The epilogue sweep (DESIGN.md §9) adds per-chain fused-vs-unfused modeled
+HBM bytes from ``perf_model.gemm_epilogue_model`` and a fused-store
+correctness check through the real kernel.
 """
 from __future__ import annotations
 
@@ -18,6 +22,15 @@ from .common import time_fn, emit, gemm_candidate_sweep
 
 
 SIZES = (1024, 2048, 4096, 8192)
+
+# epilogue sweep cells: chain name -> gemm_epilogue_model flags
+EPILOGUE_SWEEP = (
+    ("bias", dict(bias=True)),
+    ("bias_gelu", dict(bias=True, activation=True)),
+    ("swiglu_dual", dict(gate=True, activation=True)),
+    ("residual", dict(residual=True)),
+    ("bias_act_residual", dict(bias=True, activation=True, residual=True)),
+)
 
 
 def main() -> None:
@@ -33,6 +46,18 @@ def main() -> None:
                  f"modeled_tflops={m['modeled_tflops']:.0f};"
                  f"bound={m['bound']};ai={m['arithmetic_intensity']:.0f};"
                  f"selected={'yes' if selected else 'no'}")
+    # epilogue sweep (DESIGN.md §9): modeled HBM bytes of GEMM + chain, the
+    # fused megakernel vs the eager per-op sequence
+    n = 2048
+    for name, kw in EPILOGUE_SWEEP:
+        f_m = pm.gemm_epilogue_model(m=n, n=n, k=n, fused=True, **kw)
+        u_m = pm.gemm_epilogue_model(m=n, n=n, k=n, fused=False, **kw)
+        emit(f"gemm_epilogue_{name}_{n}", 0.0,
+             f"fused_mb={f_m['dma_bytes'] / 2**20:.1f};"
+             f"unfused_mb={u_m['dma_bytes'] / 2**20:.1f};"
+             f"traffic_reduction={u_m['dma_bytes'] / f_m['dma_bytes']:.2f}x;"
+             f"bound={f_m['bound']}")
+
     # correctness spot-check through the Pallas kernel (small size), using
     # the autotuner-selected policy end to end
     n = 512
@@ -45,6 +70,21 @@ def main() -> None:
     pol = autotune.select_policy("gemm", (n, n, n), str(a.dtype))
     emit("gemm_pallas_interpret_check_512", 0.0,
          f"max_err={err:.2e};policy={pol.describe()['blocks']}")
+
+    # and once through the fused epilogue store (bias + gelu + residual)
+    from repro.kernels.gemm import Epilogue, gemm_fused, gemm_fused_ref
+    ep = Epilogue(bias=True, activation="gelu", residual=True)
+    ks = jax.random.split(jax.random.PRNGKey(2), 2)
+    bias = jax.random.normal(ks[0], (n,), jnp.float32)
+    resid = jax.random.normal(ks[1], (n, n), jnp.float32)
+    out = gemm_fused(a, b, epilogue=ep, bias=bias, residual=resid,
+                     out_dtype=jnp.float32)
+    ref = gemm_fused_ref(a, b, epilogue=ep, bias=bias, residual=resid,
+                         out_dtype=jnp.float32)
+    err = float(jnp.abs(out - ref).max())
+    assert err < 0.5, err
+    emit("gemm_epilogue_pallas_interpret_check_512", 0.0,
+         f"max_err={err:.2e};epilogue={ep.describe()}")
 
 
 if __name__ == "__main__":

@@ -2,21 +2,26 @@
 RoPE (batch 16, heads 16, head dim 128 per the paper).
 
 Derived: achievable bandwidth fraction on v5e. The fused kernel moves exactly
-2 reads + 2 writes of the activation; the unfused chain moves 3 reads +
-3 writes plus a mask read/write — the fusion factor is the paper's win,
-reproduced here as measured CPU time (fused jnp vs unfused jnp) and modeled
-v5e time (bytes / 819 GB/s).
+2 reads + 2 writes of the activation; the unfused chain moves 7 activation
+passes — the fusion factor is the paper's win. Modeled bytes come from
+``perf_model.dropout_residual_ln_traffic`` / ``perf_model.rope_traffic``
+(the same accounting the autotuner's fusion-plan selection uses), reproduced
+here three ways: measured CPU time (fused jnp vs unfused jnp), modeled v5e
+time (bytes / 819 GB/s), and the real Pallas kernel in interpret mode
+(validated against the jnp oracle; interpret wall-time is not meaningful).
 """
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import perf_model as pm
 from repro.kernels.fused_norm import (dropout_residual_layernorm,
                                       fused_dropout_residual_layernorm_ref)
 from repro.kernels.fused_norm.ref import dropout_keep_mask_ref
-from repro.kernels.rope import rope_ref, rope_tables
-from repro.launch.roofline import HBM_BW
+from repro.kernels.rope import rope, rope_ref, rope_tables
 from .common import time_fn, emit
 
 
@@ -32,8 +37,11 @@ def unfused(x, r, w, b, seed, p):
 
 
 def main() -> None:
+    smoke = bool(os.environ.get("BENCH_SMOKE"))
     d = 2048  # 16 heads x 128
-    for seq in (2048, 4096, 8192):
+    seqs = (2048,) if smoke else (2048, 4096, 8192)
+    hbm_bw = pm.V5E.hbm_bw
+    for seq in seqs:
         rows = seq
         ks = jax.random.split(jax.random.PRNGKey(0), 4)
         x = jax.random.normal(ks[0], (rows, d))
@@ -46,22 +54,40 @@ def main() -> None:
         unf = jax.jit(lambda x, r, w, b: unfused(x, r, w, b, 7, 0.1))
         us_f = time_fn(fused, x, r, w, b)
         us_u = time_fn(unf, x, r, w, b)
-        bytes_fused = 4 * rows * d * 4      # 2R + 2W, mask generated in-kernel
-        bytes_unfused = 7 * rows * d * 4    # dropout RW + add RRW + LN RW
-        modeled_us = bytes_fused / HBM_BW * 1e6
+        # modeled bytes from perf_model (the same accounting select_fusion
+        # ranks plans with) — not hand-computed constants
+        bytes_fused = pm.dropout_residual_ln_traffic(rows, d, fused=True)
+        bytes_unfused = pm.dropout_residual_ln_traffic(rows, d, fused=False)
+        # the real Pallas kernel, interpret mode (correctness, not timing)
+        o_k, r_k = dropout_residual_layernorm(x, r, w, b, 7, dropout_p=0.1,
+                                              mode="pallas_interpret")
+        o_r, r_r = fused(x, r, w, b)
+        kernel_err = max(float(jnp.abs(o_k - o_r).max()),
+                         float(jnp.abs(r_k - r_r).max()))
         emit(f"fused_dropout_resid_ln_s{seq}", us_f,
-             f"modeled_v5e_us={modeled_us:.1f};"
+             f"modeled_v5e_us={bytes_fused / hbm_bw * 1e6:.1f};"
+             f"modeled_fused_mb={bytes_fused / 2**20:.1f};"
+             f"modeled_unfused_mb={bytes_unfused / 2**20:.1f};"
              f"modeled_speedup={bytes_unfused / bytes_fused:.2f}x;"
-             f"cpu_xla_speedup={us_u / us_f:.2f}x")
+             f"cpu_xla_speedup={us_u / us_f:.2f}x;"
+             f"pallas_max_err={kernel_err:.2e}")
 
         # rope: batch 16, heads 16, head dim 128
-        xq = jax.random.normal(ks[0], (2, 16, seq, 128))
-        sin, cos = rope_tables(jnp.arange(seq), 128)
+        bsz, heads, hd = 2, 16, 128
+        xq = jax.random.normal(ks[0], (bsz, heads, seq, hd))
+        sin, cos = rope_tables(jnp.arange(seq), hd)
         fn = jax.jit(lambda x: rope_ref(x, sin, cos))
         us = time_fn(fn, xq)
-        bytes_moved = 2 * xq.size * 4
+        bytes_fused = pm.rope_traffic(bsz, heads, seq, hd, fused=True)
+        bytes_unfused = pm.rope_traffic(bsz, heads, seq, hd, fused=False)
+        out_k = rope(xq, sin, cos, mode="pallas_interpret")
+        rope_err = float(jnp.abs(out_k - fn(xq)).max())
         emit(f"rope_s{seq}", us,
-             f"modeled_v5e_us={bytes_moved / HBM_BW * 1e6:.1f}")
+             f"modeled_v5e_us={bytes_fused / hbm_bw * 1e6:.1f};"
+             f"modeled_fused_mb={bytes_fused / 2**20:.1f};"
+             f"modeled_unfused_mb={bytes_unfused / 2**20:.1f};"
+             f"modeled_speedup={bytes_unfused / bytes_fused:.2f}x;"
+             f"pallas_max_err={rope_err:.2e}")
 
 
 if __name__ == "__main__":

@@ -15,8 +15,8 @@ import sys
 import traceback
 
 from . import (bench_gemm, bench_attention_fwd, bench_attention_bwd,
-               bench_decode, bench_memory_bound, bench_schedules,
-               bench_grid_swizzle)
+               bench_decode, bench_fused_mlp, bench_memory_bound,
+               bench_schedules, bench_grid_swizzle)
 from .common import begin_capture, end_capture, write_bench_json
 
 # (display name, json key, entry point)
@@ -26,6 +26,7 @@ BENCHES = [
     ("Fig8_attention_bwd", "attention_bwd", bench_attention_bwd.main),
     ("Fig9_memory_bound", "memory_bound", bench_memory_bound.main),
     ("Fig9b_decode", "decode", bench_decode.main),
+    ("Fig9c_fused_mlp", "fused_mlp", bench_fused_mlp.main),
     ("Tab2_Tab3_schedules", "schedules", bench_schedules.main),
     ("Tab4_grid_swizzle", "grid_swizzle", bench_grid_swizzle.main),
 ]

@@ -53,12 +53,18 @@ class OpSignature:
       attention_decode (batch, kv_heads, group, kv_len, head_dim)
       fused_norm       (rows, d)
       rope             (batch, heads, seq, head_dim)
+
+    ``epilogue`` (gemm only) is the fused store chain the launch will run
+    (:class:`repro.kernels.gemm.epilogue.Epilogue`, carried opaquely): its
+    extra operands change both the legal candidate set (VMEM, whole-head
+    block_n for rope) and the scored traffic.
     """
 
     op: str
     shape: tuple
     dtype: str = "bfloat16"
     causal: bool = False
+    epilogue: Optional[object] = None
 
     def __post_init__(self):
         if self.op not in OP_KINDS:
@@ -85,7 +91,7 @@ class OpSignature:
             shape = (pow2(b), pow2(h), s, d)
         else:
             shape = tuple(self.shape)
-        return (self.op, shape, self.dtype, self.causal)
+        return (self.op, shape, self.dtype, self.causal, self.epilogue)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -143,15 +149,24 @@ def candidate_policies(sig: OpSignature) -> list:
 
     if sig.op == "gemm":
         m, n, k = sig.shape
+        ep = sig.epilogue
+        bn_cands = _block_candidates(n, 128, 512)
+        if ep is not None and getattr(ep, "rope", False):
+            # rope rotates whole heads per tile: block_n must be a head_dim
+            # multiple (head_dim-aligned divisors cover non-128-aligned heads)
+            hd = ep.head_dim
+            bn_cands = sorted(b for b in
+                              set(bn_cands) | set(_block_candidates(n, hd, 512))
+                              if b % hd == 0)
         for bm in _block_candidates(m, 128, 512):
-            for bn in _block_candidates(n, 128, 512):
+            for bn in bn_cands:
                 for bk in _block_candidates(k, 128, 512):
                     for nbuf in (2, 3):
                         sched = Schedule(f"auto_g{nbuf}", nbuf, bm, bn, bk)
                         rows, cols = m // bm, n // bn
                         for sw in _swizzle_candidates(rows, cols):
                             pol = KernelPolicy("gemm", sched, sw,
-                                               in_dtype=dtype)
+                                               in_dtype=dtype, epilogue=ep)
                             if pol.is_legal():
                                 out.append(pol)
 
@@ -200,11 +215,22 @@ def candidate_policies(sig: OpSignature) -> list:
 def gemm_traffic_bytes(policy: KernelPolicy, m: int, n: int, k: int,
                        dtype_bytes: int) -> int:
     """Modeled HBM→VMEM bytes of the full GEMM under the policy's traversal
-    (full-K panels, Pallas consecutive-revisit rule — grid_swizzle.dma_bytes)."""
+    (full-K panels, Pallas consecutive-revisit rule — grid_swizzle.dma_bytes).
+
+    An attached epilogue adds its streamed operands: the gate's B2 panel
+    follows B's revisit pattern exactly (doubled B traffic), the rest
+    (bias/residual/tables) stream once with the output tiles.
+    """
     rows, cols = m // policy.block_m, n // policy.block_n
     a_panel = policy.block_m * k * dtype_bytes
     b_panel = k * policy.block_n * dtype_bytes
-    return dma_bytes(policy.swizzle, rows, cols, a_panel, b_panel)
+    ep = policy.epilogue
+    if ep is not None and getattr(ep, "gate", False):
+        b_panel *= 2
+    traffic = dma_bytes(policy.swizzle, rows, cols, a_panel, b_panel)
+    if ep is not None:
+        traffic += ep.extra_read_bytes(m, n, dtype_bytes)
+    return traffic
 
 
 def score_policy(sig: OpSignature, policy: KernelPolicy,
@@ -219,7 +245,10 @@ def score_policy(sig: OpSignature, policy: KernelPolicy,
             return PolicyScore(math.inf, 2**62)
         n_blocks = (m // policy.block_m) * (n // policy.block_n)
         tflops = step["modeled_tflops"]
-        compute_s = 2.0 * m * n * k / (tflops * 1e12) if tflops else math.inf
+        n_acc = 2 if (policy.epilogue is not None
+                      and getattr(policy.epilogue, "gate", False)) else 1
+        compute_s = (n_acc * 2.0 * m * n * k / (tflops * 1e12)
+                     if tflops else math.inf)
         traffic = gemm_traffic_bytes(policy, m, n, k, dtype_bytes)
         memory_s = traffic / chip.hbm_bw
         time_s = max(compute_s, memory_s) + n_blocks * _STEP_OVERHEAD_S
@@ -304,15 +333,18 @@ _CACHE_STATS = {"hits": 0, "misses": 0}
 
 
 def select_policy(op: str, shape, dtype="bfloat16", *, causal: bool = False,
-                  cache_sim: bool = False,
+                  epilogue=None, cache_sim: bool = False,
                   chip: pm.ChipSpec = pm.V5E) -> KernelPolicy:
     """The tuned policy for an op signature; memoized per shape-bucket.
+
+    ``epilogue`` (gemm only) makes the candidate set and the traffic model
+    epilogue-aware; the returned policy carries it.
 
     Raises ValueError if no candidate is legal (should be impossible for
     realistic shapes — the smallest aligned block always fits VMEM).
     """
     sig = OpSignature(op, tuple(int(x) for x in shape), str(dtype),
-                      causal=causal)
+                      causal=causal, epilogue=epilogue)
     key = sig.bucket() + (bool(cache_sim), chip.name)
     hit = _POLICY_CACHE.get(key)
     if hit is not None:
@@ -339,7 +371,70 @@ def policy_cache_stats() -> dict:
 
 def clear_policy_cache() -> None:
     _POLICY_CACHE.clear()
+    _PLAN_CACHE.clear()
     _CACHE_STATS.update(hits=0, misses=0)
+
+
+# ---------------------------------------------------------------------------
+# Fusion-plan selection (DESIGN.md §9): fused vs unfused, from dma_bytes only
+# ---------------------------------------------------------------------------
+
+_PLAN_CACHE: dict = {}
+
+
+def select_fusion(kind: str, shape, dtype="bfloat16", *,
+                  residual: bool = True,
+                  chip: pm.ChipSpec = pm.V5E) -> dict:
+    """Pick the fused or unfused execution plan for a model-layer GEMM chain.
+
+    The decision is made *purely* by comparing the two plans' modeled HBM
+    traffic (``perf_model.mlp_chain_model`` / ``qkv_rope_chain_model``) —
+    no hard-coded preference: a chain that stops saving bytes (tiny token
+    counts vs the qkv concat cost, residual-free expert FFNs near the
+    crossover) loses the selection. Memoized per shape-bucket (the token
+    dim rounds to the next power of two).
+
+    ``kind``/``shape``:
+      'mlp'      (tokens, d_model, d_ff, gated); ``residual`` says whether
+                 the chain ends in a residual add (False for MoE experts)
+      'qkv_rope' (tokens, d_model, num_heads, num_kv_heads, head_dim)
+
+    Returns {plan: 'fused'|'unfused', fused_bytes, unfused_bytes,
+    traffic_reduction, fused: <model dict>, unfused: <model dict>}.
+    """
+    dtype = str(dtype)
+    shape = tuple(int(x) for x in shape)
+    tokens = 1 << max(0, (shape[0] - 1).bit_length())  # pow2 bucket
+    key = (kind, (tokens,) + shape[1:], dtype, bool(residual), chip.name)
+    hit = _PLAN_CACHE.get(key)
+    if hit is not None:
+        return hit
+    db = _DTYPE_BYTES.get(dtype, 2)
+    if kind == "mlp":
+        _, d, f, gated = shape
+        variants = [pm.mlp_chain_model(tokens=tokens, d_model=d, d_ff=f,
+                                       dtype_bytes=db, gated=bool(gated),
+                                       residual=residual,
+                                       fused=fused, chip=chip)
+                    for fused in (True, False)]
+    elif kind == "qkv_rope":
+        _, d, h, hkv, hd = shape
+        variants = [pm.qkv_rope_chain_model(tokens=tokens, d_model=d,
+                                            num_heads=h, num_kv_heads=hkv,
+                                            head_dim=hd, dtype_bytes=db,
+                                            fused=fused, chip=chip)
+                    for fused in (True, False)]
+    else:
+        raise ValueError(f"unknown fusion kind {kind!r}")
+    fused, unfused = variants
+    plan = dict(
+        plan=("fused" if fused["dma_bytes"] < unfused["dma_bytes"]
+              else "unfused"),
+        fused_bytes=fused["dma_bytes"], unfused_bytes=unfused["dma_bytes"],
+        traffic_reduction=unfused["dma_bytes"] / max(1, fused["dma_bytes"]),
+        fused=fused, unfused=unfused)
+    _PLAN_CACHE[key] = plan
+    return plan
 
 
 # ---------------------------------------------------------------------------
@@ -380,6 +475,24 @@ def policies_for_model(cfg, *, batch: int, seq_len: int,
     if dm:
         out["fused_norm"] = select_policy("fused_norm",
                                           (batch * seq_len, dm), dtype)
+    d_ff = getattr(cfg, "d_ff", 0) or 0
+    if dm and d_ff:
+        # The fused-MLP megakernel GEMMs (DESIGN.md §9): the dual-output
+        # gated up-projection and the residual-fused down-projection.
+        # (Function-level import; epilogue.py depends only on jax, so this
+        # does not create a core -> kernels import cycle.)
+        from repro.kernels.gemm.epilogue import Epilogue
+        gated = getattr(cfg, "mlp_act", "swiglu") in ("swiglu", "geglu")
+        act = "gelu" if getattr(cfg, "mlp_act", "") in ("geglu", "gelu") \
+            else "silu"
+        tokens = batch * seq_len
+        up_ep = (Epilogue(activation=act, gate=True) if gated
+                 else Epilogue(activation=act))
+        out["gemm_mlp_up"] = select_policy("gemm", (tokens, d_ff, dm), dtype,
+                                           epilogue=up_ep)
+        out["gemm_mlp_down"] = select_policy(
+            "gemm", (tokens, dm, d_ff), dtype,
+            epilogue=Epilogue(residual=True, scale=True))
     return out
 
 

@@ -184,8 +184,155 @@ def decode_step_model(*, batch: int, kv_heads: int, group: int,
 
 
 # ---------------------------------------------------------------------------
-# Flash-attention model (per (batch*heads) × q-block grid step).
+# Fused GEMM epilogue chain models (DESIGN.md §9; paper Fig. 9 regime).
+#
+# These model the HBM traffic of "GEMM + a short elementwise chain" both as
+# the fused megakernel (the chain runs in the store, so intermediates never
+# round-trip HBM) and as the unfused eager sequence (every op re-reads and
+# re-writes the full activation). Weights are counted once per GEMM pass —
+# the panel-revisit refinement lives in autotune.gemm_traffic_bytes; here the
+# *difference* between plans is pure activation traffic, which revisits
+# don't change. The autotuner's select_fusion picks a plan from dma_bytes
+# alone, so any chain that stops saving bytes falls back to unfused.
 # ---------------------------------------------------------------------------
+
+
+def _chain_dict(dma_bytes: float, flops: float, fused: bool,
+                dtype_bytes: int, chip: ChipSpec) -> dict:
+    compute_s = flops / chip.peak_flops(dtype_bytes)
+    memory_s = dma_bytes / chip.hbm_bw
+    return dict(dma_bytes=int(dma_bytes), flops=flops, fused=fused,
+                compute_s=compute_s, memory_s=memory_s,
+                time_s=max(compute_s, memory_s),
+                bound="compute" if compute_s >= memory_s else "memory")
+
+
+def mlp_chain_model(*, tokens: int, d_model: int, d_ff: int,
+                    dtype_bytes: int = 2, gated: bool = True,
+                    residual: bool = True, fused: bool = True,
+                    chip: ChipSpec = V5E) -> dict:
+    """The transformer MLP hot chain: up-projection(s) + activation
+    [+ SwiGLU gating] + down-projection [+ scaled residual add].
+
+    fused (two launches):
+      dual-output up GEMM   reads x once + both up weights, writes h once
+      down GEMM             reads h + w_out [+ the residual], writes out
+    unfused (eager chain):
+      each up GEMM          re-reads x, writes its own (T, F) intermediate
+      gating/activation     re-reads the intermediates, writes h
+      down GEMM             reads h + w_out, writes out
+      [residual add         re-reads out and x, writes out]
+
+    ``residual=False`` models residual-free chains (the MoE expert FFN) —
+    neither plan is charged the add.
+    """
+    t, d, f = tokens, d_model, d_ff
+    act_td = t * d * dtype_bytes
+    act_tf = t * f * dtype_bytes
+    w_up = d * f * dtype_bytes
+    w_down = f * d * dtype_bytes
+    n_up = 2 if gated else 1
+    if fused:
+        up = act_td + n_up * w_up + act_tf
+        down = act_tf + w_down + act_td + (act_td if residual else 0)
+        total = up + down
+    else:
+        up = n_up * (act_td + w_up + act_tf)
+        glu = (3 if gated else 2) * act_tf  # read h_gate[, h_in], write h
+        down = act_tf + w_down + act_td
+        resid = 3 * act_td if residual else 0  # read out, read x, write out
+        total = up + glu + down + resid
+    flops = 2.0 * t * f * d * (n_up + 1)
+    return _chain_dict(total, flops, fused, dtype_bytes, chip)
+
+
+def qkv_rope_chain_model(*, tokens: int, d_model: int, num_heads: int,
+                         num_kv_heads: int, head_dim: int,
+                         dtype_bytes: int = 2, fused: bool = True,
+                         chip: ChipSpec = V5E) -> dict:
+    """The attention QKV-projection → RoPE prologue chain.
+
+    fused (two launches): one GEMM produces rope(x@[wq|wk]) with the
+    rotation applied to the resident output tiles, a second produces v —
+    x is read twice, q/k never round-trip HBM for the rotation. The
+    in-graph concat of wq|wk materializes a combined weight block each
+    step (write + read back), a *token-independent* cost charged to the
+    fused plan — at small token counts it outweighs the rope round trip
+    and the unfused plan wins.
+    unfused: three projection GEMMs (x read each time) + a rope pass that
+    re-reads and re-writes q and k.
+    """
+    t = tokens
+    nq = num_heads * head_dim
+    nkv = num_kv_heads * head_dim
+    x_read = t * d_model * dtype_bytes
+    w = d_model * (nq + 2 * nkv) * dtype_bytes
+    qkv_write = t * (nq + 2 * nkv) * dtype_bytes
+    tables = 2 * t * head_dim * 4  # f32 sin/cos, duplicated halves
+    if fused:
+        wqk_concat = 2 * d_model * (nq + nkv) * dtype_bytes
+        total = 2 * x_read + w + qkv_write + tables + wqk_concat
+    else:
+        rope_rw = 2 * t * (nq + nkv) * dtype_bytes
+        total = 3 * x_read + w + qkv_write + tables + rope_rw
+    flops = 2.0 * t * d_model * (nq + 2 * nkv)
+    return _chain_dict(total, flops, fused, dtype_bytes, chip)
+
+
+def gemm_epilogue_model(*, m: int, n: int, k: int, dtype_bytes: int = 2,
+                        bias: bool = False, activation: bool = False,
+                        gate: bool = False, residual: bool = False,
+                        fused: bool = True, chip: ChipSpec = V5E) -> dict:
+    """One GEMM + its epilogue chain, fused vs the eager per-op sequence
+    (the bench_gemm epilogue-sweep column)."""
+    a_b = m * k * dtype_bytes
+    w = k * n * dtype_bytes
+    out = m * n * dtype_bytes
+    n_mm = 2 if gate else 1
+    if fused:
+        total = a_b + n_mm * w + out
+        if bias:
+            total += n * dtype_bytes
+        if residual:
+            total += out
+    else:
+        total = n_mm * (a_b + w + out)      # each GEMM writes its own C
+        if gate:
+            total += 3 * out                # act(C1)*C2: read both, write h
+        elif activation:
+            total += 2 * out
+        if bias:
+            total += 2 * out + n * dtype_bytes
+        if residual:
+            total += 3 * out
+    flops = n_mm * 2.0 * m * n * k
+    return _chain_dict(total, flops, fused, dtype_bytes, chip)
+
+
+# ---------------------------------------------------------------------------
+# Memory-bound elementwise kernels (paper Fig. 9) — activation-pass counts
+# shared by bench_memory_bound (no more hand-computed byte constants there).
+# ---------------------------------------------------------------------------
+
+
+def dropout_residual_ln_traffic(rows: int, d: int, *, dtype_bytes: int = 4,
+                                fused: bool = True) -> int:
+    """Fused: read x + residual, write normed + new-residual (the keep mask
+    is generated in-kernel). Unfused eager chain: dropout (read x, write
+    xd) + residual add (read xd, read residual, write r2) + layernorm
+    (read r2, write out) = 7 activation passes."""
+    return (4 if fused else 7) * rows * d * dtype_bytes
+
+
+def rope_traffic(batch: int, heads: int, seq: int, head_dim: int, *,
+                 dtype_bytes: int = 4, fused: bool = True) -> int:
+    """Fused rotary kernel: read x, write out, stream the f32 tables once
+    per sequence block. Unfused eager: slice/negate/concat materializes the
+    rotated half (read x, write rot), then two table multiplies and an add
+    over full tensors (read x + rot, write out) = 5 passes."""
+    x_bytes = batch * heads * seq * head_dim * dtype_bytes
+    tables = 2 * seq * head_dim * 4
+    return (2 if fused else 5) * x_bytes + tables
 
 def attention_step_model(*, block_q: int, block_kv: int, head_dim: int,
                          seq_len: int, causal: bool, dtype_bytes: int = 2,

@@ -58,19 +58,31 @@ _ACC_BYTES = {"float32": 4, "bfloat16": 2}
 
 @dataclasses.dataclass(frozen=True)
 class KernelPolicy:
-    """A complete, legal-by-construction tiling strategy for one kernel kind."""
+    """A complete, legal-by-construction tiling strategy for one kernel kind.
+
+    ``epilogue`` (gemm only) is a fused store chain — any frozen object with
+    the :class:`repro.kernels.gemm.epilogue.Epilogue` protocol
+    (``extra_operand_blocks``/``extra_scratch_accumulators``/``describe``).
+    It is duck-typed here so ``repro.core`` never imports ``repro.kernels``;
+    its extra streamed blocks and second accumulator count against the VMEM
+    legality rule exactly like the A/B panels (DESIGN.md §9).
+    """
 
     op: str
     schedule: Schedule
     swizzle: SwizzleConfig = ROW_MAJOR
     in_dtype: str = "bfloat16"
     acc_dtype: str = "float32"
+    epilogue: Optional[object] = None
 
     def __post_init__(self):
         if self.op not in OP_KINDS:
             raise ValueError(f"unknown op kind {self.op!r}; have {OP_KINDS}")
         if self.acc_dtype not in _ACC_BYTES:
             raise ValueError(f"unsupported acc_dtype {self.acc_dtype!r}")
+        if self.epilogue is not None and self.op != "gemm":
+            raise ValueError(f"epilogue chains only apply to gemm policies, "
+                             f"not {self.op!r}")
 
     # -- block accessors (names per the op-kind table in the module doc) ----
     @property
@@ -106,8 +118,12 @@ class KernelPolicy:
         """(shape, dtype) of each pipelined operand block, per op kind."""
         s = self.schedule
         if self.op == "gemm":
-            return [((s.block_m, s.block_k), self.in_dtype),
-                    ((s.block_k, s.block_n), self.in_dtype)]
+            blocks = [((s.block_m, s.block_k), self.in_dtype),
+                      ((s.block_k, s.block_n), self.in_dtype)]
+            if self.epilogue is not None:
+                blocks += self.epilogue.extra_operand_blocks(
+                    s.block_m, s.block_n, s.block_k, self.in_dtype)
+            return blocks
         if self.op in ("attention_fwd", "attention_bwd", "attention_decode"):
             d = s.block_k  # head_dim by convention
             blocks = [((s.block_m, d), self.in_dtype),   # q (or do) block
@@ -132,7 +148,9 @@ class KernelPolicy:
         s = self.schedule
         acc = _ACC_BYTES[self.acc_dtype]
         if self.op == "gemm":
-            return s.block_m * s.block_n * acc
+            n_acc = 1 + (self.epilogue.extra_scratch_accumulators()
+                         if self.epilogue is not None else 0)
+            return n_acc * s.block_m * s.block_n * acc
         if self.op == "attention_fwd":
             # acc (bq, d) + running max/sum (bq, LANE) each
             return s.block_m * s.block_k * acc + 2 * s.block_m * tiles.LANE * acc
@@ -181,6 +199,8 @@ class KernelPolicy:
         s, sw = self.schedule, self.swizzle
         return {
             "op": self.op,
+            "epilogue": (self.epilogue.describe()
+                         if self.epilogue is not None else "none"),
             "schedule": s.name,
             "blocks": [s.block_m, s.block_n, s.block_k],
             "n_buffers": s.n_buffers,
@@ -194,7 +214,7 @@ class KernelPolicy:
 
     def cache_key(self) -> tuple:
         return (self.op, self.schedule, self.swizzle, self.in_dtype,
-                self.acc_dtype)
+                self.acc_dtype, self.epilogue)
 
 
 # ---------------------------------------------------------------------------
@@ -204,13 +224,15 @@ class KernelPolicy:
 def make_policy(op: str, *, block_m: int, block_n: int = 0, block_k: int = 0,
                 n_buffers: int = 2, swizzle: SwizzleConfig = ROW_MAJOR,
                 in_dtype: str = "bfloat16", acc_dtype: str = "float32",
-                name: str = "explicit") -> KernelPolicy:
+                name: str = "explicit",
+                epilogue: Optional[object] = None) -> KernelPolicy:
     """Build a policy from explicit block dims (no legality enforcement —
     call .check() to enforce; the autotuner only emits legal ones)."""
     sched = Schedule(name, n_buffers=n_buffers, block_m=block_m,
                      block_n=block_n, block_k=block_k)
     return KernelPolicy(op=op, schedule=sched, swizzle=swizzle,
-                        in_dtype=in_dtype, acc_dtype=acc_dtype)
+                        in_dtype=in_dtype, acc_dtype=acc_dtype,
+                        epilogue=epilogue)
 
 
 def legacy_policy(op: str, *, warn_what: str = "", **blocks) -> KernelPolicy:

@@ -1,3 +1,4 @@
-from .ops import gemm  # noqa: F401
-from .ref import gemm_ref  # noqa: F401
+from .epilogue import EPILOGUE_NONE, Epilogue  # noqa: F401
+from .ops import gemm, gemm_fused  # noqa: F401
+from .ref import gemm_fused_ref, gemm_ref  # noqa: F401
 from .kernel import gemm_pallas  # noqa: F401

@@ -1,0 +1,226 @@
+"""Declarative epilogue/prologue chains for the blocked GEMM megakernel.
+
+HipKittens' biggest wins are in memory-bound settings where fused kernels
+avoid HBM round trips (paper Fig. 9); ThunderKittens makes the same case for
+"AI kernels = GEMM + a short elementwise chain" on NVIDIA. An
+:class:`Epilogue` is that chain, declared as a frozen (hashable, jit-static)
+spec and applied inside the GEMM kernel's final ``@pl.when(k == nk-1)``
+store — the output tile is transformed while still resident in VMEM, so the
+consumer ops (bias, activation, SwiGLU gating, residual add, fp8 dequant,
+RoPE rotation) never re-read the activation from HBM.
+
+Canonical chain order (each stage optional):
+
+    acc --[scale]--> --[+bias]--> --[rope]--> --[act | act*acc2]--> --[+residual]--> store
+
+  * ``scale``    — multiply by a runtime scalar. Doubles as the fp8 dequant
+                   scale and as the model's residual_scale (out = s·C + res).
+  * ``bias``     — add a broadcast (1, N) row vector.
+  * ``rope``     — rotary rotation applied per ``head_dim`` column chunk
+                   (the fused QKV→RoPE *prologue* of attention: q/k tiles are
+                   rotated before they ever hit HBM). sin/cos are streamed as
+                   (M, head_dim) row blocks.
+  * ``gate``     — dual-output GEMM: the kernel accumulates a second
+                   product A@B2 and stores ``act(acc) * acc2`` (SwiGLU/GeGLU
+                   fusing the two MLP up-projections into one pass over A).
+  * ``activation`` — plain silu/gelu/relu when not gated.
+  * ``residual`` — add a streamed (M, N) tile.
+
+The same :meth:`Epilogue.apply` implements the chain for both the Pallas
+kernel (on VMEM tiles) and the jnp oracle (on full arrays) — every stage is
+elementwise or row-broadcast, so tile-wise application is exact.
+
+Extra-operand convention (the order kernels and ops agree on):
+``b2?, bias?, residual?, scale?, sin?, cos?`` — see :meth:`operand_names`.
+
+Legality (DESIGN.md §9): the extra streamed blocks and the second
+accumulator count against the VMEM budget via
+:meth:`extra_operand_blocks` / :meth:`extra_scratch_accumulators`, which
+``KernelPolicy`` consults when ``policy.epilogue`` is set; ``rope`` further
+requires ``block_n % head_dim == 0`` (the rotation reshapes the tile to
+whole heads), enforced by :meth:`check_blocks`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+ACTIVATIONS = ("none", "silu", "gelu", "relu")
+
+# f32-in/f32-out activation bodies; gelu matches models/common.act_fn
+# (approximate=True).
+_ACT_FNS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+def rope_rotate(x, sin, cos, head_dim: int):
+    """Rotate-half RoPE on a (rows, cols) tile whose columns are whole heads.
+
+    sin/cos: (rows, head_dim) duplicated-halves tables (one row per token
+    row of the tile). Identical math to kernels.rope.ref.rope_ref, applied
+    per head_dim-sized column chunk.
+    """
+    rows, cols = x.shape
+    half = head_dim // 2
+    xh = x.reshape(rows, cols // head_dim, head_dim)
+    x1 = xh[..., :half]
+    x2 = xh[..., half:]
+    rotated = jnp.concatenate([-x2, x1], axis=-1)
+    out = xh * cos[:, None, :] + rotated * sin[:, None, :]
+    return out.reshape(rows, cols)
+
+
+@dataclasses.dataclass(frozen=True)
+class Epilogue:
+    """A frozen, hashable epilogue chain spec (jit-static by construction)."""
+
+    bias: bool = False
+    activation: str = "none"     # 'none' | 'silu' | 'gelu' | 'relu'
+    gate: bool = False           # dual-output GEMM: store act(acc) * acc2
+    residual: bool = False
+    scale: bool = False          # runtime scalar: fp8 dequant / residual_scale
+    rope: bool = False           # per-head rotary rotation (QKV prologue)
+    head_dim: int = 0            # required (and >0, even) when rope=True
+
+    def __post_init__(self):
+        if self.activation not in ACTIVATIONS:
+            raise ValueError(f"unknown activation {self.activation!r}; "
+                             f"have {ACTIVATIONS}")
+        if self.gate and self.activation == "none":
+            raise ValueError("gate=True needs an activation (SwiGLU/GeGLU "
+                             "stores act(acc) * acc2)")
+        if self.gate and self.bias:
+            raise ValueError("gate=True excludes bias (the dual-output "
+                             "up-projection GEMM is bias-free)")
+        if self.rope:
+            if self.gate or self.residual or self.activation != "none":
+                raise ValueError("rope composes only with bias/scale (it is "
+                                 "the QKV-projection prologue, not an MLP "
+                                 "epilogue)")
+            if self.head_dim <= 0 or self.head_dim % 2:
+                raise ValueError(f"rope=True needs an even head_dim > 0, "
+                                 f"got {self.head_dim}")
+        elif self.head_dim:
+            raise ValueError("head_dim is only meaningful with rope=True")
+
+    # -- identity / shape of the chain -------------------------------------
+    @property
+    def is_identity(self) -> bool:
+        return not (self.bias or self.gate or self.residual or self.scale
+                    or self.rope or self.activation != "none")
+
+    @property
+    def n_accumulators(self) -> int:
+        return 2 if self.gate else 1
+
+    def operand_names(self) -> tuple:
+        """Runtime extra operands, in the canonical kernel order."""
+        names = []
+        if self.gate:
+            names.append("b2")
+        if self.bias:
+            names.append("bias")
+        if self.residual:
+            names.append("residual")
+        if self.scale:
+            names.append("scale")
+        if self.rope:
+            names += ["sin", "cos"]
+        return tuple(names)
+
+    # -- VMEM legality accounting (consumed by KernelPolicy) ----------------
+    def extra_operand_blocks(self, block_m: int, block_n: int, block_k: int,
+                             in_dtype: str) -> list:
+        """(shape, dtype) of each extra pipelined block, for vmem budgeting."""
+        blocks = []
+        if self.gate:
+            blocks.append(((block_k, block_n), in_dtype))
+        if self.bias:
+            blocks.append(((1, block_n), in_dtype))
+        if self.residual:
+            blocks.append(((block_m, block_n), in_dtype))
+        if self.scale:
+            blocks.append(((1, 1), "float32"))
+        if self.rope:
+            blocks += [((block_m, self.head_dim), "float32")] * 2
+        return blocks
+
+    def extra_scratch_accumulators(self) -> int:
+        """Accumulators beyond the first (the gate path pins a second)."""
+        return self.n_accumulators - 1
+
+    def check_blocks(self, block_n: int) -> None:
+        """Raise on block shapes the chain cannot legally tile."""
+        if self.rope and block_n % self.head_dim:
+            raise ValueError(
+                f"rope epilogue needs block_n % head_dim == 0 "
+                f"(got block_n={block_n}, head_dim={self.head_dim})")
+
+    # -- modeled HBM traffic of the extra streamed operands -----------------
+    def extra_read_bytes(self, m: int, n: int, dtype_bytes: int) -> int:
+        """Bytes the fused kernel reads beyond A/B panels and the C store.
+
+        The gate operand (B2) is *not* counted here — it streams like B and
+        is accounted at the panel level (doubled B traffic) by the scorer.
+        """
+        extra = 0
+        if self.bias:
+            extra += n * dtype_bytes
+        if self.residual:
+            extra += m * n * dtype_bytes
+        if self.scale:
+            extra += 4
+        if self.rope:
+            extra += 2 * m * self.head_dim * 4
+        return extra
+
+    # -- the chain itself ---------------------------------------------------
+    def apply(self, acc, acc2=None, *, bias=None, residual=None, scale=None,
+              sin=None, cos=None):
+        """Run the chain on an fp32 accumulator (tile or full array).
+
+        All operands must already be fp32; broadcasting rules make the same
+        code exact for a (block_m, block_n) tile and the full (M, N) array.
+        """
+        out = acc
+        if self.scale:
+            out = out * scale
+        if self.bias:
+            out = out + bias
+        if self.rope:
+            out = rope_rotate(out, sin, cos, self.head_dim)
+        if self.gate:
+            g2 = acc2 * scale if self.scale else acc2
+            out = _ACT_FNS[self.activation](out) * g2
+        elif self.activation != "none":
+            out = _ACT_FNS[self.activation](out)
+        if self.residual:
+            out = out + residual
+        return out
+
+    def describe(self) -> str:
+        """Short tag for reports/benchmark rows, e.g. 'bias+silu*gate+res'."""
+        if self.is_identity:
+            return "none"
+        parts = []
+        if self.scale:
+            parts.append("scale")
+        if self.bias:
+            parts.append("bias")
+        if self.rope:
+            parts.append(f"rope{self.head_dim}")
+        if self.gate:
+            parts.append(f"{self.activation}*gate")
+        elif self.activation != "none":
+            parts.append(self.activation)
+        if self.residual:
+            parts.append("res")
+        return "+".join(parts)
+
+
+EPILOGUE_NONE = Epilogue()

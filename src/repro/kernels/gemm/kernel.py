@@ -1,4 +1,5 @@
-"""Blocked GEMM Pallas kernel with Algorithm-1 grid swizzling (paper §3.4, E.1).
+"""Blocked GEMM Pallas kernel with Algorithm-1 grid swizzling (paper §3.4, E.1)
+and a fused epilogue/prologue store (DESIGN.md §9).
 
 Structure mirrors the paper's BF16 GEMM listing (Fig. 21), TPU-adapted:
   * the thread-block output tile        → the per-grid-step output block
@@ -8,6 +9,13 @@ Structure mirrors the paper's BF16 GEMM listing (Fig. 21), TPU-adapted:
     applied in the BlockSpec index_maps so traversal order (and with it the
     DMA revisit pattern) matches the policy's SwizzleConfig
   * pinned AGPR accumulators            → pinned fp32 VMEM scratch accumulator
+    (two of them for the dual-output SwiGLU GEMM)
+
+The final ``@pl.when(k == nk-1)`` store runs the policy's
+:class:`~repro.kernels.gemm.epilogue.Epilogue` chain (bias, activation,
+gated multiply, residual, dequant scale, RoPE rotation) on the fp32
+accumulator while it is still VMEM-resident — the whole point of the fused
+megakernel paths: consumers never re-read the activation from HBM.
 
 Every grid/BlockSpec dimension here is derived from a
 :class:`~repro.core.policy.KernelPolicy`; the old ``block_m/n/k`` + ``swizzle``
@@ -16,6 +24,7 @@ keywords survive as a deprecation shim that builds an explicit policy.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -25,54 +34,117 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core import tiles
 from repro.core.grid_swizzle import SwizzleConfig, ROW_MAJOR
 from repro.core.policy import KernelPolicy, resolve_policy
+from .epilogue import EPILOGUE_NONE, Epilogue
 
 
-def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int, out_dtype):
+def _upcast(x):
+    """fp8 operands feed the MXU as bf16 (exactly representable)."""
+    return x.astype(jnp.bfloat16) if x.dtype.itemsize == 1 else x
+
+
+def _gemm_kernel(*refs, nk: int, out_dtype, epilogue: Epilogue):
+    """refs: a, b, *extra inputs (epilogue.operand_names() order), o,
+    acc[, acc2]."""
+    refs = list(refs)
+    a_ref, b_ref = refs[0], refs[1]
+    extras = dict(zip(epilogue.operand_names(), refs[2:]))
+    gate = epilogue.gate
+    o_ref = refs[-3] if gate else refs[-2]
+    acc_ref = refs[-2] if gate else refs[-1]
+    acc2_ref = refs[-1] if gate else None
+
     k = pl.program_id(1)
 
     @pl.when(k == 0)
     def _zero():
         acc_ref[...] = jnp.zeros_like(acc_ref)
+        if gate:
+            acc2_ref[...] = jnp.zeros_like(acc2_ref)
 
-    a = a_ref[...]
-    b = b_ref[...]
-    acc_ref[...] += jnp.dot(a.astype(jnp.bfloat16) if a.dtype.itemsize == 1 else a,
-                            b.astype(jnp.bfloat16) if b.dtype.itemsize == 1 else b,
+    a = _upcast(a_ref[...])
+    acc_ref[...] += jnp.dot(a, _upcast(b_ref[...]),
                             preferred_element_type=jnp.float32)
+    if gate:
+        acc2_ref[...] += jnp.dot(a, _upcast(extras["b2"][...]),
+                                 preferred_element_type=jnp.float32)
 
     @pl.when(k == nk - 1)
     def _store():
-        o_ref[...] = acc_ref[...].astype(out_dtype)
+        kw = {}
+        if epilogue.bias:
+            kw["bias"] = extras["bias"][...].astype(jnp.float32)
+        if epilogue.residual:
+            kw["residual"] = extras["residual"][...].astype(jnp.float32)
+        if epilogue.scale:
+            kw["scale"] = extras["scale"][0, 0]
+        if epilogue.rope:
+            kw["sin"] = extras["sin"][...].astype(jnp.float32)
+            kw["cos"] = extras["cos"][...].astype(jnp.float32)
+        out = epilogue.apply(acc_ref[...],
+                             acc2_ref[...] if gate else None, **kw)
+        o_ref[...] = out.astype(out_dtype)
 
 
-def _fit_policy(policy: KernelPolicy, m: int, n: int, k: int) -> tuple:
-    """Clamp the policy's blocks to the problem (paper tiles assume the
-    problem tiles the blocks; small problems shrink to a single block)."""
-    bm = min(policy.block_m, m)
-    bn = min(policy.block_n, n)
-    bk = min(policy.block_k, k)
-    if m % bm or n % bn or k % bk:
-        raise ValueError(f"problem {m}x{n}x{k} not divisible by policy blocks "
-                         f"{bm}x{bn}x{bk}")
+def _fit_block(dim: int, want: int, multiple: int = 1,
+               prefer: int = 1) -> int:
+    """Largest block ≤ ``want`` that divides ``dim``, is a ``multiple``
+    multiple (hard constraint, e.g. rope's whole-head rule), and — when one
+    exists — a ``prefer`` multiple (soft native-alignment preference; a
+    problem dim with no aligned divisor is itself unaligned, which waives
+    tiles.block_spec's strict gate). Always succeeds: 1 divides everything,
+    and every rope-constrained n is itself a head_dim multiple."""
+    want = max(1, min(want, dim))
+    soft = multiple * prefer // math.gcd(multiple, prefer)  # lcm
+    for req in (soft, multiple):
+        for b in range(want, 0, -1):
+            if dim % b == 0 and b % req == 0:
+                return b
+    return dim
+
+
+def _fit_policy(policy: KernelPolicy, m: int, n: int, k: int,
+                epilogue: Epilogue = EPILOGUE_NONE) -> tuple:
+    """Clamp the policy's blocks to the largest divisor blocks of the problem.
+
+    A policy tuned for one shape-bucket stays usable on any shape: blocks
+    shrink to the largest divisor ≤ the tuned block instead of raising on
+    non-divisible problems (the autotuner emits exact-divisor candidates, so
+    tuned launches never pay the shrink). Lane/sublane-aligned divisors are
+    preferred (bk/bn sit in a block minor dim, bm only in sublane rows);
+    the rope epilogue additionally pins block_n to whole heads.
+    """
+    n_multiple = epilogue.head_dim if epilogue.rope else 1
+    bm = _fit_block(m, policy.block_m, prefer=32)          # max sublane
+    bn = _fit_block(n, policy.block_n, n_multiple, prefer=tiles.LANE)
+    bk = _fit_block(k, policy.block_k, prefer=tiles.LANE)
+    epilogue.check_blocks(bn)
     return bm, bn, bk
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("policy", "out_dtype", "interpret"))
-def _gemm_pallas(a: jax.Array, b: jax.Array, *, policy: KernelPolicy,
-                 out_dtype, interpret: bool) -> jax.Array:
+                   static_argnames=("policy", "out_dtype", "interpret",
+                                    "epilogue"))
+def _gemm_pallas(a: jax.Array, b: jax.Array, *extras, policy: KernelPolicy,
+                 out_dtype, interpret: bool,
+                 epilogue: Epilogue = EPILOGUE_NONE) -> jax.Array:
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
-    block_m, block_n, block_k = _fit_policy(policy, m, n, k)
+    assert len(extras) == len(epilogue.operand_names()), \
+        (epilogue.operand_names(), len(extras))
+    block_m, block_n, block_k = _fit_policy(policy, m, n, k, epilogue)
     num_rows, num_cols, nk = m // block_m, n // block_n, k // block_k
     swizzle = policy.swizzle
 
-    # Tab. 2 feasibility rule at the policy's pipeline depth.
+    # Tab. 2 feasibility rule at the policy's pipeline depth, including the
+    # epilogue's extra streamed blocks and second accumulator.
     tiles.check_vmem_budget(
-        [((block_m, block_k), a.dtype), ((block_k, block_n), b.dtype)],
+        [((block_m, block_k), a.dtype), ((block_k, block_n), b.dtype)]
+        + epilogue.extra_operand_blocks(block_m, block_n, block_k,
+                                        str(a.dtype)),
         n_buffers=policy.n_buffers,
-        scratch_bytes=block_m * block_n * 4, what="gemm")
+        scratch_bytes=epilogue.n_accumulators * block_m * block_n * 4,
+        what="gemm")
 
     def row_col(i):
         return swizzle.remap(i, num_rows, num_cols)
@@ -89,27 +161,59 @@ def _gemm_pallas(a: jax.Array, b: jax.Array, *, policy: KernelPolicy,
         r, c = row_col(i)
         return (r, c)
 
-    kernel = functools.partial(_gemm_kernel, nk=nk, out_dtype=out_dtype)
+    def row_map(i, kk):
+        r, _ = row_col(i)
+        return (r, 0)
+
+    def col_map(i, kk):
+        _, c = row_col(i)
+        return (0, c)
+
+    in_specs = [
+        tiles.block_spec((block_m, block_k), a_map, a.dtype,
+                         allow_ragged_minor=tiles.shape_ragged(
+                             m, k, a.dtype)),
+        tiles.block_spec((block_k, block_n), b_map, b.dtype,
+                         allow_ragged_minor=tiles.shape_ragged(
+                             k, n, b.dtype)),
+    ]
+    for name, arr in zip(epilogue.operand_names(), extras):
+        if name == "b2":
+            spec = tiles.block_spec((block_k, block_n), b_map, arr.dtype,
+                                    allow_ragged_minor=tiles.shape_ragged(
+                                        k, n, arr.dtype))
+        elif name == "bias":
+            spec = tiles.block_spec((1, block_n), col_map, arr.dtype,
+                                    allow_ragged_minor=True)
+        elif name == "residual":
+            spec = tiles.block_spec((block_m, block_n), o_map, arr.dtype,
+                                    allow_ragged_minor=tiles.shape_ragged(
+                                        m, n, arr.dtype))
+        elif name == "scale":
+            spec = tiles.block_spec((1, 1), lambda i, kk: (0, 0), arr.dtype,
+                                    allow_ragged_minor=True)
+        else:  # sin / cos: (M, head_dim) row blocks
+            spec = tiles.block_spec((block_m, epilogue.head_dim), row_map,
+                                    arr.dtype, allow_ragged_minor=True)
+        in_specs.append(spec)
+
+    scratch = [pltpu.VMEM((block_m, block_n), jnp.float32)
+               for _ in range(epilogue.n_accumulators)]
+    kernel = functools.partial(_gemm_kernel, nk=nk, out_dtype=out_dtype,
+                               epilogue=epilogue)
     return pl.pallas_call(
         kernel,
         grid=(num_rows * num_cols, nk),
-        in_specs=[
-            tiles.block_spec((block_m, block_k), a_map, a.dtype,
-                             allow_ragged_minor=tiles.shape_ragged(
-                                 m, k, a.dtype)),
-            tiles.block_spec((block_k, block_n), b_map, b.dtype,
-                             allow_ragged_minor=tiles.shape_ragged(
-                                 k, n, b.dtype)),
-        ],
+        in_specs=in_specs,
         out_specs=tiles.block_spec((block_m, block_n), o_map, out_dtype,
                                    allow_ragged_minor=tiles.shape_ragged(
                                        m, n, out_dtype)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        scratch_shapes=scratch,
         compiler_params=tiles.compiler_params(
             dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
-    )(a, b)
+    )(a, b, *extras)
 
 
 def gemm_pallas(a: jax.Array, b: jax.Array, *,
@@ -123,6 +227,11 @@ def gemm_pallas(a: jax.Array, b: jax.Array, *,
     Explicit ``block_*``/``swizzle`` is the deprecated pre-policy surface
     (builds an equivalent explicit policy); with neither a policy nor blocks,
     the autotuner resolves one per shape-bucket.
+
+    This is the *plain* GEMM: a policy that carries an epilogue contributes
+    only its blocks/swizzle here — the chain is ignored (it needs operands
+    this signature cannot supply). Epilogue-fused launches go through
+    :func:`repro.kernels.gemm.ops.gemm_fused`.
     """
     if policy is None:
         m, k = a.shape
@@ -135,4 +244,4 @@ def gemm_pallas(a: jax.Array, b: jax.Array, *,
         policy = resolve_policy("gemm", (m, n, k), a.dtype,
                                 legacy_blocks=legacy, warn_what="gemm_pallas")
     return _gemm_pallas(a, b, policy=policy, out_dtype=out_dtype,
-                        interpret=interpret)
+                        interpret=interpret, epilogue=EPILOGUE_NONE)

@@ -1,35 +1,34 @@
-"""Public GEMM op: policy-aware dispatch with a reference path.
+"""Public GEMM ops: policy-aware dispatch with a reference path.
 
 ``mode``:
-  * "reference"        — jnp.dot (used by the 512-device dry-run; XLA fuses)
+  * "reference"        — jnp (used by the 512-device dry-run; XLA fuses)
   * "pallas_interpret" — the Pallas kernel, interpret=True (CPU validation)
   * "pallas_tpu"       — the Pallas kernel lowered for real TPUs
 
 Policy resolution order (DESIGN.md §5): explicit ``policy`` > legacy
 ``schedule``/``swizzle`` keywords (deprecation shim) > the analytic autotuner
 (``autotune.select_policy``, memoized per shape-bucket).
+
+:func:`gemm_fused` is the megakernel entry point (DESIGN.md §9): one GEMM
+launch whose store runs a declarative :class:`Epilogue` chain — bias,
+activation, dual-output SwiGLU gating, residual add, fp8 dequant scale, and
+the QKV→RoPE prologue rotation — so consumers never re-read the activation
+from HBM.
 """
 from __future__ import annotations
 
+import functools
+
+import jax
 import jax.numpy as jnp
 
 from repro.core import autotune
 from repro.core.grid_swizzle import SwizzleConfig, ROW_MAJOR, best_window
 from repro.core.policy import KernelPolicy, make_policy
 from repro.core.schedule import Schedule
-from .kernel import gemm_pallas
-from .ref import gemm_ref
-
-
-def _fit_block(dim: int, want: int, align: int) -> int:
-    """Largest block ≤ want that divides dim and is ``align``-aligned."""
-    want = min(want, dim)
-    for cand in range(want - want % align, 0, -align):
-        if dim % cand == 0:
-            return cand
-    if dim % align == 0:
-        return align
-    raise ValueError(f"dim {dim} not divisible by any {align}-aligned block")
+from .epilogue import EPILOGUE_NONE, Epilogue
+from .kernel import _fit_block, _gemm_pallas, gemm_pallas
+from .ref import gemm_fused_ref, gemm_ref
 
 
 def _policy_from_schedule(schedule: Schedule, swizzle, m, n, k,
@@ -41,9 +40,9 @@ def _policy_from_schedule(schedule: Schedule, swizzle, m, n, k,
         "gemm: the schedule=/swizzle= keywords are deprecated; pass "
         "policy=KernelPolicy(...) (or neither, to use the autotuner)",
         DeprecationWarning, stacklevel=3)
-    bm = _fit_block(m, schedule.block_m, 128)
-    bn = _fit_block(n, schedule.block_n, 128)
-    bk = _fit_block(k, schedule.block_k, 128)
+    bm = _fit_block(m, schedule.block_m, prefer=128)
+    bn = _fit_block(n, schedule.block_n, prefer=128)
+    bk = _fit_block(k, schedule.block_k, prefer=128)
     if swizzle == "auto":
         num_rows, num_cols = max(1, m // bm), max(1, n // bn)
         itemsize = jnp.dtype(dtype).itemsize
@@ -77,3 +76,89 @@ def gemm(a, b, *, policy: KernelPolicy | None = None,
             policy = autotune.select_policy("gemm", (m, n, k), str(a.dtype))
     return gemm_pallas(a, b, policy=policy, out_dtype=out_dtype,
                        interpret=(mode == "pallas_interpret"))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _gemm_fused(policy, out_dtype, interpret, epilogue, a, b, extras):
+    return _gemm_pallas(a, b, *extras, policy=policy, out_dtype=out_dtype,
+                        interpret=interpret, epilogue=epilogue)
+
+
+def _gemm_fused_fwd(policy, out_dtype, interpret, epilogue, a, b, extras):
+    out = _gemm_pallas(a, b, *extras, policy=policy, out_dtype=out_dtype,
+                       interpret=interpret, epilogue=epilogue)
+    return out, (a, b, extras)
+
+
+def _gemm_fused_bwd(policy, out_dtype, interpret, epilogue, res, g):
+    """Backward = autodiff of the unfused jnp oracle (the fused store chain
+    is a short elementwise graph whose VJP XLA fuses well; the forward
+    GEMMs are recomputed here, which the train path pays anyway under
+    remat). Keeps the fused MLP/QKV paths trainable without a hand-written
+    chain transpose."""
+    a, b, extras = res
+
+    def ref_fn(a, b, extras):
+        kw = dict(zip(epilogue.operand_names(), extras))
+        return gemm_fused_ref(a, b, epilogue=epilogue, out_dtype=out_dtype,
+                              **kw)
+
+    _, vjp = jax.vjp(ref_fn, a, b, extras)
+    return vjp(g)
+
+
+_gemm_fused.defvjp(_gemm_fused_fwd, _gemm_fused_bwd)
+
+
+def gemm_fused(a, b, *, epilogue: Epilogue, b2=None, bias=None, residual=None,
+               scale=None, sin=None, cos=None,
+               policy: KernelPolicy | None = None,
+               out_dtype=jnp.bfloat16, mode: str = "pallas_interpret"):
+    """C = epilogue(A @ B) in one kernel launch (DESIGN.md §9).
+
+    Extra operands per epilogue flag: ``gate`` → ``b2`` (K, N) second weight
+    (dual-output SwiGLU GEMM, C = act(A@B) * (A@B2)); ``bias`` → (N,);
+    ``residual`` → (M, N); ``scale`` → scalar (fp8 dequant / residual
+    scale); ``rope`` → ``sin``/``cos`` (M, head_dim) duplicated-halves
+    tables (the fused QKV→RoPE prologue).
+
+    'reference' mode runs the unfused jnp oracle (full HBM round trips);
+    the pallas modes run the chain inside the kernel's final store. With
+    ``policy=None`` the autotuner resolves an epilogue-aware policy (extra
+    operands and the second accumulator count against the VMEM budget).
+    """
+    provided = dict(b2=b2, bias=bias, residual=residual, scale=scale,
+                    sin=sin, cos=cos)
+    wanted = epilogue.operand_names()
+    for name, val in provided.items():
+        if (val is not None) != (name in wanted):
+            raise ValueError(
+                f"gemm_fused: operand {name!r} "
+                f"{'missing for' if name in wanted else 'not accepted by'} "
+                f"epilogue {epilogue.describe()!r}")
+    if mode == "reference":
+        return gemm_fused_ref(a, b, epilogue=epilogue, b2=b2, bias=bias,
+                              residual=residual, scale=scale, sin=sin,
+                              cos=cos, out_dtype=out_dtype)
+    m, k = a.shape
+    _, n = b.shape
+    if policy is None:
+        policy = autotune.select_policy("gemm", (m, n, k), str(a.dtype),
+                                        epilogue=epilogue)
+    elif policy.epilogue is not None and policy.epilogue != epilogue:
+        # two sources of truth: the explicit chain argument must match the
+        # chain the policy's legality/traffic accounting was done for
+        raise ValueError(
+            f"gemm_fused: policy carries epilogue "
+            f"{policy.epilogue.describe()!r} but the call passes "
+            f"{epilogue.describe()!r}")
+    extras = []
+    for name in wanted:
+        val = provided[name]
+        if name == "bias":
+            val = jnp.asarray(val).reshape(1, -1)
+        elif name == "scale":
+            val = jnp.asarray(val, jnp.float32).reshape(1, 1)
+        extras.append(val)
+    return _gemm_fused(policy, out_dtype, mode == "pallas_interpret",
+                       epilogue, a, b, tuple(extras))

@@ -1,7 +1,38 @@
-"""Pure-jnp oracle for the GEMM kernel."""
+"""Pure-jnp oracles for the GEMM kernel and its fused epilogue chains."""
 import jax.numpy as jnp
+
+from .epilogue import EPILOGUE_NONE, Epilogue
 
 
 def gemm_ref(a, b, out_dtype=jnp.bfloat16):
     return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
                    preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def gemm_fused_ref(a, b, *, epilogue: Epilogue = EPILOGUE_NONE, b2=None,
+                   bias=None, residual=None, scale=None, sin=None, cos=None,
+                   out_dtype=jnp.bfloat16):
+    """Unfused oracle for :func:`repro.kernels.gemm.ops.gemm_fused`.
+
+    Materializes the full fp32 GEMM result(s), then runs the identical
+    epilogue chain on the whole array — the HBM-round-trip version the fused
+    kernel eliminates. Operand shapes: bias (N,) or (1, N); residual (M, N);
+    scale scalar; sin/cos (M, head_dim) duplicated-halves tables.
+    """
+    acc = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    acc2 = None
+    if epilogue.gate:
+        acc2 = jnp.dot(a.astype(jnp.float32), b2.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+    kw = {}
+    if epilogue.bias:
+        kw["bias"] = jnp.asarray(bias, jnp.float32).reshape(1, -1)
+    if epilogue.residual:
+        kw["residual"] = residual.astype(jnp.float32)
+    if epilogue.scale:
+        kw["scale"] = jnp.asarray(scale, jnp.float32).reshape(())
+    if epilogue.rope:
+        kw["sin"] = jnp.asarray(sin, jnp.float32)
+        kw["cos"] = jnp.asarray(cos, jnp.float32)
+    return epilogue.apply(acc, acc2, **kw).astype(out_dtype)

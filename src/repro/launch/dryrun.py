@@ -188,6 +188,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     hlo_flops_total = roof.flops_per_chip * n_chips
     # the kernel policies this cell resolves to (autotuner choice per bucket)
     policies = rf.policy_cell_report(cfg, shape)
+    # fused-vs-unfused modeled traffic for the hot GEMM chains (DESIGN.md §9)
+    fusion = rf.fusion_cell_report(cfg, shape)
     record.update(
         status="ok", n_chips=n_chips, compile_s=round(dt, 1),
         memory=mem, roofline=roof.as_dict(),
@@ -195,7 +197,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         useful_flops_ratio=(model_flops / hlo_flops_total
                             if hlo_flops_total else None),
         params=cfg.param_count(), active_params=cfg.active_param_count(),
-        policies=policies,
+        policies=policies, fusion=fusion,
     )
     if verbose:
         print(f"[dryrun] {arch} × {shape_name} × {mesh_kind}: "
@@ -213,6 +215,10 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
             f"{op}: {p['schedule']}{tuple(p['blocks'])} {p['swizzle']}"
             for op, p in policies.items())
         print(f"  policies: {pol_str or 'none (attention-free, no norm)'}")
+        fus_str = "; ".join(
+            f"{chain}: {f['plan']} {f['traffic_reduction']}x"
+            for chain, f in fusion.items())
+        print(f"  fusion: {fus_str or 'none (no fusable GEMM chains)'}")
     return record
 
 

@@ -140,6 +140,43 @@ def policy_cell_report(cfg, shape) -> dict:
     return report
 
 
+def fusion_cell_report(cfg, shape) -> dict:
+    """Per-cell fusion factors for the hot GEMM chains (DESIGN.md §9).
+
+    For each chain the epilogue subsystem can fuse (MLP/SwiGLU up+down,
+    QKV→RoPE) this reports the modeled HBM traffic of the fused megakernel
+    plan vs the unfused eager chain, and which plan the autotuner picks
+    from dma_bytes alone. Recorded next to the HLO roofline terms by the
+    dry-run: the HLO terms say where the model sits, these say how much of
+    the memory term the fused paths remove.
+    """
+    from repro.core import autotune
+
+    dtype = getattr(cfg, "compute_dtype", "bfloat16")
+    tokens = shape.global_batch * shape.seq_len
+    dm = getattr(cfg, "d_model", 0)
+    d_ff = getattr(cfg, "d_ff", 0) or 0
+    report = {}
+
+    def cell(plan):
+        return {"plan": plan["plan"],
+                "fused_bytes": plan["fused_bytes"],
+                "unfused_bytes": plan["unfused_bytes"],
+                "traffic_reduction": round(plan["traffic_reduction"], 3)}
+
+    if dm and d_ff:
+        gated = getattr(cfg, "mlp_act", "swiglu") in ("swiglu", "geglu")
+        report["mlp"] = cell(autotune.select_fusion(
+            "mlp", (tokens, dm, d_ff, gated), dtype))
+    h = getattr(cfg, "num_heads", 0)
+    d = getattr(cfg, "head_dim", 0) or 0
+    if dm and h and d and getattr(cfg, "rope_style", "none") == "half":
+        hkv = getattr(cfg, "num_kv_heads", h) or h
+        report["qkv_rope"] = cell(autotune.select_fusion(
+            "qkv_rope", (tokens, dm, h, hkv, d), dtype))
+    return report
+
+
 def _policy_signature(cfg, shape, op, dtype):
     from repro.core.autotune import OpSignature
 

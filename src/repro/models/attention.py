@@ -92,6 +92,51 @@ def project_qkv(cfg, p, x, kv_input=None):
     return q, k, v
 
 
+def fused_project_qkv_rope(cfg, p, x, positions, mode):
+    """QKV projection with the RoPE *prologue* fused into the GEMM store
+    (DESIGN.md §9): q and k project through ONE wide GEMM over [wq|wk]
+    whose output tiles are rotated while still VMEM-resident — the rotated
+    q/k never round-trip HBM between projection and attention. v projects
+    through a plain (bias-only) fused GEMM.
+
+    Applies only to full-rotation RoPE ('half' style) on per-layer (2-D)
+    weights, and only when the autotuner's chain model picks the fused plan
+    from modeled dma_bytes; returns None otherwise so callers fall back to
+    the unfused oracle path (project_qkv + _apply_rope).
+    """
+    from repro.core import autotune
+    from repro.kernels.gemm import Epilogue, gemm_fused
+
+    if cfg.rope_style != "half" or p["wq"].ndim != 2:
+        return None
+    b, s, d = x.shape
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    if positions.shape[0] != s:
+        return None
+    plan = autotune.select_fusion("qkv_rope", (b * s, d, h, hkv, hd),
+                                  str(x.dtype))
+    if plan["plan"] != "fused":
+        return None
+    x2 = x.reshape(b * s, d)
+    sin, cos = rope_tables(positions, hd, cfg.rope_theta)
+    # one table row per flattened (batch, seq) token row of the GEMM
+    sin_m = jnp.tile(sin, (b, 1))
+    cos_m = jnp.tile(cos, (b, 1))
+    has_bias = "bq" in p
+    wqk = jnp.concatenate([p["wq"], p["wk"]], axis=1)
+    bias_qk = jnp.concatenate([p["bq"], p["bk"]]) if has_bias else None
+    qk = gemm_fused(x2, wqk, epilogue=Epilogue(bias=has_bias, rope=True,
+                                               head_dim=hd),
+                    bias=bias_qk, sin=sin_m, cos=cos_m,
+                    out_dtype=x.dtype, mode=mode)
+    v = gemm_fused(x2, p["wv"], epilogue=Epilogue(bias=has_bias),
+                   bias=p.get("bv"), out_dtype=x.dtype, mode=mode)
+    q = qk[:, : h * hd].reshape(b, s, h * hd)
+    k = qk[:, h * hd:].reshape(b, s, hkv * hd)
+    return (_split_heads(q, h, hd), _split_heads(k, hkv, hd),
+            _split_heads(v.reshape(b, s, hkv * hd), hkv, hd))
+
+
 def attention_layer(cfg, p, x, *, causal: bool = True,
                     window: int | None = None, kv_input=None,
                     positions=None, mode: str = "reference",
@@ -104,11 +149,19 @@ def attention_layer(cfg, p, x, *, causal: bool = True,
     trace-time call agree (DESIGN.md §5).
     """
     s = x.shape[1]
-    q, k, v = project_qkv(cfg, p, x, kv_input)
+    qkv = None
     if use_rope and kv_input is None:
         if positions is None:
             positions = jnp.arange(s)
-        q, k = _apply_rope(cfg, q, k, positions, mode)
+        if mode != "reference":
+            # fused QKV→RoPE prologue (DESIGN.md §9); None -> unfused path
+            qkv = fused_project_qkv_rope(cfg, p, x, positions, mode)
+    if qkv is not None:
+        q, k, v = qkv
+    else:
+        q, k, v = project_qkv(cfg, p, x, kv_input)
+        if use_rope and kv_input is None:
+            q, k = _apply_rope(cfg, q, k, positions, mode)
     out = attention_op(q, k, v, causal=causal, window=window,
                        policy=policy, mode=mode)
     return _merge_heads(out) @ p["wo"]

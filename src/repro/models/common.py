@@ -119,14 +119,88 @@ def act_fn(name: str):
     raise ValueError(name)
 
 
-def mlp_forward(cfg, p, x):
-    """Gated (swiglu/geglu) or plain MLP. p: params subtree with w_in/w_gate/w_out."""
+# Config activation name -> epilogue activation name. Exhaustive on purpose:
+# an activation act_fn doesn't know must not silently fuse as something else.
+_EPILOGUE_ACT = {"swiglu": "silu", "silu": "silu",
+                 "geglu": "gelu", "gelu": "gelu"}
+
+
+def _act_name(mlp_act: str) -> str:
+    if mlp_act not in _EPILOGUE_ACT:
+        raise ValueError(mlp_act)
+    return _EPILOGUE_ACT[mlp_act]
+
+
+def _mlp_fused(cfg, p, x, *, residual, residual_scale, mode, gated):
+    """The fused-megakernel MLP (DESIGN.md §9): the two gated up-projections
+    run as ONE dual-output GEMM whose store applies act(x@w_gate)·(x@w_in),
+    and the down-projection GEMM's store applies the scaled residual add —
+    the (T, F) intermediate and the (T, D) output never round-trip HBM
+    between ops. Returns None when the chain doesn't apply (stacked
+    weights) or the autotuner's chain model picks the unfused plan.
+    """
+    from repro.core import autotune
+    from repro.kernels.gemm import Epilogue, gemm_fused
+
+    w_in = p["w_in"]
+    if w_in.ndim != 2:
+        return None  # stacked (scan-layout) weights: per-layer slices only
+    *lead, d = x.shape
+    f = w_in.shape[-1]
+    tokens = math.prod(lead) if lead else 1
+    plan = autotune.select_fusion("mlp", (tokens, d, f, gated), str(x.dtype),
+                                  residual=residual is not None)
+    if plan["plan"] != "fused":
+        return None
+    act = _act_name(cfg.mlp_act)
+    x2 = x.reshape(tokens, d)
+    if gated:
+        h = gemm_fused(x2, p["w_gate"], b2=w_in,
+                       epilogue=Epilogue(activation=act, gate=True),
+                       out_dtype=x.dtype, mode=mode)
+    else:
+        h = gemm_fused(x2, w_in, epilogue=Epilogue(activation=act),
+                       out_dtype=x.dtype, mode=mode)
+    if residual is None:
+        y = gemm_fused(h, p["w_out"], epilogue=Epilogue(),
+                       out_dtype=x.dtype, mode=mode)
+    else:
+        y = gemm_fused(h, p["w_out"],
+                       epilogue=Epilogue(residual=True, scale=True),
+                       residual=residual.reshape(tokens, d),
+                       scale=residual_scale, out_dtype=x.dtype, mode=mode)
+    return y.reshape(x.shape)
+
+
+def mlp_forward(cfg, p, x, *, mode: str = "reference", residual=None,
+                residual_scale: float = 1.0):
+    """Gated (swiglu/geglu) or plain MLP. p: params subtree with
+    w_in/w_gate/w_out.
+
+    With ``residual`` the returned value is ``residual + residual_scale *
+    mlp(x)`` — callers pass their residual stream in so the pallas modes can
+    fuse the add into the down-projection's store. In the pallas modes the
+    whole chain routes through the fused dual-GEMM epilogue kernel whenever
+    the autotuner's chain model picks the fused plan from modeled dma_bytes
+    (DESIGN.md §9); 'reference' keeps the original unfused jnp chain (the
+    parity oracle).
+    """
+    gated = cfg.mlp_act in ("swiglu", "geglu")
+    if mode != "reference":
+        out = _mlp_fused(cfg, p, x, residual=residual,
+                         residual_scale=residual_scale, mode=mode,
+                         gated=gated)
+        if out is not None:
+            return out
     act = act_fn(cfg.mlp_act)
-    if cfg.mlp_act in ("swiglu", "geglu"):
+    if gated:
         h = act(x @ p["w_gate"]) * (x @ p["w_in"])
     else:
         h = act(x @ p["w_in"])
-    return h @ p["w_out"]
+    m = h @ p["w_out"]
+    if residual is None:
+        return m
+    return residual + residual_scale * m
 
 
 def mlp_defs(cfg, prefix: str, *, stack: int | None = None,

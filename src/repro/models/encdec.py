@@ -62,7 +62,8 @@ def encode(cfg, params, enc_embeds, *, mode="reference", remat=False):
         a = attention_layer(cfg, p["attn"], apply_norm(cfg, h, p, "ln1"),
                             causal=False, mode=mode, use_rope=False)
         h = h + a
-        h = h + mlp_forward(cfg, p["mlp"], apply_norm(cfg, h, p, "ln2"))
+        h = mlp_forward(cfg, p["mlp"], apply_norm(cfg, h, p, "ln2"),
+                        mode=mode, residual=h)
         return h, None
 
     if remat:
@@ -80,7 +81,8 @@ def _dec_block(cfg, p, x, enc_out, *, mode="reference"):
                         causal=False, kv_input=enc_out, mode=mode,
                         use_rope=False)
     x = x + c
-    x = x + mlp_forward(cfg, p["mlp"], apply_norm(cfg, x, p, "ln2"))
+    x = mlp_forward(cfg, p["mlp"], apply_norm(cfg, x, p, "ln2"),
+                    mode=mode, residual=x)
     return x
 
 
@@ -150,7 +152,8 @@ def encdec_prefill(cfg, params, batch, cache, *, mode="reference"):
         ox = attention_op(qx, kx, vx, causal=False, mode=mode)
         cross_c = {"k": kx, "v": vx}
         h = h + _merge_heads(ox) @ p["xattn"]["wo"]
-        h = h + mlp_forward(cfg, p["mlp"], apply_norm(cfg, h, p, "ln2"))
+        h = mlp_forward(cfg, p["mlp"], apply_norm(cfg, h, p, "ln2"),
+                        mode=mode, residual=h)
         return h, (self_c, cross_c)
 
     from repro.util import scan_unroll
@@ -181,7 +184,8 @@ def encdec_decode_step(cfg, params, token, cache, pos, *, mode="reference",
                                       cross=True, update_cache=False,
                                       use_rope=False, mode=mode)
         h = h + c
-        h = h + mlp_forward(cfg, p["mlp"], apply_norm(cfg, h, p, "ln2"))
+        h = mlp_forward(cfg, p["mlp"], apply_norm(cfg, h, p, "ln2"),
+                        mode=mode, residual=h)
         return h, (self_c, cross_c)
 
     from repro.util import scan_unroll

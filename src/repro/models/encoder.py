@@ -44,7 +44,8 @@ def encoder_forward(cfg, params, batch, *, mode="reference", remat=False,
         a = attention_layer(cfg, p["attn"], apply_norm(cfg, h, p, "ln1"),
                             causal=False, mode=mode, use_rope=False)
         h = h + a
-        h = h + mlp_forward(cfg, p["mlp"], apply_norm(cfg, h, p, "ln2"))
+        h = mlp_forward(cfg, p["mlp"], apply_norm(cfg, h, p, "ln2"),
+                        mode=mode, residual=h)
         return h, None
 
     if remat:

@@ -129,10 +129,11 @@ def block_forward(cfg, kind: str, p, x, *, positions=None,
         h = apply_norm(cfg, x, p, "ln2")
         if kind == "moe":
             m, aux = moe_forward(cfg, p["moe"], h, mesh=mesh,
-                                 data_axes=data_axes)
+                                 data_axes=data_axes, mode=mode)
+            x = x + rs * m
         else:
-            m = mlp_forward(cfg, p["mlp"], h)
-        x = x + rs * m
+            x = mlp_forward(cfg, p["mlp"], h, mode=mode, residual=x,
+                            residual_scale=rs)
     elif kind == "ssm":
         h = apply_norm(cfg, x, p, "ln1")
         x = x + rs * ssm_forward(cfg, p["ssm"], h)
@@ -140,7 +141,8 @@ def block_forward(cfg, kind: str, p, x, *, positions=None,
         h = apply_norm(cfg, x, p, "ln1")
         x = x + rs * rglru_forward(cfg, p["rec"], h)
         h = apply_norm(cfg, x, p, "ln2")
-        x = x + rs * mlp_forward(cfg, p["mlp"], h)
+        x = mlp_forward(cfg, p["mlp"], h, mode=mode, residual=x,
+                        residual_scale=rs)
     return x, aux
 
 
@@ -318,10 +320,12 @@ def block_prefill(cfg, kind, p, x, cache, *, positions, mode="reference",
         x = x + cfg.residual_scale * (_merge_heads(o) @ p["attn"]["wo"])
         h = apply_norm(cfg, x, p, "ln2")
         if kind == "moe":
-            m, _ = moe_forward(cfg, p["moe"], h, mesh=mesh, data_axes=data_axes)
+            m, _ = moe_forward(cfg, p["moe"], h, mesh=mesh,
+                               data_axes=data_axes, mode=mode)
+            x = x + cfg.residual_scale * m
         else:
-            m = mlp_forward(cfg, p["mlp"], h)
-        x = x + cfg.residual_scale * m
+            x = mlp_forward(cfg, p["mlp"], h, mode=mode, residual=x,
+                            residual_scale=cfg.residual_scale)
     elif kind == "ssm":
         h = apply_norm(cfg, x, p, "ln1")
         o, cache = ssm_prefill(cfg, p["ssm"], h)
@@ -331,7 +335,8 @@ def block_prefill(cfg, kind, p, x, cache, *, positions, mode="reference",
         o, cache = rglru_prefill(cfg, p["rec"], h)
         x = x + cfg.residual_scale * o
         h = apply_norm(cfg, x, p, "ln2")
-        x = x + cfg.residual_scale * mlp_forward(cfg, p["mlp"], h)
+        x = mlp_forward(cfg, p["mlp"], h, mode=mode, residual=x,
+                        residual_scale=cfg.residual_scale)
     return x, cache
 
 
@@ -347,10 +352,11 @@ def block_decode(cfg, kind, p, x, cache, pos, *, mode="reference", mesh=None,
         h = apply_norm(cfg, x, p, "ln2")
         if kind == "moe":
             m, _ = moe_forward(cfg, p["moe"], h, mesh=mesh,
-                               data_axes=data_axes)
+                               data_axes=data_axes, mode=mode)
+            x = x + rs * m
         else:
-            m = mlp_forward(cfg, p["mlp"], h)
-        x = x + rs * m
+            x = mlp_forward(cfg, p["mlp"], h, mode=mode, residual=x,
+                            residual_scale=rs)
     elif kind == "ssm":
         h = apply_norm(cfg, x, p, "ln1")
         o, cache = ssm_decode_step(cfg, p["ssm"], h, cache)
@@ -360,7 +366,8 @@ def block_decode(cfg, kind, p, x, cache, pos, *, mode="reference", mesh=None,
         o, cache = rglru_decode_step(cfg, p["rec"], h, cache)
         x = x + rs * o
         h = apply_norm(cfg, x, p, "ln2")
-        x = x + rs * mlp_forward(cfg, p["mlp"], h)
+        x = mlp_forward(cfg, p["mlp"], h, mode=mode, residual=x,
+                        residual_scale=rs)
     return x, cache
 
 
@@ -501,10 +508,11 @@ def block_prefill_paged(cfg, kind, p, x, cache, *, page_rows, slot,
         h = apply_norm(cfg, x, p, "ln2")
         if kind == "moe":
             m, _ = moe_forward(cfg, p["moe"], h, mesh=mesh,
-                               data_axes=data_axes)
+                               data_axes=data_axes, mode=mode)
+            x = x + cfg.residual_scale * m
         else:
-            m = mlp_forward(cfg, p["mlp"], h)
-        x = x + cfg.residual_scale * m
+            x = mlp_forward(cfg, p["mlp"], h, mode=mode, residual=x,
+                            residual_scale=cfg.residual_scale)
     elif kind == "ssm":
         h = apply_norm(cfg, x, p, "ln1")
         o, state = ssm_prefill(cfg, p["ssm"], h)
@@ -516,7 +524,8 @@ def block_prefill_paged(cfg, kind, p, x, cache, *, page_rows, slot,
         cache = jax.tree.map(lambda c, s: c.at[slot].set(s[0]), cache, state)
         x = x + cfg.residual_scale * o
         h = apply_norm(cfg, x, p, "ln2")
-        x = x + cfg.residual_scale * mlp_forward(cfg, p["mlp"], h)
+        x = mlp_forward(cfg, p["mlp"], h, mode=mode, residual=x,
+                        residual_scale=cfg.residual_scale)
     return x, cache
 
 
@@ -583,10 +592,11 @@ def block_decode_paged(cfg, kind, p, x, cache, page_table, lengths, *,
         h = apply_norm(cfg, x, p, "ln2")
         if kind == "moe":
             m, _ = moe_forward(cfg, p["moe"], h, mesh=mesh,
-                               data_axes=data_axes)
+                               data_axes=data_axes, mode=mode)
+            x = x + rs * m
         else:
-            m = mlp_forward(cfg, p["mlp"], h)
-        x = x + rs * m
+            x = mlp_forward(cfg, p["mlp"], h, mode=mode, residual=x,
+                            residual_scale=rs)
     elif kind == "ssm":
         h = apply_norm(cfg, x, p, "ln1")
         o, cache = ssm_decode_step(cfg, p["ssm"], h, cache)
@@ -596,7 +606,8 @@ def block_decode_paged(cfg, kind, p, x, cache, page_table, lengths, *,
         o, cache = rglru_decode_step(cfg, p["rec"], h, cache)
         x = x + rs * o
         h = apply_norm(cfg, x, p, "ln2")
-        x = x + rs * mlp_forward(cfg, p["mlp"], h)
+        x = mlp_forward(cfg, p["mlp"], h, mode=mode, residual=x,
+                        residual_scale=rs)
     return x, cache
 
 

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from .common import ParamDef, act_fn
+from .common import ParamDef, _act_name, act_fn
 
 
 def moe_defs(cfg, prefix: str, *, stack: int | None = None) -> dict:
@@ -42,8 +42,46 @@ def moe_defs(cfg, prefix: str, *, stack: int | None = None) -> dict:
     return defs
 
 
-def _expert_ffn(cfg, p, x):
+def _expert_ffn_fused(cfg, p, x, mode):
+    """Per-expert fused megakernel FFN (DESIGN.md §9): each expert's two
+    up-projections run as one dual-output GEMM (store applies the SwiGLU
+    gating) followed by the down GEMM — the (T, F) expert intermediate
+    never round-trips HBM. E is static, so the python loop unrolls into E
+    independent kernel launches. Returns None when the autotuner's chain
+    model picks the unfused plan."""
+    from repro.core import autotune
+    from repro.kernels.gemm import Epilogue, gemm_fused
+
+    e, t, d = x.shape
+    f = p["w_in"].shape[-1]
+    gated = cfg.mlp_act in ("swiglu", "geglu")
+    # residual=False: the expert FFN chain has no residual add to eliminate
+    plan = autotune.select_fusion("mlp", (t, d, f, gated), str(x.dtype),
+                                  residual=False)
+    if plan["plan"] != "fused":
+        return None
+    act = _act_name(cfg.mlp_act)
+    outs = []
+    for i in range(e):
+        if gated:
+            h = gemm_fused(x[i], p["w_gate"][i], b2=p["w_in"][i],
+                           epilogue=Epilogue(activation=act, gate=True),
+                           out_dtype=x.dtype, mode=mode)
+        else:
+            h = gemm_fused(x[i], p["w_in"][i],
+                           epilogue=Epilogue(activation=act),
+                           out_dtype=x.dtype, mode=mode)
+        outs.append(gemm_fused(h, p["w_out"][i], epilogue=Epilogue(),
+                               out_dtype=x.dtype, mode=mode))
+    return jnp.stack(outs)
+
+
+def _expert_ffn(cfg, p, x, mode: str = "reference"):
     """x: (E, T, D) grouped tokens; expert weights (E, D, F)/(E, F, D)."""
+    if mode != "reference":
+        out = _expert_ffn_fused(cfg, p, x, mode)
+        if out is not None:
+            return out
     act = act_fn(cfg.mlp_act)
     if cfg.mlp_act in ("swiglu", "geglu"):
         h = act(jnp.einsum("etd,edf->etf", x, p["w_gate"])) * \
@@ -68,13 +106,14 @@ def _route(cfg, x_flat, router_w):
     return weights.astype(x_flat.dtype), ids, aux
 
 
-def moe_dense(cfg, p, x):
+def moe_dense(cfg, p, x, *, mode: str = "reference"):
     """All-experts einsum. x: (B, S, D). For reduced smoke configs."""
     b, s, d = x.shape
     xf = x.reshape(-1, d)
     weights, ids, aux = _route(cfg, xf, p["router"])
     e = cfg.moe.num_experts
-    outs = _expert_ffn(cfg, p, jnp.broadcast_to(xf, (e,) + xf.shape))  # (E,T,D)
+    outs = _expert_ffn(cfg, p, jnp.broadcast_to(xf, (e,) + xf.shape),
+                       mode)  # (E,T,D)
     gate = jnp.zeros((xf.shape[0], e), x.dtype)
     gate = gate.at[jnp.arange(xf.shape[0])[:, None], ids].add(weights)
     out = jnp.einsum("te,etd->td", gate, outs)
@@ -230,8 +269,14 @@ def moe_tp(cfg, p, x, *, mesh, data_axes=("data",), model_axis="model"):
 
 
 def moe_forward(cfg, p, x, *, mesh=None, data_axes=("data",),
-                model_axis="model"):
-    """Dispatch between implementations (cfg.moe.impl / mesh availability)."""
+                model_axis="model", mode: str = "reference"):
+    """Dispatch between implementations (cfg.moe.impl / mesh availability).
+
+    ``mode`` routes the dense expert FFN through the fused dual-GEMM
+    epilogue kernel; the shard_map implementations (ep/tp) keep the einsum
+    path — their inner function runs under collective tracing where the
+    interpret-mode pallas_call is not exercised (ROADMAP open item).
+    """
     impl = cfg.moe.impl
     if impl == "auto":
         if (mesh is None or model_axis not in mesh.axis_names
@@ -248,4 +293,4 @@ def moe_forward(cfg, p, x, *, mesh=None, data_axes=("data",),
     if impl == "tp":
         return moe_tp(cfg, p, x, mesh=mesh, data_axes=data_axes,
                       model_axis=model_axis)
-    return moe_dense(cfg, p, x)
+    return moe_dense(cfg, p, x, mode=mode)

@@ -162,10 +162,20 @@ def test_bert_mlm_smoke():
 
 def test_pallas_vs_reference_model_parity():
     """Paper §4 stability validation (scaled down): the same model computes
-    the same loss through the Pallas kernels and the XLA reference path."""
+    the same loss through the Pallas kernels and the XLA reference path.
+
+    Since the fused-epilogue PR the kernel path no longer shares a bitwise
+    graph with the bf16 reference for the MLP/QKV projections (the kernels
+    accumulate in f32 where the jnp reference rounds through bf16), so the
+    gradient check anchors both paths against an f32-compute ground truth:
+    the kernel path's gradient error must be no worse than the bf16
+    reference path's (× slack), and both must point the same way.
+    """
     cfg = get_config("granite-8b", smoke=True)
     ref_model = build_model(cfg, mode="reference")
     pk_model = build_model(cfg, mode="pallas_interpret")
+    truth_model = build_model(
+        dataclasses.replace(cfg, compute_dtype="float32"), mode="reference")
     params = ref_model.init(jax.random.PRNGKey(0))
     batch = ref_model.make_batch(ShapeConfig("t", 128, 2, "train"),
                                  jax.random.PRNGKey(1))
@@ -174,11 +184,22 @@ def test_pallas_vs_reference_model_parity():
     assert abs(float(l_ref) - float(l_pk)) < 5e-2, (float(l_ref), float(l_pk))
     g_ref = jax.grad(lambda p: ref_model.loss(p, batch)[0])(params)
     g_pk = jax.grad(lambda p: pk_model.loss(p, batch)[0])(params)
-    for (ka, a), (kb, b) in zip(
-            sorted(jax.tree_util.tree_flatten_with_path(g_ref)[0][:8],
-                   key=str),
-            sorted(jax.tree_util.tree_flatten_with_path(g_pk)[0][:8],
-                   key=str)):
-        np.testing.assert_allclose(np.asarray(a, np.float32),
-                                   np.asarray(b, np.float32),
-                                   rtol=0.1, atol=0.1)
+    g_truth = jax.grad(lambda p: truth_model.loss(p, batch)[0])(params)
+    def cos(a, b):
+        return float(np.dot(a.ravel(), b.ravel()) /
+                     max(np.linalg.norm(a) * np.linalg.norm(b), 1e-9))
+
+    for (ka, t), (_, r), (_, k) in zip(
+            *(sorted(jax.tree_util.tree_flatten_with_path(g)[0], key=str)
+              for g in (g_truth, g_ref, g_pk))):
+        t = np.asarray(t, np.float32)
+        r = np.asarray(r, np.float32)
+        k = np.asarray(k, np.float32)
+        ref_err = np.abs(r - t).max()
+        pk_err = np.abs(k - t).max()
+        assert pk_err <= 2.0 * ref_err + 1e-2, \
+            (jax.tree_util.keystr(ka), float(pk_err), float(ref_err))
+        # the kernel path (f32 accumulators) must align with the f32 truth
+        # at least as well as the bf16 reference does, per parameter
+        assert cos(k, t) >= cos(r, t) - 0.05, \
+            (jax.tree_util.keystr(ka), cos(k, t), cos(r, t))
