@@ -1,15 +1,19 @@
-"""Fused-MLP megakernel sweep (DESIGN.md §9; paper Fig. 9 regime).
+"""Fused-MLP megakernel sweep (DESIGN.md §9-§10; paper Fig. 9 regime).
 
 seq × d_model sweep of the transformer MLP hot chain: modeled HBM traffic of
 the fused plan (dual-output SwiGLU up-GEMM + residual-fused down-GEMM) vs
 the unfused eager chain, with the plan the autotuner picks from
 ``dma_bytes`` alone (``autotune.select_fusion`` — no hard-coded
-preference). Rows land in ``BENCH_fused_mlp.json`` via benchmarks.run; the
-acceptance bar is ``traffic_reduction >= 1.5`` on every production-shaped
-cell.
+preference). Each cell also carries the *norm-fused* column: the same chain
+with the block's pre-norm folded into the up-GEMM's A-tile prologue,
+scored against the unfused ``fused_norm``→``gemm`` pair (the standalone
+norm pass + eager chain). Rows land in ``BENCH_fused_mlp.json`` via
+benchmarks.run; the acceptance bars are ``traffic_reduction >= 1.5`` and
+``norm_traffic_reduction >= 1.3`` on every production-shaped cell.
 
 Also validates the fused interpret-mode kernels end to end on a small MLP
-(vs the unfused jnp oracle) and times the two jnp chains on CPU for scale.
+(vs the unfused jnp oracle, with and without the norm prologue) and times
+the two jnp chains on CPU for scale.
 """
 from __future__ import annotations
 
@@ -19,12 +23,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import autotune
-from repro.models.common import mlp_forward
+from repro.models.common import mlp_forward, norm_params
 from .common import time_fn, emit
 
 
 class _MlpCfg:
     mlp_act = "swiglu"
+    norm = "rmsnorm"
 
 
 def main() -> None:
@@ -38,11 +43,18 @@ def main() -> None:
         for d in dims:
             f = 4 * d
             plan = autotune.select_fusion("mlp", (seq, d, f, True))
+            norm_plan = autotune.select_fusion("mlp", (seq, d, f, True),
+                                               prenorm="rmsnorm")
             emit(f"fused_mlp_s{seq}_d{d}", 0.0,
                  f"plan={plan['plan']};"
                  f"fused_mb={plan['fused_bytes'] / 2**20:.1f};"
                  f"unfused_mb={plan['unfused_bytes'] / 2**20:.1f};"
                  f"traffic_reduction={plan['traffic_reduction']:.2f}x;"
+                 f"norm_plan={norm_plan['plan']};"
+                 f"norm_fused_mb={norm_plan['fused_bytes'] / 2**20:.1f};"
+                 f"norm_unfused_mb={norm_plan['unfused_bytes'] / 2**20:.1f};"
+                 f"norm_traffic_reduction="
+                 f"{norm_plan['traffic_reduction']:.2f}x;"
                  f"modeled_fused_us={plan['fused']['time_s'] * 1e6:.1f};"
                  f"modeled_unfused_us={plan['unfused']['time_s'] * 1e6:.1f};"
                  f"bound={plan['fused']['bound']}")
@@ -51,7 +63,7 @@ def main() -> None:
     # residual-epilogue path (interpret mode) vs the unfused jnp oracle
     cfg = _MlpCfg()
     t, d, f = 256, 512, 1024
-    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
     x = jax.random.normal(ks[0], (1, t, d), jnp.float32) * 0.5
     res = jax.random.normal(ks[1], (1, t, d), jnp.float32)
     p = {"w_gate": jax.random.normal(ks[2], (d, f), jnp.float32) * 0.05,
@@ -67,6 +79,22 @@ def main() -> None:
     emit(f"fused_mlp_pallas_check_t{t}_d{d}", us_ref,
          f"max_err={err:.2e};plan="
          f"{autotune.select_fusion('mlp', (t, d, f, True))['plan']}")
+
+    # norm-prologue path: the whole pre-norm block (norm → dual-GEMM →
+    # residual) in two launches, vs the standalone-norm reference chain
+    p["ln_scale"] = jax.random.normal(ks[5], (d,), jnp.float32) * 0.1 + 1.0
+    pn = norm_params(p, "ln")
+    norm_ref_fn = jax.jit(lambda x, res: mlp_forward(
+        cfg, p, x, mode="reference", residual=res, residual_scale=0.5,
+        prenorm=pn))
+    us_norm_ref = time_fn(norm_ref_fn, x, res)
+    out = mlp_forward(cfg, p, x, mode="pallas_interpret", residual=res,
+                      residual_scale=0.5, prenorm=pn)
+    err = float(jnp.abs(out - norm_ref_fn(x, res)).max())
+    assert err < 1e-3, err
+    emit(f"norm_fused_mlp_pallas_check_t{t}_d{d}", us_norm_ref,
+         f"max_err={err:.2e};norm_plan="
+         f"{autotune.select_fusion('mlp', (t, d, f, True), prenorm='rmsnorm')['plan']}")
 
 
 if __name__ == "__main__":

@@ -57,7 +57,10 @@ class OpSignature:
     ``epilogue`` (gemm only) is the fused store chain the launch will run
     (:class:`repro.kernels.gemm.epilogue.Epilogue`, carried opaquely): its
     extra operands change both the legal candidate set (VMEM, whole-head
-    block_n for rope) and the scored traffic.
+    block_n for rope) and the scored traffic. ``prologue`` (gemm only) is
+    the fused A-operand chain (:class:`repro.kernels.gemm.prologue.Prologue`)
+    — a recompute-path norm prologue pins block_k to the full feature dim
+    and charges the per-A-tile norm recompute to the compute term.
     """
 
     op: str
@@ -65,6 +68,7 @@ class OpSignature:
     dtype: str = "bfloat16"
     causal: bool = False
     epilogue: Optional[object] = None
+    prologue: Optional[object] = None
 
     def __post_init__(self):
         if self.op not in OP_KINDS:
@@ -91,7 +95,8 @@ class OpSignature:
             shape = (pow2(b), pow2(h), s, d)
         else:
             shape = tuple(self.shape)
-        return (self.op, shape, self.dtype, self.causal, self.epilogue)
+        return (self.op, shape, self.dtype, self.causal, self.epilogue,
+                self.prologue)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -150,6 +155,7 @@ def candidate_policies(sig: OpSignature) -> list:
     if sig.op == "gemm":
         m, n, k = sig.shape
         ep = sig.epilogue
+        pro = sig.prologue
         bn_cands = _block_candidates(n, 128, 512)
         if ep is not None and getattr(ep, "rope", False):
             # rope rotates whole heads per tile: block_n must be a head_dim
@@ -158,15 +164,21 @@ def candidate_policies(sig: OpSignature) -> list:
             bn_cands = sorted(b for b in
                               set(bn_cands) | set(_block_candidates(n, hd, 512))
                               if b % hd == 0)
+        bk_cands = _block_candidates(k, 128, 512)
+        if pro is not None and getattr(pro, "needs_full_k", False):
+            # recompute-path norm prologue: row stats come from the A tile
+            # itself, so the tile must span the full feature dim
+            bk_cands = [k]
         for bm in _block_candidates(m, 128, 512):
             for bn in bn_cands:
-                for bk in _block_candidates(k, 128, 512):
+                for bk in bk_cands:
                     for nbuf in (2, 3):
                         sched = Schedule(f"auto_g{nbuf}", nbuf, bm, bn, bk)
                         rows, cols = m // bm, n // bn
                         for sw in _swizzle_candidates(rows, cols):
                             pol = KernelPolicy("gemm", sched, sw,
-                                               in_dtype=dtype, epilogue=ep)
+                                               in_dtype=dtype, epilogue=ep,
+                                               prologue=pro)
                             if pol.is_legal():
                                 out.append(pol)
 
@@ -219,7 +231,10 @@ def gemm_traffic_bytes(policy: KernelPolicy, m: int, n: int, k: int,
 
     An attached epilogue adds its streamed operands: the gate's B2 panel
     follows B's revisit pattern exactly (doubled B traffic), the rest
-    (bias/residual/tables) stream once with the output tiles.
+    (bias/residual/tables) stream once with the output tiles. An attached
+    prologue adds its gamma/beta rows and fast-path stats columns — the
+    *eliminated* normed-activation round trip is chain-model territory
+    (perf_model), not this per-launch count.
     """
     rows, cols = m // policy.block_m, n // policy.block_n
     a_panel = policy.block_m * k * dtype_bytes
@@ -230,6 +245,9 @@ def gemm_traffic_bytes(policy: KernelPolicy, m: int, n: int, k: int,
     traffic = dma_bytes(policy.swizzle, rows, cols, a_panel, b_panel)
     if ep is not None:
         traffic += ep.extra_read_bytes(m, n, dtype_bytes)
+    pro = policy.prologue
+    if pro is not None:
+        traffic += pro.extra_read_bytes(m, k, dtype_bytes)
     return traffic
 
 
@@ -249,6 +267,17 @@ def score_policy(sig: OpSignature, policy: KernelPolicy,
                       and getattr(policy.epilogue, "gate", False)) else 1
         compute_s = (n_acc * 2.0 * m * n * k / (tflops * 1e12)
                      if tflops else math.inf)
+        pro = policy.prologue
+        if pro is not None and not getattr(pro, "is_identity", True):
+            # per-A-tile norm work: each A panel is re-processed once per
+            # output-column block it is revisited for — vector-unit work
+            # bought against the eliminated HBM round trip. The recompute
+            # path re-derives row stats (~8 ops/element); the
+            # precomputed-stats fast path only applies the affine transform
+            # (~3 ops/element, stats streamed).
+            ops = 3.0 if getattr(pro, "precomputed_stats", False) else 8.0
+            norm_elems = (n // policy.block_n) * m * k
+            compute_s += norm_elems * ops / (chip.peak_flops_bf16 / 16)
         traffic = gemm_traffic_bytes(policy, m, n, k, dtype_bytes)
         memory_s = traffic / chip.hbm_bw
         time_s = max(compute_s, memory_s) + n_blocks * _STEP_OVERHEAD_S
@@ -333,18 +362,19 @@ _CACHE_STATS = {"hits": 0, "misses": 0}
 
 
 def select_policy(op: str, shape, dtype="bfloat16", *, causal: bool = False,
-                  epilogue=None, cache_sim: bool = False,
+                  epilogue=None, prologue=None, cache_sim: bool = False,
                   chip: pm.ChipSpec = pm.V5E) -> KernelPolicy:
     """The tuned policy for an op signature; memoized per shape-bucket.
 
-    ``epilogue`` (gemm only) makes the candidate set and the traffic model
-    epilogue-aware; the returned policy carries it.
+    ``epilogue``/``prologue`` (gemm only) make the candidate set and the
+    traffic model chain-aware; the returned policy carries them.
 
-    Raises ValueError if no candidate is legal (should be impossible for
-    realistic shapes — the smallest aligned block always fits VMEM).
+    Raises ValueError if no candidate is legal — which a recompute-path
+    norm prologue *can* hit (its full-K A tile may not fit VMEM for huge
+    feature dims): callers fall back to the standalone-norm plan then.
     """
     sig = OpSignature(op, tuple(int(x) for x in shape), str(dtype),
-                      causal=causal, epilogue=epilogue)
+                      causal=causal, epilogue=epilogue, prologue=prologue)
     key = sig.bucket() + (bool(cache_sim), chip.name)
     hit = _POLICY_CACHE.get(key)
     if hit is not None:
@@ -383,21 +413,26 @@ _PLAN_CACHE: dict = {}
 
 
 def select_fusion(kind: str, shape, dtype="bfloat16", *,
-                  residual: bool = True,
+                  residual: bool = True, prenorm: str = "none",
                   chip: pm.ChipSpec = pm.V5E) -> dict:
     """Pick the fused or unfused execution plan for a model-layer GEMM chain.
 
     The decision is made *purely* by comparing the two plans' modeled HBM
     traffic (``perf_model.mlp_chain_model`` / ``qkv_rope_chain_model``) —
     no hard-coded preference: a chain that stops saving bytes (tiny token
-    counts vs the qkv concat cost, residual-free expert FFNs near the
-    crossover) loses the selection. Memoized per shape-bucket (the token
-    dim rounds to the next power of two).
+    counts, residual-free expert FFNs near the crossover) loses the
+    selection. Memoized per shape-bucket (the token dim rounds to the next
+    power of two).
 
     ``kind``/``shape``:
       'mlp'      (tokens, d_model, d_ff, gated); ``residual`` says whether
                  the chain ends in a residual add (False for MoE experts)
       'qkv_rope' (tokens, d_model, num_heads, num_kv_heads, head_dim)
+
+    ``prenorm`` ('rmsnorm' | 'layernorm') prepends the pre-norm of the
+    transformer block to both plans: the fused plan folds it into the first
+    GEMM's A-tile prologue (DESIGN.md §10), the unfused plan runs the
+    standalone norm pass in front of the eager chain.
 
     Returns {plan: 'fused'|'unfused', fused_bytes, unfused_bytes,
     traffic_reduction, fused: <model dict>, unfused: <model dict>}.
@@ -405,7 +440,8 @@ def select_fusion(kind: str, shape, dtype="bfloat16", *,
     dtype = str(dtype)
     shape = tuple(int(x) for x in shape)
     tokens = 1 << max(0, (shape[0] - 1).bit_length())  # pow2 bucket
-    key = (kind, (tokens,) + shape[1:], dtype, bool(residual), chip.name)
+    key = (kind, (tokens,) + shape[1:], dtype, bool(residual), prenorm,
+           chip.name)
     hit = _PLAN_CACHE.get(key)
     if hit is not None:
         return hit
@@ -414,7 +450,7 @@ def select_fusion(kind: str, shape, dtype="bfloat16", *,
         _, d, f, gated = shape
         variants = [pm.mlp_chain_model(tokens=tokens, d_model=d, d_ff=f,
                                        dtype_bytes=db, gated=bool(gated),
-                                       residual=residual,
+                                       residual=residual, prenorm=prenorm,
                                        fused=fused, chip=chip)
                     for fused in (True, False)]
     elif kind == "qkv_rope":
@@ -422,6 +458,7 @@ def select_fusion(kind: str, shape, dtype="bfloat16", *,
         variants = [pm.qkv_rope_chain_model(tokens=tokens, d_model=d,
                                             num_heads=h, num_kv_heads=hkv,
                                             head_dim=hd, dtype_bytes=db,
+                                            prenorm=prenorm,
                                             fused=fused, chip=chip)
                     for fused in (True, False)]
     else:
@@ -477,19 +514,33 @@ def policies_for_model(cfg, *, batch: int, seq_len: int,
                                           (batch * seq_len, dm), dtype)
     d_ff = getattr(cfg, "d_ff", 0) or 0
     if dm and d_ff:
-        # The fused-MLP megakernel GEMMs (DESIGN.md §9): the dual-output
-        # gated up-projection and the residual-fused down-projection.
-        # (Function-level import; epilogue.py depends only on jax, so this
-        # does not create a core -> kernels import cycle.)
+        # The fused-MLP megakernel GEMMs (DESIGN.md §9-§10): the dual-output
+        # gated up-projection (with the pre-norm folded into its A prologue
+        # when the chain model picks that plan) and the residual-fused
+        # down-projection. (Function-level import; epilogue/prologue depend
+        # only on jax, so this does not create a core -> kernels cycle.)
         from repro.kernels.gemm.epilogue import Epilogue
+        from repro.kernels.gemm.prologue import norm_prologue
         gated = getattr(cfg, "mlp_act", "swiglu") in ("swiglu", "geglu")
         act = "gelu" if getattr(cfg, "mlp_act", "") in ("geglu", "gelu") \
             else "silu"
         tokens = batch * seq_len
         up_ep = (Epilogue(activation=act, gate=True) if gated
                  else Epilogue(activation=act))
-        out["gemm_mlp_up"] = select_policy("gemm", (tokens, d_ff, dm), dtype,
-                                           epilogue=up_ep)
+        norm_kind = getattr(cfg, "norm", "rmsnorm")
+        up_pro = None
+        if select_fusion("mlp", (tokens, dm, d_ff, gated), dtype,
+                         prenorm=norm_kind)["plan"] == "fused":
+            up_pro = norm_prologue(norm_kind, beta=(norm_kind == "layernorm"))
+        try:
+            out["gemm_mlp_up"] = select_policy("gemm", (tokens, d_ff, dm),
+                                               dtype, epilogue=up_ep,
+                                               prologue=up_pro)
+        except ValueError:
+            # full-K A tile doesn't fit VMEM: the model layer falls back to
+            # the standalone-norm plan, so report that policy here too
+            out["gemm_mlp_up"] = select_policy("gemm", (tokens, d_ff, dm),
+                                               dtype, epilogue=up_ep)
         out["gemm_mlp_down"] = select_policy(
             "gemm", (tokens, dm, d_ff), dtype,
             epilogue=Epilogue(residual=True, scale=True))

@@ -207,18 +207,32 @@ def _chain_dict(dma_bytes: float, flops: float, fused: bool,
                 bound="compute" if compute_s >= memory_s else "memory")
 
 
+def _prenorm_vec_bytes(d: int, prenorm: str, dtype_bytes: int) -> int:
+    """gamma (+ beta for layernorm) row-vector bytes of a pre-norm."""
+    if prenorm == "none":
+        return 0
+    return d * dtype_bytes * (2 if prenorm == "layernorm" else 1)
+
+
 def mlp_chain_model(*, tokens: int, d_model: int, d_ff: int,
                     dtype_bytes: int = 2, gated: bool = True,
-                    residual: bool = True, fused: bool = True,
-                    chip: ChipSpec = V5E) -> dict:
-    """The transformer MLP hot chain: up-projection(s) + activation
-    [+ SwiGLU gating] + down-projection [+ scaled residual add].
+                    residual: bool = True, prenorm: str = "none",
+                    fused: bool = True, chip: ChipSpec = V5E) -> dict:
+    """The transformer MLP hot chain: [pre-norm +] up-projection(s) +
+    activation [+ SwiGLU gating] + down-projection [+ scaled residual add].
 
     fused (two launches):
-      dual-output up GEMM   reads x once + both up weights, writes h once
+      dual-output up GEMM   reads x once + both up weights, writes h once;
+                            with ``prenorm`` the norm runs as its A-tile
+                            prologue (plus the gamma/beta rows) — the
+                            normed activation never exists in HBM. The
+                            per-A-tile recompute is block-dependent vector
+                            work charged by autotune.score_policy; here it
+                            appears as one logical norm pass of FLOPs.
       down GEMM             reads h + w_out [+ the residual], writes out
     unfused (eager chain):
-      each up GEMM          re-reads x, writes its own (T, F) intermediate
+      [pre-norm             reads x, writes norm(x)]
+      each up GEMM          re-reads norm(x), writes its own (T, F) output
       gating/activation     re-reads the intermediates, writes h
       down GEMM             reads h + w_out, writes out
       [residual add         re-reads out and x, writes out]
@@ -232,35 +246,40 @@ def mlp_chain_model(*, tokens: int, d_model: int, d_ff: int,
     w_up = d * f * dtype_bytes
     w_down = f * d * dtype_bytes
     n_up = 2 if gated else 1
+    norm_vec = _prenorm_vec_bytes(d, prenorm, dtype_bytes)
     if fused:
-        up = act_td + n_up * w_up + act_tf
+        up = act_td + n_up * w_up + act_tf + norm_vec
         down = act_tf + w_down + act_td + (act_td if residual else 0)
         total = up + down
     else:
+        norm_pass = (2 * act_td + norm_vec) if prenorm != "none" else 0
         up = n_up * (act_td + w_up + act_tf)
         glu = (3 if gated else 2) * act_tf  # read h_gate[, h_in], write h
         down = act_tf + w_down + act_td
         resid = 3 * act_td if residual else 0  # read out, read x, write out
-        total = up + glu + down + resid
+        total = norm_pass + up + glu + down + resid
     flops = 2.0 * t * f * d * (n_up + 1)
+    if prenorm != "none":
+        flops += 8.0 * t * d  # one norm pass (~8 vector ops/element)
     return _chain_dict(total, flops, fused, dtype_bytes, chip)
 
 
 def qkv_rope_chain_model(*, tokens: int, d_model: int, num_heads: int,
                          num_kv_heads: int, head_dim: int,
-                         dtype_bytes: int = 2, fused: bool = True,
-                         chip: ChipSpec = V5E) -> dict:
-    """The attention QKV-projection → RoPE prologue chain.
+                         dtype_bytes: int = 2, prenorm: str = "none",
+                         fused: bool = True, chip: ChipSpec = V5E) -> dict:
+    """The attention [pre-norm +] QKV-projection → RoPE chain.
 
-    fused (two launches): one GEMM produces rope(x@[wq|wk]) with the
-    rotation applied to the resident output tiles, a second produces v —
-    x is read twice, q/k never round-trip HBM for the rotation. The
-    in-graph concat of wq|wk materializes a combined weight block each
-    step (write + read back), a *token-independent* cost charged to the
-    fused plan — at small token counts it outweighs the rope round trip
-    and the unfused plan wins.
-    unfused: three projection GEMMs (x read each time) + a rope pass that
-    re-reads and re-writes q and k.
+    fused (two launches): one GEMM over the pre-packed ``wqk`` weight
+    produces rope(norm(x)@[wq|wk]) with the rotation applied to the
+    resident output tiles, a second produces v — x is read twice, q/k never
+    round-trip HBM for the rotation, and with ``prenorm`` each GEMM folds
+    the norm into its A-tile prologue (the normed activation never exists
+    in HBM; both launches stream the gamma/beta rows). ``[wq|wk]`` is
+    packed at param-build time, so no in-graph concat is charged — the
+    fused plan wins at every token count (it strictly removes passes).
+    unfused: [standalone norm +] three projection GEMMs (norm(x) read each
+    time) + a rope pass that re-reads and re-writes q and k.
     """
     t = tokens
     nq = num_heads * head_dim
@@ -269,13 +288,17 @@ def qkv_rope_chain_model(*, tokens: int, d_model: int, num_heads: int,
     w = d_model * (nq + 2 * nkv) * dtype_bytes
     qkv_write = t * (nq + 2 * nkv) * dtype_bytes
     tables = 2 * t * head_dim * 4  # f32 sin/cos, duplicated halves
+    norm_vec = _prenorm_vec_bytes(d_model, prenorm, dtype_bytes)
     if fused:
-        wqk_concat = 2 * d_model * (nq + nkv) * dtype_bytes
-        total = 2 * x_read + w + qkv_write + tables + wqk_concat
+        total = 2 * x_read + w + qkv_write + tables + 2 * norm_vec
     else:
+        norm_pass = (2 * x_read + norm_vec) if prenorm != "none" else 0
         rope_rw = 2 * t * (nq + nkv) * dtype_bytes
-        total = 3 * x_read + w + qkv_write + tables + rope_rw
+        total = norm_pass + 3 * x_read + w + qkv_write + tables + rope_rw
     flops = 2.0 * t * d_model * (nq + 2 * nkv)
+    if prenorm != "none":
+        # fused: both launches re-norm their A tiles; unfused: one pass
+        flops += 8.0 * tokens * d_model * (2 if fused else 1)
     return _chain_dict(total, flops, fused, dtype_bytes, chip)
 
 

@@ -63,9 +63,13 @@ class KernelPolicy:
     ``epilogue`` (gemm only) is a fused store chain — any frozen object with
     the :class:`repro.kernels.gemm.epilogue.Epilogue` protocol
     (``extra_operand_blocks``/``extra_scratch_accumulators``/``describe``).
-    It is duck-typed here so ``repro.core`` never imports ``repro.kernels``;
-    its extra streamed blocks and second accumulator count against the VMEM
-    legality rule exactly like the A/B panels (DESIGN.md §9).
+    ``prologue`` (gemm only) is the symmetric fused A-operand chain — any
+    frozen object with the :class:`repro.kernels.gemm.prologue.Prologue`
+    protocol (``extra_operand_blocks``/``needs_full_k``/``describe``).
+    Both are duck-typed here so ``repro.core`` never imports
+    ``repro.kernels``; their extra streamed blocks and the epilogue's second
+    accumulator count against the VMEM legality rule exactly like the A/B
+    panels (DESIGN.md §9-§10).
     """
 
     op: str
@@ -74,6 +78,7 @@ class KernelPolicy:
     in_dtype: str = "bfloat16"
     acc_dtype: str = "float32"
     epilogue: Optional[object] = None
+    prologue: Optional[object] = None
 
     def __post_init__(self):
         if self.op not in OP_KINDS:
@@ -82,6 +87,9 @@ class KernelPolicy:
             raise ValueError(f"unsupported acc_dtype {self.acc_dtype!r}")
         if self.epilogue is not None and self.op != "gemm":
             raise ValueError(f"epilogue chains only apply to gemm policies, "
+                             f"not {self.op!r}")
+        if self.prologue is not None and self.op != "gemm":
+            raise ValueError(f"prologue chains only apply to gemm policies, "
                              f"not {self.op!r}")
 
     # -- block accessors (names per the op-kind table in the module doc) ----
@@ -120,6 +128,9 @@ class KernelPolicy:
         if self.op == "gemm":
             blocks = [((s.block_m, s.block_k), self.in_dtype),
                       ((s.block_k, s.block_n), self.in_dtype)]
+            if self.prologue is not None:
+                blocks += self.prologue.extra_operand_blocks(
+                    s.block_m, s.block_k, self.in_dtype)
             if self.epilogue is not None:
                 blocks += self.epilogue.extra_operand_blocks(
                     s.block_m, s.block_n, s.block_k, self.in_dtype)
@@ -201,6 +212,8 @@ class KernelPolicy:
             "op": self.op,
             "epilogue": (self.epilogue.describe()
                          if self.epilogue is not None else "none"),
+            "prologue": (self.prologue.describe()
+                         if self.prologue is not None else "none"),
             "schedule": s.name,
             "blocks": [s.block_m, s.block_n, s.block_k],
             "n_buffers": s.n_buffers,
@@ -214,7 +227,7 @@ class KernelPolicy:
 
     def cache_key(self) -> tuple:
         return (self.op, self.schedule, self.swizzle, self.in_dtype,
-                self.acc_dtype, self.epilogue)
+                self.acc_dtype, self.epilogue, self.prologue)
 
 
 # ---------------------------------------------------------------------------
@@ -225,14 +238,15 @@ def make_policy(op: str, *, block_m: int, block_n: int = 0, block_k: int = 0,
                 n_buffers: int = 2, swizzle: SwizzleConfig = ROW_MAJOR,
                 in_dtype: str = "bfloat16", acc_dtype: str = "float32",
                 name: str = "explicit",
-                epilogue: Optional[object] = None) -> KernelPolicy:
+                epilogue: Optional[object] = None,
+                prologue: Optional[object] = None) -> KernelPolicy:
     """Build a policy from explicit block dims (no legality enforcement —
     call .check() to enforce; the autotuner only emits legal ones)."""
     sched = Schedule(name, n_buffers=n_buffers, block_m=block_m,
                      block_n=block_n, block_k=block_k)
     return KernelPolicy(op=op, schedule=sched, swizzle=swizzle,
                         in_dtype=in_dtype, acc_dtype=acc_dtype,
-                        epilogue=epilogue)
+                        epilogue=epilogue, prologue=prologue)
 
 
 def legacy_policy(op: str, *, warn_what: str = "", **blocks) -> KernelPolicy:

@@ -1,4 +1,5 @@
 from .epilogue import EPILOGUE_NONE, Epilogue  # noqa: F401
+from .prologue import PROLOGUE_NONE, Prologue, norm_prologue  # noqa: F401
 from .ops import gemm, gemm_fused  # noqa: F401
 from .ref import gemm_fused_ref, gemm_ref  # noqa: F401
 from .kernel import gemm_pallas  # noqa: F401

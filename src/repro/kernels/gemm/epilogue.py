@@ -28,9 +28,15 @@ Canonical chain order (each stage optional):
 
 The same :meth:`Epilogue.apply` implements the chain for both the Pallas
 kernel (on VMEM tiles) and the jnp oracle (on full arrays) — every stage is
-elementwise or row-broadcast, so tile-wise application is exact.
+elementwise or row-broadcast, so tile-wise application is exact. This
+chain-spec protocol (``operand_names`` / ``extra_operand_blocks`` /
+``check_blocks`` / ``apply`` / ``extra_read_bytes`` / ``describe``) is
+shared with the load-side :class:`~repro.kernels.gemm.prologue.Prologue`
+(DESIGN.md §10), which transforms the A tiles on the way *in* the same way
+this spec transforms the output tiles on the way out.
 
-Extra-operand convention (the order kernels and ops agree on):
+Extra-operand convention (the order kernels and ops agree on; prologue
+operands precede these in the kernel ref list):
 ``b2?, bias?, residual?, scale?, sin?, cos?`` — see :meth:`operand_names`.
 
 Legality (DESIGN.md §9): the extra streamed blocks and the second

@@ -15,7 +15,10 @@ The final ``@pl.when(k == nk-1)`` store runs the policy's
 :class:`~repro.kernels.gemm.epilogue.Epilogue` chain (bias, activation,
 gated multiply, residual, dequant scale, RoPE rotation) on the fp32
 accumulator while it is still VMEM-resident — the whole point of the fused
-megakernel paths: consumers never re-read the activation from HBM.
+megakernel paths: consumers never re-read the activation from HBM. The
+symmetric load side is the :class:`~repro.kernels.gemm.prologue.Prologue`:
+each A tile is row-normalized (rmsnorm/layernorm) in fp32 as it streams in,
+so producers never *write* the normed activation either (DESIGN.md §10).
 
 Every grid/BlockSpec dimension here is derived from a
 :class:`~repro.core.policy.KernelPolicy`; the old ``block_m/n/k`` + ``swizzle``
@@ -35,6 +38,7 @@ from repro.core import tiles
 from repro.core.grid_swizzle import SwizzleConfig, ROW_MAJOR
 from repro.core.policy import KernelPolicy, resolve_policy
 from .epilogue import EPILOGUE_NONE, Epilogue
+from .prologue import PROLOGUE_NONE, Prologue
 
 
 def _upcast(x):
@@ -42,12 +46,14 @@ def _upcast(x):
     return x.astype(jnp.bfloat16) if x.dtype.itemsize == 1 else x
 
 
-def _gemm_kernel(*refs, nk: int, out_dtype, epilogue: Epilogue):
-    """refs: a, b, *extra inputs (epilogue.operand_names() order), o,
-    acc[, acc2]."""
+def _gemm_kernel(*refs, nk: int, out_dtype, epilogue: Epilogue,
+                 prologue: Prologue):
+    """refs: a, b, *extra inputs (prologue then epilogue operand_names()
+    order), o, acc[, acc2]."""
     refs = list(refs)
     a_ref, b_ref = refs[0], refs[1]
-    extras = dict(zip(epilogue.operand_names(), refs[2:]))
+    names = prologue.operand_names() + epilogue.operand_names()
+    extras = dict(zip(names, refs[2:]))
     gate = epilogue.gate
     o_ref = refs[-3] if gate else refs[-2]
     acc_ref = refs[-2] if gate else refs[-1]
@@ -62,6 +68,19 @@ def _gemm_kernel(*refs, nk: int, out_dtype, epilogue: Epilogue):
             acc2_ref[...] = jnp.zeros_like(acc2_ref)
 
     a = _upcast(a_ref[...])
+    if not prologue.is_identity:
+        # load-side norm: the A tile is normalized in fp32 while VMEM-resident
+        # (row stats recomputed from the full-K tile, or streamed on the fast
+        # path), then fed to the MXU in the input dtype — the normed
+        # activation never round-trips HBM (DESIGN.md §10).
+        pkw = {"gamma": extras["gamma"][...].astype(jnp.float32)}
+        if prologue.beta:
+            pkw["beta"] = extras["beta"][...].astype(jnp.float32)
+        if prologue.precomputed_stats:
+            if prologue.norm == "layernorm":
+                pkw["mean"] = extras["mean"][...]
+            pkw["rstd"] = extras["rstd"][...]
+        a = prologue.apply(a.astype(jnp.float32), **pkw).astype(a.dtype)
     acc_ref[...] += jnp.dot(a, _upcast(b_ref[...]),
                             preferred_element_type=jnp.float32)
     if gate:
@@ -103,7 +122,8 @@ def _fit_block(dim: int, want: int, multiple: int = 1,
 
 
 def _fit_policy(policy: KernelPolicy, m: int, n: int, k: int,
-                epilogue: Epilogue = EPILOGUE_NONE) -> tuple:
+                epilogue: Epilogue = EPILOGUE_NONE,
+                prologue: Prologue = PROLOGUE_NONE) -> tuple:
     """Clamp the policy's blocks to the largest divisor blocks of the problem.
 
     A policy tuned for one shape-bucket stays usable on any shape: blocks
@@ -111,35 +131,41 @@ def _fit_policy(policy: KernelPolicy, m: int, n: int, k: int,
     non-divisible problems (the autotuner emits exact-divisor candidates, so
     tuned launches never pay the shrink). Lane/sublane-aligned divisors are
     preferred (bk/bn sit in a block minor dim, bm only in sublane rows);
-    the rope epilogue additionally pins block_n to whole heads.
+    the rope epilogue additionally pins block_n to whole heads, and a
+    recompute-path norm prologue pins block_k to the full feature dim.
     """
     n_multiple = epilogue.head_dim if epilogue.rope else 1
     bm = _fit_block(m, policy.block_m, prefer=32)          # max sublane
     bn = _fit_block(n, policy.block_n, n_multiple, prefer=tiles.LANE)
-    bk = _fit_block(k, policy.block_k, prefer=tiles.LANE)
+    bk = k if prologue.needs_full_k else \
+        _fit_block(k, policy.block_k, prefer=tiles.LANE)
     epilogue.check_blocks(bn)
+    prologue.check_blocks(bk, k)
     return bm, bn, bk
 
 
 @functools.partial(jax.jit,
                    static_argnames=("policy", "out_dtype", "interpret",
-                                    "epilogue"))
+                                    "epilogue", "prologue"))
 def _gemm_pallas(a: jax.Array, b: jax.Array, *extras, policy: KernelPolicy,
                  out_dtype, interpret: bool,
-                 epilogue: Epilogue = EPILOGUE_NONE) -> jax.Array:
+                 epilogue: Epilogue = EPILOGUE_NONE,
+                 prologue: Prologue = PROLOGUE_NONE) -> jax.Array:
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
-    assert len(extras) == len(epilogue.operand_names()), \
-        (epilogue.operand_names(), len(extras))
-    block_m, block_n, block_k = _fit_policy(policy, m, n, k, epilogue)
+    names = prologue.operand_names() + epilogue.operand_names()
+    assert len(extras) == len(names), (names, len(extras))
+    block_m, block_n, block_k = _fit_policy(policy, m, n, k, epilogue,
+                                            prologue)
     num_rows, num_cols, nk = m // block_m, n // block_n, k // block_k
     swizzle = policy.swizzle
 
     # Tab. 2 feasibility rule at the policy's pipeline depth, including the
-    # epilogue's extra streamed blocks and second accumulator.
+    # prologue/epilogue extra streamed blocks and second accumulator.
     tiles.check_vmem_budget(
         [((block_m, block_k), a.dtype), ((block_k, block_n), b.dtype)]
+        + prologue.extra_operand_blocks(block_m, block_k, str(a.dtype))
         + epilogue.extra_operand_blocks(block_m, block_n, block_k,
                                         str(a.dtype)),
         n_buffers=policy.n_buffers,
@@ -169,6 +195,9 @@ def _gemm_pallas(a: jax.Array, b: jax.Array, *extras, policy: KernelPolicy,
         _, c = row_col(i)
         return (0, c)
 
+    def k_map(i, kk):
+        return (0, kk)
+
     in_specs = [
         tiles.block_spec((block_m, block_k), a_map, a.dtype,
                          allow_ragged_minor=tiles.shape_ragged(
@@ -177,8 +206,17 @@ def _gemm_pallas(a: jax.Array, b: jax.Array, *extras, policy: KernelPolicy,
                          allow_ragged_minor=tiles.shape_ragged(
                              k, n, b.dtype)),
     ]
-    for name, arr in zip(epilogue.operand_names(), extras):
-        if name == "b2":
+    for name, arr in zip(names, extras):
+        if name in ("gamma", "beta"):
+            # prologue row vectors: the kk-th (1, block_k) slice streams
+            # alongside the A tile it normalizes
+            spec = tiles.block_spec((1, block_k), k_map, arr.dtype,
+                                    allow_ragged_minor=True)
+        elif name in ("mean", "rstd"):
+            # fast-path row stats: one (block_m, 1) f32 column per row block
+            spec = tiles.block_spec((block_m, 1), row_map, arr.dtype,
+                                    allow_ragged_minor=True)
+        elif name == "b2":
             spec = tiles.block_spec((block_k, block_n), b_map, arr.dtype,
                                     allow_ragged_minor=tiles.shape_ragged(
                                         k, n, arr.dtype))
@@ -200,7 +238,7 @@ def _gemm_pallas(a: jax.Array, b: jax.Array, *extras, policy: KernelPolicy,
     scratch = [pltpu.VMEM((block_m, block_n), jnp.float32)
                for _ in range(epilogue.n_accumulators)]
     kernel = functools.partial(_gemm_kernel, nk=nk, out_dtype=out_dtype,
-                               epilogue=epilogue)
+                               epilogue=epilogue, prologue=prologue)
     return pl.pallas_call(
         kernel,
         grid=(num_rows * num_cols, nk),
@@ -228,9 +266,9 @@ def gemm_pallas(a: jax.Array, b: jax.Array, *,
     (builds an equivalent explicit policy); with neither a policy nor blocks,
     the autotuner resolves one per shape-bucket.
 
-    This is the *plain* GEMM: a policy that carries an epilogue contributes
-    only its blocks/swizzle here — the chain is ignored (it needs operands
-    this signature cannot supply). Epilogue-fused launches go through
+    This is the *plain* GEMM: a policy that carries an epilogue or prologue
+    contributes only its blocks/swizzle here — the chains are ignored (they
+    need operands this signature cannot supply). Fused launches go through
     :func:`repro.kernels.gemm.ops.gemm_fused`.
     """
     if policy is None:

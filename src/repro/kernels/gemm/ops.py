@@ -9,11 +9,13 @@ Policy resolution order (DESIGN.md §5): explicit ``policy`` > legacy
 ``schedule``/``swizzle`` keywords (deprecation shim) > the analytic autotuner
 (``autotune.select_policy``, memoized per shape-bucket).
 
-:func:`gemm_fused` is the megakernel entry point (DESIGN.md §9): one GEMM
-launch whose store runs a declarative :class:`Epilogue` chain — bias,
-activation, dual-output SwiGLU gating, residual add, fp8 dequant scale, and
-the QKV→RoPE prologue rotation — so consumers never re-read the activation
-from HBM.
+:func:`gemm_fused` is the megakernel entry point (DESIGN.md §9-§10): one
+GEMM launch whose A tiles run a declarative :class:`Prologue`
+(rmsnorm/layernorm as the operand streams in — producers never write the
+normed activation) and whose store runs a declarative :class:`Epilogue`
+chain — bias, activation, dual-output SwiGLU gating, residual add, fp8
+dequant scale, and the QKV→RoPE rotation — so consumers never re-read the
+activation from HBM.
 """
 from __future__ import annotations
 
@@ -27,6 +29,7 @@ from repro.core.grid_swizzle import SwizzleConfig, ROW_MAJOR, best_window
 from repro.core.policy import KernelPolicy, make_policy
 from repro.core.schedule import Schedule
 from .epilogue import EPILOGUE_NONE, Epilogue
+from .prologue import PROLOGUE_NONE, Prologue
 from .kernel import _fit_block, _gemm_pallas, gemm_pallas
 from .ref import gemm_fused_ref, gemm_ref
 
@@ -78,30 +81,36 @@ def gemm(a, b, *, policy: KernelPolicy | None = None,
                        interpret=(mode == "pallas_interpret"))
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
-def _gemm_fused(policy, out_dtype, interpret, epilogue, a, b, extras):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
+def _gemm_fused(policy, out_dtype, interpret, epilogue, prologue, a, b,
+                extras):
     return _gemm_pallas(a, b, *extras, policy=policy, out_dtype=out_dtype,
-                        interpret=interpret, epilogue=epilogue)
+                        interpret=interpret, epilogue=epilogue,
+                        prologue=prologue)
 
 
-def _gemm_fused_fwd(policy, out_dtype, interpret, epilogue, a, b, extras):
+def _gemm_fused_fwd(policy, out_dtype, interpret, epilogue, prologue, a, b,
+                    extras):
     out = _gemm_pallas(a, b, *extras, policy=policy, out_dtype=out_dtype,
-                       interpret=interpret, epilogue=epilogue)
+                       interpret=interpret, epilogue=epilogue,
+                       prologue=prologue)
     return out, (a, b, extras)
 
 
-def _gemm_fused_bwd(policy, out_dtype, interpret, epilogue, res, g):
-    """Backward = autodiff of the unfused jnp oracle (the fused store chain
-    is a short elementwise graph whose VJP XLA fuses well; the forward
-    GEMMs are recomputed here, which the train path pays anyway under
-    remat). Keeps the fused MLP/QKV paths trainable without a hand-written
+def _gemm_fused_bwd(policy, out_dtype, interpret, epilogue, prologue, res, g):
+    """Backward = autodiff of the unfused jnp oracle (the fused prologue and
+    store chain are short elementwise graphs whose VJPs XLA fuses well; the
+    forward GEMMs are recomputed here, which the train path pays anyway
+    under remat). Keeps the fused MLP/QKV paths — including the norm
+    prologue's gamma/beta gradients — trainable without a hand-written
     chain transpose."""
     a, b, extras = res
+    names = prologue.operand_names() + epilogue.operand_names()
 
     def ref_fn(a, b, extras):
-        kw = dict(zip(epilogue.operand_names(), extras))
-        return gemm_fused_ref(a, b, epilogue=epilogue, out_dtype=out_dtype,
-                              **kw)
+        kw = dict(zip(names, extras))
+        return gemm_fused_ref(a, b, epilogue=epilogue, prologue=prologue,
+                              out_dtype=out_dtype, **kw)
 
     _, vjp = jax.vjp(ref_fn, a, b, extras)
     return vjp(g)
@@ -110,49 +119,81 @@ def _gemm_fused_bwd(policy, out_dtype, interpret, epilogue, res, g):
 _gemm_fused.defvjp(_gemm_fused_fwd, _gemm_fused_bwd)
 
 
-def gemm_fused(a, b, *, epilogue: Epilogue, b2=None, bias=None, residual=None,
-               scale=None, sin=None, cos=None,
+def gemm_fused(a, b, *, epilogue: Epilogue = EPILOGUE_NONE,
+               prologue: Prologue = PROLOGUE_NONE, b2=None, bias=None,
+               residual=None, scale=None, sin=None, cos=None,
+               gamma=None, beta=None, mean=None, rstd=None,
                policy: KernelPolicy | None = None,
                out_dtype=jnp.bfloat16, mode: str = "pallas_interpret"):
-    """C = epilogue(A @ B) in one kernel launch (DESIGN.md §9).
+    """C = epilogue(prologue(A) @ B) in one kernel launch (DESIGN.md §9-§10).
 
     Extra operands per epilogue flag: ``gate`` → ``b2`` (K, N) second weight
     (dual-output SwiGLU GEMM, C = act(A@B) * (A@B2)); ``bias`` → (N,);
     ``residual`` → (M, N); ``scale`` → scalar (fp8 dequant / residual
     scale); ``rope`` → ``sin``/``cos`` (M, head_dim) duplicated-halves
-    tables (the fused QKV→RoPE prologue).
+    tables (the fused QKV→RoPE rotation).
+
+    Per prologue flag: any norm → ``gamma`` (K,) row scale; ``beta`` →
+    (K,) layernorm bias row; ``precomputed_stats`` → ``rstd`` (M,) (and
+    ``mean`` (M,) for layernorm) f32 row statistics (the fast path that
+    keeps K-blocking; see Prologue.compute_stats).
 
     'reference' mode runs the unfused jnp oracle (full HBM round trips);
-    the pallas modes run the chain inside the kernel's final store. With
-    ``policy=None`` the autotuner resolves an epilogue-aware policy (extra
-    operands and the second accumulator count against the VMEM budget).
+    the pallas modes run the prologue on each A tile as it streams in and
+    the epilogue inside the kernel's final store. With ``policy=None`` the
+    autotuner resolves a chain-aware policy (extra operands and the second
+    accumulator count against the VMEM budget; a recompute-path norm
+    prologue pins block_k to the full feature dim).
     """
     provided = dict(b2=b2, bias=bias, residual=residual, scale=scale,
                     sin=sin, cos=cos)
+    pro_provided = dict(gamma=gamma, beta=beta, mean=mean, rstd=rstd)
     wanted = epilogue.operand_names()
+    pro_wanted = prologue.operand_names()
     for name, val in provided.items():
         if (val is not None) != (name in wanted):
             raise ValueError(
                 f"gemm_fused: operand {name!r} "
                 f"{'missing for' if name in wanted else 'not accepted by'} "
                 f"epilogue {epilogue.describe()!r}")
+    for name, val in pro_provided.items():
+        if (val is not None) != (name in pro_wanted):
+            raise ValueError(
+                f"gemm_fused: operand {name!r} "
+                f"{'missing for' if name in pro_wanted else 'not accepted by'} "
+                f"prologue {prologue.describe()!r}")
     if mode == "reference":
-        return gemm_fused_ref(a, b, epilogue=epilogue, b2=b2, bias=bias,
-                              residual=residual, scale=scale, sin=sin,
-                              cos=cos, out_dtype=out_dtype)
+        return gemm_fused_ref(a, b, epilogue=epilogue, prologue=prologue,
+                              b2=b2, bias=bias, residual=residual,
+                              scale=scale, sin=sin, cos=cos, gamma=gamma,
+                              beta=beta, mean=mean, rstd=rstd,
+                              out_dtype=out_dtype)
     m, k = a.shape
     _, n = b.shape
     if policy is None:
         policy = autotune.select_policy("gemm", (m, n, k), str(a.dtype),
-                                        epilogue=epilogue)
-    elif policy.epilogue is not None and policy.epilogue != epilogue:
-        # two sources of truth: the explicit chain argument must match the
-        # chain the policy's legality/traffic accounting was done for
-        raise ValueError(
-            f"gemm_fused: policy carries epilogue "
-            f"{policy.epilogue.describe()!r} but the call passes "
-            f"{epilogue.describe()!r}")
+                                        epilogue=epilogue, prologue=prologue)
+    else:
+        # two sources of truth: the explicit chain arguments must match the
+        # chains the policy's legality/traffic accounting was done for
+        if policy.epilogue is not None and policy.epilogue != epilogue:
+            raise ValueError(
+                f"gemm_fused: policy carries epilogue "
+                f"{policy.epilogue.describe()!r} but the call passes "
+                f"{epilogue.describe()!r}")
+        if policy.prologue is not None and policy.prologue != prologue:
+            raise ValueError(
+                f"gemm_fused: policy carries prologue "
+                f"{policy.prologue.describe()!r} but the call passes "
+                f"{prologue.describe()!r}")
     extras = []
+    for name in pro_wanted:
+        val = pro_provided[name]
+        if name in ("gamma", "beta"):
+            val = jnp.asarray(val).reshape(1, -1)
+        else:  # mean / rstd: (M, 1) f32 columns
+            val = jnp.asarray(val, jnp.float32).reshape(-1, 1)
+        extras.append(val)
     for name in wanted:
         val = provided[name]
         if name == "bias":
@@ -161,4 +202,4 @@ def gemm_fused(a, b, *, epilogue: Epilogue, b2=None, bias=None, residual=None,
             val = jnp.asarray(val, jnp.float32).reshape(1, 1)
         extras.append(val)
     return _gemm_fused(policy, out_dtype, mode == "pallas_interpret",
-                       epilogue, a, b, tuple(extras))
+                       epilogue, prologue, a, b, tuple(extras))

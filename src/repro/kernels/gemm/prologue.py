@@ -1,0 +1,210 @@
+"""Declarative load-side prologues for the blocked GEMM megakernel.
+
+The :class:`~repro.kernels.gemm.epilogue.Epilogue` (DESIGN.md §9) is the
+*store* half of the fusion story: a short elementwise chain run on the
+output tile while it is still VMEM-resident. A :class:`Prologue` is the
+symmetric *load* half: a per-row normalization (rmsnorm / layernorm)
+applied to each A tile as it streams into VMEM, before it feeds the MXU.
+This eliminates the normed-activation HBM round trip in front of every
+pre-norm transformer GEMM — the QKV projection and the MLP up-projection
+both read ``norm(x)``, which today is written by a standalone norm pass and
+immediately read back (DESIGN.md §10).
+
+Two stats paths, selected by ``precomputed_stats``:
+
+  * **recompute (default)** — the kernel computes the row statistics
+    (mean / rstd) from the A tile itself. Exact only when the tile spans
+    the full feature dim, so :meth:`check_blocks` pins
+    ``block_k == K``. The norm is recomputed once per A-tile *visit*
+    (i.e. once per output-column block under the traversal order) — cheap
+    vector work the plan model charges per visit, bought against the
+    eliminated ``2·M·K`` activation round trip.
+  * **precomputed-rstd fast path** — the caller precomputes the (M, 1)
+    row statistics (``rstd``, plus ``mean`` for layernorm) with one jnp
+    pass over x and streams them as tiny row blocks. Given the row stats
+    the norm is affine per element, so any ``block_k`` is exact and
+    K-blocking is preserved.
+
+gamma (and beta for layernorm) stream as (1, block_k) row vectors indexed
+by the k grid dim — the same row-broadcast convention as the epilogue's
+bias, on the operand side.
+
+:class:`Prologue` implements the same chain-spec protocol as
+:class:`Epilogue` (``operand_names`` / ``extra_operand_blocks`` /
+``check_blocks`` / ``apply`` / ``describe`` / ``extra_read_bytes``), and
+one :meth:`apply` serves both the Pallas kernel (on VMEM tiles) and the
+jnp oracle (on full arrays). Extra-operand convention (prologue operands
+precede epilogue operands in the kernel ref list):
+``gamma?, beta?, mean?, rstd?`` — see :meth:`operand_names`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NORMS = ("none", "rmsnorm", "layernorm")
+
+# eps defaults matching models/common.{rmsnorm,layernorm} — the prologue
+# must be bit-compatible with the standalone norms it replaces.
+_DEFAULT_EPS = {"rmsnorm": 1e-6, "layernorm": 1e-5}
+
+
+@dataclasses.dataclass(frozen=True)
+class Prologue:
+    """A frozen, hashable A-operand prologue spec (jit-static by construction).
+
+    ``beta`` marks the layernorm bias row; ``precomputed_stats`` selects the
+    fast path (caller-supplied ``rstd`` and, for layernorm, ``mean`` row
+    vectors); ``eps`` defaults per norm kind to match the standalone
+    reference norms.
+    """
+
+    norm: str = "none"              # 'none' | 'rmsnorm' | 'layernorm'
+    beta: bool = False              # layernorm bias row present
+    precomputed_stats: bool = False # stream (M, 1) stats instead of recompute
+    eps: Optional[float] = None     # resolved per norm kind when None
+
+    def __post_init__(self):
+        if self.norm not in NORMS:
+            raise ValueError(f"unknown norm {self.norm!r}; have {NORMS}")
+        if self.norm == "none":
+            if self.beta or self.precomputed_stats or self.eps is not None:
+                raise ValueError("beta/precomputed_stats/eps are only "
+                                 "meaningful with a norm")
+        else:
+            if self.beta and self.norm != "layernorm":
+                raise ValueError("beta (bias row) only applies to layernorm")
+            if self.eps is None:
+                object.__setattr__(self, "eps", _DEFAULT_EPS[self.norm])
+
+    # -- identity / shape of the chain -------------------------------------
+    @property
+    def is_identity(self) -> bool:
+        return self.norm == "none"
+
+    @property
+    def needs_full_k(self) -> bool:
+        """True when the A tile must span the whole feature dim (the
+        recompute path derives row stats from the tile itself)."""
+        return self.norm != "none" and not self.precomputed_stats
+
+    def operand_names(self) -> tuple:
+        """Runtime extra operands, in the canonical kernel order (prologue
+        operands precede epilogue operands)."""
+        names = []
+        if self.norm != "none":
+            names.append("gamma")
+            if self.beta:
+                names.append("beta")
+            if self.precomputed_stats:
+                if self.norm == "layernorm":
+                    names.append("mean")
+                names.append("rstd")
+        return tuple(names)
+
+    # -- VMEM legality accounting (consumed by KernelPolicy) ----------------
+    def extra_operand_blocks(self, block_m: int, block_k: int,
+                             in_dtype: str) -> list:
+        """(shape, dtype) of each extra pipelined block, for vmem budgeting.
+
+        gamma/beta are (1, block_k) row blocks indexed by the k grid dim;
+        the fast-path stats are (block_m, 1) f32 column blocks indexed by
+        the output-row dim.
+        """
+        blocks = []
+        if self.norm != "none":
+            blocks.append(((1, block_k), in_dtype))
+            if self.beta:
+                blocks.append(((1, block_k), in_dtype))
+            if self.precomputed_stats:
+                n_stats = 2 if self.norm == "layernorm" else 1
+                blocks += [((block_m, 1), "float32")] * n_stats
+        return blocks
+
+    def check_blocks(self, block_k: int, k_total: int) -> None:
+        """Raise on block shapes the prologue cannot legally tile."""
+        if self.needs_full_k and block_k != k_total:
+            raise ValueError(
+                f"{self.norm} prologue (recompute path) needs the A tile to "
+                f"span the full feature dim: block_k == K "
+                f"(got block_k={block_k}, K={k_total}); use "
+                f"precomputed_stats=True to keep K-blocking")
+
+    # -- modeled HBM traffic of the extra streamed operands -----------------
+    def extra_read_bytes(self, m: int, k: int, dtype_bytes: int) -> int:
+        """Bytes the fused kernel reads beyond the A/B panels: the gamma
+        (and beta) row vectors, plus the fast-path stats columns. The
+        *eliminated* normed-activation round trip is accounted at the
+        chain-model level (perf_model), not here."""
+        extra = 0
+        if self.norm != "none":
+            extra += k * dtype_bytes * (2 if self.beta else 1)
+            if self.precomputed_stats:
+                extra += m * 4 * (2 if self.norm == "layernorm" else 1)
+        return extra
+
+    # -- the chain itself ---------------------------------------------------
+    def compute_stats(self, x) -> dict:
+        """The fast path's (rows, 1) f32 row statistics for full array ``x``
+        — one cheap jnp pass; callers feed the result to ``gemm_fused``."""
+        if self.norm == "none":
+            return {}
+        xf = x.astype(jnp.float32)
+        if self.norm == "rmsnorm":
+            var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+            return {"rstd": jax.lax.rsqrt(var + self.eps)}
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        c = xf - mean
+        var = jnp.mean(c * c, axis=-1, keepdims=True)
+        return {"mean": mean, "rstd": jax.lax.rsqrt(var + self.eps)}
+
+    def apply(self, x, *, gamma=None, beta=None, mean=None, rstd=None):
+        """Normalize an fp32 A tile (or full array) row-wise.
+
+        Without precomputed stats the reduction runs over the tile's last
+        axis — exact because ``check_blocks`` pinned the tile to the full
+        feature dim. All operands must already be fp32; broadcasting makes
+        the same code exact for a (block_m, block_k) tile and the full
+        (M, K) array. Identical math to models/common.{rmsnorm,layernorm}.
+        """
+        if self.norm == "none":
+            return x
+        if self.norm == "rmsnorm":
+            if rstd is None:
+                var = jnp.mean(x * x, axis=-1, keepdims=True)
+                rstd = jax.lax.rsqrt(var + self.eps)
+            return x * rstd * gamma
+        if mean is None:
+            mean = jnp.mean(x, axis=-1, keepdims=True)
+        c = x - mean
+        if rstd is None:
+            var = jnp.mean(c * c, axis=-1, keepdims=True)
+            rstd = jax.lax.rsqrt(var + self.eps)
+        out = c * rstd * gamma
+        if self.beta:
+            out = out + beta
+        return out
+
+    def describe(self) -> str:
+        """Short tag for reports/benchmark rows, e.g. 'rmsnorm@rstd'."""
+        if self.is_identity:
+            return "none"
+        tag = self.norm
+        if self.beta:
+            tag += "+beta"
+        if self.precomputed_stats:
+            tag += "@rstd"
+        return tag
+
+
+PROLOGUE_NONE = Prologue()
+
+
+def norm_prologue(kind: str, *, beta: bool = False,
+                  precomputed_stats: bool = False) -> Prologue:
+    """The prologue matching a model config's ``norm`` field ('rmsnorm' |
+    'layernorm'), with the reference eps for that kind."""
+    return Prologue(norm=kind, beta=beta, precomputed_stats=precomputed_stats)

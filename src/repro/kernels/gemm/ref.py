@@ -1,7 +1,8 @@
-"""Pure-jnp oracles for the GEMM kernel and its fused epilogue chains."""
+"""Pure-jnp oracles for the GEMM kernel and its fused prologue/epilogue chains."""
 import jax.numpy as jnp
 
 from .epilogue import EPILOGUE_NONE, Epilogue
+from .prologue import PROLOGUE_NONE, Prologue
 
 
 def gemm_ref(a, b, out_dtype=jnp.bfloat16):
@@ -9,16 +10,33 @@ def gemm_ref(a, b, out_dtype=jnp.bfloat16):
                    preferred_element_type=jnp.float32).astype(out_dtype)
 
 
-def gemm_fused_ref(a, b, *, epilogue: Epilogue = EPILOGUE_NONE, b2=None,
+def gemm_fused_ref(a, b, *, epilogue: Epilogue = EPILOGUE_NONE,
+                   prologue: Prologue = PROLOGUE_NONE, b2=None,
                    bias=None, residual=None, scale=None, sin=None, cos=None,
+                   gamma=None, beta=None, mean=None, rstd=None,
                    out_dtype=jnp.bfloat16):
     """Unfused oracle for :func:`repro.kernels.gemm.ops.gemm_fused`.
 
-    Materializes the full fp32 GEMM result(s), then runs the identical
-    epilogue chain on the whole array — the HBM-round-trip version the fused
-    kernel eliminates. Operand shapes: bias (N,) or (1, N); residual (M, N);
-    scale scalar; sin/cos (M, head_dim) duplicated-halves tables.
+    Runs the identical prologue on the full A array (materializing the
+    normed activation the fused kernel never writes), then the full fp32
+    GEMM result(s), then the identical epilogue chain on the whole array —
+    the HBM-round-trip version the fused kernel eliminates. Operand shapes:
+    gamma/beta (K,) or (1, K); mean/rstd (M,) or (M, 1); bias (N,) or
+    (1, N); residual (M, N); scale scalar; sin/cos (M, head_dim)
+    duplicated-halves tables.
     """
+    if not prologue.is_identity:
+        pkw = {"gamma": jnp.asarray(gamma, jnp.float32).reshape(1, -1)}
+        if prologue.beta:
+            pkw["beta"] = jnp.asarray(beta, jnp.float32).reshape(1, -1)
+        if prologue.precomputed_stats:
+            if prologue.norm == "layernorm":
+                pkw["mean"] = jnp.asarray(mean, jnp.float32).reshape(-1, 1)
+            pkw["rstd"] = jnp.asarray(rstd, jnp.float32).reshape(-1, 1)
+        # norm in fp32, then round through the MXU input dtype — the same
+        # rounding point as the kernel (fp8 operands feed the MXU as bf16)
+        mxu_dtype = jnp.bfloat16 if a.dtype.itemsize == 1 else a.dtype
+        a = prologue.apply(a.astype(jnp.float32), **pkw).astype(mxu_dtype)
     acc = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
                   preferred_element_type=jnp.float32)
     acc2 = None

@@ -188,7 +188,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     hlo_flops_total = roof.flops_per_chip * n_chips
     # the kernel policies this cell resolves to (autotuner choice per bucket)
     policies = rf.policy_cell_report(cfg, shape)
-    # fused-vs-unfused modeled traffic for the hot GEMM chains (DESIGN.md §9)
+    # fused-vs-unfused modeled traffic for the hot GEMM chains, incl. the
+    # norm-prologue cells (DESIGN.md §9-§10)
     fusion = rf.fusion_cell_report(cfg, shape)
     record.update(
         status="ok", n_chips=n_chips, compile_s=round(dt, 1),

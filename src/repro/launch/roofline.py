@@ -141,14 +141,17 @@ def policy_cell_report(cfg, shape) -> dict:
 
 
 def fusion_cell_report(cfg, shape) -> dict:
-    """Per-cell fusion factors for the hot GEMM chains (DESIGN.md §9).
+    """Per-cell fusion factors for the hot GEMM chains (DESIGN.md §9-§10).
 
-    For each chain the epilogue subsystem can fuse (MLP/SwiGLU up+down,
-    QKV→RoPE) this reports the modeled HBM traffic of the fused megakernel
-    plan vs the unfused eager chain, and which plan the autotuner picks
-    from dma_bytes alone. Recorded next to the HLO roofline terms by the
-    dry-run: the HLO terms say where the model sits, these say how much of
-    the memory term the fused paths remove.
+    For each chain the fusion subsystem can fuse (MLP/SwiGLU up+down,
+    QKV→RoPE — each with and without the block's pre-norm folded into the
+    first GEMM's A-tile prologue) this reports the modeled HBM traffic of
+    the fused megakernel plan vs the unfused eager chain, and which plan
+    the autotuner picks from dma_bytes alone. The ``norm_*`` cells are the
+    prologue fusion factors: the same chain scored with the pre-norm on
+    both sides (folded vs standalone). Recorded next to the HLO roofline
+    terms by the dry-run: the HLO terms say where the model sits, these say
+    how much of the memory term the fused paths remove.
     """
     from repro.core import autotune
 
@@ -156,6 +159,7 @@ def fusion_cell_report(cfg, shape) -> dict:
     tokens = shape.global_batch * shape.seq_len
     dm = getattr(cfg, "d_model", 0)
     d_ff = getattr(cfg, "d_ff", 0) or 0
+    norm_kind = getattr(cfg, "norm", "rmsnorm")
     report = {}
 
     def cell(plan):
@@ -168,12 +172,16 @@ def fusion_cell_report(cfg, shape) -> dict:
         gated = getattr(cfg, "mlp_act", "swiglu") in ("swiglu", "geglu")
         report["mlp"] = cell(autotune.select_fusion(
             "mlp", (tokens, dm, d_ff, gated), dtype))
+        report["norm_mlp"] = cell(autotune.select_fusion(
+            "mlp", (tokens, dm, d_ff, gated), dtype, prenorm=norm_kind))
     h = getattr(cfg, "num_heads", 0)
     d = getattr(cfg, "head_dim", 0) or 0
     if dm and h and d and getattr(cfg, "rope_style", "none") == "half":
         hkv = getattr(cfg, "num_kv_heads", h) or h
         report["qkv_rope"] = cell(autotune.select_fusion(
             "qkv_rope", (tokens, dm, h, hkv, d), dtype))
+        report["norm_qkv_rope"] = cell(autotune.select_fusion(
+            "qkv_rope", (tokens, dm, h, hkv, d), dtype, prenorm=norm_kind))
     return report
 
 

@@ -26,20 +26,27 @@ from .common import ParamDef
 
 def attn_defs(cfg, prefix: str, *, stack: int | None = None,
               cross: bool = False) -> dict:
+    """q and k projections are stored PRE-PACKED as one ``wqk`` weight
+    (d, (H+Hkv)·hd) — the fused QKV→RoPE megakernel projects q|k through
+    one wide GEMM (DESIGN.md §9), and packing at param-build time removes
+    the in-graph concat that used to be charged to the fused plan (a
+    token-independent cost that made it lose at small token counts). The
+    unfused paths slice the q/k halves back out (column slices of a GEMM
+    are independent, so the math is unchanged). Same for ``bqk``."""
     d, h, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     lead = (stack,) if stack else ()
     lx = ("layers",) if stack else ()
     dt = cfg.param_dtype
     kv_ax = "kv_heads" if getattr(cfg, "kv_shard", True) else None
     defs = {
-        f"{prefix}/wq": ParamDef(lead + (d, h * hd), lx + ("embed", "heads"), dtype=dt),
-        f"{prefix}/wk": ParamDef(lead + (d, hkv * hd), lx + ("embed", kv_ax), dtype=dt),
+        f"{prefix}/wqk": ParamDef(lead + (d, (h + hkv) * hd),
+                                  lx + ("embed", "heads"), dtype=dt),
         f"{prefix}/wv": ParamDef(lead + (d, hkv * hd), lx + ("embed", kv_ax), dtype=dt),
         f"{prefix}/wo": ParamDef(lead + (h * hd, d), lx + ("heads", "embed"), dtype=dt),
     }
     if cfg.qkv_bias and not cross:
-        defs[f"{prefix}/bq"] = ParamDef(lead + (h * hd,), lx + ("heads",), init="zeros", dtype=dt)
-        defs[f"{prefix}/bk"] = ParamDef(lead + (hkv * hd,), lx + (kv_ax,), init="zeros", dtype=dt)
+        defs[f"{prefix}/bqk"] = ParamDef(lead + ((h + hkv) * hd,),
+                                         lx + ("heads",), init="zeros", dtype=dt)
         defs[f"{prefix}/bv"] = ParamDef(lead + (hkv * hd,), lx + (kv_ax,), init="zeros", dtype=dt)
     return defs
 
@@ -78,13 +85,21 @@ def _apply_rope(cfg, q, k, positions, mode: str):
 
 
 def project_qkv(cfg, p, x, kv_input=None):
+    """Unfused projections over the packed ``wqk`` weight: the q/k halves
+    are column slices (independent GEMM columns — same math as separate
+    wq/wk weights)."""
+    nq = cfg.num_heads * cfg.head_dim
     kv_src = x if kv_input is None else kv_input
-    q = x @ p["wq"]
-    k = kv_src @ p["wk"]
+    if kv_input is None:
+        qk = x @ p["wqk"]
+        q, k = qk[..., :nq], qk[..., nq:]
+    else:  # cross-attention: q and k project different streams
+        q = x @ p["wqk"][..., :nq]
+        k = kv_src @ p["wqk"][..., nq:]
     v = kv_src @ p["wv"]
-    if "bq" in p:
-        q = q + p["bq"]
-        k = k + p["bk"]
+    if "bqk" in p:
+        q = q + p["bqk"][..., :nq]
+        k = k + p["bqk"][..., nq:]
         v = v + p["bv"]
     q = _split_heads(q, cfg.num_heads, cfg.head_dim)
     k = _split_heads(k, cfg.num_kv_heads, cfg.head_dim)
@@ -92,45 +107,63 @@ def project_qkv(cfg, p, x, kv_input=None):
     return q, k, v
 
 
-def fused_project_qkv_rope(cfg, p, x, positions, mode):
-    """QKV projection with the RoPE *prologue* fused into the GEMM store
-    (DESIGN.md §9): q and k project through ONE wide GEMM over [wq|wk]
-    whose output tiles are rotated while still VMEM-resident — the rotated
-    q/k never round-trip HBM between projection and attention. v projects
-    through a plain (bias-only) fused GEMM.
+def fused_project_qkv_rope(cfg, p, x, positions, mode, prenorm=None):
+    """QKV projection with the RoPE rotation fused into the GEMM store
+    (DESIGN.md §9) and, with ``prenorm``, the block's pre-norm fused into
+    the GEMM's A-tile prologue (DESIGN.md §10): q and k project through ONE
+    wide GEMM over the pre-packed ``wqk`` whose A tiles are normalized as
+    they stream in and whose output tiles are rotated while still
+    VMEM-resident — the normed activation and the rotated q/k never
+    round-trip HBM. v projects through a (bias-only) fused GEMM with the
+    same prologue.
 
     Applies only to full-rotation RoPE ('half' style) on per-layer (2-D)
     weights, and only when the autotuner's chain model picks the fused plan
     from modeled dma_bytes; returns None otherwise so callers fall back to
-    the unfused oracle path (project_qkv + _apply_rope).
+    the unfused oracle path (norm + project_qkv + _apply_rope). When the
+    norm-prologue plan loses (or its full-K tile is VMEM-illegal) but the
+    plain fused plan wins, the standalone norm runs here and the rest still
+    fuses — a non-None return always means ``prenorm`` was consumed.
     """
     from repro.core import autotune
     from repro.kernels.gemm import Epilogue, gemm_fused
+    from .common import apply_prenorm, resolve_norm_prologue
 
-    if cfg.rope_style != "half" or p["wq"].ndim != 2:
+    if cfg.rope_style != "half" or p["wqk"].ndim != 2:
         return None
     b, s, d = x.shape
     h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     if positions.shape[0] != s:
         return None
-    plan = autotune.select_fusion("qkv_rope", (b * s, d, h, hkv, hd),
-                                  str(x.dtype))
-    if plan["plan"] != "fused":
-        return None
+    shape = (b * s, d, h, hkv, hd)
+    has_bias = "bqk" in p
+    qk_ep = Epilogue(bias=has_bias, rope=True, head_dim=hd)
+
+    resolved = resolve_norm_prologue(
+        cfg, prenorm, kind="qkv_rope", plan_shape=shape,
+        gemm_shape=(b * s, (h + hkv) * hd, d), dtype=str(x.dtype),
+        epilogue=qk_ep)
+    if resolved is None:
+        plan = autotune.select_fusion("qkv_rope", shape, str(x.dtype))
+        if plan["plan"] != "fused":
+            return None
+        if prenorm is not None:
+            x = apply_prenorm(cfg, x, prenorm)  # standalone-norm fallback
+        qk_policy, kw = None, {}
+    else:
+        prologue, pro_kw, qk_policy = resolved
+        kw = dict(prologue=prologue, **pro_kw)
+
     x2 = x.reshape(b * s, d)
     sin, cos = rope_tables(positions, hd, cfg.rope_theta)
     # one table row per flattened (batch, seq) token row of the GEMM
     sin_m = jnp.tile(sin, (b, 1))
     cos_m = jnp.tile(cos, (b, 1))
-    has_bias = "bq" in p
-    wqk = jnp.concatenate([p["wq"], p["wk"]], axis=1)
-    bias_qk = jnp.concatenate([p["bq"], p["bk"]]) if has_bias else None
-    qk = gemm_fused(x2, wqk, epilogue=Epilogue(bias=has_bias, rope=True,
-                                               head_dim=hd),
-                    bias=bias_qk, sin=sin_m, cos=cos_m,
-                    out_dtype=x.dtype, mode=mode)
+    qk = gemm_fused(x2, p["wqk"], epilogue=qk_ep, bias=p.get("bqk"),
+                    sin=sin_m, cos=cos_m, policy=qk_policy,
+                    out_dtype=x.dtype, mode=mode, **kw)
     v = gemm_fused(x2, p["wv"], epilogue=Epilogue(bias=has_bias),
-                   bias=p.get("bv"), out_dtype=x.dtype, mode=mode)
+                   bias=p.get("bv"), out_dtype=x.dtype, mode=mode, **kw)
     q = qk[:, : h * hd].reshape(b, s, h * hd)
     k = qk[:, h * hd:].reshape(b, s, hkv * hd)
     return (_split_heads(q, h, hd), _split_heads(k, hkv, hd),
@@ -140,25 +173,37 @@ def fused_project_qkv_rope(cfg, p, x, positions, mode):
 def attention_layer(cfg, p, x, *, causal: bool = True,
                     window: int | None = None, kv_input=None,
                     positions=None, mode: str = "reference",
-                    use_rope: bool = True, policy=None):
+                    use_rope: bool = True, policy=None, prenorm=None):
     """Full-sequence attention (train/prefill). x: (B, S, D).
+
+    With ``prenorm`` (the enclosing block's (scale, bias) norm params, see
+    ``common.norm_params``) ``x`` is the *pre-norm* residual stream: the
+    pallas modes fold the norm into the fused QKV GEMM's A-tile prologue
+    (DESIGN.md §10) when the chain model picks that plan; otherwise the
+    standalone norm runs here before the projections.
 
     Block sizes are no longer hard-coded here: with ``policy=None`` the op
     resolves a KernelPolicy from the analytic autotuner per shape-bucket
     (memoized), so model-build-time resolution (models/api.py) and the
     trace-time call agree (DESIGN.md §5).
     """
+    from .common import apply_prenorm
+
     s = x.shape[1]
     qkv = None
     if use_rope and kv_input is None:
         if positions is None:
             positions = jnp.arange(s)
         if mode != "reference":
-            # fused QKV→RoPE prologue (DESIGN.md §9); None -> unfused path
-            qkv = fused_project_qkv_rope(cfg, p, x, positions, mode)
+            # fused QKV→RoPE megakernel (DESIGN.md §9-§10); a non-None
+            # return consumed the prenorm (fused or applied internally)
+            qkv = fused_project_qkv_rope(cfg, p, x, positions, mode,
+                                         prenorm=prenorm)
     if qkv is not None:
         q, k, v = qkv
     else:
+        if prenorm is not None:
+            x = apply_prenorm(cfg, x, prenorm)
         q, k, v = project_qkv(cfg, p, x, kv_input)
         if use_rope and kv_input is None:
             q, k = _apply_rope(cfg, q, k, positions, mode)
@@ -214,9 +259,10 @@ def decode_attention_layer(cfg, p, x, cache: dict, pos, *,
     """
     b = x.shape[0]
     if cross:
-        q = x @ p["wq"]
-        if "bq" in p:
-            q = q + p["bq"]
+        nq = cfg.num_heads * cfg.head_dim
+        q = x @ p["wqk"][..., :nq]
+        if "bqk" in p:
+            q = q + p["bqk"][..., :nq]
         q = _split_heads(q, cfg.num_heads, cfg.head_dim)
         k, v = cache["k"], cache["v"]  # static cross-attention cache
         lengths = jnp.full((b,), k.shape[2], jnp.int32)  # all slots valid

@@ -111,6 +111,60 @@ def apply_norm(cfg, x, p, prefix: str):
     return layernorm(x, p[f"{prefix}_scale"], p.get(f"{prefix}_bias"))
 
 
+def norm_params(p, prefix: str) -> tuple:
+    """The (scale, bias) pair of a norm's params, for the ``prenorm``
+    argument of mlp_forward / attention_layer (DESIGN.md §10): blocks hand
+    the *pre-norm* residual stream plus these params to the layer, and the
+    fused paths fold the norm into the first GEMM's A-tile prologue."""
+    return (p[f"{prefix}_scale"], p.get(f"{prefix}_bias"))
+
+
+def apply_prenorm(cfg, x, prenorm: tuple):
+    """Standalone fallback for a ``prenorm`` pair — identical math to
+    apply_norm (the prologue's oracle)."""
+    scale, bias = prenorm
+    if getattr(cfg, "norm", "rmsnorm") == "rmsnorm":
+        return rmsnorm(x, scale)
+    return layernorm(x, scale, bias)
+
+
+def resolve_norm_prologue(cfg, prenorm, *, kind, plan_shape, gemm_shape,
+                          dtype, epilogue, residual=True):
+    """The shared first rung of the prenorm fusion ladder (DESIGN.md §10),
+    used by both the fused MLP and the fused QKV paths: fold the block's
+    pre-norm into the first GEMM's A-tile prologue iff (a) the chain model
+    picks the norm-fused plan from modeled dma_bytes and (b) a VMEM-legal
+    prologue-carrying policy exists for that GEMM (the recompute path's
+    full-K tile can be illegal for huge feature dims — the memoized
+    select_policy probe discovers that).
+
+    Returns (prologue, operand kwargs for gemm_fused, policy), or None —
+    the caller then applies the standalone norm and scores the plain
+    (norm-free) plan instead.
+    """
+    if prenorm is None:
+        return None
+    from repro.core import autotune
+    from repro.kernels.gemm import norm_prologue
+
+    norm_kind = getattr(cfg, "norm", "rmsnorm")
+    plan = autotune.select_fusion(kind, plan_shape, dtype, residual=residual,
+                                  prenorm=norm_kind)
+    if plan["plan"] != "fused":
+        return None
+    scale, bias = prenorm
+    pro = norm_prologue(norm_kind, beta=bias is not None)
+    try:
+        policy = autotune.select_policy("gemm", gemm_shape, dtype,
+                                        epilogue=epilogue, prologue=pro)
+    except ValueError:
+        return None
+    kw = {"gamma": scale}
+    if bias is not None:
+        kw["beta"] = bias
+    return pro, kw, policy
+
+
 def act_fn(name: str):
     if name == "swiglu" or name == "silu":
         return jax.nn.silu
@@ -131,13 +185,19 @@ def _act_name(mlp_act: str) -> str:
     return _EPILOGUE_ACT[mlp_act]
 
 
-def _mlp_fused(cfg, p, x, *, residual, residual_scale, mode, gated):
-    """The fused-megakernel MLP (DESIGN.md §9): the two gated up-projections
-    run as ONE dual-output GEMM whose store applies act(x@w_gate)·(x@w_in),
-    and the down-projection GEMM's store applies the scaled residual add —
-    the (T, F) intermediate and the (T, D) output never round-trip HBM
-    between ops. Returns None when the chain doesn't apply (stacked
-    weights) or the autotuner's chain model picks the unfused plan.
+def _mlp_fused(cfg, p, x, *, residual, residual_scale, mode, gated,
+               prenorm=None):
+    """The fused-megakernel MLP (DESIGN.md §9-§10): the two gated
+    up-projections run as ONE dual-output GEMM whose store applies
+    act(x@w_gate)·(x@w_in), and the down-projection GEMM's store applies
+    the scaled residual add — the (T, F) intermediate and the (T, D)
+    output never round-trip HBM between ops. With ``prenorm`` (the block's
+    (scale, bias) norm params) the pre-norm additionally folds into the up
+    GEMM's A-tile prologue when the chain model picks that plan and the
+    full-K tile is VMEM-legal; otherwise the standalone norm runs here and
+    the rest of the chain still fuses. Returns None when no part of the
+    chain fuses (stacked weights, or the chain model picks the eager plan)
+    — the caller then owns the norm and the unfused chain.
     """
     from repro.core import autotune
     from repro.kernels.gemm import Epilogue, gemm_fused
@@ -148,19 +208,34 @@ def _mlp_fused(cfg, p, x, *, residual, residual_scale, mode, gated):
     *lead, d = x.shape
     f = w_in.shape[-1]
     tokens = math.prod(lead) if lead else 1
-    plan = autotune.select_fusion("mlp", (tokens, d, f, gated), str(x.dtype),
-                                  residual=residual is not None)
-    if plan["plan"] != "fused":
-        return None
+    has_res = residual is not None
     act = _act_name(cfg.mlp_act)
+    up_ep = (Epilogue(activation=act, gate=True) if gated
+             else Epilogue(activation=act))
+
+    resolved = resolve_norm_prologue(
+        cfg, prenorm, kind="mlp", plan_shape=(tokens, d, f, gated),
+        gemm_shape=(tokens, f, d), dtype=str(x.dtype), epilogue=up_ep,
+        residual=has_res)
+    if resolved is None:
+        plan = autotune.select_fusion("mlp", (tokens, d, f, gated),
+                                      str(x.dtype), residual=has_res)
+        if plan["plan"] != "fused":
+            return None
+        if prenorm is not None:
+            x = apply_prenorm(cfg, x, prenorm)  # standalone-norm fallback
+        kw = {}
+    else:
+        prologue, pro_kw, up_policy = resolved
+        kw = dict(prologue=prologue, policy=up_policy, **pro_kw)
+
     x2 = x.reshape(tokens, d)
     if gated:
-        h = gemm_fused(x2, p["w_gate"], b2=w_in,
-                       epilogue=Epilogue(activation=act, gate=True),
-                       out_dtype=x.dtype, mode=mode)
+        h = gemm_fused(x2, p["w_gate"], b2=w_in, epilogue=up_ep,
+                       out_dtype=x.dtype, mode=mode, **kw)
     else:
-        h = gemm_fused(x2, w_in, epilogue=Epilogue(activation=act),
-                       out_dtype=x.dtype, mode=mode)
+        h = gemm_fused(x2, w_in, epilogue=up_ep,
+                       out_dtype=x.dtype, mode=mode, **kw)
     if residual is None:
         y = gemm_fused(h, p["w_out"], epilogue=Epilogue(),
                        out_dtype=x.dtype, mode=mode)
@@ -173,25 +248,29 @@ def _mlp_fused(cfg, p, x, *, residual, residual_scale, mode, gated):
 
 
 def mlp_forward(cfg, p, x, *, mode: str = "reference", residual=None,
-                residual_scale: float = 1.0):
+                residual_scale: float = 1.0, prenorm=None):
     """Gated (swiglu/geglu) or plain MLP. p: params subtree with
     w_in/w_gate/w_out.
 
     With ``residual`` the returned value is ``residual + residual_scale *
     mlp(x)`` — callers pass their residual stream in so the pallas modes can
-    fuse the add into the down-projection's store. In the pallas modes the
-    whole chain routes through the fused dual-GEMM epilogue kernel whenever
-    the autotuner's chain model picks the fused plan from modeled dma_bytes
-    (DESIGN.md §9); 'reference' keeps the original unfused jnp chain (the
-    parity oracle).
+    fuse the add into the down-projection's store. With ``prenorm`` (the
+    enclosing block's (scale, bias) norm params, see ``norm_params``) ``x``
+    is the *pre-norm* residual stream and the returned value is
+    ``residual + residual_scale * mlp(norm(x))`` — the pallas modes fold
+    the norm into the up-projection GEMM's A-tile prologue (DESIGN.md §10)
+    whenever the chain model picks that plan from modeled dma_bytes.
+    'reference' keeps the original unfused jnp chain (the parity oracle).
     """
     gated = cfg.mlp_act in ("swiglu", "geglu")
     if mode != "reference":
         out = _mlp_fused(cfg, p, x, residual=residual,
                          residual_scale=residual_scale, mode=mode,
-                         gated=gated)
+                         gated=gated, prenorm=prenorm)
         if out is not None:
             return out
+    if prenorm is not None:
+        x = apply_prenorm(cfg, x, prenorm)
     act = act_fn(cfg.mlp_act)
     if gated:
         h = act(x @ p["w_gate"]) * (x @ p["w_in"])

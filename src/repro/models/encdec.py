@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from .common import (ParamDef, apply_norm, cast_params, cross_entropy_loss,
-                     mlp_defs, mlp_forward, norm_defs)
+                     mlp_defs, mlp_forward, norm_defs, norm_params)
 from .attention import (attn_defs, attention_layer, decode_attention_layer,
                         init_attn_cache, prefill_attn_cache, project_qkv,
                         _merge_heads)
@@ -59,11 +59,13 @@ def encode(cfg, params, enc_embeds, *, mode="reference", remat=False):
 
     def body(h, layer_params):
         p = layer_params
-        a = attention_layer(cfg, p["attn"], apply_norm(cfg, h, p, "ln1"),
-                            causal=False, mode=mode, use_rope=False)
+        # pre-norm stream routed straight in: the pallas modes fold ln1/ln2
+        # into the QKV / MLP-up GEMM prologues where fusable (DESIGN.md §10)
+        a = attention_layer(cfg, p["attn"], h, causal=False, mode=mode,
+                            use_rope=False, prenorm=norm_params(p, "ln1"))
         h = h + a
-        h = mlp_forward(cfg, p["mlp"], apply_norm(cfg, h, p, "ln2"),
-                        mode=mode, residual=h)
+        h = mlp_forward(cfg, p["mlp"], h, mode=mode, residual=h,
+                        prenorm=norm_params(p, "ln2"))
         return h, None
 
     if remat:
@@ -74,15 +76,15 @@ def encode(cfg, params, enc_embeds, *, mode="reference", remat=False):
 
 
 def _dec_block(cfg, p, x, enc_out, *, mode="reference"):
-    a = attention_layer(cfg, p["attn"], apply_norm(cfg, x, p, "ln1"),
-                        causal=True, mode=mode, use_rope=False)
+    a = attention_layer(cfg, p["attn"], x, causal=True, mode=mode,
+                        use_rope=False, prenorm=norm_params(p, "ln1"))
     x = x + a
-    c = attention_layer(cfg, p["xattn"], apply_norm(cfg, x, p, "lnx"),
-                        causal=False, kv_input=enc_out, mode=mode,
-                        use_rope=False)
+    c = attention_layer(cfg, p["xattn"], x, causal=False, kv_input=enc_out,
+                        mode=mode, use_rope=False,
+                        prenorm=norm_params(p, "lnx"))
     x = x + c
-    x = mlp_forward(cfg, p["mlp"], apply_norm(cfg, x, p, "ln2"),
-                    mode=mode, residual=x)
+    x = mlp_forward(cfg, p["mlp"], x, mode=mode, residual=x,
+                    prenorm=norm_params(p, "ln2"))
     return x
 
 
@@ -152,8 +154,8 @@ def encdec_prefill(cfg, params, batch, cache, *, mode="reference"):
         ox = attention_op(qx, kx, vx, causal=False, mode=mode)
         cross_c = {"k": kx, "v": vx}
         h = h + _merge_heads(ox) @ p["xattn"]["wo"]
-        h = mlp_forward(cfg, p["mlp"], apply_norm(cfg, h, p, "ln2"),
-                        mode=mode, residual=h)
+        h = mlp_forward(cfg, p["mlp"], h, mode=mode, residual=h,
+                        prenorm=norm_params(p, "ln2"))
         return h, (self_c, cross_c)
 
     from repro.util import scan_unroll
@@ -184,8 +186,8 @@ def encdec_decode_step(cfg, params, token, cache, pos, *, mode="reference",
                                       cross=True, update_cache=False,
                                       use_rope=False, mode=mode)
         h = h + c
-        h = mlp_forward(cfg, p["mlp"], apply_norm(cfg, h, p, "ln2"),
-                        mode=mode, residual=h)
+        h = mlp_forward(cfg, p["mlp"], h, mode=mode, residual=h,
+                        prenorm=norm_params(p, "ln2"))
         return h, (self_c, cross_c)
 
     from repro.util import scan_unroll

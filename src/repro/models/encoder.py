@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from .common import (ParamDef, apply_norm, cast_params, cross_entropy_loss,
-                     mlp_defs, mlp_forward, norm_defs)
+                     mlp_defs, mlp_forward, norm_defs, norm_params)
 from .attention import attn_defs, attention_layer
 
 
@@ -41,11 +41,13 @@ def encoder_forward(cfg, params, batch, *, mode="reference", remat=False,
     x = x + params["pos"][:s].astype(cfg.compute_dtype)
 
     def body(h, p):
-        a = attention_layer(cfg, p["attn"], apply_norm(cfg, h, p, "ln1"),
-                            causal=False, mode=mode, use_rope=False)
+        # pre-norm stream routed straight in (DESIGN.md §10): the pallas
+        # modes fold ln1/ln2 into the QKV / MLP-up GEMM prologues
+        a = attention_layer(cfg, p["attn"], h, causal=False, mode=mode,
+                            use_rope=False, prenorm=norm_params(p, "ln1"))
         h = h + a
-        h = mlp_forward(cfg, p["mlp"], apply_norm(cfg, h, p, "ln2"),
-                        mode=mode, residual=h)
+        h = mlp_forward(cfg, p["mlp"], h, mode=mode, residual=h,
+                        prenorm=norm_params(p, "ln2"))
         return h, None
 
     if remat:

@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from .common import (ParamDef, apply_norm, cast_params, cross_entropy_loss,
-                     init_params, mlp_defs, mlp_forward, norm_defs)
+                     init_params, mlp_defs, mlp_forward, norm_defs,
+                     norm_params)
 from .attention import (attn_defs, attention_layer, decode_attention_layer,
                         init_attn_cache, init_paged_attn_cache,
                         paged_decode_attention_layer, paged_prefill_attn_cache,
@@ -117,32 +118,40 @@ def _scan_params(cfg, params, layout):
 
 def block_forward(cfg, kind: str, p, x, *, positions=None,
                   mode: str = "reference", mesh=None, data_axes=("data",)):
-    """Returns (x, aux_loss)."""
+    """Returns (x, aux_loss).
+
+    The pre-norm residual stream routes *unnormed* into attention_layer /
+    mlp_forward (``prenorm=`` carries the norm params): the pallas modes
+    fold the ln1/ln2 norms into the QKV / MLP-up GEMM A-tile prologues
+    (DESIGN.md §10); reference mode applies the identical standalone norm
+    inside the layer. MoE FFNs and recurrent cores keep the standalone
+    norm (shard_map fusion and non-GEMM chains are out of scope, see
+    ROADMAP deferred items).
+    """
     aux = jnp.zeros((), jnp.float32)
     rs = cfg.residual_scale
     if kind in ("attn", "local", "moe"):
-        h = apply_norm(cfg, x, p, "ln1")
-        a = attention_layer(cfg, p["attn"], h, causal=True,
+        a = attention_layer(cfg, p["attn"], x, causal=True,
                             window=_block_window(cfg, kind),
-                            positions=positions, mode=mode)
+                            positions=positions, mode=mode,
+                            prenorm=norm_params(p, "ln1"))
         x = x + rs * a
-        h = apply_norm(cfg, x, p, "ln2")
         if kind == "moe":
+            h = apply_norm(cfg, x, p, "ln2")
             m, aux = moe_forward(cfg, p["moe"], h, mesh=mesh,
                                  data_axes=data_axes, mode=mode)
             x = x + rs * m
         else:
-            x = mlp_forward(cfg, p["mlp"], h, mode=mode, residual=x,
-                            residual_scale=rs)
+            x = mlp_forward(cfg, p["mlp"], x, mode=mode, residual=x,
+                            residual_scale=rs, prenorm=norm_params(p, "ln2"))
     elif kind == "ssm":
         h = apply_norm(cfg, x, p, "ln1")
         x = x + rs * ssm_forward(cfg, p["ssm"], h)
     elif kind == "rg":
         h = apply_norm(cfg, x, p, "ln1")
         x = x + rs * rglru_forward(cfg, p["rec"], h)
-        h = apply_norm(cfg, x, p, "ln2")
-        x = mlp_forward(cfg, p["mlp"], h, mode=mode, residual=x,
-                        residual_scale=rs)
+        x = mlp_forward(cfg, p["mlp"], x, mode=mode, residual=x,
+                        residual_scale=rs, prenorm=norm_params(p, "ln2"))
     return x, aux
 
 
@@ -318,14 +327,15 @@ def block_prefill(cfg, kind, p, x, cache, *, positions, mode="reference",
         o = attention_op(q, k, v, causal=True, window=window, mode=mode)
         cache = prefill_attn_cache(cfg, cache, k, v, s, window)
         x = x + cfg.residual_scale * (_merge_heads(o) @ p["attn"]["wo"])
-        h = apply_norm(cfg, x, p, "ln2")
         if kind == "moe":
+            h = apply_norm(cfg, x, p, "ln2")
             m, _ = moe_forward(cfg, p["moe"], h, mesh=mesh,
                                data_axes=data_axes, mode=mode)
             x = x + cfg.residual_scale * m
         else:
-            x = mlp_forward(cfg, p["mlp"], h, mode=mode, residual=x,
-                            residual_scale=cfg.residual_scale)
+            x = mlp_forward(cfg, p["mlp"], x, mode=mode, residual=x,
+                            residual_scale=cfg.residual_scale,
+                            prenorm=norm_params(p, "ln2"))
     elif kind == "ssm":
         h = apply_norm(cfg, x, p, "ln1")
         o, cache = ssm_prefill(cfg, p["ssm"], h)
@@ -334,9 +344,9 @@ def block_prefill(cfg, kind, p, x, cache, *, positions, mode="reference",
         h = apply_norm(cfg, x, p, "ln1")
         o, cache = rglru_prefill(cfg, p["rec"], h)
         x = x + cfg.residual_scale * o
-        h = apply_norm(cfg, x, p, "ln2")
-        x = mlp_forward(cfg, p["mlp"], h, mode=mode, residual=x,
-                        residual_scale=cfg.residual_scale)
+        x = mlp_forward(cfg, p["mlp"], x, mode=mode, residual=x,
+                        residual_scale=cfg.residual_scale,
+                        prenorm=norm_params(p, "ln2"))
     return x, cache
 
 
@@ -349,14 +359,14 @@ def block_decode(cfg, kind, p, x, cache, pos, *, mode="reference", mesh=None,
                                           window=_block_window(cfg, kind),
                                           mode=mode)
         x = x + rs * a
-        h = apply_norm(cfg, x, p, "ln2")
         if kind == "moe":
+            h = apply_norm(cfg, x, p, "ln2")
             m, _ = moe_forward(cfg, p["moe"], h, mesh=mesh,
                                data_axes=data_axes, mode=mode)
             x = x + rs * m
         else:
-            x = mlp_forward(cfg, p["mlp"], h, mode=mode, residual=x,
-                            residual_scale=rs)
+            x = mlp_forward(cfg, p["mlp"], x, mode=mode, residual=x,
+                            residual_scale=rs, prenorm=norm_params(p, "ln2"))
     elif kind == "ssm":
         h = apply_norm(cfg, x, p, "ln1")
         o, cache = ssm_decode_step(cfg, p["ssm"], h, cache)
@@ -365,9 +375,8 @@ def block_decode(cfg, kind, p, x, cache, pos, *, mode="reference", mesh=None,
         h = apply_norm(cfg, x, p, "ln1")
         o, cache = rglru_decode_step(cfg, p["rec"], h, cache)
         x = x + rs * o
-        h = apply_norm(cfg, x, p, "ln2")
-        x = mlp_forward(cfg, p["mlp"], h, mode=mode, residual=x,
-                        residual_scale=rs)
+        x = mlp_forward(cfg, p["mlp"], x, mode=mode, residual=x,
+                        residual_scale=rs, prenorm=norm_params(p, "ln2"))
     return x, cache
 
 
@@ -505,14 +514,15 @@ def block_prefill_paged(cfg, kind, p, x, cache, *, page_rows, slot,
         o = attention_op(q, k, v, causal=True, window=window, mode=mode)
         cache = paged_prefill_attn_cache(cfg, cache, k, v, page_rows)
         x = x + cfg.residual_scale * (_merge_heads(o) @ p["attn"]["wo"])
-        h = apply_norm(cfg, x, p, "ln2")
         if kind == "moe":
+            h = apply_norm(cfg, x, p, "ln2")
             m, _ = moe_forward(cfg, p["moe"], h, mesh=mesh,
                                data_axes=data_axes, mode=mode)
             x = x + cfg.residual_scale * m
         else:
-            x = mlp_forward(cfg, p["mlp"], h, mode=mode, residual=x,
-                            residual_scale=cfg.residual_scale)
+            x = mlp_forward(cfg, p["mlp"], x, mode=mode, residual=x,
+                            residual_scale=cfg.residual_scale,
+                            prenorm=norm_params(p, "ln2"))
     elif kind == "ssm":
         h = apply_norm(cfg, x, p, "ln1")
         o, state = ssm_prefill(cfg, p["ssm"], h)
@@ -523,9 +533,9 @@ def block_prefill_paged(cfg, kind, p, x, cache, *, page_rows, slot,
         o, state = rglru_prefill(cfg, p["rec"], h)
         cache = jax.tree.map(lambda c, s: c.at[slot].set(s[0]), cache, state)
         x = x + cfg.residual_scale * o
-        h = apply_norm(cfg, x, p, "ln2")
-        x = mlp_forward(cfg, p["mlp"], h, mode=mode, residual=x,
-                        residual_scale=cfg.residual_scale)
+        x = mlp_forward(cfg, p["mlp"], x, mode=mode, residual=x,
+                        residual_scale=cfg.residual_scale,
+                        prenorm=norm_params(p, "ln2"))
     return x, cache
 
 
@@ -589,14 +599,14 @@ def block_decode_paged(cfg, kind, p, x, cache, page_table, lengths, *,
             cfg, p["attn"], h, cache, page_table, lengths,
             window=_block_window(cfg, kind), mode=mode)
         x = x + rs * a
-        h = apply_norm(cfg, x, p, "ln2")
         if kind == "moe":
+            h = apply_norm(cfg, x, p, "ln2")
             m, _ = moe_forward(cfg, p["moe"], h, mesh=mesh,
                                data_axes=data_axes, mode=mode)
             x = x + rs * m
         else:
-            x = mlp_forward(cfg, p["mlp"], h, mode=mode, residual=x,
-                            residual_scale=rs)
+            x = mlp_forward(cfg, p["mlp"], x, mode=mode, residual=x,
+                            residual_scale=rs, prenorm=norm_params(p, "ln2"))
     elif kind == "ssm":
         h = apply_norm(cfg, x, p, "ln1")
         o, cache = ssm_decode_step(cfg, p["ssm"], h, cache)
@@ -605,9 +615,8 @@ def block_decode_paged(cfg, kind, p, x, cache, page_table, lengths, *,
         h = apply_norm(cfg, x, p, "ln1")
         o, cache = rglru_decode_step(cfg, p["rec"], h, cache)
         x = x + rs * o
-        h = apply_norm(cfg, x, p, "ln2")
-        x = mlp_forward(cfg, p["mlp"], h, mode=mode, residual=x,
-                        residual_scale=rs)
+        x = mlp_forward(cfg, p["mlp"], x, mode=mode, residual=x,
+                        residual_scale=rs, prenorm=norm_params(p, "ln2"))
     return x, cache
 
 

@@ -80,7 +80,7 @@ s2, m = step(state, next(it))
 print('loss', float(m['loss']))
 assert np.isfinite(float(m['loss']))
 # a TP-sharded leaf really is distributed
-leaf = s2['params']['blocks']['attn']['wq']
+leaf = s2['params']['blocks']['attn']['wqk']
 assert len(leaf.sharding.device_set) > 1
 print('OK')
 """)

@@ -11,8 +11,8 @@ from repro.core import autotune
 from repro.core.grid_swizzle import SwizzleConfig
 from repro.core.policy import make_policy
 from repro.core.schedule import Schedule
-from repro.kernels.gemm import (Epilogue, gemm, gemm_fused, gemm_fused_ref,
-                                gemm_ref)
+from repro.kernels.gemm import (Epilogue, Prologue, gemm, gemm_fused,
+                                gemm_fused_ref, gemm_ref)
 from repro.kernels.attention import (attention, attention_ref,
                                      flash_attention_fwd)
 from repro.kernels.attention.ref import attention_ref_chunked
@@ -228,6 +228,278 @@ class TestEpilogue:
                        policy=pol, out_dtype=jnp.float32)
 
 
+# every prologue the model layers use: rmsnorm/layernorm × beta, both
+# stats paths (recompute pins block_k == K; @rstd streams row stats)
+PROLOGUE_CHAINS = [
+    Prologue(norm="rmsnorm"),
+    Prologue(norm="layernorm"),
+    Prologue(norm="layernorm", beta=True),
+    Prologue(norm="rmsnorm", precomputed_stats=True),
+    Prologue(norm="layernorm", beta=True, precomputed_stats=True),
+]
+
+PROLOGUE_DTYPES = [(jnp.float32, 1e-3), (jnp.bfloat16, 3e-2)]
+
+
+class TestPrologue:
+    """Fused norm→GEMM A-tile prologues vs the unfused jnp oracle
+    (DESIGN.md §10)."""
+
+    def _operands(self, prologue, a, k):
+        ops = {}
+        if prologue.norm != "none":
+            ops["gamma"] = _rand(30, (k,), jnp.float32) * 0.2 + 1.0
+            if prologue.beta:
+                ops["beta"] = _rand(31, (k,), jnp.float32) * 0.2
+            if prologue.precomputed_stats:
+                ops.update(prologue.compute_stats(a))
+        return ops
+
+    @pytest.mark.parametrize("dtype,tol", PROLOGUE_DTYPES,
+                             ids=["fp32", "bf16"])
+    @pytest.mark.parametrize("pro", PROLOGUE_CHAINS,
+                             ids=[p.describe() for p in PROLOGUE_CHAINS])
+    def test_norm_matches_oracle(self, pro, dtype, tol):
+        m, k, n = 128, 256, 256
+        a = _rand(0, (m, k), dtype)
+        b = _rand(1, (k, n), dtype)
+        ops = self._operands(pro, a, k)
+        out = gemm_fused(a, b, prologue=pro, out_dtype=jnp.float32, **ops)
+        ref = gemm_fused_ref(a, b, prologue=pro, out_dtype=jnp.float32, **ops)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=tol, atol=tol)
+
+    @pytest.mark.parametrize("norm", ["rmsnorm", "layernorm"])
+    def test_oracle_matches_standalone_norm(self, norm):
+        """The prologue oracle IS norm-then-GEMM: gemm_fused_ref must equal
+        models.common.{rmsnorm,layernorm} followed by the plain GEMM (the
+        HBM-round-trip chain the prologue eliminates)."""
+        from repro.models.common import layernorm, rmsnorm
+        m, k, n = 64, 128, 128
+        a = _rand(0, (m, k), jnp.float32)
+        b = _rand(1, (k, n), jnp.float32)
+        gamma = _rand(2, (k,), jnp.float32) * 0.2 + 1.0
+        beta = _rand(3, (k,), jnp.float32) * 0.2
+        if norm == "rmsnorm":
+            pro, ops = Prologue(norm="rmsnorm"), {"gamma": gamma}
+            normed = rmsnorm(a, gamma)
+        else:
+            pro = Prologue(norm="layernorm", beta=True)
+            ops = {"gamma": gamma, "beta": beta}
+            normed = layernorm(a, gamma, beta)
+        out = gemm_fused(a, b, prologue=pro, out_dtype=jnp.float32, **ops)
+        ref = normed.astype(jnp.float32) @ b
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_fast_path_matches_recompute(self):
+        """precomputed-rstd keeps K-blocking: a policy with block_k < K is
+        legal on the fast path and matches the full-K recompute (up to
+        k-blocked accumulation reassociation)."""
+        m, k, n = 128, 512, 256
+        a = _rand(0, (m, k), jnp.float32)
+        b = _rand(1, (k, n), jnp.float32)
+        gamma = _rand(2, (k,), jnp.float32) + 1.0
+        full = gemm_fused(a, b, prologue=Prologue(norm="rmsnorm"),
+                          gamma=gamma, out_dtype=jnp.float32)
+        fast_pro = Prologue(norm="rmsnorm", precomputed_stats=True)
+        pol = make_policy("gemm", block_m=128, block_n=128, block_k=128,
+                          prologue=fast_pro)
+        fast = gemm_fused(a, b, prologue=fast_pro, gamma=gamma,
+                          policy=pol, **fast_pro.compute_stats(a),
+                          out_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(fast), np.asarray(full),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_prologue_epilogue_composed_one_launch(self):
+        """Norm prologue + dual-output SwiGLU gate + residual/scale epilogue
+        in ONE launch == the full eager pre-norm MLP-up chain."""
+        t, d, f = 128, 256, 256
+        x = _rand(0, (t, d), jnp.float32)
+        wg = _rand(1, (d, f), jnp.float32) * 0.2
+        wi = _rand(2, (d, f), jnp.float32) * 0.2
+        gamma = _rand(3, (d,), jnp.float32) * 0.2 + 1.0
+        from repro.models.common import rmsnorm
+        out = gemm_fused(x, wg, b2=wi, prologue=Prologue(norm="rmsnorm"),
+                         gamma=gamma,
+                         epilogue=Epilogue(activation="silu", gate=True),
+                         out_dtype=jnp.float32)
+        xn = rmsnorm(x, gamma).astype(jnp.float32)
+        ref = jax.nn.silu(xn @ wg) * (xn @ wi)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_swizzle_invariance_with_prologue(self):
+        """Grid order must never change prologue-fused numbers either."""
+        m = k = n = 256
+        a = _rand(0, (m, k), jnp.float32)
+        b = _rand(1, (k, n), jnp.float32)
+        gamma = _rand(2, (k,), jnp.float32) + 1.0
+        pro = Prologue(norm="rmsnorm")
+        outs = []
+        for window in (1, 2):
+            pol = make_policy("gemm", block_m=128, block_n=128, block_k=k,
+                              swizzle=SwizzleConfig(window=window,
+                                                    enable_chiplet=False),
+                              prologue=pro)
+            outs.append(gemm_fused(a, b, prologue=pro, gamma=gamma,
+                                   policy=pol, out_dtype=jnp.float32))
+        np.testing.assert_array_equal(np.asarray(outs[0]),
+                                      np.asarray(outs[1]))
+
+    def test_spec_validation(self):
+        a = _rand(0, (128, 128), jnp.float32)
+        with pytest.raises(ValueError, match="beta"):
+            Prologue(norm="rmsnorm", beta=True)
+        with pytest.raises(ValueError, match="unknown norm"):
+            Prologue(norm="batchnorm")
+        with pytest.raises(ValueError, match="only meaningful"):
+            Prologue(beta=True)
+        with pytest.raises(ValueError, match="missing"):
+            gemm_fused(a, a, prologue=Prologue(norm="rmsnorm"))
+        with pytest.raises(ValueError, match="not accepted"):
+            gemm_fused(a, a, gamma=jnp.ones(128))
+        # the recompute path refuses block_k < K at the spec level...
+        with pytest.raises(ValueError, match="full feature dim"):
+            Prologue(norm="rmsnorm").check_blocks(64, 128)
+        # ...and _fit_policy clamps a small-block policy up to the full K
+        # (the clamp-not-raise convention), so the launch still matches
+        pol = make_policy("gemm", block_m=128, block_n=128, block_k=64,
+                          prologue=Prologue(norm="rmsnorm"))
+        gamma = jnp.ones(128)
+        out = gemm_fused(a, a, prologue=Prologue(norm="rmsnorm"),
+                         gamma=gamma, policy=pol, out_dtype=jnp.float32)
+        ref = gemm_fused_ref(a, a, prologue=Prologue(norm="rmsnorm"),
+                             gamma=gamma, out_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_prologue_aware_vmem_legality(self):
+        """The prologue's gamma/beta rows and stats columns count against
+        the VMEM budget, and the autotuned recompute-path policy always
+        carries block_k == K."""
+        base = make_policy("gemm", block_m=256, block_n=256, block_k=512)
+        pro = Prologue(norm="layernorm", beta=True, precomputed_stats=True)
+        with_pro = make_policy("gemm", block_m=256, block_n=256, block_k=512,
+                               prologue=pro)
+        assert with_pro.vmem_bytes() > base.vmem_bytes()
+        pol = autotune.select_policy("gemm", (512, 512, 384), "bfloat16",
+                                     prologue=Prologue(norm="rmsnorm"))
+        assert pol.block_k == 384
+        assert pol.prologue == Prologue(norm="rmsnorm")
+        assert pol.describe()["prologue"] == "rmsnorm"
+
+    def test_gemm_fused_rejects_diverging_policy_prologue(self):
+        a = _rand(0, (128, 128), jnp.float32)
+        pol = autotune.select_policy("gemm", (128, 128, 128), "float32",
+                                     prologue=Prologue(norm="rmsnorm"))
+        with pytest.raises(ValueError, match="carries prologue"):
+            gemm_fused(a, a, prologue=Prologue(norm="layernorm"),
+                       gamma=jnp.ones(128), policy=pol,
+                       out_dtype=jnp.float32)
+
+
+class TestNormFusionPlan:
+    def test_norm_mlp_plan_selected_from_dma_bytes(self):
+        """The norm-prologue MLP plan wins on modeled bytes alone, by
+        >= 1.3x vs the unfused fused_norm→gemm pair at production shape
+        (the ISSUE acceptance bar)."""
+        plan = autotune.select_fusion("mlp", (4096, 2048, 8192, True),
+                                      prenorm="rmsnorm")
+        assert plan["plan"] == "fused"
+        assert plan["fused_bytes"] < plan["unfused_bytes"]
+        assert plan["traffic_reduction"] >= 1.3
+
+    def test_norm_plan_beats_plain_plan(self):
+        """Folding the norm must strictly increase the modeled saving: the
+        prologue removes the norm round trip on top of the epilogue wins."""
+        shape = (4096, 2048, 8192, True)
+        plain = autotune.select_fusion("mlp", shape)
+        normed = autotune.select_fusion("mlp", shape, prenorm="rmsnorm")
+        assert normed["traffic_reduction"] > plain["traffic_reduction"]
+        # layernorm streams a beta row too: never cheaper than rmsnorm
+        ln = autotune.select_fusion("mlp", shape, prenorm="layernorm")
+        assert ln["fused_bytes"] >= normed["fused_bytes"]
+
+    def test_norm_qkv_plan(self):
+        plan = autotune.select_fusion("qkv_rope", (4096, 2048, 16, 4, 128),
+                                      prenorm="rmsnorm")
+        assert plan["plan"] == "fused"
+        assert plan["fused_bytes"] < plan["unfused_bytes"]
+
+
+class TestPrologueModelPaths:
+    """Model-layer parity: the norm-fused pre-norm block vs the reference
+    chain, incl. grad-parity against the f32 ground truth (f32 params make
+    the reference path exact, so it IS the ground truth here)."""
+
+    def _setup(self):
+        cfg = types.SimpleNamespace(mlp_act="swiglu", norm="rmsnorm")
+        d, f = 256, 512
+        x = _rand(0, (2, 64, d), jnp.float32)
+        res = _rand(1, (2, 64, d), jnp.float32)
+        p = {"w_gate": _rand(2, (d, f), jnp.float32) * 0.1,
+             "w_in": _rand(3, (d, f), jnp.float32) * 0.1,
+             "w_out": _rand(4, (f, d), jnp.float32) * 0.1,
+             "ln_scale": _rand(5, (d,), jnp.float32) * 0.2 + 1.0}
+        return cfg, p, x, res
+
+    def test_norm_fused_mlp_block_matches_reference(self):
+        from repro.models.common import mlp_forward, norm_params
+        cfg, p, x, res = self._setup()
+        pn = norm_params(p, "ln")
+        ref = mlp_forward(cfg, p, x, mode="reference", residual=res,
+                          residual_scale=0.7, prenorm=pn)
+        out = mlp_forward(cfg, p, x, mode="pallas_interpret", residual=res,
+                          residual_scale=0.7, prenorm=pn)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=3e-4, atol=3e-4)
+
+    def test_norm_fused_mlp_grad_parity_f32_truth(self):
+        """jax.grad through the norm-prologue megakernel == the f32
+        reference gradient (incl. the norm scale's own gradient), via the
+        custom VJP that differentiates the unfused oracle."""
+        from repro.models.common import mlp_forward, norm_params
+        cfg, p, x, res = self._setup()
+
+        def loss(p_, mode):
+            return jnp.sum(mlp_forward(cfg, p_, x, mode=mode, residual=res,
+                                       residual_scale=0.9,
+                                       prenorm=norm_params(p_, "ln")) ** 2)
+
+        g_truth = jax.grad(lambda p_: loss(p_, "reference"))(p)
+        g_fused = jax.grad(lambda p_: loss(p_, "pallas_interpret"))(p)
+        for key in p:
+            np.testing.assert_allclose(np.asarray(g_fused[key]),
+                                       np.asarray(g_truth[key]),
+                                       rtol=2e-3, atol=2e-3, err_msg=key)
+
+    def test_norm_fused_attention_layer_matches_reference(self):
+        from repro.models.attention import (attention_layer,
+                                            fused_project_qkv_rope)
+        h, hkv, hd, d = 4, 2, 64, 256
+        cfg = types.SimpleNamespace(num_heads=h, num_kv_heads=hkv,
+                                    head_dim=hd, d_model=d, qkv_bias=False,
+                                    rope_style="half", rope_theta=10000.0,
+                                    norm="rmsnorm")
+        b, s = 2, 128
+        x = _rand(0, (b, s, d), jnp.float32)
+        p = {"wqk": _rand(1, (d, (h + hkv) * hd), jnp.float32) * 0.1,
+             "wv": _rand(2, (d, hkv * hd), jnp.float32) * 0.1,
+             "wo": _rand(3, (h * hd, d), jnp.float32) * 0.1}
+        pn = (_rand(4, (d,), jnp.float32) * 0.2 + 1.0, None)
+        # the norm-fused prologue actually engages for this config
+        assert fused_project_qkv_rope(cfg, p, x, jnp.arange(s),
+                                      "pallas_interpret",
+                                      prenorm=pn) is not None
+        ref = attention_layer(cfg, p, x, causal=True, mode="reference",
+                              prenorm=pn)
+        out = attention_layer(cfg, p, x, causal=True,
+                              mode="pallas_interpret", prenorm=pn)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=5e-4, atol=5e-4)
+
+
 class TestFitPolicyClamp:
     """_fit_policy clamps to the largest divisor block instead of raising."""
 
@@ -271,18 +543,25 @@ class TestFusionPlan:
     def test_no_hardcoded_preference(self):
         """The decision really comes from the byte model: when the chain
         saves ~nothing (tiny token count vs huge weights), the margin
-        collapses, and the qkv chain's token-independent concat cost makes
-        the unfused plan win outright at small token counts."""
+        collapses — the plan field is always derived from the same
+        numbers, never from a flag."""
         plan = autotune.select_fusion("mlp", (8, 4096, 16384, True))
         assert plan["traffic_reduction"] < 1.05
         # and the plan field is derived from the same numbers
         expect = ("fused" if plan["fused_bytes"] < plan["unfused_bytes"]
                   else "unfused")
         assert plan["plan"] == expect
-        # qkv: 64 tokens against 4096-wide weights -> concat dominates
+
+    def test_qkv_packed_weights_win_at_small_tokens(self):
+        """[wq|wk] is pre-packed at param-build time, so the fused qkv plan
+        no longer pays a token-independent in-graph concat: it strictly
+        removes passes and wins even at tiny token counts (the case the
+        concat used to lose) — still decided from the byte model, whose
+        margin collapses toward 1 as the weights dominate."""
         plan = autotune.select_fusion("qkv_rope", (64, 4096, 32, 8, 128))
-        assert plan["plan"] == "unfused"
-        assert plan["fused_bytes"] > plan["unfused_bytes"]
+        assert plan["plan"] == "fused"
+        assert plan["fused_bytes"] < plan["unfused_bytes"]
+        assert plan["traffic_reduction"] < 1.1  # weight-dominated margin
 
     def test_moe_expert_plan_has_no_residual_term(self):
         """The expert FFN chain carries no residual add: its plan must be
@@ -324,13 +603,11 @@ class TestFusedModelPaths:
                                     rope_style="half", rope_theta=10000.0)
         b, s = 2, 128
         x = _rand(0, (b, s, d), jnp.float32)
-        p = {"wq": _rand(1, (d, h * hd), jnp.float32) * 0.1,
-             "wk": _rand(2, (d, hkv * hd), jnp.float32) * 0.1,
+        p = {"wqk": _rand(1, (d, (h + hkv) * hd), jnp.float32) * 0.1,
              "wv": _rand(3, (d, hkv * hd), jnp.float32) * 0.1,
              "wo": _rand(4, (h * hd, d), jnp.float32) * 0.1}
         if qkv_bias:
-            p.update(bq=_rand(5, (h * hd,), jnp.float32) * 0.1,
-                     bk=_rand(6, (hkv * hd,), jnp.float32) * 0.1,
+            p.update(bqk=_rand(5, ((h + hkv) * hd,), jnp.float32) * 0.1,
                      bv=_rand(7, (hkv * hd,), jnp.float32) * 0.1)
         # the fused prologue actually engages for this config
         assert fused_project_qkv_rope(cfg, p, x, jnp.arange(s),

@@ -37,13 +37,30 @@ def test_training_learns_structure():
 
 @pytest.mark.slow
 def test_pallas_path_trains_to_parity():
-    """Same config, same data: the Pallas-kernel path must track the XLA
-    reference path's loss curve (paper §4 kernel-stability validation)."""
+    """Same config, same data: the Pallas-kernel path must track the loss
+    curve (paper §4 kernel-stability validation).
+
+    Since the fusion PRs (DESIGN.md §9-§10) most of the kernel path's
+    GEMM chain accumulates in f32 where the bf16 reference rounds through
+    bf16 between ops, so the two bf16 curves drift apart with optimizer
+    steps — each in its own direction around the true trajectory. The
+    anchor is therefore the f32-compute reference curve (the ground truth
+    both approximate): both paths must track it, and the kernel path may
+    not sit meaningfully further from it than the bf16 reference does.
+    """
     cfg = _tiny_llama()
     r_ref = _train(cfg, "reference", steps=25)
     r_pk = _train(cfg, "pallas_interpret", steps=25)
-    # identical init/data => curves should agree to bf16-accumulation noise
-    np.testing.assert_allclose(r_ref.losses, r_pk.losses, atol=0.15)
+    r_truth = _train(dataclasses.replace(cfg, compute_dtype="float32"),
+                     "reference", steps=25)
+    truth = np.asarray(r_truth.losses)
+    ref_err = np.abs(np.asarray(r_ref.losses) - truth).max()
+    pk_err = np.abs(np.asarray(r_pk.losses) - truth).max()
+    np.testing.assert_allclose(r_pk.losses, truth, atol=0.3)
+    np.testing.assert_allclose(r_ref.losses, truth, atol=0.3)
+    assert pk_err <= 2.5 * ref_err + 0.05, (pk_err, ref_err)
+    # and the kernel path genuinely learns the structured data
+    assert r_pk.losses[-1] < r_pk.losses[0] - 0.5, r_pk.losses[::6]
 
 
 def test_wsd_schedule_trains():

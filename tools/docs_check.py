@@ -1,0 +1,83 @@
+"""Docs check: execute the README quickstart and verify intra-repo links.
+
+Two checks, both CI-enforced (.github/workflows/ci.yml, docs-check step):
+
+  1. **Quickstart execution** — every ```python fenced block in README.md is
+     executed, in order, in one shared namespace (interpret mode on CPU, so
+     the blocks must be written to run anywhere the tier-1 tests run). A
+     README whose first code sample is broken is worse than no README.
+  2. **Link check** — every relative markdown link in README.md, DESIGN.md,
+     ROADMAP.md and docs/*.md must point at a file or directory that exists
+     in the repo (anchors and external http(s)/mailto links are skipped).
+
+Run from the repo root: ``PYTHONPATH=src python tools/docs_check.py``.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+DOC_FILES = [REPO / "README.md", REPO / "DESIGN.md", REPO / "ROADMAP.md"]
+DOC_FILES += sorted((REPO / "docs").glob("*.md"))
+
+_FENCE_RE = re.compile(r"^```python\s*$(.*?)^```\s*$",
+                       re.MULTILINE | re.DOTALL)
+# [text](target) — excluding images' srcsets and in-page #anchors
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def quickstart_blocks(readme: pathlib.Path) -> list:
+    return [m.group(1) for m in _FENCE_RE.finditer(readme.read_text())]
+
+
+def run_quickstart() -> int:
+    blocks = quickstart_blocks(REPO / "README.md")
+    if not blocks:
+        print("docs-check: README.md has no ```python quickstart block",
+              file=sys.stderr)
+        return 1
+    ns: dict = {}
+    for i, block in enumerate(blocks):
+        print(f"docs-check: executing README python block {i + 1}/"
+              f"{len(blocks)} ({len(block.splitlines())} lines)")
+        try:
+            exec(compile(block, f"README.md#block{i + 1}", "exec"), ns)
+        except Exception as e:  # noqa: BLE001 — report, fail, keep going
+            print(f"docs-check: README block {i + 1} FAILED: {e!r}",
+                  file=sys.stderr)
+            return 1
+    print("docs-check: README quickstart OK")
+    return 0
+
+
+def check_links() -> int:
+    bad = []
+    for doc in DOC_FILES:
+        if not doc.exists():
+            bad.append((doc.relative_to(REPO), "(file missing)"))
+            continue
+        for target in _LINK_RE.findall(doc.read_text()):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            if not (doc.parent / path).exists():
+                bad.append((doc.relative_to(REPO), target))
+    for doc, target in bad:
+        print(f"docs-check: broken intra-repo link in {doc}: {target}",
+              file=sys.stderr)
+    if not bad:
+        print(f"docs-check: links OK across {len(DOC_FILES)} docs")
+    return 1 if bad else 0
+
+
+def main() -> int:
+    return check_links() or run_quickstart()
+
+
+if __name__ == "__main__":
+    sys.exit(main())
