@@ -1,19 +1,24 @@
-"""Fused-MLP megakernel sweep (DESIGN.md §9-§10; paper Fig. 9 regime).
+"""Fused-MLP megakernel sweep (DESIGN.md §9-§11; paper Fig. 9 regime).
 
 seq × d_model sweep of the transformer MLP hot chain: modeled HBM traffic of
 the fused plan (dual-output SwiGLU up-GEMM + residual-fused down-GEMM) vs
 the unfused eager chain, with the plan the autotuner picks from
 ``dma_bytes`` alone (``autotune.select_fusion`` — no hard-coded
-preference). Each cell also carries the *norm-fused* column: the same chain
+preference). Each cell also carries the *norm-fused* column (the same chain
 with the block's pre-norm folded into the up-GEMM's A-tile prologue,
-scored against the unfused ``fused_norm``→``gemm`` pair (the standalone
-norm pass + eager chain). Rows land in ``BENCH_fused_mlp.json`` via
-benchmarks.run; the acceptance bars are ``traffic_reduction >= 1.5`` and
-``norm_traffic_reduction >= 1.3`` on every production-shaped cell.
+scored against the unfused ``fused_norm``→``gemm`` pair) and the *bwd*
+columns: the kernel-side fused backward — saved-preact streams + two fused
+bwd GEMM launches per fwd GEMM, norm transposed tile-wise (DESIGN.md §11)
+— vs the oracle-recompute VJP, from the same byte models
+(``select_fusion(backward=True)``). Rows land in ``BENCH_fused_mlp.json``
+via benchmarks.run; the acceptance bars are ``traffic_reduction >= 1.5``,
+``norm_traffic_reduction >= 1.3``, and ``bwd_traffic_reduction`` /
+``norm_bwd_traffic_reduction >= 1.3`` on every train-shaped cell.
 
 Also validates the fused interpret-mode kernels end to end on a small MLP
-(vs the unfused jnp oracle, with and without the norm prologue) and times
-the two jnp chains on CPU for scale.
+(vs the unfused jnp oracle, with and without the norm prologue), checks
+jax.grad parity of the kernel-side fused backward against the oracle VJP
+on the same MLP, and times the two jnp chains on CPU for scale.
 """
 from __future__ import annotations
 
@@ -23,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import autotune
+from repro.kernels.gemm import default_bwd_mode
 from repro.models.common import mlp_forward, norm_params
 from .common import time_fn, emit
 
@@ -45,6 +51,11 @@ def main() -> None:
             plan = autotune.select_fusion("mlp", (seq, d, f, True))
             norm_plan = autotune.select_fusion("mlp", (seq, d, f, True),
                                                prenorm="rmsnorm")
+            bwd = autotune.select_fusion("mlp", (seq, d, f, True),
+                                         backward=True)
+            norm_bwd = autotune.select_fusion("mlp", (seq, d, f, True),
+                                              backward=True,
+                                              prenorm="rmsnorm")
             emit(f"fused_mlp_s{seq}_d{d}", 0.0,
                  f"plan={plan['plan']};"
                  f"fused_mb={plan['fused_bytes'] / 2**20:.1f};"
@@ -55,6 +66,12 @@ def main() -> None:
                  f"norm_unfused_mb={norm_plan['unfused_bytes'] / 2**20:.1f};"
                  f"norm_traffic_reduction="
                  f"{norm_plan['traffic_reduction']:.2f}x;"
+                 f"bwd_plan={bwd['plan']};"
+                 f"bwd_fused_mb={bwd['fused_bytes'] / 2**20:.1f};"
+                 f"bwd_oracle_mb={bwd['unfused_bytes'] / 2**20:.1f};"
+                 f"bwd_traffic_reduction={bwd['traffic_reduction']:.2f}x;"
+                 f"norm_bwd_traffic_reduction="
+                 f"{norm_bwd['traffic_reduction']:.2f}x;"
                  f"modeled_fused_us={plan['fused']['time_s'] * 1e6:.1f};"
                  f"modeled_unfused_us={plan['unfused']['time_s'] * 1e6:.1f};"
                  f"bound={plan['fused']['bound']}")
@@ -95,6 +112,24 @@ def main() -> None:
     emit(f"norm_fused_mlp_pallas_check_t{t}_d{d}", us_norm_ref,
          f"max_err={err:.2e};norm_plan="
          f"{autotune.select_fusion('mlp', (t, d, f, True), prenorm='rmsnorm')['plan']}")
+
+    # kernel-side fused backward (DESIGN.md §11): jax.grad through the same
+    # pre-norm MLP on the default (kernel) bwd path vs the oracle VJP
+    def loss(p_, bwd):
+        with default_bwd_mode(bwd):
+            return jnp.sum(mlp_forward(cfg, p_, x, mode="pallas_interpret",
+                                       residual=res, residual_scale=0.5,
+                                       prenorm=norm_params(p_, "ln")) ** 2)
+
+    g_kern = jax.grad(lambda p_: loss(p_, "kernel"))(p)
+    g_orac = jax.grad(lambda p_: loss(p_, "reference"))(p)
+    gerr = max(float(jnp.abs(g_kern[k] - g_orac[k]).max()) for k in p)
+    assert gerr < 1e-2, gerr
+    bwd_plan = autotune.select_fusion("mlp", (t, d, f, True), backward=True,
+                                      prenorm="rmsnorm")
+    emit(f"fused_mlp_bwd_check_t{t}_d{d}", 0.0,
+         f"max_grad_err={gerr:.2e};bwd_plan={bwd_plan['plan']};"
+         f"bwd_traffic_reduction={bwd_plan['traffic_reduction']:.2f}x")
 
 
 if __name__ == "__main__":

@@ -54,13 +54,24 @@ class OpSignature:
       fused_norm       (rows, d)
       rope             (batch, heads, seq, head_dim)
 
-    ``epilogue`` (gemm only) is the fused store chain the launch will run
-    (:class:`repro.kernels.gemm.epilogue.Epilogue`, carried opaquely): its
-    extra operands change both the legal candidate set (VMEM, whole-head
-    block_n for rope) and the scored traffic. ``prologue`` (gemm only) is
-    the fused A-operand chain (:class:`repro.kernels.gemm.prologue.Prologue`)
+    ``epilogue`` (gemm/gemm_bwd only) is the fused store chain the launch
+    will run (:class:`repro.kernels.gemm.epilogue.Epilogue`, carried
+    opaquely): its extra operands change both the legal candidate set
+    (VMEM, whole-head block_n for rope) and the scored traffic.
+    ``prologue`` (gemm/gemm_bwd only) is the fused A-operand chain
+    (:class:`repro.kernels.gemm.prologue.Prologue`)
     — a recompute-path norm prologue pins block_k to the full feature dim
     and charges the per-A-tile norm recompute to the compute term.
+
+    ``variant`` (gemm_bwd only) names which bwd launch of the fused
+    backward (DESIGN.md §11) this is: ``'da'`` (shape (M, K, N) — out dA,
+    contraction over N) or ``'db'`` (shape (K, N, M) — out dB[, dB2],
+    contraction over M). The chains pin different dims per variant: a norm
+    prologue pins dA's out-column block to full K (its row reductions need
+    whole feature rows) and — on the recompute stats path — dB's out-row
+    block to full K (the streamed A tile spans whole rows, the fwd rule);
+    a rope epilogue pins the dim its g tiles rotate along to whole heads
+    (dA: the contraction block; dB: the out-column block).
     """
 
     op: str
@@ -69,10 +80,16 @@ class OpSignature:
     causal: bool = False
     epilogue: Optional[object] = None
     prologue: Optional[object] = None
+    variant: str = ""
 
     def __post_init__(self):
         if self.op not in OP_KINDS:
             raise ValueError(f"unknown op kind {self.op!r}")
+        if self.op == "gemm_bwd" and self.variant not in ("da", "db"):
+            raise ValueError(f"gemm_bwd needs variant 'da' or 'db', "
+                             f"got {self.variant!r}")
+        if self.variant and self.op != "gemm_bwd":
+            raise ValueError("variant is only meaningful for gemm_bwd")
 
     def bucket(self) -> tuple:
         """Policy-cache key. Tile-constrained dims stay exact (a block must
@@ -96,7 +113,7 @@ class OpSignature:
         else:
             shape = tuple(self.shape)
         return (self.op, shape, self.dtype, self.causal, self.epilogue,
-                self.prologue)
+                self.prologue, self.variant)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -146,37 +163,72 @@ def _swizzle_candidates(num_rows: int, num_cols: int) -> list:
     return cands
 
 
-def candidate_policies(sig: OpSignature) -> list:
+def _head_multiple_candidates(dim: int, hd: int, base: list) -> list:
+    """Restrict block candidates to head_dim multiples (rope's whole-head
+    rule), unioning head_dim-aligned divisors for non-128-aligned heads.
+    Lane-aligned multiples are preferred when any exist (a 64-wide tile on
+    an aligned problem dim would trip tiles.block_spec's strict gate)."""
+    cands = sorted(b for b in
+                   set(base) | set(_block_candidates(dim, hd, 512))
+                   if b % hd == 0)
+    aligned = [b for b in cands if b % tiles.LANE == 0]
+    return aligned or cands
+
+
+def candidate_policies(sig: OpSignature,
+                       swizzle: Optional[SwizzleConfig] = None) -> list:
     """Every legal candidate for ``sig``: blocks tile the shape AND the
-    pipelined working set fits VMEM (Tab. 2's feasibility rule)."""
+    pipelined working set fits VMEM (Tab. 2's feasibility rule).
+
+    ``swizzle`` restricts the traversal-order axis of the search to one
+    requested SwizzleConfig (the legacy ``gemm(swizzle=...)`` shim and the
+    bwd launches, which pin the fwd policy's traversal, use this) — block
+    and pipeline-depth candidates are still fully enumerated.
+    """
     dtype = "bfloat16" if sig.dtype not in _DTYPE_BYTES else sig.dtype
     out = []
 
-    if sig.op == "gemm":
+    def swizzles(rows, cols):
+        return [swizzle] if swizzle is not None else \
+            _swizzle_candidates(rows, cols)
+
+    if sig.op in ("gemm", "gemm_bwd"):
         m, n, k = sig.shape
         ep = sig.epilogue
         pro = sig.prologue
+        bm_cands = _block_candidates(m, 128, 512)
         bn_cands = _block_candidates(n, 128, 512)
-        if ep is not None and getattr(ep, "rope", False):
-            # rope rotates whole heads per tile: block_n must be a head_dim
-            # multiple (head_dim-aligned divisors cover non-128-aligned heads)
-            hd = ep.head_dim
-            bn_cands = sorted(b for b in
-                              set(bn_cands) | set(_block_candidates(n, hd, 512))
-                              if b % hd == 0)
         bk_cands = _block_candidates(k, 128, 512)
-        if pro is not None and getattr(pro, "needs_full_k", False):
-            # recompute-path norm prologue: row stats come from the A tile
-            # itself, so the tile must span the full feature dim
-            bk_cands = [k]
-        for bm in _block_candidates(m, 128, 512):
+        has_rope = ep is not None and getattr(ep, "rope", False)
+        has_pro = pro is not None and not getattr(pro, "is_identity", True)
+        if sig.op == "gemm":
+            if has_rope:
+                # rope rotates whole heads per tile: block_n must be a
+                # head_dim multiple (head_dim-aligned divisors cover
+                # non-128-aligned heads)
+                bn_cands = _head_multiple_candidates(n, ep.head_dim, bn_cands)
+            if pro is not None and getattr(pro, "needs_full_k", False):
+                # recompute-path norm prologue: row stats come from the A
+                # tile itself, so the tile must span the full feature dim
+                bk_cands = [k]
+        elif sig.variant == "da":
+            if has_rope:  # g tiles rotate along the contraction (N) dim
+                bk_cands = _head_multiple_candidates(k, ep.head_dim, bk_cands)
+            if has_pro:   # norm-transpose row reductions span full K
+                bn_cands = [n]
+        else:  # 'db'
+            if has_rope:  # g tiles rotate along the output-column (N) dim
+                bn_cands = _head_multiple_candidates(n, ep.head_dim, bn_cands)
+            if pro is not None and getattr(pro, "needs_full_k", False):
+                bm_cands = [m]  # streamed A tiles span whole feature rows
+        for bm in bm_cands:
             for bn in bn_cands:
                 for bk in bk_cands:
                     for nbuf in (2, 3):
                         sched = Schedule(f"auto_g{nbuf}", nbuf, bm, bn, bk)
                         rows, cols = m // bm, n // bn
-                        for sw in _swizzle_candidates(rows, cols):
-                            pol = KernelPolicy("gemm", sched, sw,
+                        for sw in swizzles(rows, cols):
+                            pol = KernelPolicy(sig.op, sched, sw,
                                                in_dtype=dtype, epilogue=ep,
                                                prologue=pro)
                             if pol.is_legal():
@@ -251,11 +303,60 @@ def gemm_traffic_bytes(policy: KernelPolicy, m: int, n: int, k: int,
     return traffic
 
 
+def gemm_bwd_traffic_bytes(policy: KernelPolicy, m: int, n: int, k: int,
+                           dtype_bytes: int, variant: str) -> int:
+    """Modeled HBM→VMEM bytes of one fused-backward launch (DESIGN.md §11).
+
+    The launch is a GEMM of its own (m, n, k) shape under the policy's
+    traversal, with the chain's extra streams on top: the saved
+    preactivations ride the cotangent panel (the g-side operand — the A
+    side for dA, the B side for dB) in the MXU input dtype; the dual-GEMM
+    gate doubles the *weight* panel for dA (B and B2 both stream) and costs
+    dB nothing extra on reads (dB2 shares the same A and g streams); a norm
+    prologue adds the raw-A reads for the tile-wise norm transpose (dA: one
+    (M, K) pass with the output tiles; dB: the A panel IS the primal
+    operand) plus the gamma/beta/stats rows.
+    """
+    rows, cols = m // policy.block_m, n // policy.block_n
+    a_panel = policy.block_m * k * dtype_bytes
+    b_panel = k * policy.block_n * dtype_bytes
+    ep = policy.epilogue
+    pro = policy.prologue
+    n_saved = getattr(ep, "saved_accumulators", 0) if ep is not None else 0
+    # scale chains save fp32 preacts (Epilogue.preact_keeps_f32)
+    p_bytes = 4 if (ep is not None and getattr(ep, "preact_keeps_f32",
+                                               False)) else dtype_bytes
+    extra = 0
+    if variant == "da":
+        a_panel += policy.block_m * k * p_bytes * n_saved      # preacts
+        if ep is not None and getattr(ep, "gate", False):
+            b_panel *= 2                                       # B and B2
+        if pro is not None and not getattr(pro, "is_identity", True):
+            extra += m * n * dtype_bytes   # raw A, once per output tile
+            extra += pro.extra_read_bytes(m, n, dtype_bytes)
+    else:  # 'db'
+        b_panel += k * policy.block_n * p_bytes * n_saved      # preacts
+        if pro is not None and not getattr(pro, "is_identity", True):
+            extra += pro.extra_read_bytes(k, m, dtype_bytes)
+    traffic = dma_bytes(policy.swizzle, rows, cols, a_panel, b_panel) + extra
+    if ep is not None:
+        # bias/scale/table streams are read by the transpose like the fwd
+        # store read them — over the *forward* (M, N) dims, which the
+        # launch shape encodes per variant: da is (M, K, N), db is
+        # (K, N, M). (dresidual is the identity — no stream.)
+        fwd_m, fwd_n = (m, k) if variant == "da" else (k, n)
+        streams = ep.extra_read_bytes(fwd_m, fwd_n, dtype_bytes)
+        if getattr(ep, "residual", False):
+            streams -= fwd_m * fwd_n * dtype_bytes
+        traffic += streams
+    return traffic
+
+
 def score_policy(sig: OpSignature, policy: KernelPolicy,
                  chip: pm.ChipSpec = pm.V5E) -> PolicyScore:
     dtype_bytes = _DTYPE_BYTES.get(sig.dtype, 2)
 
-    if sig.op == "gemm":
+    if sig.op in ("gemm", "gemm_bwd"):
         m, n, k = sig.shape
         step = pm.gemm_step_model(policy.schedule, k_total=k,
                                   dtype_bytes=dtype_bytes, chip=chip)
@@ -274,11 +375,22 @@ def score_policy(sig: OpSignature, policy: KernelPolicy,
             # bought against the eliminated HBM round trip. The recompute
             # path re-derives row stats (~8 ops/element); the
             # precomputed-stats fast path only applies the affine transform
-            # (~3 ops/element, stats streamed).
+            # (~3 ops/element, stats streamed). The bwd launches pay the
+            # same per-tile rate: dB renorms its A stream once per
+            # output-column visit like the fwd; dA runs the norm transpose
+            # exactly once per full-K store tile — M*K elements total, no
+            # revisit factor (its out-column block is pinned to K).
             ops = 3.0 if getattr(pro, "precomputed_stats", False) else 8.0
-            norm_elems = (n // policy.block_n) * m * k
+            if sig.op == "gemm_bwd" and sig.variant == "da":
+                norm_elems = m * n          # the (M, K) store tiles, once
+            else:
+                norm_elems = (n // policy.block_n) * m * k
             compute_s += norm_elems * ops / (chip.peak_flops_bf16 / 16)
-        traffic = gemm_traffic_bytes(policy, m, n, k, dtype_bytes)
+        if sig.op == "gemm_bwd":
+            traffic = gemm_bwd_traffic_bytes(policy, m, n, k, dtype_bytes,
+                                             sig.variant)
+        else:
+            traffic = gemm_traffic_bytes(policy, m, n, k, dtype_bytes)
         memory_s = traffic / chip.hbm_bw
         time_s = max(compute_s, memory_s) + n_blocks * _STEP_OVERHEAD_S
         return PolicyScore(time_s, traffic,
@@ -362,27 +474,34 @@ _CACHE_STATS = {"hits": 0, "misses": 0}
 
 
 def select_policy(op: str, shape, dtype="bfloat16", *, causal: bool = False,
-                  epilogue=None, prologue=None, cache_sim: bool = False,
+                  epilogue=None, prologue=None, variant: str = "",
+                  swizzle: Optional[SwizzleConfig] = None,
+                  cache_sim: bool = False,
                   chip: pm.ChipSpec = pm.V5E) -> KernelPolicy:
     """The tuned policy for an op signature; memoized per shape-bucket.
 
-    ``epilogue``/``prologue`` (gemm only) make the candidate set and the
-    traffic model chain-aware; the returned policy carries them.
+    ``epilogue``/``prologue`` (gemm/gemm_bwd only) make the candidate set
+    and the traffic model chain-aware; the returned policy carries them.
+    ``variant`` ('da'|'db', gemm_bwd only) names the fused-backward launch.
+    ``swizzle`` pins the traversal order while the block/pipeline axes are
+    still searched (the legacy ``gemm(swizzle=...)`` shim and the bwd
+    launches, which inherit the fwd traversal, resolve through this).
 
     Raises ValueError if no candidate is legal — which a recompute-path
     norm prologue *can* hit (its full-K A tile may not fit VMEM for huge
     feature dims): callers fall back to the standalone-norm plan then.
     """
     sig = OpSignature(op, tuple(int(x) for x in shape), str(dtype),
-                      causal=causal, epilogue=epilogue, prologue=prologue)
-    key = sig.bucket() + (bool(cache_sim), chip.name)
+                      causal=causal, epilogue=epilogue, prologue=prologue,
+                      variant=variant)
+    key = sig.bucket() + (swizzle, bool(cache_sim), chip.name)
     hit = _POLICY_CACHE.get(key)
     if hit is not None:
         _CACHE_STATS["hits"] += 1
         return hit
     _CACHE_STATS["misses"] += 1
 
-    cands = candidate_policies(sig)
+    cands = candidate_policies(sig, swizzle=swizzle)
     if not cands:
         raise ValueError(f"no legal policy for {sig}")
     scored = sorted(cands,
@@ -414,6 +533,7 @@ _PLAN_CACHE: dict = {}
 
 def select_fusion(kind: str, shape, dtype="bfloat16", *,
                   residual: bool = True, prenorm: str = "none",
+                  backward: bool = False,
                   chip: pm.ChipSpec = pm.V5E) -> dict:
     """Pick the fused or unfused execution plan for a model-layer GEMM chain.
 
@@ -434,6 +554,12 @@ def select_fusion(kind: str, shape, dtype="bfloat16", *,
     GEMM's A-tile prologue (DESIGN.md §10), the unfused plan runs the
     standalone norm pass in front of the eager chain.
 
+    ``backward=True`` scores the chain's *training backward* instead
+    (DESIGN.md §11): the fused side is the kernel-side chain transpose
+    (saved-preact streams + two fused bwd GEMM launches per fwd GEMM, norm
+    transposed tile-wise), the unfused side is the oracle-recompute VJP
+    (autodiff of the unfused jnp chain with full fwd re-materialization).
+
     Returns {plan: 'fused'|'unfused', fused_bytes, unfused_bytes,
     traffic_reduction, fused: <model dict>, unfused: <model dict>}.
     """
@@ -441,25 +567,28 @@ def select_fusion(kind: str, shape, dtype="bfloat16", *,
     shape = tuple(int(x) for x in shape)
     tokens = 1 << max(0, (shape[0] - 1).bit_length())  # pow2 bucket
     key = (kind, (tokens,) + shape[1:], dtype, bool(residual), prenorm,
-           chip.name)
+           bool(backward), chip.name)
     hit = _PLAN_CACHE.get(key)
     if hit is not None:
         return hit
     db = _DTYPE_BYTES.get(dtype, 2)
     if kind == "mlp":
         _, d, f, gated = shape
-        variants = [pm.mlp_chain_model(tokens=tokens, d_model=d, d_ff=f,
-                                       dtype_bytes=db, gated=bool(gated),
-                                       residual=residual, prenorm=prenorm,
-                                       fused=fused, chip=chip)
+        model = pm.mlp_chain_bwd_model if backward else pm.mlp_chain_model
+        variants = [model(tokens=tokens, d_model=d, d_ff=f,
+                          dtype_bytes=db, gated=bool(gated),
+                          residual=residual, prenorm=prenorm,
+                          fused=fused, chip=chip)
                     for fused in (True, False)]
     elif kind == "qkv_rope":
         _, d, h, hkv, hd = shape
-        variants = [pm.qkv_rope_chain_model(tokens=tokens, d_model=d,
-                                            num_heads=h, num_kv_heads=hkv,
-                                            head_dim=hd, dtype_bytes=db,
-                                            prenorm=prenorm,
-                                            fused=fused, chip=chip)
+        model = (pm.qkv_rope_chain_bwd_model if backward
+                 else pm.qkv_rope_chain_model)
+        variants = [model(tokens=tokens, d_model=d,
+                          num_heads=h, num_kv_heads=hkv,
+                          head_dim=hd, dtype_bytes=db,
+                          prenorm=prenorm,
+                          fused=fused, chip=chip)
                     for fused in (True, False)]
     else:
         raise ValueError(f"unknown fusion kind {kind!r}")

@@ -302,6 +302,135 @@ def qkv_rope_chain_model(*, tokens: int, d_model: int, num_heads: int,
     return _chain_dict(total, flops, fused, dtype_bytes, chip)
 
 
+def mlp_chain_bwd_model(*, tokens: int, d_model: int, d_ff: int,
+                        dtype_bytes: int = 2, gated: bool = True,
+                        residual: bool = True, prenorm: str = "none",
+                        fused: bool = True, chip: ChipSpec = V5E) -> dict:
+    """Backward of the MLP hot chain (DESIGN.md §11), fused vs oracle.
+
+    fused (the kernel-side chain transpose):
+      saves       the fwd launches write the raw accumulators the transpose
+                  needs, in the MXU input dtype: the up-GEMM preact(s)
+                  (T, F) and — for the scaled-residual down store — the
+                  down preact (T, D)
+      down bwd    dH launch reads g + preact + w_out, writes dh; dW launch
+                  reads h + g + preact, writes w_out. dresidual is the
+                  identity (no pass); dscale is DCE'd (residual_scale is a
+                  constant in the model layers)
+      up bwd      dX launch reads g_h + the preacts + both up weights
+                  (+ raw x and the gamma/beta rows when the pre-norm is
+                  folded: the norm transpose runs tile-wise in the store),
+                  writes dx; dW launch reads x (renormed tile-wise — the
+                  normed activation is never re-materialized) + g_h + the
+                  preacts, writes both up weights
+    unfused (the oracle-recompute VJP — autodiff of the unfused jnp chain):
+      the whole unfused fwd chain re-materializes (remat), then every op's
+      transpose re-reads its saved operands: the scaled-residual pass, the
+      down GEMM's two bwd GEMMs, the 5-pass GLU transpose, both up GEMMs'
+      bwd pairs (dxn accumulated across them), and the standalone norm bwd.
+    """
+    t, d, f = tokens, d_model, d_ff
+    act_td = t * d * dtype_bytes
+    act_tf = t * f * dtype_bytes
+    w_up = d * f * dtype_bytes
+    w_down = f * d * dtype_bytes
+    n_up = 2 if gated else 1
+    norm_vec = _prenorm_vec_bytes(d, prenorm, dtype_bytes)
+    # saved preactivations round through the MXU input dtype (fp32 launches
+    # save exactly; bf16 pays the same rounding the operands already did);
+    # the scale-carrying down store keeps fp32 (its dscale reduction
+    # consumes the operand's full precision)
+    preact_tf = t * f * dtype_bytes
+    preact_td = t * d * 4
+    if fused:
+        saves = n_up * preact_tf + (preact_td if residual else 0)
+        down_pre = preact_td if residual else 0
+        down_dh = act_td + down_pre + w_down + act_tf
+        down_dw = act_tf + act_td + down_pre + w_down
+        up_dx = act_tf + n_up * preact_tf + n_up * w_up + act_td
+        up_dw = act_td + act_tf + n_up * preact_tf + n_up * w_up
+        if prenorm != "none":
+            up_dx += act_td + norm_vec   # raw x for the norm transpose
+            up_dw += norm_vec            # gamma rows for the tile renorm
+        total = saves + down_dh + down_dw + up_dx + up_dw
+    else:
+        recompute = mlp_chain_model(
+            tokens=t, d_model=d, d_ff=f, dtype_bytes=dtype_bytes,
+            gated=gated, residual=residual, prenorm=prenorm, fused=False,
+            chip=chip)["dma_bytes"]
+        resid_b = 2 * act_td if residual else 0   # dm = scale*g pass
+        down_b = (act_td + w_down + act_tf) + (act_tf + act_td + w_down)
+        glu_b = (5 if gated else 3) * act_tf
+        up_b = n_up * (act_tf + w_up + act_td) \
+            + n_up * (act_td + act_tf + w_up)
+        norm_b = (3 * act_td + norm_vec) if prenorm != "none" else 0
+        total = recompute + resid_b + down_b + glu_b + up_b + norm_b
+    flops = 2 * 2.0 * t * f * d * (n_up + 1)   # dA + dB per fwd GEMM
+    if not fused:
+        flops *= 1.5                            # + the fwd recompute
+    if prenorm != "none":
+        flops += 8.0 * t * d
+    return _chain_dict(total, flops, fused, dtype_bytes, chip)
+
+
+def qkv_rope_chain_bwd_model(*, tokens: int, d_model: int, num_heads: int,
+                             num_kv_heads: int, head_dim: int,
+                             dtype_bytes: int = 2, prenorm: str = "none",
+                             fused: bool = True,
+                             chip: ChipSpec = V5E) -> dict:
+    """Backward of the QKV-projection → RoPE chain (DESIGN.md §11).
+
+    fused: the rope epilogue is linear, so no preactivation is saved — the
+    rotation adjoint runs on the g tiles as they stream into both bwd
+    launches of the qk GEMM (tables re-streamed), the v GEMM transposes
+    plainly, and with a folded pre-norm both dW launches renorm their A
+    stream tile-wise while the dX launch runs the norm transpose in its
+    store. unfused: the oracle-recompute VJP re-materializes the whole
+    unfused fwd chain, then pays the rope transpose pass and each GEMM's
+    materialized bwd pair plus the standalone norm bwd.
+    """
+    t = tokens
+    nq = num_heads * head_dim
+    nkv = num_kv_heads * head_dim
+    nqk = nq + nkv
+    x_b = t * d_model * dtype_bytes
+    gqk_b = t * nqk * dtype_bytes
+    gv_b = t * nkv * dtype_bytes
+    wqk_b = d_model * nqk * dtype_bytes
+    wv_b = d_model * nkv * dtype_bytes
+    tables = 2 * t * head_dim * 4
+    norm_vec = _prenorm_vec_bytes(d_model, prenorm, dtype_bytes)
+    if fused:
+        qk_dx = gqk_b + tables + wqk_b + x_b
+        qk_dw = x_b + gqk_b + tables + wqk_b
+        v_dx = gv_b + wv_b + x_b
+        v_dw = x_b + gv_b + wv_b
+        if prenorm != "none":
+            qk_dx += x_b + norm_vec
+            qk_dw += norm_vec
+            v_dw += norm_vec
+        dx_add = 3 * x_b   # dx_qk + dx_v summed in one jnp pass
+        total = qk_dx + qk_dw + v_dx + v_dw + dx_add
+    else:
+        recompute = qkv_rope_chain_model(
+            tokens=t, d_model=d_model, num_heads=num_heads,
+            num_kv_heads=num_kv_heads, head_dim=head_dim,
+            dtype_bytes=dtype_bytes, prenorm=prenorm, fused=False,
+            chip=chip)["dma_bytes"]
+        rope_b = 2 * t * (nq + nkv) * dtype_bytes + tables
+        gemm_b = (gqk_b + wqk_b + x_b) + (x_b + gqk_b + wqk_b) \
+            + (gv_b + wv_b + x_b) + (x_b + gv_b + wv_b)
+        norm_b = (3 * x_b + norm_vec) if prenorm != "none" else 0
+        dx_add = 3 * x_b
+        total = recompute + rope_b + gemm_b + norm_b + dx_add
+    flops = 2 * 2.0 * t * d_model * (nq + 2 * nkv)
+    if not fused:
+        flops *= 1.5
+    if prenorm != "none":
+        flops += 8.0 * t * d_model
+    return _chain_dict(total, flops, fused, dtype_bytes, chip)
+
+
 def gemm_epilogue_model(*, m: int, n: int, k: int, dtype_bytes: int = 2,
                         bias: bool = False, activation: bool = False,
                         gate: bool = False, residual: bool = False,

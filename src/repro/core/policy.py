@@ -50,8 +50,12 @@ from .schedule import PINGPONG, Schedule
 # attention_decode is the split-KV flash-decode kind (q_len=1, GQA group
 # packed into the q tile): its perf model is bandwidth-, not FLOP-,
 # dominated, and block_n carries the KV-split size (one split per grid step).
-OP_KINDS = ("gemm", "attention_fwd", "attention_bwd", "attention_decode",
-            "fused_norm", "rope")
+# gemm_bwd is one launch of the fused backward (DESIGN.md §11): block dims
+# follow the *launch's own* (out_rows, out_cols, contraction) GEMM shape —
+# (M, K, N) for dA, (K, N, M) for dB — and the chain's saved-preactivation
+# streams ride the cotangent panel in the VMEM accounting.
+OP_KINDS = ("gemm", "gemm_bwd", "attention_fwd", "attention_bwd",
+            "attention_decode", "fused_norm", "rope")
 
 _ACC_BYTES = {"float32": 4, "bfloat16": 2}
 
@@ -85,12 +89,12 @@ class KernelPolicy:
             raise ValueError(f"unknown op kind {self.op!r}; have {OP_KINDS}")
         if self.acc_dtype not in _ACC_BYTES:
             raise ValueError(f"unsupported acc_dtype {self.acc_dtype!r}")
-        if self.epilogue is not None and self.op != "gemm":
-            raise ValueError(f"epilogue chains only apply to gemm policies, "
-                             f"not {self.op!r}")
-        if self.prologue is not None and self.op != "gemm":
-            raise ValueError(f"prologue chains only apply to gemm policies, "
-                             f"not {self.op!r}")
+        if self.epilogue is not None and self.op not in ("gemm", "gemm_bwd"):
+            raise ValueError(f"epilogue chains only apply to gemm/gemm_bwd "
+                             f"policies, not {self.op!r}")
+        if self.prologue is not None and self.op not in ("gemm", "gemm_bwd"):
+            raise ValueError(f"prologue chains only apply to gemm/gemm_bwd "
+                             f"policies, not {self.op!r}")
 
     # -- block accessors (names per the op-kind table in the module doc) ----
     @property
@@ -135,6 +139,36 @@ class KernelPolicy:
                 blocks += self.epilogue.extra_operand_blocks(
                     s.block_m, s.block_n, s.block_k, self.in_dtype)
             return blocks
+        if self.op == "gemm_bwd":
+            # one bwd launch of the fused backward (DESIGN.md §11): a primal
+            # panel and a cotangent panel, the saved preactivation streams
+            # riding the cotangent's pipeline slot (fp32 for scale chains —
+            # Epilogue.preact_keeps_f32), a second weight panel for the
+            # dual-GEMM gate, the raw-A block the norm-prologue dA launch
+            # streams for its tile-wise transpose, and the prologue's
+            # gamma/beta/stats blocks. Approximate but conservative — the
+            # launch builders re-enforce the exact budget at trace time
+            # (tiles.check_vmem_budget in kernels/gemm/backward).
+            blocks = [((s.block_m, s.block_k), self.in_dtype),
+                      ((s.block_k, s.block_n), self.in_dtype)]
+            if self.epilogue is not None:
+                n_saved = getattr(self.epilogue, "saved_accumulators", 0)
+                p_dtype = ("float32"
+                           if getattr(self.epilogue, "preact_keeps_f32",
+                                      False) else self.in_dtype)
+                blocks += [((s.block_k, s.block_n), p_dtype)] * n_saved
+                # the chain's streamed operand blocks (b2 panel, bias row,
+                # scale block, sin/cos rows, residual tile) — the fwd-shaped
+                # estimate over-counts the bwd slightly (dresidual never
+                # streams), which errs on the reject side
+                blocks += self.epilogue.extra_operand_blocks(
+                    s.block_m, s.block_n, s.block_k, self.in_dtype)
+            if self.prologue is not None and not getattr(
+                    self.prologue, "is_identity", True):
+                blocks.append(((s.block_m, s.block_n), self.in_dtype))
+                blocks += self.prologue.extra_operand_blocks(
+                    s.block_m, s.block_k, self.in_dtype)
+            return blocks
         if self.op in ("attention_fwd", "attention_bwd", "attention_decode"):
             d = s.block_k  # head_dim by convention
             blocks = [((s.block_m, d), self.in_dtype),   # q (or do) block
@@ -158,7 +192,7 @@ class KernelPolicy:
         """Pinned accumulator scratch (the TPU analogue of HK's pinned AGPRs)."""
         s = self.schedule
         acc = _ACC_BYTES[self.acc_dtype]
-        if self.op == "gemm":
+        if self.op in ("gemm", "gemm_bwd"):
             n_acc = 1 + (self.epilogue.extra_scratch_accumulators()
                          if self.epilogue is not None else 0)
             return n_acc * s.block_m * s.block_n * acc

@@ -1,5 +1,6 @@
 from .epilogue import EPILOGUE_NONE, Epilogue  # noqa: F401
 from .prologue import PROLOGUE_NONE, Prologue, norm_prologue  # noqa: F401
-from .ops import gemm, gemm_fused  # noqa: F401
-from .ref import gemm_fused_ref, gemm_ref  # noqa: F401
+from .ops import default_bwd_mode, gemm, gemm_fused  # noqa: F401
+from .ref import gemm_fused_bwd_ref, gemm_fused_ref, gemm_ref  # noqa: F401
 from .kernel import gemm_pallas  # noqa: F401
+from .backward import gemm_fused_bwd, resolve_bwd_policies  # noqa: F401

@@ -54,6 +54,7 @@ import jax
 import jax.numpy as jnp
 
 ACTIVATIONS = ("none", "silu", "gelu", "relu")
+SCALE_KINDS = ("scalar", "row", "col")
 
 # f32-in/f32-out activation bodies; gelu matches models/common.act_fn
 # (approximate=True).
@@ -62,6 +63,13 @@ _ACT_FNS = {
     "gelu": lambda x: jax.nn.gelu(x, approximate=True),
     "relu": jax.nn.relu,
 }
+
+
+def _act_grad(name: str, x, g):
+    """cotangent of _ACT_FNS[name] at x — derived with jax.vjp so the
+    transpose rule can never drift from the forward body."""
+    _, vjp = jax.vjp(_ACT_FNS[name], x)
+    return vjp(g)[0]
 
 
 def rope_rotate(x, sin, cos, head_dim: int):
@@ -89,7 +97,9 @@ class Epilogue:
     activation: str = "none"     # 'none' | 'silu' | 'gelu' | 'relu'
     gate: bool = False           # dual-output GEMM: store act(acc) * acc2
     residual: bool = False
-    scale: bool = False          # runtime scalar: fp8 dequant / residual_scale
+    scale: bool = False          # runtime scale: fp8 dequant / residual_scale
+    scale_kind: str = "scalar"   # 'scalar' | 'row' (M,1) | 'col' (1,N) —
+                                 # per-channel fp8 dequant vectors
     rope: bool = False           # per-head rotary rotation (QKV prologue)
     head_dim: int = 0            # required (and >0, even) when rope=True
 
@@ -97,6 +107,11 @@ class Epilogue:
         if self.activation not in ACTIVATIONS:
             raise ValueError(f"unknown activation {self.activation!r}; "
                              f"have {ACTIVATIONS}")
+        if self.scale_kind not in SCALE_KINDS:
+            raise ValueError(f"unknown scale_kind {self.scale_kind!r}; "
+                             f"have {SCALE_KINDS}")
+        if self.scale_kind != "scalar" and not self.scale:
+            raise ValueError("scale_kind is only meaningful with scale=True")
         if self.gate and self.activation == "none":
             raise ValueError("gate=True needs an activation (SwiGLU/GeGLU "
                              "stores act(acc) * acc2)")
@@ -151,10 +166,19 @@ class Epilogue:
         if self.residual:
             blocks.append(((block_m, block_n), in_dtype))
         if self.scale:
-            blocks.append(((1, 1), "float32"))
+            blocks.append((self.scale_block(block_m, block_n), "float32"))
         if self.rope:
             blocks += [((block_m, self.head_dim), "float32")] * 2
         return blocks
+
+    def scale_block(self, block_m: int, block_n: int) -> tuple:
+        """The streamed f32 scale block per scale_kind: one scalar, an (M, 1)
+        per-row column, or a (1, N) per-channel dequant row."""
+        if self.scale_kind == "row":
+            return (block_m, 1)
+        if self.scale_kind == "col":
+            return (1, block_n)
+        return (1, 1)
 
     def extra_scratch_accumulators(self) -> int:
         """Accumulators beyond the first (the gate path pins a second)."""
@@ -180,7 +204,7 @@ class Epilogue:
         if self.residual:
             extra += m * n * dtype_bytes
         if self.scale:
-            extra += 4
+            extra += 4 * {"scalar": 1, "row": m, "col": n}[self.scale_kind]
         if self.rope:
             extra += 2 * m * self.head_dim * 4
         return extra
@@ -209,13 +233,139 @@ class Epilogue:
             out = out + residual
         return out
 
+    # -- the chain transpose (DESIGN.md §11) --------------------------------
+    @property
+    def needs_saved_preact(self) -> bool:
+        """True when the bwd transpose needs the raw fp32 accumulator(s) the
+        fwd store consumed: the activation transpose is act'(preact)·g (and
+        the gate also needs preact2), and dscale is a <g, preact> reduction.
+        rope alone does not qualify — the rotation is invertible, so the
+        table cotangents re-derive the pre-rope value from the saved output.
+        """
+        return self.gate or self.activation != "none" or self.scale
+
+    @property
+    def saved_accumulators(self) -> int:
+        """How many accumulators the fwd launch stores for the kernel bwd."""
+        return self.n_accumulators if self.needs_saved_preact else 0
+
+    @property
+    def preact_keeps_f32(self) -> bool:
+        """scale chains save fp32 preactivations: dscale is a <g, preact>
+        *reduction*, so the summed cotangent inherits the operand's
+        precision (act' only modulates g elementwise and tolerates the MXU
+        input rounding). One predicate shared by the fwd launch's save, the
+        policy VMEM rule, and the bwd traffic model."""
+        return self.scale
+
+    def _transpose_core(self, g, preact=None, preact2=None, *, bias=None,
+                        scale=None, sin=None, cos=None) -> dict:
+        """The shared transpose chain: walks the fwd stage order backwards,
+        recomputing the activation/rope input from the saved accumulator.
+        Returns every intermediate cotangent the rules below pick from:
+        'g_acc'/'g_acc2' (raw-accumulator cotangents, the bwd GEMM streams),
+        'g_bias' (pre-bias-point cotangent, column-reduced into dbias),
+        'g_scaled'/'g_scaled2' (post-scale-point cotangents, the dscale
+        reduction operands). All elementwise/broadcast, so the same code is
+        exact on a VMEM tile and on the full array.
+        """
+        out = {}
+        gy = g  # the residual add transposes to identity on the main path
+        if self.gate:
+            u = preact * scale if self.scale else preact
+            v2 = preact2 * scale if self.scale else preact2
+            du = _act_grad(self.activation, u, gy * v2)
+            dv2 = _ACT_FNS[self.activation](u) * gy
+            out["g_scaled"], out["g_scaled2"] = du, dv2
+            out["g_acc"] = du * scale if self.scale else du
+            out["g_acc2"] = dv2 * scale if self.scale else dv2
+            return out
+        if self.activation != "none":
+            # u = the activation input: scale then bias applied to preact
+            u = preact
+            if self.scale:
+                u = u * scale
+            if self.bias:
+                u = u + bias
+            du = _act_grad(self.activation, u, gy)
+        elif self.rope:
+            # rotation adjoint = rotation by -theta
+            du = rope_rotate(gy, -sin, cos, self.head_dim)
+        else:
+            du = gy
+        out["g_bias"] = du
+        out["g_scaled"] = du
+        out["g_acc"] = du * scale if self.scale else du
+        return out
+
+    def transpose_tile(self, g, preact=None, preact2=None, *, bias=None,
+                       scale=None, sin=None, cos=None) -> dict:
+        """Tile-local half of the declarative transpose rule (DESIGN.md §11):
+        grad_out tile -> the cotangent streams the bwd GEMM launches consume.
+        'g_acc' (and 'g_acc2' for the dual-output gate) feed dA = g_acc@Bᵀ
+        and dB = Aᵀ@g_acc; 'g_bias' (present iff bias) is the pre-bias-point
+        cotangent the dB launch column-reduces into dbias inside its store.
+        This is the fwd epilogue run as a *prologue on g*: applied to each g
+        tile as it streams into the bwd launches.
+        """
+        core = self._transpose_core(g, preact, preact2, bias=bias,
+                                    scale=scale, sin=sin, cos=cos)
+        keep = {"g_acc"}
+        if self.gate:
+            keep.add("g_acc2")
+        if self.bias:
+            keep.add("g_bias")
+        return {k: v for k, v in core.items() if k in keep}
+
+    def operand_grads(self, g, preact=None, preact2=None, out=None, *,
+                      bias=None, residual=None, scale=None, sin=None,
+                      cos=None) -> dict:
+        """Reduction half of the transpose rule, on full arrays (jnp): the
+        cotangents of the chain's extra operands. The kernel path folds the
+        dbias column-sum into the dB launch store, so it only consults this
+        for dresidual (identity), dscale (a <g, preact> reduction shaped per
+        scale_kind) and the rope-table cotangents (which re-derive the
+        pre-rope value — from the saved preact when one exists, else by
+        inverting the rotation on the saved output). The jnp bwd oracle uses
+        every entry, dbias included. Unused entries are DCE'd under jit.
+        """
+        core = self._transpose_core(g, preact, preact2, bias=bias,
+                                    scale=scale, sin=sin, cos=cos)
+        grads = {}
+        if self.residual:
+            grads["residual"] = g
+        if self.bias:
+            grads["bias"] = jnp.sum(core["g_bias"], axis=0, keepdims=True)
+        if self.scale:
+            ds = core["g_scaled"] * preact
+            if self.gate:
+                ds = ds + core["g_scaled2"] * preact2
+            axis = {"scalar": (0, 1), "row": (1,), "col": (0,)}[self.scale_kind]
+            grads["scale"] = jnp.sum(ds, axis=axis, keepdims=True)
+        if self.rope:
+            if preact is not None:
+                u = preact * scale if self.scale else preact
+                if self.bias:
+                    u = u + bias
+            else:
+                u = rope_rotate(out, -sin, cos, self.head_dim)
+            rows, cols = u.shape
+            hd, half = self.head_dim, self.head_dim // 2
+            uh = u.reshape(rows, cols // hd, hd)
+            gh = g.reshape(rows, cols // hd, hd)
+            rot = jnp.concatenate([-uh[..., half:], uh[..., :half]], axis=-1)
+            grads["sin"] = jnp.sum(gh * rot, axis=1)
+            grads["cos"] = jnp.sum(gh * uh, axis=1)
+        return grads
+
     def describe(self) -> str:
         """Short tag for reports/benchmark rows, e.g. 'bias+silu*gate+res'."""
         if self.is_identity:
             return "none"
         parts = []
         if self.scale:
-            parts.append("scale")
+            parts.append("scale" if self.scale_kind == "scalar"
+                         else f"scale:{self.scale_kind}")
         if self.bias:
             parts.append("bias")
         if self.rope:

@@ -46,18 +46,59 @@ def _upcast(x):
     return x.astype(jnp.bfloat16) if x.dtype.itemsize == 1 else x
 
 
+def epilogue_f32_kwargs(epilogue: Epilogue, extras: dict, *,
+                        residual: bool = False) -> dict:
+    """Read an epilogue's extra-operand refs as the fp32 kwargs its
+    ``apply``/``transpose_tile`` expect (scalar scale unwraps to a rank-0
+    value, vector kinds stay blocks). One helper serves the fwd store and
+    both bwd launches so the operand conventions cannot drift."""
+    kw = {}
+    if epilogue.bias:
+        kw["bias"] = extras["bias"][...].astype(jnp.float32)
+    if residual and epilogue.residual:
+        kw["residual"] = extras["residual"][...].astype(jnp.float32)
+    if epilogue.scale:
+        kw["scale"] = (extras["scale"][0, 0]
+                       if epilogue.scale_kind == "scalar"
+                       else extras["scale"][...].astype(jnp.float32))
+    if epilogue.rope:
+        kw["sin"] = extras["sin"][...].astype(jnp.float32)
+        kw["cos"] = extras["cos"][...].astype(jnp.float32)
+    return kw
+
+
+def prologue_f32_kwargs(prologue: Prologue, extras: dict) -> dict:
+    """Read a prologue's gamma/beta rows and fast-path stats columns as the
+    fp32 kwargs ``apply``/``transpose`` expect — shared with the bwd
+    launches like :func:`epilogue_f32_kwargs`."""
+    kw = {"gamma": extras["gamma"][...].astype(jnp.float32)}
+    if prologue.beta:
+        kw["beta"] = extras["beta"][...].astype(jnp.float32)
+    if prologue.precomputed_stats:
+        if prologue.norm == "layernorm":
+            kw["mean"] = extras["mean"][...]
+        kw["rstd"] = extras["rstd"][...]
+    return kw
+
+
 def _gemm_kernel(*refs, nk: int, out_dtype, epilogue: Epilogue,
-                 prologue: Prologue):
+                 prologue: Prologue, save_preact: bool = False):
     """refs: a, b, *extra inputs (prologue then epilogue operand_names()
-    order), o, acc[, acc2]."""
+    order), o[, preact[, preact2]], acc[, acc2]. The optional preact
+    outputs store the raw fp32 accumulator(s) rounded through the MXU
+    input dtype — the residuals the kernel-side fused backward streams
+    (DESIGN.md §11); they exist only on differentiated fwd launches."""
     refs = list(refs)
     a_ref, b_ref = refs[0], refs[1]
     names = prologue.operand_names() + epilogue.operand_names()
-    extras = dict(zip(names, refs[2:]))
+    extras = dict(zip(names, refs[2:2 + len(names)]))
     gate = epilogue.gate
-    o_ref = refs[-3] if gate else refs[-2]
-    acc_ref = refs[-2] if gate else refs[-1]
-    acc2_ref = refs[-1] if gate else None
+    rest = refs[2 + len(names):]
+    n_out = 1 + (epilogue.saved_accumulators if save_preact else 0)
+    o_ref, preact_refs = rest[0], rest[1:n_out]
+    scratch = rest[n_out:]
+    acc_ref = scratch[0]
+    acc2_ref = scratch[1] if gate else None
 
     k = pl.program_id(1)
 
@@ -73,14 +114,9 @@ def _gemm_kernel(*refs, nk: int, out_dtype, epilogue: Epilogue,
         # (row stats recomputed from the full-K tile, or streamed on the fast
         # path), then fed to the MXU in the input dtype — the normed
         # activation never round-trips HBM (DESIGN.md §10).
-        pkw = {"gamma": extras["gamma"][...].astype(jnp.float32)}
-        if prologue.beta:
-            pkw["beta"] = extras["beta"][...].astype(jnp.float32)
-        if prologue.precomputed_stats:
-            if prologue.norm == "layernorm":
-                pkw["mean"] = extras["mean"][...]
-            pkw["rstd"] = extras["rstd"][...]
-        a = prologue.apply(a.astype(jnp.float32), **pkw).astype(a.dtype)
+        a = prologue.apply(a.astype(jnp.float32),
+                           **prologue_f32_kwargs(prologue, extras)
+                           ).astype(a.dtype)
     acc_ref[...] += jnp.dot(a, _upcast(b_ref[...]),
                             preferred_element_type=jnp.float32)
     if gate:
@@ -89,19 +125,15 @@ def _gemm_kernel(*refs, nk: int, out_dtype, epilogue: Epilogue,
 
     @pl.when(k == nk - 1)
     def _store():
-        kw = {}
-        if epilogue.bias:
-            kw["bias"] = extras["bias"][...].astype(jnp.float32)
-        if epilogue.residual:
-            kw["residual"] = extras["residual"][...].astype(jnp.float32)
-        if epilogue.scale:
-            kw["scale"] = extras["scale"][0, 0]
-        if epilogue.rope:
-            kw["sin"] = extras["sin"][...].astype(jnp.float32)
-            kw["cos"] = extras["cos"][...].astype(jnp.float32)
+        kw = epilogue_f32_kwargs(epilogue, extras, residual=True)
         out = epilogue.apply(acc_ref[...],
                              acc2_ref[...] if gate else None, **kw)
         o_ref[...] = out.astype(out_dtype)
+        if preact_refs:
+            preact_refs[0][...] = acc_ref[...].astype(preact_refs[0].dtype)
+            if gate:
+                preact_refs[1][...] = acc2_ref[...].astype(
+                    preact_refs[1].dtype)
 
 
 def _fit_block(dim: int, want: int, multiple: int = 1,
@@ -144,13 +176,21 @@ def _fit_policy(policy: KernelPolicy, m: int, n: int, k: int,
     return bm, bn, bk
 
 
+def mxu_input_dtype(dtype):
+    """The dtype operands feed the MXU with (fp8 upcasts to bf16). Saved
+    preactivations round through this — exact for fp32 launches, one bf16
+    rounding (the same the operands already paid) otherwise."""
+    return jnp.bfloat16 if jnp.dtype(dtype).itemsize == 1 else jnp.dtype(dtype)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("policy", "out_dtype", "interpret",
-                                    "epilogue", "prologue"))
+                                    "epilogue", "prologue", "save_preact"))
 def _gemm_pallas(a: jax.Array, b: jax.Array, *extras, policy: KernelPolicy,
                  out_dtype, interpret: bool,
                  epilogue: Epilogue = EPILOGUE_NONE,
-                 prologue: Prologue = PROLOGUE_NONE) -> jax.Array:
+                 prologue: Prologue = PROLOGUE_NONE,
+                 save_preact: bool = False):
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
@@ -228,8 +268,12 @@ def _gemm_pallas(a: jax.Array, b: jax.Array, *extras, policy: KernelPolicy,
                                     allow_ragged_minor=tiles.shape_ragged(
                                         m, n, arr.dtype))
         elif name == "scale":
-            spec = tiles.block_spec((1, 1), lambda i, kk: (0, 0), arr.dtype,
-                                    allow_ragged_minor=True)
+            # per-channel dequant vectors stream as row/col blocks; the
+            # scalar is a pinned (1, 1) cell
+            smap = {"row": row_map, "col": col_map}.get(
+                epilogue.scale_kind, lambda i, kk: (0, 0))
+            spec = tiles.block_spec(epilogue.scale_block(block_m, block_n),
+                                    smap, arr.dtype, allow_ragged_minor=True)
         else:  # sin / cos: (M, head_dim) row blocks
             spec = tiles.block_spec((block_m, epilogue.head_dim), row_map,
                                     arr.dtype, allow_ragged_minor=True)
@@ -238,20 +282,35 @@ def _gemm_pallas(a: jax.Array, b: jax.Array, *extras, policy: KernelPolicy,
     scratch = [pltpu.VMEM((block_m, block_n), jnp.float32)
                for _ in range(epilogue.n_accumulators)]
     kernel = functools.partial(_gemm_kernel, nk=nk, out_dtype=out_dtype,
-                               epilogue=epilogue, prologue=prologue)
-    return pl.pallas_call(
+                               epilogue=epilogue, prologue=prologue,
+                               save_preact=save_preact)
+    out_specs = [tiles.block_spec((block_m, block_n), o_map, out_dtype,
+                                  allow_ragged_minor=tiles.shape_ragged(
+                                      m, n, out_dtype))]
+    out_shape = [jax.ShapeDtypeStruct((m, n), out_dtype)]
+    if save_preact:
+        # the bwd residual outputs: one (M, N) preactivation per saved
+        # accumulator, in the MXU input dtype — fp32 for scale chains
+        # (Epilogue.preact_keeps_f32; DESIGN.md §11)
+        p_dtype = jnp.float32 if epilogue.preact_keeps_f32 else \
+            mxu_input_dtype(a.dtype)
+        for _ in range(epilogue.saved_accumulators):
+            out_specs.append(tiles.block_spec(
+                (block_m, block_n), o_map, p_dtype,
+                allow_ragged_minor=tiles.shape_ragged(m, n, p_dtype)))
+            out_shape.append(jax.ShapeDtypeStruct((m, n), p_dtype))
+    result = pl.pallas_call(
         kernel,
         grid=(num_rows * num_cols, nk),
         in_specs=in_specs,
-        out_specs=tiles.block_spec((block_m, block_n), o_map, out_dtype,
-                                   allow_ragged_minor=tiles.shape_ragged(
-                                       m, n, out_dtype)),
-        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        out_specs=out_specs if save_preact else out_specs[0],
+        out_shape=out_shape if save_preact else out_shape[0],
         scratch_shapes=scratch,
         compiler_params=tiles.compiler_params(
             dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
     )(a, b, *extras)
+    return result
 
 
 def gemm_pallas(a: jax.Array, b: jax.Array, *,

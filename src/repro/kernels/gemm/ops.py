@@ -19,7 +19,9 @@ activation from HBM.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -33,16 +35,16 @@ from .prologue import PROLOGUE_NONE, Prologue
 from .kernel import _fit_block, _gemm_pallas, gemm_pallas
 from .ref import gemm_fused_ref, gemm_ref
 
+_DEPRECATION_MSG = (
+    "gemm: the schedule=/swizzle= keywords are deprecated; pass "
+    "policy=KernelPolicy(...) (or neither, to use the autotuner)")
+
 
 def _policy_from_schedule(schedule: Schedule, swizzle, m, n, k,
                           dtype) -> KernelPolicy:
     """Deprecation shim: fit a legacy Schedule's blocks to the problem and
     wrap them (plus the requested/auto swizzle) in an explicit policy."""
-    import warnings
-    warnings.warn(
-        "gemm: the schedule=/swizzle= keywords are deprecated; pass "
-        "policy=KernelPolicy(...) (or neither, to use the autotuner)",
-        DeprecationWarning, stacklevel=3)
+    warnings.warn(_DEPRECATION_MSG, DeprecationWarning, stacklevel=3)
     bm = _fit_block(m, schedule.block_m, prefer=128)
     bn = _fit_block(n, schedule.block_n, prefer=128)
     bk = _fit_block(k, schedule.block_k, prefer=128)
@@ -59,6 +61,17 @@ def _policy_from_schedule(schedule: Schedule, swizzle, m, n, k,
                        name=f"shim_{schedule.name}")
 
 
+def _policy_from_swizzle(swizzle, m, n, k, dtype) -> KernelPolicy:
+    """Deprecation shim for swizzle-only legacy calls: rank the autotuner's
+    candidate set restricted to the requested traversal order, instead of
+    pinning the old hard-coded pingpong-512 schedule (which silently leaned
+    on the _fit_policy clamp for every small-M/N/K problem)."""
+    warnings.warn(_DEPRECATION_MSG, DeprecationWarning, stacklevel=3)
+    return autotune.select_policy(
+        "gemm", (m, n, k), str(dtype),
+        swizzle=swizzle if swizzle is not None else ROW_MAJOR)
+
+
 def gemm(a, b, *, policy: KernelPolicy | None = None,
          schedule: Schedule | None = None,
          swizzle: SwizzleConfig | str | None = "auto",
@@ -68,52 +81,129 @@ def gemm(a, b, *, policy: KernelPolicy | None = None,
     m, k = a.shape
     _, n = b.shape
     if policy is None:
-        if schedule is not None or isinstance(swizzle, SwizzleConfig) or \
-                swizzle is None:
+        if schedule is not None:
             # legacy keyword surface -> explicit policy (deprecation shim)
-            policy = _policy_from_schedule(
-                schedule if schedule is not None else
-                Schedule("pingpong", 2, 512, 512, 512),
-                swizzle, m, n, k, a.dtype)
+            policy = _policy_from_schedule(schedule, swizzle, m, n, k,
+                                           a.dtype)
+        elif isinstance(swizzle, SwizzleConfig) or swizzle is None:
+            # swizzle-only legacy surface -> autotuned blocks under the
+            # requested traversal order
+            policy = _policy_from_swizzle(swizzle, m, n, k, a.dtype)
         else:
             policy = autotune.select_policy("gemm", (m, n, k), str(a.dtype))
     return gemm_pallas(a, b, policy=policy, out_dtype=out_dtype,
                        interpret=(mode == "pallas_interpret"))
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
-def _gemm_fused(policy, out_dtype, interpret, epilogue, prologue, a, b,
-                extras):
+# Default backward path for gemm_fused (DESIGN.md §11): 'kernel' runs the
+# hand-written chain transpose as fused Pallas launches; 'reference' keeps
+# the jnp-oracle recompute VJP as the grad oracle.
+BWD_MODES = ("kernel", "reference")
+_DEFAULT_BWD_MODE = ["kernel"]
+
+
+@contextlib.contextmanager
+def default_bwd_mode(mode: str):
+    """Temporarily override the backward path used by gemm_fused calls that
+    don't pass ``bwd_mode`` (i.e. every model layer) — the lever the parity
+    tests and benchmarks use to pit the kernel-side fused backward against
+    the oracle-recompute VJP on identical graphs."""
+    if mode not in BWD_MODES:
+        raise ValueError(f"unknown bwd_mode {mode!r}; have {BWD_MODES}")
+    prev = _DEFAULT_BWD_MODE[0]
+    _DEFAULT_BWD_MODE[0] = mode
+    try:
+        yield
+    finally:
+        _DEFAULT_BWD_MODE[0] = prev
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5))
+def _gemm_fused(policy, out_dtype, interpret, epilogue, prologue, bwd_mode,
+                a, b, extras):
     return _gemm_pallas(a, b, *extras, policy=policy, out_dtype=out_dtype,
                         interpret=interpret, epilogue=epilogue,
                         prologue=prologue)
 
 
-def _gemm_fused_fwd(policy, out_dtype, interpret, epilogue, prologue, a, b,
-                    extras):
-    out = _gemm_pallas(a, b, *extras, policy=policy, out_dtype=out_dtype,
-                       interpret=interpret, epilogue=epilogue,
-                       prologue=prologue)
-    return out, (a, b, extras)
+def _gemm_fused_fwd(policy, out_dtype, interpret, epilogue, prologue,
+                    bwd_mode, a, b, extras):
+    """Differentiated fwd: under the kernel bwd path the launch additionally
+    stores the raw accumulator(s) the chain transpose needs (rounded through
+    the MXU input dtype — see Epilogue.needs_saved_preact), and the output
+    rides the residuals when the rope-table cotangents must invert the
+    rotation from it. When no legal gemm_bwd policy exists for this shape
+    (the bwd will fall back to the oracle VJP), nothing extra is stored."""
+    save = bwd_mode == "kernel" and epilogue.saved_accumulators > 0
+    if save:
+        from . import backward
+
+        m, k = a.shape
+        n = b.shape[1]
+        save = backward.bwd_policies_available(policy, m, n, k, a.dtype,
+                                               epilogue, prologue)
+    if save:
+        out, *preacts = _gemm_pallas(a, b, *extras, policy=policy,
+                                     out_dtype=out_dtype,
+                                     interpret=interpret, epilogue=epilogue,
+                                     prologue=prologue, save_preact=True)
+    else:
+        out = _gemm_pallas(a, b, *extras, policy=policy, out_dtype=out_dtype,
+                           interpret=interpret, epilogue=epilogue,
+                           prologue=prologue)
+        preacts = []
+    keep_out = out if (bwd_mode == "kernel" and epilogue.rope) else None
+    return out, (a, b, extras, tuple(preacts), keep_out)
 
 
-def _gemm_fused_bwd(policy, out_dtype, interpret, epilogue, prologue, res, g):
-    """Backward = autodiff of the unfused jnp oracle (the fused prologue and
-    store chain are short elementwise graphs whose VJPs XLA fuses well; the
-    forward GEMMs are recomputed here, which the train path pays anyway
-    under remat). Keeps the fused MLP/QKV paths — including the norm
-    prologue's gamma/beta gradients — trainable without a hand-written
-    chain transpose."""
-    a, b, extras = res
-    names = prologue.operand_names() + epilogue.operand_names()
+def _gemm_fused_bwd(policy, out_dtype, interpret, epilogue, prologue,
+                    bwd_mode, res, g):
+    """Backward dispatch (DESIGN.md §11).
 
-    def ref_fn(a, b, extras):
-        kw = dict(zip(names, extras))
-        return gemm_fused_ref(a, b, epilogue=epilogue, prologue=prologue,
-                              out_dtype=out_dtype, **kw)
+    'kernel' (default): the hand-written chain transpose — dA = gbar@Bᵀ and
+    dB = Anᵀ@gbar run as fused Pallas launches with the transposed epilogue
+    applied to the g tiles as they stream in and the norm prologue
+    recomputed tile-wise (kernels/gemm/backward.py).
 
-    _, vjp = jax.vjp(ref_fn, a, b, extras)
-    return vjp(g)
+    'reference': autodiff of the unfused jnp oracle (forward recompute,
+    remat-style) — kept as the grad oracle the kernel path is tested
+    against, and as the remat-friendly fallback.
+    """
+    a, b, extras, preacts, out = res
+
+    def oracle_vjp():
+        names = prologue.operand_names() + epilogue.operand_names()
+
+        def ref_fn(a, b, extras):
+            kw = dict(zip(names, extras))
+            return gemm_fused_ref(a, b, epilogue=epilogue, prologue=prologue,
+                                  out_dtype=out_dtype, **kw)
+
+        _, vjp = jax.vjp(ref_fn, a, b, extras)
+        return vjp(g)
+
+    if bwd_mode == "reference":
+        return oracle_vjp()
+    from . import backward
+
+    m, k = a.shape
+    n = b.shape[1]
+    try:
+        policies = backward.resolve_bwd_policies(policy, m, n, k, a.dtype,
+                                                 epilogue, prologue)
+    except ValueError:
+        # no VMEM-legal gemm_bwd policy for this shape (e.g. the norm
+        # transpose's full-K tiles at huge feature dims) — the same
+        # legality signal the fwd fusion ladder falls back on. The bwd
+        # must handle every shape the fwd legally engaged, so fall back
+        # to the oracle-recompute VJP (raised at trace time only). The
+        # catch is deliberately narrow: errors from the launches
+        # themselves are bugs and must surface, not reroute silently.
+        return oracle_vjp()
+    return backward.gemm_fused_bwd(a, b, extras, preacts, out, g,
+                                   policy=policy, epilogue=epilogue,
+                                   prologue=prologue, interpret=interpret,
+                                   policies=policies)
 
 
 _gemm_fused.defvjp(_gemm_fused_fwd, _gemm_fused_bwd)
@@ -124,14 +214,23 @@ def gemm_fused(a, b, *, epilogue: Epilogue = EPILOGUE_NONE,
                residual=None, scale=None, sin=None, cos=None,
                gamma=None, beta=None, mean=None, rstd=None,
                policy: KernelPolicy | None = None,
-               out_dtype=jnp.bfloat16, mode: str = "pallas_interpret"):
+               out_dtype=jnp.bfloat16, mode: str = "pallas_interpret",
+               bwd_mode: str | None = None):
     """C = epilogue(prologue(A) @ B) in one kernel launch (DESIGN.md §9-§10).
 
     Extra operands per epilogue flag: ``gate`` → ``b2`` (K, N) second weight
     (dual-output SwiGLU GEMM, C = act(A@B) * (A@B2)); ``bias`` → (N,);
-    ``residual`` → (M, N); ``scale`` → scalar (fp8 dequant / residual
-    scale); ``rope`` → ``sin``/``cos`` (M, head_dim) duplicated-halves
-    tables (the fused QKV→RoPE rotation).
+    ``residual`` → (M, N); ``scale`` → scalar, (M, 1) row or (1, N) column
+    per ``scale_kind`` (fp8 dequant — per-tensor or per-channel — and the
+    residual scale); ``rope`` → ``sin``/``cos`` (M, head_dim)
+    duplicated-halves tables (the fused QKV→RoPE rotation).
+
+    ``bwd_mode`` picks the ``jax.grad`` path (DESIGN.md §11): ``"kernel"``
+    (the default, overridable via :func:`default_bwd_mode`) runs the
+    hand-written chain transpose as fused Pallas launches — both bwd GEMMs
+    with the transposed epilogue as a prologue on g and the norm recomputed
+    tile-wise; ``"reference"`` keeps the jnp-oracle recompute VJP (the grad
+    oracle). 'reference' *mode* always differentiates the oracle directly.
 
     Per prologue flag: any norm → ``gamma`` (K,) row scale; ``beta`` →
     (K,) layernorm bias row; ``precomputed_stats`` → ``rstd`` (M,) (and
@@ -199,7 +298,17 @@ def gemm_fused(a, b, *, epilogue: Epilogue = EPILOGUE_NONE,
         if name == "bias":
             val = jnp.asarray(val).reshape(1, -1)
         elif name == "scale":
-            val = jnp.asarray(val, jnp.float32).reshape(1, 1)
+            val = jnp.asarray(val, jnp.float32)
+            if epilogue.scale_kind == "row":
+                val = val.reshape(-1, 1)    # (M, 1) per-row dequant
+            elif epilogue.scale_kind == "col":
+                val = val.reshape(1, -1)    # (1, N) per-channel dequant
+            else:
+                val = val.reshape(1, 1)
         extras.append(val)
+    if bwd_mode is None:
+        bwd_mode = _DEFAULT_BWD_MODE[0]
+    if bwd_mode not in BWD_MODES:
+        raise ValueError(f"unknown bwd_mode {bwd_mode!r}; have {BWD_MODES}")
     return _gemm_fused(policy, out_dtype, mode == "pallas_interpret",
-                       epilogue, prologue, a, b, tuple(extras))
+                       epilogue, prologue, bwd_mode, a, b, tuple(extras))

@@ -188,6 +188,75 @@ class Prologue:
             out = out + beta
         return out
 
+    # -- the chain transpose (DESIGN.md §11) --------------------------------
+    def transpose(self, d_an, a, *, gamma=None, beta=None, mean=None,
+                  rstd=None) -> dict:
+        """Declarative transpose rule: the cotangent of the normed A wrt the
+        raw A and the norm parameters, computed row-locally.
+
+        ``d_an`` is the (rows, K) cotangent the dA GEMM accumulated (grad wrt
+        the normed activation); ``a`` is the matching raw A tile (fp32). On
+        the recompute path the row statistics are re-derived from ``a`` and
+        the full chain rule applies (the stats' own dependence on A is
+        transposed too), so the tile must span the full feature dim — the
+        same `check_blocks` rule the fwd obeys. On the fast path the
+        streamed ``mean``/``rstd`` are independent operands (matching the
+        oracle's autodiff) and get their own cotangents.
+
+        Returns {'da': (rows, K)} plus, per spec: 'dgamma'/'dbeta' (1, K)
+        row partials (summed over the tile's rows — the dA launch stores one
+        partial per row block and a tiny jnp sum finishes the cross-block
+        reduction) and fast-path 'dmean'/'drstd' (rows, 1) columns. The same
+        code serves the kernel store and the jnp oracle.
+        """
+        if self.norm == "none":
+            return {"da": d_an}
+        out = {}
+        if self.precomputed_stats:
+            if self.norm == "rmsnorm":
+                dahat = d_an * gamma
+                out["da"] = dahat * rstd
+                out["dgamma"] = jnp.sum(d_an * a * rstd, axis=0,
+                                        keepdims=True)
+                out["drstd"] = jnp.sum(dahat * a, axis=-1, keepdims=True)
+                return out
+            c = a - mean
+            dahat = d_an * gamma
+            out["da"] = dahat * rstd
+            out["dgamma"] = jnp.sum(d_an * c * rstd, axis=0, keepdims=True)
+            if self.beta:
+                out["dbeta"] = jnp.sum(d_an, axis=0, keepdims=True)
+            out["dmean"] = -jnp.sum(dahat * rstd, axis=-1, keepdims=True)
+            out["drstd"] = jnp.sum(dahat * c, axis=-1, keepdims=True)
+            return out
+        if self.norm == "rmsnorm":
+            var = jnp.mean(a * a, axis=-1, keepdims=True)
+            rstd = jax.lax.rsqrt(var + self.eps)
+            ahat = a * rstd
+            dahat = d_an * gamma
+            cterm = jnp.mean(dahat * ahat, axis=-1, keepdims=True)
+            out["da"] = rstd * (dahat - ahat * cterm)
+            out["dgamma"] = jnp.sum(d_an * ahat, axis=0, keepdims=True)
+            return out
+        mean = jnp.mean(a, axis=-1, keepdims=True)
+        c = a - mean
+        var = jnp.mean(c * c, axis=-1, keepdims=True)
+        rstd = jax.lax.rsqrt(var + self.eps)
+        chat = c * rstd
+        dchat = d_an * gamma
+        out["da"] = rstd * (dchat - jnp.mean(dchat, axis=-1, keepdims=True)
+                            - chat * jnp.mean(dchat * chat, axis=-1,
+                                              keepdims=True))
+        out["dgamma"] = jnp.sum(d_an * chat, axis=0, keepdims=True)
+        if self.beta:
+            out["dbeta"] = jnp.sum(d_an, axis=0, keepdims=True)
+        return out
+
+    def grad_names(self) -> tuple:
+        """The transpose rule's extra outputs, matching operand_names():
+        'dgamma'[, 'dbeta'][, 'dmean', 'drstd'] in kernel output order."""
+        return tuple("d" + n for n in self.operand_names())
+
     def describe(self) -> str:
         """Short tag for reports/benchmark rows, e.g. 'rmsnorm@rstd'."""
         if self.is_identity:

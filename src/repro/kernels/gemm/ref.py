@@ -1,8 +1,12 @@
-"""Pure-jnp oracles for the GEMM kernel and its fused prologue/epilogue chains."""
+"""Pure-jnp oracles for the GEMM kernel and its fused prologue/epilogue
+chains, plus the hand-written chain-transpose backward oracle."""
 import jax.numpy as jnp
 
 from .epilogue import EPILOGUE_NONE, Epilogue
 from .prologue import PROLOGUE_NONE, Prologue
+# one source of truth for the fp8→bf16 MXU rounding point: the oracle and
+# the kernel's saved preactivations must never diverge on it
+from .kernel import mxu_input_dtype as _mxu_dtype
 
 
 def gemm_ref(a, b, out_dtype=jnp.bfloat16):
@@ -26,17 +30,11 @@ def gemm_fused_ref(a, b, *, epilogue: Epilogue = EPILOGUE_NONE,
     duplicated-halves tables.
     """
     if not prologue.is_identity:
-        pkw = {"gamma": jnp.asarray(gamma, jnp.float32).reshape(1, -1)}
-        if prologue.beta:
-            pkw["beta"] = jnp.asarray(beta, jnp.float32).reshape(1, -1)
-        if prologue.precomputed_stats:
-            if prologue.norm == "layernorm":
-                pkw["mean"] = jnp.asarray(mean, jnp.float32).reshape(-1, 1)
-            pkw["rstd"] = jnp.asarray(rstd, jnp.float32).reshape(-1, 1)
+        pkw = _prologue_kwargs(prologue, gamma, beta, mean, rstd)
         # norm in fp32, then round through the MXU input dtype — the same
         # rounding point as the kernel (fp8 operands feed the MXU as bf16)
-        mxu_dtype = jnp.bfloat16 if a.dtype.itemsize == 1 else a.dtype
-        a = prologue.apply(a.astype(jnp.float32), **pkw).astype(mxu_dtype)
+        a = prologue.apply(a.astype(jnp.float32),
+                           **pkw).astype(_mxu_dtype(a.dtype))
     acc = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
                   preferred_element_type=jnp.float32)
     acc2 = None
@@ -49,8 +47,108 @@ def gemm_fused_ref(a, b, *, epilogue: Epilogue = EPILOGUE_NONE,
     if epilogue.residual:
         kw["residual"] = residual.astype(jnp.float32)
     if epilogue.scale:
-        kw["scale"] = jnp.asarray(scale, jnp.float32).reshape(())
+        kw["scale"] = _scale_f32(epilogue, scale)
     if epilogue.rope:
         kw["sin"] = jnp.asarray(sin, jnp.float32)
         kw["cos"] = jnp.asarray(cos, jnp.float32)
     return epilogue.apply(acc, acc2, **kw).astype(out_dtype)
+
+
+def _prologue_kwargs(prologue, gamma, beta, mean, rstd) -> dict:
+    pkw = {"gamma": jnp.asarray(gamma, jnp.float32).reshape(1, -1)}
+    if prologue.beta:
+        pkw["beta"] = jnp.asarray(beta, jnp.float32).reshape(1, -1)
+    if prologue.precomputed_stats:
+        if prologue.norm == "layernorm":
+            pkw["mean"] = jnp.asarray(mean, jnp.float32).reshape(-1, 1)
+        pkw["rstd"] = jnp.asarray(rstd, jnp.float32).reshape(-1, 1)
+    return pkw
+
+
+def _scale_f32(epilogue, scale):
+    """The scale operand in fp32, shaped per scale_kind (broadcastable)."""
+    s = jnp.asarray(scale, jnp.float32)
+    if epilogue.scale_kind == "row":
+        return s.reshape(-1, 1)
+    if epilogue.scale_kind == "col":
+        return s.reshape(1, -1)
+    return s.reshape(())
+
+
+def gemm_fused_bwd_ref(a, b, g, *, epilogue: Epilogue = EPILOGUE_NONE,
+                       prologue: Prologue = PROLOGUE_NONE, b2=None,
+                       bias=None, residual=None, scale=None, sin=None,
+                       cos=None, gamma=None, beta=None, mean=None, rstd=None,
+                       preact=None, preact2=None, out=None):
+    """Hand-written chain-transpose oracle for the fused backward
+    (DESIGN.md §11) — the same declarative transpose rules the bwd Pallas
+    launches run, on full arrays:
+
+        gbar[, gbar2] = epilogue.transpose_tile(g)   # fwd epilogue, as a
+                                                     # prologue on g
+        dAn = gbar @ Bᵀ [+ gbar2 @ B2ᵀ]              # the dA GEMM
+        dA, dgamma, ... = prologue.transpose(dAn, A) # norm transpose
+        dB[, dB2] = Anᵀ @ gbar[, gbar2]              # the dB GEMM(s)
+        dbias/dresidual/dscale/dsin/dcos via epilogue.operand_grads
+
+    ``preact``/``preact2`` are the fwd launch's saved raw accumulators (in
+    the MXU input dtype); when omitted the oracle recomputes them (the
+    remat-style path). ``out`` is the fwd output, consulted only by the
+    rope-table cotangents when no preact exists (the rotation is inverted).
+
+    Returns ``(da, db, grads)`` with ``grads`` keyed by operand name
+    (``b2``/``bias``/``residual``/``scale``/``sin``/``cos``/``gamma``/
+    ``beta``/``mean``/``rstd``). Tested against the autodiff of
+    :func:`gemm_fused_ref` — the declarative rules may never drift from the
+    oracle — and serving as the grad oracle for the bwd kernels.
+    """
+    f32 = jnp.float32
+    a_f32 = a.astype(f32)
+    an = a_f32
+    pkw = {}
+    if not prologue.is_identity:
+        pkw = _prologue_kwargs(prologue, gamma, beta, mean, rstd)
+        an = prologue.apply(a_f32, **pkw).astype(_mxu_dtype(a.dtype))
+    an_f32 = an.astype(f32)
+    b_f32 = b.astype(f32)
+    if preact is None and (epilogue.needs_saved_preact or
+                           (epilogue.rope and out is None)):
+        preact = jnp.dot(an_f32, b_f32, preferred_element_type=f32)
+        if epilogue.gate:
+            preact2 = jnp.dot(an_f32, b2.astype(f32),
+                              preferred_element_type=f32)
+    ekw = {}
+    if epilogue.bias:
+        ekw["bias"] = jnp.asarray(bias, f32).reshape(1, -1)
+    if epilogue.scale:
+        ekw["scale"] = _scale_f32(epilogue, scale)
+    if epilogue.rope:
+        ekw["sin"] = jnp.asarray(sin, f32)
+        ekw["cos"] = jnp.asarray(cos, f32)
+    g_f32 = g.astype(f32)
+    p32 = None if preact is None else preact.astype(f32)
+    p32_2 = None if preact2 is None else preact2.astype(f32)
+    streams = epilogue.transpose_tile(g_f32, p32, p32_2, **ekw)
+    dan = jnp.dot(streams["g_acc"], b_f32.T, preferred_element_type=f32)
+    if epilogue.gate:
+        dan = dan + jnp.dot(streams["g_acc2"], b2.astype(f32).T,
+                            preferred_element_type=f32)
+    tr = prologue.transpose(dan, a_f32, **pkw)
+    da = tr["da"].astype(a.dtype)
+    db = jnp.dot(an_f32.T, streams["g_acc"],
+                 preferred_element_type=f32).astype(b.dtype)
+    grads = {}
+    if epilogue.gate:
+        grads["b2"] = jnp.dot(an_f32.T, streams["g_acc2"],
+                              preferred_element_type=f32).astype(b2.dtype)
+    og = epilogue.operand_grads(
+        g_f32, p32, p32_2, None if out is None else out.astype(f32), **ekw,
+        residual=None)
+    for name in ("bias", "residual", "scale", "sin", "cos"):
+        if name in og:
+            grads[name] = og[name]
+    if epilogue.residual:
+        grads["residual"] = g.astype(residual.dtype)
+    for name in prologue.operand_names():
+        grads[name] = tr["d" + name]
+    return da, db, grads

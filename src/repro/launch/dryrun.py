@@ -189,7 +189,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     # the kernel policies this cell resolves to (autotuner choice per bucket)
     policies = rf.policy_cell_report(cfg, shape)
     # fused-vs-unfused modeled traffic for the hot GEMM chains, incl. the
-    # norm-prologue cells (DESIGN.md §9-§10)
+    # norm-prologue cells and — on train shapes — the *_bwd cells scoring
+    # the kernel-side fused backward vs the oracle-recompute VJP
+    # (DESIGN.md §9-§11)
     fusion = rf.fusion_cell_report(cfg, shape)
     record.update(
         status="ok", n_chips=n_chips, compile_s=round(dt, 1),

@@ -141,7 +141,7 @@ def policy_cell_report(cfg, shape) -> dict:
 
 
 def fusion_cell_report(cfg, shape) -> dict:
-    """Per-cell fusion factors for the hot GEMM chains (DESIGN.md §9-§10).
+    """Per-cell fusion factors for the hot GEMM chains (DESIGN.md §9-§11).
 
     For each chain the fusion subsystem can fuse (MLP/SwiGLU up+down,
     QKV→RoPE — each with and without the block's pre-norm folded into the
@@ -149,9 +149,13 @@ def fusion_cell_report(cfg, shape) -> dict:
     the fused megakernel plan vs the unfused eager chain, and which plan
     the autotuner picks from dma_bytes alone. The ``norm_*`` cells are the
     prologue fusion factors: the same chain scored with the pre-norm on
-    both sides (folded vs standalone). Recorded next to the HLO roofline
-    terms by the dry-run: the HLO terms say where the model sits, these say
-    how much of the memory term the fused paths remove.
+    both sides (folded vs standalone). Train-shaped cells additionally
+    carry ``*_bwd`` rows: the kernel-side fused backward (DESIGN.md §11 —
+    saved-preact streams + two fused bwd GEMM launches per fwd GEMM) vs
+    the oracle-recompute VJP, from the same byte models. Recorded next to
+    the HLO roofline terms by the dry-run: the HLO terms say where the
+    model sits, these say how much of the memory term the fused paths
+    remove.
     """
     from repro.core import autotune
 
@@ -160,6 +164,7 @@ def fusion_cell_report(cfg, shape) -> dict:
     dm = getattr(cfg, "d_model", 0)
     d_ff = getattr(cfg, "d_ff", 0) or 0
     norm_kind = getattr(cfg, "norm", "rmsnorm")
+    train = getattr(shape, "kind", "train") == "train"
     report = {}
 
     def cell(plan):
@@ -168,20 +173,25 @@ def fusion_cell_report(cfg, shape) -> dict:
                 "unfused_bytes": plan["unfused_bytes"],
                 "traffic_reduction": round(plan["traffic_reduction"], 3)}
 
+    def chain(name, kind, chain_shape, **kw):
+        report[name] = cell(autotune.select_fusion(kind, chain_shape, dtype,
+                                                   **kw))
+        if train:  # the bwd chains only run on the training path
+            report[name + "_bwd"] = cell(autotune.select_fusion(
+                kind, chain_shape, dtype, backward=True, **kw))
+
     if dm and d_ff:
         gated = getattr(cfg, "mlp_act", "swiglu") in ("swiglu", "geglu")
-        report["mlp"] = cell(autotune.select_fusion(
-            "mlp", (tokens, dm, d_ff, gated), dtype))
-        report["norm_mlp"] = cell(autotune.select_fusion(
-            "mlp", (tokens, dm, d_ff, gated), dtype, prenorm=norm_kind))
+        chain("mlp", "mlp", (tokens, dm, d_ff, gated))
+        chain("norm_mlp", "mlp", (tokens, dm, d_ff, gated),
+              prenorm=norm_kind)
     h = getattr(cfg, "num_heads", 0)
     d = getattr(cfg, "head_dim", 0) or 0
     if dm and h and d and getattr(cfg, "rope_style", "none") == "half":
         hkv = getattr(cfg, "num_kv_heads", h) or h
-        report["qkv_rope"] = cell(autotune.select_fusion(
-            "qkv_rope", (tokens, dm, h, hkv, d), dtype))
-        report["norm_qkv_rope"] = cell(autotune.select_fusion(
-            "qkv_rope", (tokens, dm, h, hkv, d), dtype, prenorm=norm_kind))
+        chain("qkv_rope", "qkv_rope", (tokens, dm, h, hkv, d))
+        chain("norm_qkv_rope", "qkv_rope", (tokens, dm, h, hkv, d),
+              prenorm=norm_kind)
     return report
 
 

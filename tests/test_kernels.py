@@ -10,7 +10,6 @@ from _hypothesis_compat import given, settings, st
 from repro.core import autotune
 from repro.core.grid_swizzle import SwizzleConfig
 from repro.core.policy import make_policy
-from repro.core.schedule import Schedule
 from repro.kernels.gemm import (Epilogue, Prologue, gemm, gemm_fused,
                                 gemm_fused_ref, gemm_ref)
 from repro.kernels.attention import (attention, attention_ref,
@@ -31,27 +30,57 @@ class TestGemm:
     def test_matches_ref(self, m, n, k, dtype):
         a = jax.random.normal(KEY, (m, k), dtype)
         b = jax.random.normal(jax.random.PRNGKey(1), (k, n), dtype)
-        s = Schedule("t", 2, 256, 256, 256)
-        out = gemm(a, b, schedule=s, out_dtype=jnp.float32)
+        pol = make_policy("gemm", block_m=256, block_n=256, block_k=256)
+        out = gemm(a, b, policy=pol, out_dtype=jnp.float32)
         ref = gemm_ref(a, b, jnp.float32)
         # k-blocked accumulation reassociates adds; tolerance covers that
         tol = 1e-3 if dtype == jnp.float32 else 3e-2
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                    rtol=tol, atol=tol)
 
+    def test_autotuned_matches_ref(self):
+        """The no-keyword surface (autotuner resolution) stays exact too."""
+        a = jax.random.normal(KEY, (256, 384), jnp.float32)
+        b = jax.random.normal(jax.random.PRNGKey(1), (384, 256), jnp.float32)
+        out = gemm(a, b, out_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(gemm_ref(a, b, jnp.float32)),
+                                   rtol=1e-3, atol=1e-3)
+
     @pytest.mark.parametrize("swizzle", [
         SwizzleConfig(window=2, chunk=4),
-        SwizzleConfig(window=4, chunk=2, enable_chiplet=False), "auto"])
+        SwizzleConfig(window=4, chunk=2, enable_chiplet=False)])
     def test_swizzle_invariance(self, swizzle):
         """Grid order must never change the numbers — Algorithm 1 is a pure
         scheduling transform, so every swizzle is BITWISE identical to the
-        row-major traversal."""
+        row-major traversal (same blocks, explicit policies)."""
         a = jax.random.normal(KEY, (512, 256), jnp.float32)
         b = jax.random.normal(jax.random.PRNGKey(1), (256, 512), jnp.float32)
-        s = Schedule("t", 2, 128, 128, 128)
-        base = gemm(a, b, schedule=s, swizzle=None, out_dtype=jnp.float32)
-        out = gemm(a, b, schedule=s, swizzle=swizzle, out_dtype=jnp.float32)
+        base_pol = make_policy("gemm", block_m=128, block_n=128, block_k=128)
+        swz_pol = make_policy("gemm", block_m=128, block_n=128, block_k=128,
+                              swizzle=swizzle)
+        base = gemm(a, b, policy=base_pol, out_dtype=jnp.float32)
+        out = gemm(a, b, policy=swz_pol, out_dtype=jnp.float32)
         np.testing.assert_array_equal(np.asarray(out), np.asarray(base))
+
+    def test_legacy_swizzle_shim_routes_through_autotuner(self):
+        """The swizzle-only legacy surface no longer pins the hard-coded
+        pingpong-512 schedule: it ranks the autotuner's candidates under
+        the requested traversal order (and still warns). The resolved
+        policy's blocks tile the problem exactly — no silent _fit_policy
+        clamp for small shapes."""
+        m, n, k = 192, 320, 160   # divisor-unfriendly for 512-blocks
+        a = jax.random.normal(KEY, (m, k), jnp.float32)
+        b = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32)
+        sw = SwizzleConfig(window=2, enable_chiplet=False)
+        with pytest.warns(DeprecationWarning, match="policy=KernelPolicy"):
+            out = gemm(a, b, swizzle=sw, out_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(gemm_ref(a, b, jnp.float32)),
+                                   rtol=1e-3, atol=1e-3)
+        pol = autotune.select_policy("gemm", (m, n, k), "float32", swizzle=sw)
+        assert pol.swizzle == sw
+        assert pol.fits(m, n, k), pol.describe()
 
 
 def _rand(key, shape, dtype):
@@ -71,6 +100,9 @@ EPILOGUE_CHAINS = [
     Epilogue(activation="gelu", gate=True, residual=True, scale=True),
     Epilogue(rope=True, head_dim=64),              # QKV→RoPE prologue
     Epilogue(bias=True, rope=True, head_dim=64, scale=True),
+    Epilogue(scale=True, scale_kind="row"),        # fp8 per-row dequant
+    Epilogue(scale=True, scale_kind="col", activation="gelu"),  # per-channel
+    Epilogue(scale=True, scale_kind="col", gate=True, activation="silu"),
 ]
 
 # {fp32, bf16, fp8-scaled} × oracle tolerance. fp8 operands feed the MXU as
@@ -92,7 +124,12 @@ class TestEpilogue:
         if epilogue.residual:
             ops["residual"] = _rand(4, (m, n), jnp.float32)
         if epilogue.scale:
-            ops["scale"] = 0.625
+            if epilogue.scale_kind == "row":
+                ops["scale"] = _rand(5, (m, 1), jnp.float32) * 0.1 + 1.0
+            elif epilogue.scale_kind == "col":
+                ops["scale"] = _rand(5, (n,), jnp.float32) * 0.1 + 1.0
+            else:
+                ops["scale"] = 0.625
         if epilogue.rope:
             sin, cos = rope_tables(jnp.arange(m), epilogue.head_dim)
             ops["sin"], ops["cos"] = sin, cos
@@ -187,6 +224,28 @@ class TestEpilogue:
             Epilogue(gate=True)
         with pytest.raises(ValueError, match="head_dim"):
             Epilogue(rope=True, head_dim=0)
+        with pytest.raises(ValueError, match="scale_kind"):
+            Epilogue(scale_kind="row")          # vector kind needs scale=True
+        with pytest.raises(ValueError, match="scale_kind"):
+            Epilogue(scale=True, scale_kind="diag")
+
+    def test_vector_scale_vmem_and_traffic_accounting(self):
+        """Per-channel scales enter the VMEM legality rule and the traffic
+        model as real streamed blocks, not scalars."""
+        scalar = Epilogue(scale=True)
+        col = Epilogue(scale=True, scale_kind="col")
+        row = Epilogue(scale=True, scale_kind="row")
+        assert col.scale_block(128, 256) == (1, 256)
+        assert row.scale_block(128, 256) == (128, 1)
+        m, n = 512, 1024
+        assert col.extra_read_bytes(m, n, 2) == n * 4
+        assert row.extra_read_bytes(m, n, 2) == m * 4
+        assert scalar.extra_read_bytes(m, n, 2) == 4
+        base = make_policy("gemm", block_m=256, block_n=256, block_k=256,
+                           epilogue=scalar)
+        vec = make_policy("gemm", block_m=256, block_n=256, block_k=256,
+                          epilogue=col)
+        assert vec.vmem_bytes() > base.vmem_bytes()
 
     def test_epilogue_aware_vmem_legality(self):
         """The gate chain's extra B2 buffers + second accumulator count
