@@ -8,6 +8,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import autotune
 from repro.core import perf_model as pm
 from repro.kernels.attention import attention
 from .common import time_fn, emit
@@ -32,8 +33,14 @@ def main() -> None:
                     q, k, v, causal=causal, mode="reference").sum(),
                     argnums=(0, 1, 2)))
                 us = time_fn(fn, q, k, v, warmup=2, iters=5)
+                # fused flash backward vs recompute+materialized-scores
+                # chain, planned from modeled dma_bytes (DESIGN.md §12)
+                plan = autotune.select_fusion(
+                    "attention", (16, h, hkv, seq, seq, 128), "bfloat16",
+                    causal=causal, backward=True)
                 emit(tag, us, f"modeled_tflops={modeled:.0f};"
-                     f"bound={fwd['bound']}")
+                     f"bound={fwd['bound']};plan={plan['plan']};"
+                     f"traffic_reduction={plan['traffic_reduction']:.2f}")
 
 
 if __name__ == "__main__":

@@ -9,6 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import autotune
 from repro.core import perf_model as pm
 from repro.kernels.attention import attention
 from .common import time_fn, emit
@@ -33,8 +34,14 @@ def main() -> None:
                 fn = jax.jit(lambda q, k, v: attention(
                     q, k, v, causal=causal, mode="reference"))
                 us = time_fn(fn, q, k, v, warmup=2, iters=5)
+                # fusion plan from modeled dma_bytes (DESIGN.md §12): flash
+                # megakernel vs materialized-scores eager chain
+                plan = autotune.select_fusion(
+                    "attention", (16, h, hkv, seq, seq, d), "bfloat16",
+                    causal=causal)
                 emit(tag, us, f"modeled_tflops={m['modeled_tflops']:.0f};"
-                     f"bound={m['bound']}")
+                     f"bound={m['bound']};plan={plan['plan']};"
+                     f"traffic_reduction={plan['traffic_reduction']:.2f}")
 
 
 if __name__ == "__main__":

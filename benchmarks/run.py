@@ -15,8 +15,8 @@ import sys
 import traceback
 
 from . import (bench_gemm, bench_attention_fwd, bench_attention_bwd,
-               bench_decode, bench_fused_mlp, bench_memory_bound,
-               bench_schedules, bench_grid_swizzle)
+               bench_attention_fusion, bench_decode, bench_fused_mlp,
+               bench_memory_bound, bench_schedules, bench_grid_swizzle)
 from .common import begin_capture, end_capture, write_bench_json
 
 # (display name, json key, entry point)
@@ -24,6 +24,8 @@ BENCHES = [
     ("Fig6_gemm", "gemm", bench_gemm.main),
     ("Fig7_attention_fwd", "attention_fwd", bench_attention_fwd.main),
     ("Fig8_attention_bwd", "attention_bwd", bench_attention_bwd.main),
+    ("Fig7b_attention_fusion", "attention_fusion",
+     bench_attention_fusion.main),
     ("Fig9_memory_bound", "memory_bound", bench_memory_bound.main),
     ("Fig9b_decode", "decode", bench_decode.main),
     ("Fig9c_fused_mlp", "fused_mlp", bench_fused_mlp.main),

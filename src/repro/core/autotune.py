@@ -54,10 +54,16 @@ class OpSignature:
       fused_norm       (rows, d)
       rope             (batch, heads, seq, head_dim)
 
-    ``epilogue`` (gemm/gemm_bwd only) is the fused store chain the launch
-    will run (:class:`repro.kernels.gemm.epilogue.Epilogue`, carried
-    opaquely): its extra operands change both the legal candidate set
-    (VMEM, whole-head block_n for rope) and the scored traffic.
+    ``epilogue`` is the fused store chain the launch will run, carried
+    opaquely. For gemm/gemm_bwd it is a
+    :class:`repro.kernels.gemm.epilogue.Epilogue`: its extra operands
+    change both the legal candidate set (VMEM, whole-head block_n for
+    rope) and the scored traffic. For the attention ops it is an
+    :class:`repro.kernels.attention.epilogue.AttnEpilogue` (softcap /
+    attention-sink stages inside the online-softmax loop and store):
+    stateless on the candidate set beyond the tiny sink-operand VMEM
+    charge, but its streamed sink row adds to the scored traffic and it
+    rides the returned policy into the kernels.
     ``prologue`` (gemm/gemm_bwd only) is the fused A-operand chain
     (:class:`repro.kernels.gemm.prologue.Prologue`)
     — a recompute-path norm prologue pins block_k to the full feature dim
@@ -239,7 +245,8 @@ def candidate_policies(sig: OpSignature,
         for bq in _block_candidates(sq, 128, 512):
             for bkv in _block_candidates(skv, 128, 512):
                 sched = Schedule("auto_a", 2, bq, bkv, d)
-                pol = KernelPolicy(sig.op, sched, ROW_MAJOR, in_dtype=dtype)
+                pol = KernelPolicy(sig.op, sched, ROW_MAJOR, in_dtype=dtype,
+                                   epilogue=sig.epilogue)
                 if pol.is_legal():
                     out.append(pol)
 
@@ -249,7 +256,8 @@ def candidate_policies(sig: OpSignature,
         # holds the packed GQA group (block_m = group; tiny, Pallas pads it).
         for bkv in _block_candidates(skv, _sublane(dtype), 2048):
             pol = make_policy("attention_decode", block_m=g, block_n=bkv,
-                              block_k=d, in_dtype=dtype, name="auto_d")
+                              block_k=d, in_dtype=dtype, name="auto_d",
+                              epilogue=sig.epilogue)
             if pol.is_legal():
                 out.append(pol)
 
@@ -413,6 +421,8 @@ def score_policy(sig: OpSignature, policy: KernelPolicy,
         if sig.op == "attention_bwd":
             time_s *= 2.5   # dq + dkv passes re-read everything
             traffic *= 2
+        if policy.epilogue is not None:
+            traffic += policy.epilogue.extra_read_bytes(h)
         time_s += b * h * nq * (skv // policy.block_kv) * _STEP_OVERHEAD_S
         return PolicyScore(time_s, traffic, (("bound", step["bound"]),))
 
@@ -421,8 +431,11 @@ def score_policy(sig: OpSignature, policy: KernelPolicy,
         step = pm.decode_step_model(
             batch=b, kv_heads=hkv, group=g, kv_len=skv, head_dim=d,
             block_kv=policy.block_kv, dtype_bytes=dtype_bytes, chip=chip)
+        sink_bytes = (policy.epilogue.extra_read_bytes(hkv * g)
+                      if policy.epilogue is not None else 0)
         return PolicyScore(step["time_s"],
-                           step["kv_bytes"] + step["partial_bytes"],
+                           step["kv_bytes"] + step["partial_bytes"]
+                           + sink_bytes,
                            (("bound", step["bound"]),
                             ("n_splits", step["n_splits"]),
                             ("utilization", round(step["utilization"], 2))))
@@ -534,20 +547,34 @@ _PLAN_CACHE: dict = {}
 def select_fusion(kind: str, shape, dtype="bfloat16", *,
                   residual: bool = True, prenorm: str = "none",
                   backward: bool = False,
+                  causal: bool = False, softcap: bool = False,
+                  sink: bool = False,
                   chip: pm.ChipSpec = pm.V5E) -> dict:
-    """Pick the fused or unfused execution plan for a model-layer GEMM chain.
+    """Pick the fused or unfused execution plan for a model-layer chain.
 
     The decision is made *purely* by comparing the two plans' modeled HBM
-    traffic (``perf_model.mlp_chain_model`` / ``qkv_rope_chain_model``) —
-    no hard-coded preference: a chain that stops saving bytes (tiny token
-    counts, residual-free expert FFNs near the crossover) loses the
-    selection. Memoized per shape-bucket (the token dim rounds to the next
-    power of two).
+    traffic (``perf_model.mlp_chain_model`` / ``qkv_rope_chain_model`` /
+    ``attention_chain_model``) — no hard-coded preference: a chain that
+    stops saving bytes (tiny token counts, residual-free expert FFNs near
+    the crossover) loses the selection. Memoized per shape-bucket (the
+    token/batch dim rounds to the next power of two).
 
     ``kind``/``shape``:
-      'mlp'      (tokens, d_model, d_ff, gated); ``residual`` says whether
-                 the chain ends in a residual add (False for MoE experts)
-      'qkv_rope' (tokens, d_model, num_heads, num_kv_heads, head_dim)
+      'mlp'       (tokens, d_model, d_ff, gated); ``residual`` says whether
+                  the chain ends in a residual add (False for MoE experts)
+      'qkv_rope'  (tokens, d_model, num_heads, num_kv_heads, head_dim)
+      'qkv'       same shape as 'qkv_rope' but rope-free (BERT/Whisper/
+                  enc-dec blocks): the fused side is the packed QK/V GEMM
+                  pair with the pre-norm folded in; without a prenorm the
+                  plans tie on bytes and 'unfused' wins (the rope-free
+                  fusion pays only via the folded norm)
+      'attention' (batch, heads, kv_heads, seq_q, seq_kv, head_dim); the
+                  fused side is the flash kernel (online softmax, O(1)
+                  score memory), the unfused side materializes the
+                  (seq_q, seq_kv) score matrix per pass.  ``causal`` /
+                  ``softcap`` / ``sink`` describe the epilogue chain the
+                  launch runs (softcap adds unfused passes; the sink row
+                  is a per-head scalar stream on both sides)
 
     ``prenorm`` ('rmsnorm' | 'layernorm') prepends the pre-norm of the
     transformer block to both plans: the fused plan folds it into the first
@@ -557,8 +584,9 @@ def select_fusion(kind: str, shape, dtype="bfloat16", *,
     ``backward=True`` scores the chain's *training backward* instead
     (DESIGN.md §11): the fused side is the kernel-side chain transpose
     (saved-preact streams + two fused bwd GEMM launches per fwd GEMM, norm
-    transposed tile-wise), the unfused side is the oracle-recompute VJP
-    (autodiff of the unfused jnp chain with full fwd re-materialization).
+    transposed tile-wise; for attention, the saved-(out, lse) flash
+    backward), the unfused side is the oracle-recompute VJP (autodiff of
+    the unfused jnp chain with full fwd re-materialization).
 
     Returns {plan: 'fused'|'unfused', fused_bytes, unfused_bytes,
     traffic_reduction, fused: <model dict>, unfused: <model dict>}.
@@ -567,7 +595,8 @@ def select_fusion(kind: str, shape, dtype="bfloat16", *,
     shape = tuple(int(x) for x in shape)
     tokens = 1 << max(0, (shape[0] - 1).bit_length())  # pow2 bucket
     key = (kind, (tokens,) + shape[1:], dtype, bool(residual), prenorm,
-           bool(backward), chip.name)
+           bool(backward), bool(causal), bool(softcap), bool(sink),
+           chip.name)
     hit = _PLAN_CACHE.get(key)
     if hit is not None:
         return hit
@@ -580,15 +609,24 @@ def select_fusion(kind: str, shape, dtype="bfloat16", *,
                           residual=residual, prenorm=prenorm,
                           fused=fused, chip=chip)
                     for fused in (True, False)]
-    elif kind == "qkv_rope":
+    elif kind in ("qkv_rope", "qkv"):
         _, d, h, hkv, hd = shape
         model = (pm.qkv_rope_chain_bwd_model if backward
                  else pm.qkv_rope_chain_model)
         variants = [model(tokens=tokens, d_model=d,
                           num_heads=h, num_kv_heads=hkv,
                           head_dim=hd, dtype_bytes=db,
-                          prenorm=prenorm,
+                          prenorm=prenorm, rope=(kind == "qkv_rope"),
                           fused=fused, chip=chip)
+                    for fused in (True, False)]
+    elif kind == "attention":
+        _, h, hkv, sq, skv, hd = shape
+        model = (pm.attention_chain_bwd_model if backward
+                 else pm.attention_chain_model)
+        variants = [model(batch=tokens, heads=h, kv_heads=hkv,
+                          seq_q=sq, seq_kv=skv, head_dim=hd,
+                          causal=causal, softcap=softcap, sink=sink,
+                          dtype_bytes=db, fused=fused, chip=chip)
                     for fused in (True, False)]
     else:
         raise ValueError(f"unknown fusion kind {kind!r}")

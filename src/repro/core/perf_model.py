@@ -267,8 +267,9 @@ def mlp_chain_model(*, tokens: int, d_model: int, d_ff: int,
 def qkv_rope_chain_model(*, tokens: int, d_model: int, num_heads: int,
                          num_kv_heads: int, head_dim: int,
                          dtype_bytes: int = 2, prenorm: str = "none",
+                         rope: bool = True,
                          fused: bool = True, chip: ChipSpec = V5E) -> dict:
-    """The attention [pre-norm +] QKV-projection → RoPE chain.
+    """The attention [pre-norm +] QKV-projection [→ RoPE] chain.
 
     fused (two launches): one GEMM over the pre-packed ``wqk`` weight
     produces rope(norm(x)@[wq|wk]) with the rotation applied to the
@@ -280,6 +281,13 @@ def qkv_rope_chain_model(*, tokens: int, d_model: int, num_heads: int,
     fused plan wins at every token count (it strictly removes passes).
     unfused: [standalone norm +] three projection GEMMs (norm(x) read each
     time) + a rope pass that re-reads and re-writes q and k.
+
+    ``rope=False`` is the rope-free QKV chain (BERT/Whisper/enc-dec blocks,
+    and 'partial'-rope blocks whose rotation runs on the split heads): no
+    tables stream and no rope pass exists, and the honest unfused baseline
+    is the *packed* two-GEMM eager path (x read twice, not three times) —
+    so without a folded pre-norm fused and unfused tie and the plan stays
+    unfused; the rope-free fusion's entire win IS the norm fold.
     """
     t = tokens
     nq = num_heads * head_dim
@@ -287,14 +295,15 @@ def qkv_rope_chain_model(*, tokens: int, d_model: int, num_heads: int,
     x_read = t * d_model * dtype_bytes
     w = d_model * (nq + 2 * nkv) * dtype_bytes
     qkv_write = t * (nq + 2 * nkv) * dtype_bytes
-    tables = 2 * t * head_dim * 4  # f32 sin/cos, duplicated halves
+    tables = (2 * t * head_dim * 4) if rope else 0  # f32 sin/cos, dup halves
     norm_vec = _prenorm_vec_bytes(d_model, prenorm, dtype_bytes)
     if fused:
         total = 2 * x_read + w + qkv_write + tables + 2 * norm_vec
     else:
         norm_pass = (2 * x_read + norm_vec) if prenorm != "none" else 0
-        rope_rw = 2 * t * (nq + nkv) * dtype_bytes
-        total = norm_pass + 3 * x_read + w + qkv_write + tables + rope_rw
+        rope_rw = 2 * t * (nq + nkv) * dtype_bytes if rope else 0
+        n_reads = 3 if rope else 2
+        total = norm_pass + n_reads * x_read + w + qkv_write + tables + rope_rw
     flops = 2.0 * t * d_model * (nq + 2 * nkv)
     if prenorm != "none":
         # fused: both launches re-norm their A tiles; unfused: one pass
@@ -376,9 +385,10 @@ def mlp_chain_bwd_model(*, tokens: int, d_model: int, d_ff: int,
 def qkv_rope_chain_bwd_model(*, tokens: int, d_model: int, num_heads: int,
                              num_kv_heads: int, head_dim: int,
                              dtype_bytes: int = 2, prenorm: str = "none",
+                             rope: bool = True,
                              fused: bool = True,
                              chip: ChipSpec = V5E) -> dict:
-    """Backward of the QKV-projection → RoPE chain (DESIGN.md §11).
+    """Backward of the QKV-projection [→ RoPE] chain (DESIGN.md §11).
 
     fused: the rope epilogue is linear, so no preactivation is saved — the
     rotation adjoint runs on the g tiles as they stream into both bwd
@@ -387,7 +397,10 @@ def qkv_rope_chain_bwd_model(*, tokens: int, d_model: int, num_heads: int,
     stream tile-wise while the dX launch runs the norm transpose in its
     store. unfused: the oracle-recompute VJP re-materializes the whole
     unfused fwd chain, then pays the rope transpose pass and each GEMM's
-    materialized bwd pair plus the standalone norm bwd.
+    materialized bwd pair plus the standalone norm bwd. ``rope=False``
+    drops the tables and the rope transpose pass on both sides (see the
+    fwd model for why the rope-free unfused baseline is the packed
+    two-GEMM path).
     """
     t = tokens
     nq = num_heads * head_dim
@@ -398,7 +411,7 @@ def qkv_rope_chain_bwd_model(*, tokens: int, d_model: int, num_heads: int,
     gv_b = t * nkv * dtype_bytes
     wqk_b = d_model * nqk * dtype_bytes
     wv_b = d_model * nkv * dtype_bytes
-    tables = 2 * t * head_dim * 4
+    tables = (2 * t * head_dim * 4) if rope else 0
     norm_vec = _prenorm_vec_bytes(d_model, prenorm, dtype_bytes)
     if fused:
         qk_dx = gqk_b + tables + wqk_b + x_b
@@ -415,9 +428,9 @@ def qkv_rope_chain_bwd_model(*, tokens: int, d_model: int, num_heads: int,
         recompute = qkv_rope_chain_model(
             tokens=t, d_model=d_model, num_heads=num_heads,
             num_kv_heads=num_kv_heads, head_dim=head_dim,
-            dtype_bytes=dtype_bytes, prenorm=prenorm, fused=False,
-            chip=chip)["dma_bytes"]
-        rope_b = 2 * t * (nq + nkv) * dtype_bytes + tables
+            dtype_bytes=dtype_bytes, prenorm=prenorm, rope=rope,
+            fused=False, chip=chip)["dma_bytes"]
+        rope_b = (2 * t * (nq + nkv) * dtype_bytes + tables) if rope else 0
         gemm_b = (gqk_b + wqk_b + x_b) + (x_b + gqk_b + wqk_b) \
             + (gv_b + wv_b + x_b) + (x_b + gv_b + wv_b)
         norm_b = (3 * x_b + norm_vec) if prenorm != "none" else 0
@@ -504,3 +517,97 @@ def attention_step_model(*, block_q: int, block_kv: int, head_dim: int,
     return dict(block=(block_q, block_kv), compute_s=compute_s,
                 memory_s=memory_s, modeled_tflops=useful_flops / total / 1e12,
                 bound="compute" if compute_s >= memory_s else "memory")
+
+
+# ---------------------------------------------------------------------------
+# Attention chain models (DESIGN.md §12): the flash kernel + its epilogue
+# stages vs the eager XLA chain that materializes the (Sq, Skv) score
+# matrix. These are whole-chain traffic models (every tensor streamed once;
+# the per-launch KV-revisit refinement lives in autotune.score_policy), so
+# select_fusion can put an attention sublayer on the same dma_bytes scale
+# as the mlp/qkv_rope plans and score a whole transformer block. The ratio
+# unfused/fused ≈ 4·S/d — which is exactly why the paper's d=64 cells are
+# the headline: halving d doubles the relative cost of score-matrix traffic.
+# ---------------------------------------------------------------------------
+
+
+def attention_chain_model(*, batch: int, heads: int, kv_heads: int,
+                          seq_q: int, seq_kv: int, head_dim: int,
+                          causal: bool = True, softcap: bool = False,
+                          sink: bool = False, dtype_bytes: int = 2,
+                          fused: bool = True, chip: ChipSpec = V5E) -> dict:
+    """Flash attention + epilogue stages (softcap/sink) vs the eager chain.
+
+    fused: q and out stream once per query head, k and v once per kv head,
+    plus the (B, H, Sq) f32 lse residual write and — with a sink — one f32
+    scalar per head; the tanh cap is free (vector work on resident tiles).
+    unfused (the eager einsum baseline `attention_ref` models): the same
+    operand streams plus the f32 score matrix round-tripping HBM — write s,
+    read+write for mask+softmax, read for p@v = 4 passes (causal halves the
+    live score area), and a softcap adds its own read+write pass. The sink
+    column rides the softmax pass either way.
+    """
+    b, h, hkv = batch, heads, kv_heads
+    kv_frac = 0.5 if causal else 1.0
+    qo = 2 * b * h * seq_q * head_dim * dtype_bytes
+    kv = 2 * b * hkv * seq_kv * head_dim * dtype_bytes
+    lse = b * h * seq_q * 4
+    sink_b = h * 4 if sink else 0
+    flops = 4.0 * b * h * seq_q * seq_kv * head_dim * kv_frac
+    if fused:
+        total = qo + kv + lse + sink_b
+    else:
+        smat = b * h * seq_q * seq_kv * kv_frac * 4   # one f32 score pass
+        passes = 6 if softcap else 4
+        total = qo + kv + passes * smat + sink_b
+    return _chain_dict(total, flops, fused, dtype_bytes, chip)
+
+
+def attention_chain_bwd_model(*, batch: int, heads: int, kv_heads: int,
+                              seq_q: int, seq_kv: int, head_dim: int,
+                              causal: bool = True, softcap: bool = False,
+                              sink: bool = False, dtype_bytes: int = 2,
+                              fused: bool = True,
+                              chip: ChipSpec = V5E) -> dict:
+    """Backward under the attention saved-preact convention: the fwd saves
+    (out, lse) and nothing else — softcap recomputes the raw logits from
+    the streamed q/k tiles, the sink mass is already inside lse (dsink is a
+    jnp reduction over (lse, delta)).
+
+    fused: the delta preprocess (read do + out, write delta) + the dq pass
+    (stream q/k/v/do + lse/delta, write dq) + the dkv pass (same streams,
+    write dk/dv per *query* head — the paper's GQA-bwd strategy) + the
+    jnp group reduction (read per-head dk/dv, write per-kv-head) when
+    GQA. unfused: the eager chain's recompute (score matrix and p
+    re-materialize) plus its transpose — p read for dv, dp and ds written
+    and read back, ds's two GEMM reads ≈ 6 score-matrix passes (8 with
+    softcap's extra tanh/grad pass pair) on top of re-streamed operands
+    and the dq/dk/dv writes.
+    """
+    b, h, hkv = batch, heads, kv_heads
+    kv_frac = 0.5 if causal else 1.0
+    db = dtype_bytes
+    q_b = b * h * seq_q * head_dim * db
+    kv_b = 2 * b * hkv * seq_kv * head_dim * db
+    vec = b * h * seq_q * 4                      # lse or delta, each
+    sink_b = h * 4 if sink else 0
+    flops = 2.5 * 4.0 * b * h * seq_q * seq_kv * head_dim * kv_frac
+    if fused:
+        delta_pass = 2 * q_b + vec               # read do + out, write delta
+        dq_pass = 2 * q_b + kv_b + 2 * vec + q_b
+        dkv_pass = 2 * q_b + kv_b + 2 * vec + 2 * b * h * seq_kv * head_dim * db
+        reduce = (2 * b * h * seq_kv * head_dim * db + kv_b) if h != hkv else 0
+        dsink_pass = 2 * vec if sink else 0      # re-read lse + delta in jnp
+        total = delta_pass + dq_pass + dkv_pass + reduce + dsink_pass + sink_b
+    else:
+        recompute = attention_chain_model(
+            batch=b, heads=h, kv_heads=hkv, seq_q=seq_q, seq_kv=seq_kv,
+            head_dim=head_dim, causal=causal, softcap=softcap, sink=sink,
+            dtype_bytes=db, fused=False, chip=chip)["dma_bytes"]
+        smat = b * h * seq_q * seq_kv * kv_frac * 4
+        passes = 8 if softcap else 6
+        operands = 2 * q_b + kv_b                # q, do, k, v re-streamed
+        writes = q_b + kv_b                      # dq + dk/dv (per kv head)
+        total = recompute + passes * smat + operands + writes
+        flops *= 1.5                             # the fwd recompute
+    return _chain_dict(total, flops, fused, dtype_bytes, chip)

@@ -64,13 +64,17 @@ _ACC_BYTES = {"float32": 4, "bfloat16": 2}
 class KernelPolicy:
     """A complete, legal-by-construction tiling strategy for one kernel kind.
 
-    ``epilogue`` (gemm only) is a fused store chain — any frozen object with
-    the :class:`repro.kernels.gemm.epilogue.Epilogue` protocol
-    (``extra_operand_blocks``/``extra_scratch_accumulators``/``describe``).
-    ``prologue`` (gemm only) is the symmetric fused A-operand chain — any
-    frozen object with the :class:`repro.kernels.gemm.prologue.Prologue`
-    protocol (``extra_operand_blocks``/``needs_full_k``/``describe``).
-    Both are duck-typed here so ``repro.core`` never imports
+    ``epilogue`` is a fused store chain. On gemm/gemm_bwd policies it is any
+    frozen object with the :class:`repro.kernels.gemm.epilogue.Epilogue`
+    protocol (``extra_operand_blocks``/``extra_scratch_accumulators``/
+    ``describe``); on the attention kinds it is the
+    :class:`repro.kernels.attention.epilogue.AttnEpilogue` protocol
+    (softcap/sink stages inside the online-softmax loop and store,
+    DESIGN.md §12). ``prologue`` (gemm only) is the symmetric fused
+    A-operand chain — any frozen object with the
+    :class:`repro.kernels.gemm.prologue.Prologue` protocol
+    (``extra_operand_blocks``/``needs_full_k``/``describe``).
+    All are duck-typed here so ``repro.core`` never imports
     ``repro.kernels``; their extra streamed blocks and the epilogue's second
     accumulator count against the VMEM legality rule exactly like the A/B
     panels (DESIGN.md §9-§10).
@@ -89,9 +93,11 @@ class KernelPolicy:
             raise ValueError(f"unknown op kind {self.op!r}; have {OP_KINDS}")
         if self.acc_dtype not in _ACC_BYTES:
             raise ValueError(f"unsupported acc_dtype {self.acc_dtype!r}")
-        if self.epilogue is not None and self.op not in ("gemm", "gemm_bwd"):
-            raise ValueError(f"epilogue chains only apply to gemm/gemm_bwd "
-                             f"policies, not {self.op!r}")
+        if self.epilogue is not None and self.op not in (
+                "gemm", "gemm_bwd", "attention_fwd", "attention_bwd",
+                "attention_decode"):
+            raise ValueError(f"epilogue chains only apply to gemm/gemm_bwd/"
+                             f"attention policies, not {self.op!r}")
         if self.prologue is not None and self.op not in ("gemm", "gemm_bwd"):
             raise ValueError(f"prologue chains only apply to gemm/gemm_bwd "
                              f"policies, not {self.op!r}")
@@ -176,6 +182,11 @@ class KernelPolicy:
                       ((s.block_n, d), self.in_dtype)]   # v block
             if self.op == "attention_bwd":
                 blocks.append(((s.block_m, d), self.in_dtype))  # do block
+            if self.epilogue is not None:
+                # attention epilogue chains stream at most a per-head sink
+                # scalar (softcap is vector work on resident tiles)
+                blocks += self.epilogue.extra_operand_blocks(
+                    s.block_m, s.block_n, d, self.in_dtype)
             return blocks
         if self.op == "fused_norm":
             # x + residual in, normed + residual out: 4 row-blocks in flight

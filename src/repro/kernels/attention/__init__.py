@@ -1,5 +1,7 @@
+from .epilogue import (ATTN_EPILOGUE_NONE, AttnEpilogue,  # noqa: F401
+                       cap_logits, softmax_finalize)
 from .ops import (attention, attention_decode, attention_decode_paged,  # noqa: F401
-                  resolve_decode_policy)
+                  resolve_attention_policies, resolve_decode_policy)
 from .ref import attention_ref, decode_ref, ring_positions  # noqa: F401
 from .kernel_fwd import flash_attention_fwd  # noqa: F401
 from .kernel_bwd import flash_attention_bwd  # noqa: F401

@@ -1,0 +1,187 @@
+"""Declarative epilogue chains for the flash-attention family (DESIGN.md §12).
+
+The GEMM megakernel grew a full chain-spec subsystem (Epilogue / Prologue /
+transpose rules, DESIGN.md §9-§11); this module ports the same protocol onto
+the attention kernels, where the paper's headline wins live (d=64 attention
+and GQA backwards, Fig. 7). An :class:`AttnEpilogue` is a frozen, hashable
+(jit-static) spec of the attention-adjacent stages that run *inside* the
+flash kernels instead of round-tripping the (Sq, Skv) score matrix or the
+output through HBM:
+
+  * ``softcap`` — gemma2-style logit soft cap ``s = cap * tanh(s / cap)``,
+    applied to the scaled logits inside the online-softmax loop (before
+    masking), in the forward, backward and split-KV decode kernels alike.
+    Its backward is recompute-style: the raw logits are re-derived from the
+    streamed q/k tiles and the capped-grad factor ``1 - tanh²(s/cap)``
+    modulates ds in-kernel — nothing extra is saved.
+  * ``sink`` — a per-head attention-sink logit that joins the softmax
+    *denominator only* (gpt-oss / StreamingLLM style): the sink absorbs
+    probability mass but attends to no value row. It folds into the final
+    LSE combine at the store (see :func:`softmax_finalize` for why the
+    combine changes), streams one f32 scalar per head, and its gradient is
+    a cheap jnp reduction over the saved ``(lse, delta)`` residuals.
+
+Saved-preact convention for attention (the analogue of the GEMM chain's
+saved accumulators, consumed by ``perf_model.attention_chain_bwd_model``):
+the forward stores ``(out, lse)`` and nothing else. Both stages keep that
+invariant — softcap recomputes, and the sink's mass is already *inside*
+lse — so ``select_fusion(backward=True)`` can score a whole transformer
+block from the same two residual streams.
+
+Like the GEMM chain, the same stage code runs on VMEM tiles in the Pallas
+kernels and on full jnp arrays in the oracles (every stage is elementwise
+or a row-broadcast), so tile-wise application is exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+def cap_logits(s, softcap: float):
+    """gemma2-style logit soft cap: ``cap * tanh(s / cap)`` (identity when
+    softcap is 0/None). Applied to the *scaled* logits, before masking, so
+    the mask value never flows through tanh."""
+    if not softcap:
+        return s
+    return softcap * jnp.tanh(s / softcap)
+
+
+def cap_grad(s_raw, softcap: float):
+    """d cap_logits / d s at the raw logits: ``1 - tanh²(s/cap)``."""
+    t = jnp.tanh(s_raw / softcap)
+    return 1.0 - t * t
+
+
+def softmax_finalize(acc, m, l, sink=None):
+    """(out, lse) from online-softmax state — the flash store epilogue.
+
+    acc: unnormalized output (rows, d); m/l: running max/sum (rows, 1)
+    (any broadcast-compatible shapes work — the oracles call this on full
+    arrays). With a ``sink`` logit the combine changes: the sink enters the
+    running max (``m_tot = max(m, sink)``) *before* the denominator is
+    formed, because ``exp(sink - m)`` overflows when every KV block of a
+    row was masked (m is still MASK_VALUE); re-anchoring at m_tot keeps
+    the all-masked row exact (out = 0, lse = sink — all mass on the sink,
+    which attends to nothing). Without a sink this is the classic
+    ``acc / l`` store with the l == 0 guard.
+    """
+    if sink is not None:
+        m_tot = jnp.maximum(m, sink)
+        alpha = jnp.exp(m - m_tot)
+        l_tot = l * alpha + jnp.exp(sink - m_tot)
+        return acc * (alpha / l_tot), m_tot + jnp.log(l_tot)
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    return acc / l_safe, m + jnp.log(l_safe)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnEpilogue:
+    """A frozen, hashable attention epilogue spec (jit-static by construction).
+
+    ``softcap``: tanh logit cap (0.0 = off). ``sink``: stream a per-head
+    sink logit into the softmax denominator.
+    """
+
+    softcap: float = 0.0
+    sink: bool = False
+
+    def __post_init__(self):
+        if self.softcap < 0.0 or self.softcap != self.softcap:  # NaN guard
+            raise ValueError(f"softcap must be >= 0, got {self.softcap}")
+
+    # -- identity / shape of the chain -------------------------------------
+    @property
+    def is_identity(self) -> bool:
+        return not (self.softcap or self.sink)
+
+    def operand_names(self) -> tuple:
+        """Runtime extra operands, in the canonical kernel order."""
+        return ("sinks",) if self.sink else ()
+
+    # -- VMEM legality accounting (consumed by KernelPolicy) ----------------
+    def extra_operand_blocks(self, block_q: int, block_kv: int,
+                             head_dim: int, in_dtype: str) -> list:
+        """(shape, dtype) of each extra pipelined block. The sink streams a
+        single f32 scalar per (head, q-block) grid cell; softcap streams
+        nothing (pure vector work on resident tiles)."""
+        del block_q, block_kv, head_dim, in_dtype
+        return [((1, 1), "float32")] if self.sink else []
+
+    def check_blocks(self, block_q: int, block_kv: int) -> None:
+        """Raise on block shapes the chain cannot legally tile. Neither
+        stage constrains the tiling (both are row-local), so this exists
+        for protocol symmetry with the GEMM Epilogue."""
+        del block_q, block_kv
+
+    # -- modeled HBM traffic of the extra streamed operands -----------------
+    def extra_read_bytes(self, n_heads: int) -> int:
+        """Bytes the fused kernel reads beyond q/k/v and the out/lse store."""
+        return 4 * n_heads if self.sink else 0
+
+    # -- the chain itself ---------------------------------------------------
+    def apply_logits(self, s):
+        """The in-loop stage: soft-cap the scaled logits (pre-mask). Exact
+        on a VMEM tile and on the full (Sq, Skv) score matrix alike."""
+        return cap_logits(s, self.softcap)
+
+    def finalize(self, acc, m, l, sink=None):
+        """The store stage: online-softmax state -> (out, lse), with the
+        sink folded into the LSE combine (see :func:`softmax_finalize`)."""
+        return softmax_finalize(acc, m, l, sink=sink if self.sink else None)
+
+    # -- the chain transpose (saved-preact convention, DESIGN.md §12) -------
+    @property
+    def needs_saved_preact(self) -> bool:
+        """Always False: attention's saved residuals are (out, lse) and the
+        chain keeps it that way — softcap recomputes the raw logits from
+        the streamed q/k tiles, and the sink mass is already inside lse."""
+        return False
+
+    @property
+    def saved_accumulators(self) -> int:
+        return 0
+
+    def saved_residual_bytes(self, batch: int, heads: int, seq_q: int,
+                             head_dim: int, dtype_bytes: int) -> int:
+        """Bytes of the (out, lse) residuals the fwd saves for the bwd —
+        the attention saved-preact convention the chain models charge."""
+        return batch * heads * seq_q * (head_dim * dtype_bytes + 4)
+
+    def grad_factor(self, s_raw):
+        """ds modulation of the softcap stage at the raw logits (identity
+        when softcap is off) — applied in-kernel by the bwd passes."""
+        if not self.softcap:
+            return None
+        return cap_grad(s_raw, self.softcap)
+
+    def operand_grads(self, do, out, lse, *, sinks=None) -> dict:
+        """Cotangents of the chain's extra operands (jnp, full arrays).
+
+        dsink[h] = -Σ_{b,q} exp(sink[h] - lse[b,h,q]) * delta[b,h,q] with
+        delta = rowsum(dO·O): the sink only scales the denominator, so its
+        gradient reuses the same delta reduction the kernel bwd streams.
+        """
+        grads = {}
+        if self.sink and sinks is not None:
+            delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32),
+                            axis=-1)                       # (B, H, Sq)
+            w = jnp.exp(sinks.astype(jnp.float32)[None, :, None]
+                        - lse.astype(jnp.float32))         # (B, H, Sq)
+            grads["sinks"] = -jnp.sum(w * delta, axis=(0, 2))
+        return grads
+
+    def describe(self) -> str:
+        """Short tag for reports/benchmark rows, e.g. 'softcap30+sink'."""
+        if self.is_identity:
+            return "none"
+        parts = []
+        if self.softcap:
+            parts.append(f"softcap{self.softcap:g}")
+        if self.sink:
+            parts.append("sink")
+        return "+".join(parts)
+
+
+ATTN_EPILOGUE_NONE = AttnEpilogue()

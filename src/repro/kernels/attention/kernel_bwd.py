@@ -17,6 +17,14 @@ reordering the outer dimension (DESIGN.md §5).
 GQA: dk/dv are computed per *query* head and the (Hkv, group) reduction is
 done by the caller (ops.py) — same strategy as the paper's 1.8-2.3x GQA-bwd
 kernel, which parallelizes over query heads.
+
+Epilogue chains (DESIGN.md §12) transpose under the attention saved-preact
+convention: the only residuals are (out, lse). The softcap stage recomputes
+the raw logits from the streamed q/k tiles, forms p from the *capped*
+logits, and modulates ds by ``1 - tanh²(s/cap)`` in-kernel. A sink stage
+needs nothing here — the fwd folded its mass into lse, so ``p = exp(s-lse)``
+rows already sum to < 1 and ``ds = p·(dp - delta)`` is unchanged; dsink is
+a jnp reduction in ops.py.
 """
 from __future__ import annotations
 
@@ -31,7 +39,20 @@ from repro.core import tiles
 from repro.core.policy import (KernelPolicy, legacy_attention_blocks,
                                resolve_policy)
 
+from .epilogue import ATTN_EPILOGUE_NONE, AttnEpilogue
+
 MASK_VALUE = -1e30
+
+
+def _p_and_dsfactor(s_raw, lse, epilogue, q_start, kv_start, causal, window):
+    """(p, ds_factor) from the raw scaled logits under the epilogue chain.
+
+    p is formed from the *capped* logits (matching the fwd); ds_factor is
+    the softcap grad ``1 - tanh²(s/cap)`` (None for the identity chain).
+    """
+    s = epilogue.apply_logits(s_raw)
+    p = _mask_and_p(s, lse, q_start, kv_start, causal, window)
+    return p, epilogue.grad_factor(s_raw)
 
 
 def _mask_and_p(s, lse, q_start, kv_start, causal, window):
@@ -48,7 +69,8 @@ def _mask_and_p(s, lse, q_start, kv_start, causal, window):
 
 def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
                acc_ref, *, nkv: int, block_q: int, block_kv: int,
-               scale: float, causal: bool, window: int | None):
+               scale: float, causal: bool, window: int | None,
+               epilogue: AttnEpilogue):
     iq, ik = pl.program_id(2), pl.program_id(3)
 
     @pl.when(ik == 0)
@@ -72,10 +94,14 @@ def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
         delta = delta_ref[0, 0][:, None]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
-        p = _mask_and_p(s, lse, q_start, kv_start, causal, window)
+        p, ds_factor = _p_and_dsfactor(s, lse, epilogue, q_start, kv_start,
+                                       causal, window)
         dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
                                  preferred_element_type=jnp.float32)
-        ds = p * (dp - delta) * scale
+        ds = p * (dp - delta)
+        if ds_factor is not None:
+            ds = ds * ds_factor
+        ds = ds * scale
         acc_ref[...] += jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())),
                                             preferred_element_type=jnp.float32)
 
@@ -86,7 +112,8 @@ def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
 
 def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
                 dk_ref, dv_ref, dk_acc, dv_acc, *, nq: int, block_q: int,
-                block_kv: int, scale: float, causal: bool, window: int | None):
+                block_kv: int, scale: float, causal: bool,
+                window: int | None, epilogue: AttnEpilogue):
     ik, iq = pl.program_id(2), pl.program_id(3)
 
     @pl.when(iq == 0)
@@ -111,13 +138,17 @@ def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
         delta = delta_ref[0, 0][:, None]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
-        p = _mask_and_p(s, lse, q_start, kv_start, causal, window)
+        p, ds_factor = _p_and_dsfactor(s, lse, epilogue, q_start, kv_start,
+                                       causal, window)
         # dv += p^T @ do   (column-layout read in the paper; transposed dot here)
         dv_acc[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())),
                                            preferred_element_type=jnp.float32)
         dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
                                  preferred_element_type=jnp.float32)
-        ds = p * (dp - delta) * scale
+        ds = p * (dp - delta)
+        if ds_factor is not None:
+            ds = ds * ds_factor
+        ds = ds * scale
         dk_acc[...] += jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())),
                                            preferred_element_type=jnp.float32)
 
@@ -129,11 +160,13 @@ def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("policy", "causal", "window", "logit_scale", "interpret"),
+    static_argnames=("policy", "causal", "window", "logit_scale", "epilogue",
+                     "interpret"),
 )
 def _flash_bwd(q, k, v, out, lse, do, *, policy: KernelPolicy,
                causal: bool, window: int | None,
-               logit_scale: float | None, interpret: bool):
+               logit_scale: float | None, epilogue: AttnEpilogue,
+               interpret: bool):
     b, h, sq, d = q.shape
     _, hkv, skv, _ = k.shape
     group = h // hkv
@@ -164,7 +197,7 @@ def _flash_bwd(q, k, v, out, lse, do, *, policy: KernelPolicy,
     dq = pl.pallas_call(
         functools.partial(_dq_kernel, nkv=nkv, block_q=block_q,
                           block_kv=block_kv, scale=scale, causal=causal,
-                          window=window),
+                          window=window, epilogue=epilogue),
         grid=(b, h, nq, nkv),
         in_specs=[q_spec, kv_spec, kv_spec, q_spec, vec_spec, vec_spec],
         out_specs=q_spec,
@@ -189,7 +222,7 @@ def _flash_bwd(q, k, v, out, lse, do, *, policy: KernelPolicy,
     dk, dv = pl.pallas_call(
         functools.partial(_dkv_kernel, nq=nq, block_q=block_q,
                           block_kv=block_kv, scale=scale, causal=causal,
-                          window=window),
+                          window=window, epilogue=epilogue),
         grid=(b, h, nkv, nq),
         in_specs=[q_spec2, kv_spec2, kv_spec2, q_spec2, vec_spec2, vec_spec2],
         out_specs=[kv_out_spec, kv_out_spec],
@@ -210,8 +243,13 @@ def flash_attention_bwd(q, k, v, out, lse, do, *,
                         block_q: int | None = None,
                         block_kv: int | None = None,
                         logit_scale: float | None = None,
+                        epilogue: AttnEpilogue | None = None,
                         interpret: bool = True):
-    """Returns (dq, dk, dv) with dk/dv per *query* head: (B, H, Skv, D)."""
+    """Returns (dq, dk, dv) with dk/dv per *query* head: (B, H, Skv, D).
+
+    ``epilogue``: the attention chain to transpose (saved-preact convention,
+    see the module docstring); defaults to the policy's own epilogue field.
+    """
     if policy is None:
         b, h, sq, d = q.shape
         skv = k.shape[2]
@@ -220,6 +258,9 @@ def flash_attention_bwd(q, k, v, out, lse, do, *,
             legacy_blocks=legacy_attention_blocks(block_q, block_kv, sq,
                                                   skv, d),
             warn_what="flash_attention_bwd")
+    if epilogue is None:
+        epilogue = (policy.epilogue if policy.epilogue is not None
+                    else ATTN_EPILOGUE_NONE)
     return _flash_bwd(q, k, v, out, lse, do, policy=policy, causal=causal,
                       window=window, logit_scale=logit_scale,
-                      interpret=interpret)
+                      epilogue=epilogue, interpret=interpret)

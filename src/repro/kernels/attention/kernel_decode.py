@@ -27,6 +27,13 @@ Two cache layouts share the kernel body:
 
 Policies come from ``repro.core.policy`` (op kind ``attention_decode``,
 bandwidth-dominated perf model); block_n is the split size.
+
+Epilogue chains (DESIGN.md §12) split across the two halves: the gemma2
+``softcap`` is per-logit, so it runs inside the split kernels (on the
+scaled logits, before masking); the attention ``sink`` is per-*row*, so it
+lives in :func:`combine_splits` — the one place decode sees the global
+softmax state — where it re-anchors the cross-split max exactly like the
+flash store epilogue.
 """
 from __future__ import annotations
 
@@ -40,18 +47,22 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core import tiles
 from repro.core.policy import KernelPolicy
 
+from .epilogue import cap_logits
+
 MASK_VALUE = -1e30
 
 
-def _split_partials(q, k, v, valid, scale):
+def _split_partials(q, k, v, valid, scale, softcap: float = 0.0):
     """Partial attention of one KV split.
 
-    q: (G, D) f32, k/v: (bkv, D), valid: (bkv,) bool. Returns unnormalized
+    q: (G, D) f32, k/v: (bkv, D), valid: (bkv,) bool. ``softcap``: tanh
+    logit cap applied in-split (0 = off). Returns unnormalized
     (o (G, D) f32, m (G,), l (G,)); a fully-masked split yields
     (0, MASK_VALUE, 0) which the combine weights to zero.
     """
     s = jax.lax.dot_general(q, k.astype(jnp.float32), (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
+    s = cap_logits(s, softcap)
     s = jnp.where(valid[None, :], s, MASK_VALUE)
     m = jnp.max(s, axis=1)
     p = jnp.exp(s - m[:, None])
@@ -62,15 +73,30 @@ def _split_partials(q, k, v, valid, scale):
     return o, m, l
 
 
-def combine_splits(o, m, l):
+def combine_splits(o, m, l, sinks=None):
     """Log-sum-exp merge of per-split partials (the split-KV epilogue).
 
     o: (..., NS, G, D) f32 unnormalized partials; m, l: (..., NS, G).
     Exact: rescales every split to the global running max before summing,
     so the result is independent of the split count. Rows whose every split
     was fully masked (empty sequences) return zeros.
+
+    ``sinks``: optional per-head sink logits, broadcastable against the
+    (..., 1, G) cross-split max (flash_decode passes (Hkv, 1, G)). This is
+    where decode's sink stage must live — the per-split kernels never see
+    the global max, and the sink joins the denominator exactly once: the
+    cross-split max is re-anchored at max(m_max, sink) *before* the
+    rescale so exp never overflows, then exp(sink - m_tot) joins den. With
+    a sink, an empty row's mass all lands on the sink (den == 1, out == 0)
+    with no epsilon guard needed.
     """
     m_max = jnp.max(m, axis=-2, keepdims=True)
+    if sinks is not None:
+        m_tot = jnp.maximum(m_max, sinks)            # (..., 1, G)
+        alpha = jnp.exp(m - m_tot)
+        den = jnp.sum(l * alpha, axis=-2) + jnp.exp(sinks - m_tot)[..., 0, :]
+        num = jnp.sum(o * alpha[..., None], axis=-3)
+        return num / den[..., None]
     alpha = jnp.exp(m - m_max)                       # (..., NS, G)
     den = jnp.sum(l * alpha, axis=-2)                # (..., G)
     num = jnp.sum(o * alpha[..., None], axis=-3)     # (..., G, D)
@@ -80,7 +106,7 @@ def combine_splits(o, m, l):
 
 def _decode_kernel(lengths_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
                    block_kv: int, slots: int, scale: float,
-                   window: int | None):
+                   window: int | None, softcap: float = 0.0):
     """Contiguous/ring variant: grid (B, Hkv, n_splits)."""
     b = pl.program_id(0)
     j = pl.program_id(2)
@@ -95,7 +121,7 @@ def _decode_kernel(lengths_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
     if window is not None:
         valid &= (pos - actual) < window
     o, m, l = _split_partials(q_ref[0, 0].astype(jnp.float32),
-                              k_ref[0, 0], v_ref[0, 0], valid, scale)
+                              k_ref[0, 0], v_ref[0, 0], valid, scale, softcap)
     o_ref[0, 0, 0] = o
     m_ref[0, 0, 0] = m
     l_ref[0, 0, 0] = l
@@ -103,7 +129,7 @@ def _decode_kernel(lengths_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
 
 def _decode_kernel_paged(page_table_ref, lengths_ref, q_ref, k_ref, v_ref,
                          o_ref, m_ref, l_ref, *, page_size: int, scale: float,
-                         window: int | None):
+                         window: int | None, softcap: float = 0.0):
     """Paged variant: grid (B, Hkv, max_pages); one physical page per step."""
     b = pl.program_id(0)
     j = pl.program_id(2)
@@ -113,7 +139,7 @@ def _decode_kernel_paged(page_table_ref, lengths_ref, q_ref, k_ref, v_ref,
     if window is not None:
         valid &= (length - 1 - idx) < window
     o, m, l = _split_partials(q_ref[0, 0].astype(jnp.float32),
-                              k_ref[0, 0], v_ref[0, 0], valid, scale)
+                              k_ref[0, 0], v_ref[0, 0], valid, scale, softcap)
     o_ref[0, 0, 0] = o
     m_ref[0, 0, 0] = m
     l_ref[0, 0, 0] = l
@@ -139,17 +165,21 @@ def _partial_specs(b, hkv, n_splits, g, d):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("policy", "window", "logit_scale", "interpret"),
+    static_argnames=("policy", "window", "logit_scale", "softcap",
+                     "interpret"),
 )
 def flash_decode(q, k, v, lengths, *, policy: KernelPolicy,
                  window: int | None = None,
                  logit_scale: float | None = None,
+                 softcap: float = 0.0, sinks=None,
                  interpret: bool = True):
     """Split-KV decode over a contiguous (possibly ring) KV cache.
 
     q: (B, Hkv, G, D) group-packed queries; k/v: (B, Hkv, S, D);
     lengths: (B,) int32 tokens written so far (ring semantics when
-    lengths > S). Returns (B, Hkv, G, D) in q.dtype.
+    lengths > S). ``softcap``: in-kernel tanh logit cap; ``sinks``: (H,)
+    per-query-head sink logits, folded in by the LSE combine. Returns
+    (B, Hkv, G, D) in q.dtype.
     """
     b, hkv, g, d = q.shape
     slots = k.shape[2]
@@ -166,7 +196,7 @@ def flash_decode(q, k, v, lengths, *, policy: KernelPolicy,
     out_specs, out_shapes = _partial_specs(b, hkv, n_splits, g, d)
 
     kernel = functools.partial(_decode_kernel, block_kv=block_kv, slots=slots,
-                               scale=scale, window=window)
+                               scale=scale, window=window, softcap=softcap)
     o, m, l = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -185,23 +215,28 @@ def flash_decode(q, k, v, lengths, *, policy: KernelPolicy,
         out_shape=out_shapes,
         interpret=interpret,
     )(lengths, q, k, v)
-    return combine_splits(o, m, l).astype(q.dtype)
+    if sinks is not None:
+        sinks = jnp.asarray(sinks, jnp.float32).reshape(hkv, 1, g)
+    return combine_splits(o, m, l, sinks=sinks).astype(q.dtype)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("policy", "window", "logit_scale", "interpret"),
+    static_argnames=("policy", "window", "logit_scale", "softcap",
+                     "interpret"),
 )
 def flash_decode_paged(q, k_pages, v_pages, page_table, lengths, *,
                        policy: KernelPolicy, window: int | None = None,
                        logit_scale: float | None = None,
+                       softcap: float = 0.0, sinks=None,
                        interpret: bool = True):
     """Split-KV decode over a paged KV pool (one split == one page).
 
     q: (B, Hkv, G, D); k_pages/v_pages: (P, Hkv, page_size, D) physical
     pools; page_table: (B, MP) int32 physical page ids (0 = reserved null
     page for never-written entries); lengths: (B,) tokens written so far.
-    Returns (B, Hkv, G, D) in q.dtype.
+    ``softcap``/``sinks`` as in :func:`flash_decode`. Returns
+    (B, Hkv, G, D) in q.dtype.
     """
     b, hkv, g, d = q.shape
     n_pages, _, page_size, _ = k_pages.shape
@@ -220,7 +255,7 @@ def flash_decode_paged(q, k_pages, v_pages, page_table, lengths, *,
     out_specs, out_shapes = _partial_specs(b, hkv, mp, g, d)
 
     kernel = functools.partial(_decode_kernel_paged, page_size=page_size,
-                               scale=scale, window=window)
+                               scale=scale, window=window, softcap=softcap)
     o, m, l = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -239,4 +274,6 @@ def flash_decode_paged(q, k_pages, v_pages, page_table, lengths, *,
         out_shape=out_shapes,
         interpret=interpret,
     )(page_table, lengths, q, k_pages, v_pages)
-    return combine_splits(o, m, l).astype(q.dtype)
+    if sinks is not None:
+        sinks = jnp.asarray(sinks, jnp.float32).reshape(hkv, 1, g)
+    return combine_splits(o, m, l, sinks=sinks).astype(q.dtype)

@@ -15,6 +15,12 @@ ROW_MAJOR reproduces the classic (b, h, iq, ik) traversal exactly.
 
 Supports MHA and GQA (kv-head indexing in the BlockSpec index_map), causal
 masking, and sliding-window masking (Mixtral/RecurrentGemma local attention).
+
+The kernel also hosts the attention epilogue chain (DESIGN.md §12): an
+:class:`~repro.kernels.attention.epilogue.AttnEpilogue` places the gemma2
+logit soft cap inside the online-softmax loop (on the scaled logits, before
+masking) and the attention-sink LSE combine at the output store, so neither
+stage round-trips the score matrix or the output through HBM.
 """
 from __future__ import annotations
 
@@ -29,14 +35,20 @@ from repro.core import tiles
 from repro.core.policy import (KernelPolicy, legacy_attention_blocks,
                                resolve_policy)
 
+from .epilogue import ATTN_EPILOGUE_NONE, AttnEpilogue
+
 MASK_VALUE = -1e30
 LANES = 128
 
 
-def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, l_ref, acc_ref, m_ref, s_ref,
-                *, nq: int, nkv: int, n_heads: int, block_q: int,
-                block_kv: int, scale: float, causal: bool,
-                window: int | None, swizzle):
+def _fwd_kernel(q_ref, k_ref, v_ref, *refs, nq: int, nkv: int, n_heads: int,
+                block_q: int, block_kv: int, scale: float, causal: bool,
+                window: int | None, swizzle, epilogue: AttnEpilogue):
+    if epilogue.sink:
+        sink_ref, o_ref, l_ref, acc_ref, m_ref, s_ref = refs
+    else:
+        o_ref, l_ref, acc_ref, m_ref, s_ref = refs
+        sink_ref = None
     hq = pl.program_id(1)
     ik = pl.program_id(2)
     _, iq = swizzle.remap(hq, n_heads, nq)
@@ -63,6 +75,9 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, l_ref, acc_ref, m_ref, s_ref,
         k = k_ref[0, 0].astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
+        # in-loop epilogue stage: tanh soft cap on the scaled logits,
+        # pre-mask (identity when the chain has no cap)
+        s = epilogue.apply_logits(s)
 
         qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
         kpos = kv_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
@@ -90,20 +105,28 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, l_ref, acc_ref, m_ref, s_ref,
 
     @pl.when(ik == nkv - 1)
     def _store():
+        # store epilogue: the sink (if any) joins the LSE combine here —
+        # epilogue.finalize re-anchors the running max at max(m, sink)
+        # before forming the denominator (DESIGN.md §12)
         l = s_ref[:, :1]
-        l_safe = jnp.where(l == 0.0, 1.0, l)
-        o_ref[0, 0] = (acc_ref[...] / l_safe).astype(o_ref.dtype)
-        # logsumexp residual for the backward pass
-        l_ref[0, 0] = (m_ref[:, 0] + jnp.log(jnp.where(l[:, 0] == 0, 1.0, l[:, 0])))
+        m = m_ref[:, :1]
+        sink = sink_ref[...] if sink_ref is not None else None  # (1, 1)
+        out, lse = epilogue.finalize(acc_ref[...], m, l, sink=sink)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+        # logsumexp residual for the backward pass (includes the sink mass,
+        # which is what makes the saved-preact convention hold: the bwd
+        # kernels need no sink operand at all)
+        l_ref[0, 0] = lse[:, 0]
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("policy", "causal", "window", "logit_scale", "interpret"),
+    static_argnames=("policy", "causal", "window", "logit_scale", "epilogue",
+                     "interpret"),
 )
-def _flash_fwd(q, k, v, *, policy: KernelPolicy, causal: bool,
+def _flash_fwd(q, k, v, sinks, *, policy: KernelPolicy, causal: bool,
                window: int | None, logit_scale: float | None,
-               interpret: bool):
+               epilogue: AttnEpilogue, interpret: bool):
     b, h, sq, d = q.shape
     _, hkv, skv, _ = k.shape
     assert h % hkv == 0, (h, hkv)
@@ -140,20 +163,30 @@ def _flash_fwd(q, k, v, *, policy: KernelPolicy, causal: bool,
     kernel = functools.partial(
         _fwd_kernel, nq=nq, nkv=nkv, n_heads=h, block_q=block_q,
         block_kv=block_kv, scale=scale, causal=causal, window=window,
-        swizzle=swizzle)
+        swizzle=swizzle, epilogue=epilogue)
+
+    in_specs = [
+        tiles.block_spec((1, 1, block_q, d), q_map, q.dtype,
+                         allow_ragged_minor=ragged_q),
+        tiles.block_spec((1, 1, block_kv, d), kv_map, k.dtype,
+                         allow_ragged_minor=ragged_kv),
+        tiles.block_spec((1, 1, block_kv, d), kv_map, v.dtype,
+                         allow_ragged_minor=ragged_kv),
+    ]
+    operands = [q, k, v]
+    if epilogue.sink:
+        assert sinks is not None, "sink epilogue needs a sinks operand"
+        # one f32 scalar per head, streamed per (head, q-block) grid cell
+        in_specs.append(pl.BlockSpec(
+            (1, 1), lambda b_, i, ik: (hq_coords(i)[0], 0)))
+        operands.append(
+            jnp.asarray(sinks, jnp.float32).reshape(h, 1))
 
     grid = (b, h * nq, nkv)
     out, lse = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            tiles.block_spec((1, 1, block_q, d), q_map, q.dtype,
-                             allow_ragged_minor=ragged_q),
-            tiles.block_spec((1, 1, block_kv, d), kv_map, k.dtype,
-                             allow_ragged_minor=ragged_kv),
-            tiles.block_spec((1, 1, block_kv, d), kv_map, v.dtype,
-                             allow_ragged_minor=ragged_kv),
-        ],
+        in_specs=in_specs,
         out_specs=[
             tiles.block_spec((1, 1, block_q, d), q_map, q.dtype,
                              allow_ragged_minor=ragged_q),
@@ -171,7 +204,7 @@ def _flash_fwd(q, k, v, *, policy: KernelPolicy, causal: bool,
         compiler_params=tiles.compiler_params(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
-    )(q, k, v)
+    )(*operands)
     return out, lse
 
 
@@ -180,8 +213,15 @@ def flash_attention_fwd(q, k, v, *, policy: KernelPolicy | None = None,
                         block_q: int | None = None,
                         block_kv: int | None = None,
                         logit_scale: float | None = None,
+                        epilogue: AttnEpilogue | None = None,
+                        sinks=None,
                         interpret: bool = True):
     """Returns (out, lse). q: (B,H,Sq,D), k/v: (B,Hkv,Skv,D).
+
+    ``epilogue`` is the fused attention store chain (softcap/sink stages,
+    DESIGN.md §12); ``sinks`` is the (H,) f32 operand the sink stage
+    streams. When the chain is omitted, the policy's own epilogue field
+    applies (the autotuner attaches it there).
 
     Explicit ``block_q``/``block_kv`` is the deprecated pre-policy surface
     (builds an equivalent explicit row-major policy); with neither a policy
@@ -195,5 +235,9 @@ def flash_attention_fwd(q, k, v, *, policy: KernelPolicy | None = None,
             legacy_blocks=legacy_attention_blocks(block_q, block_kv, sq,
                                                   skv, d),
             warn_what="flash_attention_fwd")
-    return _flash_fwd(q, k, v, policy=policy, causal=causal, window=window,
-                      logit_scale=logit_scale, interpret=interpret)
+    if epilogue is None:
+        epilogue = (policy.epilogue if policy.epilogue is not None
+                    else ATTN_EPILOGUE_NONE)
+    return _flash_fwd(q, k, v, sinks, policy=policy, causal=causal,
+                      window=window, logit_scale=logit_scale,
+                      epilogue=epilogue, interpret=interpret)

@@ -9,6 +9,16 @@ Policy resolution order (DESIGN.md §5): explicit ``policy``/``bwd_policy`` >
 legacy ``block_q``/``block_kv`` keywords (deprecation shim) > the analytic
 autotuner, which resolves fwd and bwd policies independently (the bwd pass
 has a larger scratch working set and may legally need smaller tiles).
+
+Attention epilogue chains (DESIGN.md §12): ``softcap``/``sinks`` build an
+:class:`~repro.kernels.attention.epilogue.AttnEpilogue` that rides the
+resolved policy (and its autotune bucket). The fused-vs-unfused decision is
+a real plan: ``autotune.select_fusion("attention", ...)`` scores the flash
+chain against the eager score-matrix chain from modeled ``dma_bytes``, the
+same protocol every GEMM-side fusion uses. The sink operand is a
+*differentiable* input — ``_flash``'s VJP returns dsink alongside dq/dk/dv
+(a jnp reduction over the saved (out, lse) residuals; the kernels never
+see a sink gradient because the fwd folded the sink mass into lse).
 """
 from __future__ import annotations
 
@@ -20,6 +30,7 @@ import jax.numpy as jnp
 from repro.core import autotune
 from repro.core.policy import (KernelPolicy, legacy_attention_blocks,
                                make_policy, resolve_policy)
+from .epilogue import AttnEpilogue
 from .kernel_fwd import flash_attention_fwd
 from .kernel_bwd import flash_attention_bwd
 from .kernel_decode import flash_decode, flash_decode_paged
@@ -30,51 +41,67 @@ from .ref import attention_ref, attention_ref_chunked, decode_ref
 _CHUNKED_THRESHOLD = 2048
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
-def _flash(q, k, v, causal, window, policy, bwd_policy, logit_scale,
-           interpret):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9, 10))
+def _flash(q, k, v, sinks, causal, window, policy, bwd_policy, logit_scale,
+           epilogue, interpret):
     out, _ = flash_attention_fwd(
         q, k, v, policy=policy, causal=causal, window=window,
-        logit_scale=logit_scale, interpret=interpret)
+        logit_scale=logit_scale, epilogue=epilogue, sinks=sinks,
+        interpret=interpret)
     return out
 
 
-def _flash_fwd(q, k, v, causal, window, policy, bwd_policy, logit_scale,
-               interpret):
+def _flash_fwd(q, k, v, sinks, causal, window, policy, bwd_policy,
+               logit_scale, epilogue, interpret):
     out, lse = flash_attention_fwd(
         q, k, v, policy=policy, causal=causal, window=window,
-        logit_scale=logit_scale, interpret=interpret)
-    return out, (q, k, v, out, lse)
+        logit_scale=logit_scale, epilogue=epilogue, sinks=sinks,
+        interpret=interpret)
+    # saved-preact convention: (out, lse) are the only residuals — lse
+    # already contains the sink mass, softcap recomputes in-kernel
+    return out, (q, k, v, sinks, out, lse)
 
 
-def _flash_bwd(causal, window, policy, bwd_policy, logit_scale, interpret,
-               res, do):
-    q, k, v, out, lse = res
+def _flash_bwd(causal, window, policy, bwd_policy, logit_scale, epilogue,
+               interpret, res, do):
+    q, k, v, sinks, out, lse = res
     dq, dk, dv = flash_attention_bwd(
         q, k, v, out, lse, do, policy=bwd_policy, causal=causal,
-        window=window, logit_scale=logit_scale, interpret=interpret)
+        window=window, logit_scale=logit_scale, epilogue=epilogue,
+        interpret=interpret)
     h, hkv = q.shape[1], k.shape[1]
     if h != hkv:  # GQA: reduce per-query-head dk/dv over the group
         group = h // hkv
         b, _, skv, d = dk.shape
         dk = dk.reshape(b, hkv, group, skv, d).sum(axis=2)
         dv = dv.reshape(b, hkv, group, skv, d).sum(axis=2)
-    return dq, dk.astype(k.dtype), dv.astype(v.dtype)
+    dsinks = None
+    if sinks is not None:
+        dsinks = epilogue.operand_grads(do, out, lse, sinks=sinks)["sinks"]
+        dsinks = dsinks.astype(sinks.dtype)
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype), dsinks
 
 
 _flash.defvjp(_flash_fwd, _flash_bwd)
 
 
 def resolve_attention_policies(q_shape, kv_shape, dtype, *,
-                               causal: bool = False) -> tuple:
-    """(fwd, bwd) tuned policies for a (B,H,Sq,D) x (B,Hkv,Skv,D) launch."""
+                               causal: bool = False,
+                               epilogue: AttnEpilogue | None = None) -> tuple:
+    """(fwd, bwd) tuned policies for a (B,H,Sq,D) x (B,Hkv,Skv,D) launch.
+
+    A non-identity ``epilogue`` joins the autotune signature (its streamed
+    operands count in the VMEM legality rule and its extra reads in the
+    traffic score) and rides the returned policies' epilogue field.
+    """
     b, h, sq, d = q_shape
     skv = kv_shape[2]
     sig = (b, h, sq, skv, d)
+    ep = epilogue if epilogue is not None and not epilogue.is_identity else None
     fwd = autotune.select_policy("attention_fwd", sig, str(dtype),
-                                 causal=causal)
+                                 causal=causal, epilogue=ep)
     bwd = autotune.select_policy("attention_bwd", sig, str(dtype),
-                                 causal=causal)
+                                 causal=causal, epilogue=ep)
     return fwd, bwd
 
 
@@ -83,15 +110,28 @@ def attention(q, k, v, *, causal: bool = False, window: int | None = None,
               bwd_policy: KernelPolicy | None = None,
               block_q: int | None = None, block_kv: int | None = None,
               logit_scale: float | None = None,
+              softcap: float | None = None, sinks=None,
               mode: str = "pallas_interpret"):
-    """Multi-/grouped-query flash attention. q:(B,H,S,D), k/v:(B,Hkv,S,D)."""
+    """Multi-/grouped-query flash attention. q:(B,H,S,D), k/v:(B,Hkv,S,D).
+
+    ``softcap``: gemma2-style tanh logit cap (configs/base.py
+    ``attn_logit_softcap``), applied inside the kernels' softmax loop.
+    ``sinks``: optional (H,) per-head attention-sink logits (differentiable
+    — grads flow to them like any other operand). Both stages form the
+    fused :class:`AttnEpilogue` store chain; reference mode applies the
+    identical math in jnp.
+    """
+    epilogue = AttnEpilogue(softcap=float(softcap) if softcap else 0.0,
+                            sink=sinks is not None)
     if mode == "reference":
         if k.shape[2] > _CHUNKED_THRESHOLD:
             return attention_ref_chunked(q, k, v, causal=causal,
                                          window=window,
-                                         logit_scale=logit_scale)
+                                         logit_scale=logit_scale,
+                                         softcap=softcap, sinks=sinks)
         return attention_ref(q, k, v, causal=causal, window=window,
-                             logit_scale=logit_scale)
+                             logit_scale=logit_scale, softcap=softcap,
+                             sinks=sinks)
     if policy is None:
         b, h, sq, d = q.shape
         skv = k.shape[2]
@@ -106,14 +146,29 @@ def attention(q, k, v, *, causal: bool = False, window: int | None = None,
                 "attention_bwd", sig, q.dtype, causal=causal,
                 legacy_blocks=legacy, warn_what="attention")
         else:
+            # plan decision: the flash chain vs the eager score-matrix
+            # chain, from modeled dma_bytes — same protocol as the
+            # mlp/qkv_rope plans (memoized per shape bucket)
+            hkv = k.shape[1]
+            plan = autotune.select_fusion(
+                "attention", (b, h, hkv, sq, skv, d), str(q.dtype),
+                causal=causal, softcap=bool(epilogue.softcap),
+                sink=epilogue.sink)
+            if plan["plan"] != "fused":
+                # modeled traffic favors the eager chain (never at real
+                # shapes — the flash chain strictly dominates — but the
+                # plan, not the call site, owns that decision)
+                return attention_ref(q, k, v, causal=causal, window=window,
+                                     logit_scale=logit_scale,
+                                     softcap=softcap, sinks=sinks)
             policy, auto_bwd = resolve_attention_policies(
-                q.shape, k.shape, q.dtype, causal=causal)
+                q.shape, k.shape, q.dtype, causal=causal, epilogue=epilogue)
             bwd_policy = bwd_policy or auto_bwd
     elif bwd_policy is None:
         _, bwd_policy = resolve_attention_policies(
-            q.shape, k.shape, q.dtype, causal=causal)
-    return _flash(q, k, v, causal, window, policy, bwd_policy, logit_scale,
-                  mode == "pallas_interpret")
+            q.shape, k.shape, q.dtype, causal=causal, epilogue=epilogue)
+    return _flash(q, k, v, sinks, causal, window, policy, bwd_policy,
+                  logit_scale, epilogue, mode == "pallas_interpret")
 
 
 # ---------------------------------------------------------------------------
@@ -122,7 +177,9 @@ def attention(q, k, v, *, causal: bool = False, window: int | None = None,
 
 def resolve_decode_policy(batch: int, kv_heads: int, group: int, kv_len: int,
                           head_dim: int, dtype, *,
-                          page_size: int | None = None) -> KernelPolicy:
+                          page_size: int | None = None,
+                          epilogue: AttnEpilogue | None = None
+                          ) -> KernelPolicy:
     """The decode policy for a launch signature (DESIGN.md §5 / §8).
 
     Contiguous caches go through the autotuner (the split size is the one
@@ -130,15 +187,18 @@ def resolve_decode_policy(batch: int, kv_heads: int, group: int, kv_len: int,
     split size fixed by the physical page (one page per grid step by
     construction), so the policy is built directly — deterministically, so
     an engine's pinned policy and the traced policy are the same object
-    semantics as the autotuner's memoized path.
+    semantics as the autotuner's memoized path. A non-identity ``epilogue``
+    rides the policy for reporting (decode's sink stage lives in the jnp
+    LSE combine, so it never affects decode VMEM legality).
     """
+    ep = epilogue if epilogue is not None and not epilogue.is_identity else None
     if page_size is None:
         return autotune.select_policy(
             "attention_decode", (batch, kv_heads, group, kv_len, head_dim),
-            str(dtype))
+            str(dtype), epilogue=ep)
     pol = make_policy("attention_decode", block_m=group, block_n=page_size,
                       block_k=head_dim, in_dtype=str(jnp.dtype(dtype)),
-                      name="paged")
+                      name="paged", epilogue=ep)
     pol.check()
     return pol
 
@@ -146,12 +206,15 @@ def resolve_decode_policy(batch: int, kv_heads: int, group: int, kv_len: int,
 def attention_decode(q, k, v, lengths, *, window: int | None = None,
                      policy: KernelPolicy | None = None,
                      logit_scale: float | None = None,
+                     softcap: float | None = None, sinks=None,
                      mode: str = "pallas_interpret"):
     """Single-token decode attention over a contiguous (ring) KV cache.
 
     q: (B, H, 1, D) with H % Hkv == 0; k/v: (B, Hkv, S, D);
     ``lengths``: scalar or (B,) int32 — tokens written so far (ring
-    semantics when lengths > S). Returns (B, H, 1, D) in q.dtype.
+    semantics when lengths > S). ``softcap``/``sinks`` follow
+    :func:`attention` (sinks is (H,), per query head). Returns
+    (B, H, 1, D) in q.dtype.
 
     mode="reference" is the jnp einsum oracle (the pre-subsystem decode
     path, bitwise); the pallas modes run the split-KV kernel whose split
@@ -165,12 +228,19 @@ def attention_decode(q, k, v, lengths, *, window: int | None = None,
                                (b,))
     if mode == "reference":
         out = decode_ref(qg, k, v, lengths, window=window,
-                         logit_scale=logit_scale)
+                         logit_scale=logit_scale, softcap=softcap,
+                         sinks=sinks)
     else:
         if policy is None:
-            policy = resolve_decode_policy(b, hkv, group, slots, d, q.dtype)
+            epilogue = AttnEpilogue(
+                softcap=float(softcap) if softcap else 0.0,
+                sink=sinks is not None)
+            policy = resolve_decode_policy(b, hkv, group, slots, d, q.dtype,
+                                           epilogue=epilogue)
         out = flash_decode(qg, k, v, lengths, policy=policy, window=window,
                            logit_scale=logit_scale,
+                           softcap=float(softcap) if softcap else 0.0,
+                           sinks=sinks,
                            interpret=mode == "pallas_interpret")
     return out.reshape(b, h, 1, d)
 
@@ -179,13 +249,15 @@ def attention_decode_paged(q, k_pages, v_pages, page_table, lengths, *,
                            window: int | None = None,
                            policy: KernelPolicy | None = None,
                            logit_scale: float | None = None,
+                           softcap: float | None = None, sinks=None,
                            mode: str = "pallas_interpret"):
     """Single-token decode attention over a paged KV pool.
 
     q: (B, H, 1, D); k_pages/v_pages: (P, Hkv, page_size, D);
     page_table: (B, MP) physical page ids (0 = reserved null page);
-    lengths: (B,). Returns (B, H, 1, D) in q.dtype. mode="reference"
-    gathers the pages into a contiguous view and runs the einsum oracle.
+    lengths: (B,). ``softcap``/``sinks`` follow :func:`attention`. Returns
+    (B, H, 1, D) in q.dtype. mode="reference" gathers the pages into a
+    contiguous view and runs the einsum oracle.
     """
     b, h, _, d = q.shape
     hkv, page_size = k_pages.shape[1], k_pages.shape[2]
@@ -200,13 +272,20 @@ def attention_decode_paged(q, k_pages, v_pages, page_table, lengths, *,
 
         out = decode_ref(qg, gather_pages(k_pages, page_table),
                          gather_pages(v_pages, page_table), lengths,
-                         window=window, logit_scale=logit_scale)
+                         window=window, logit_scale=logit_scale,
+                         softcap=softcap, sinks=sinks)
     else:
         if policy is None:
+            epilogue = AttnEpilogue(
+                softcap=float(softcap) if softcap else 0.0,
+                sink=sinks is not None)
             policy = resolve_decode_policy(b, hkv, group, mp * page_size, d,
-                                           q.dtype, page_size=page_size)
+                                           q.dtype, page_size=page_size,
+                                           epilogue=epilogue)
         out = flash_decode_paged(qg, k_pages, v_pages, page_table, lengths,
                                  policy=policy, window=window,
                                  logit_scale=logit_scale,
+                                 softcap=float(softcap) if softcap else 0.0,
+                                 sinks=sinks,
                                  interpret=mode == "pallas_interpret")
     return out.reshape(b, h, 1, d)

@@ -16,13 +16,19 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from .epilogue import cap_logits, softmax_finalize
+
 
 def attention_ref(q, k, v, *, causal: bool = False, window: int | None = None,
-                  logit_scale: float | None = None):
+                  logit_scale: float | None = None,
+                  softcap: float | None = None, sinks=None):
     """q: (B, H, Sq, D); k, v: (B, Hkv, Skv, D) with H % Hkv == 0.
 
     ``window``: sliding-window size — position i attends to j iff
     i - j < window (combined with the causal mask when causal=True).
+    ``softcap``: gemma2-style tanh logit cap on the scaled logits.
+    ``sinks``: optional (H,) per-head attention-sink logits that join the
+    softmax denominator only (DESIGN.md §12).
     """
     b, h, sq, d = q.shape
     hkv = k.shape[1]
@@ -33,6 +39,8 @@ def attention_ref(q, k, v, *, causal: bool = False, window: int | None = None,
     scale = logit_scale if logit_scale is not None else d ** -0.5
     s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
+    if softcap:
+        s = cap_logits(s, softcap)
     skv = k.shape[2]
     qpos = jnp.arange(sq)[:, None]
     kpos = jnp.arange(skv)[None, :]
@@ -42,8 +50,14 @@ def attention_ref(q, k, v, *, causal: bool = False, window: int | None = None,
     if window is not None:
         mask &= (qpos - kpos) < window
     s = jnp.where(mask, s, -jnp.inf)
-    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
     l = jnp.sum(p, axis=-1, keepdims=True)
+    if sinks is not None:
+        sb = jnp.asarray(sinks, jnp.float32)[None, :, None, None]
+        acc = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+        out, _ = softmax_finalize(acc, m, l, sink=sb)
+        return out.astype(q.dtype)
     p = p / jnp.maximum(l, 1e-30)
     out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
     return out.astype(q.dtype)
@@ -69,14 +83,17 @@ def ring_positions(lengths, slots: int):
 
 
 def decode_ref(q, k, v, lengths, *, window: int | None = None,
-               logit_scale: float | None = None):
+               logit_scale: float | None = None,
+               softcap: float | None = None, sinks=None):
     """Single-token decode oracle over a (possibly ring) KV cache.
 
     q: (B, Hkv, G, D) — the GQA group packed into the q rows (G = H // Hkv;
     MHA is G == 1 with Hkv == H). k, v: (B, Hkv, S, D) ring cache;
-    ``lengths``: (B,) tokens written so far. Returns (B, Hkv, G, D) in
-    q.dtype. Matches the pre-subsystem einsum decode path bitwise for
-    non-empty sequences; empty rows (lengths == 0) return zeros.
+    ``lengths``: (B,) tokens written so far. ``softcap``/``sinks`` follow
+    :func:`attention_ref` (sinks is (H,), per query head). Returns
+    (B, Hkv, G, D) in q.dtype. Matches the pre-subsystem einsum decode path
+    bitwise for non-empty sequences; empty rows (lengths == 0) return zeros
+    (with a sink, all mass lands on the sink, which attends to nothing).
     """
     b, hkv, g, d = q.shape
     slots = k.shape[2]
@@ -87,14 +104,21 @@ def decode_ref(q, k, v, lengths, *, window: int | None = None,
     scale = logit_scale if logit_scale is not None else d ** -0.5
     s = jnp.einsum("bgxd,bgkd->bgxk", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
+    if softcap:
+        s = cap_logits(s, softcap)
     # -1e30 (not -inf) so fully-masked rows stay NaN-free; for rows with at
     # least one valid slot exp(-1e30 - max) underflows to exactly 0.0, so
     # the result is bitwise identical to -inf masking.
     s = jnp.where(valid[:, None, None, :], s, -1e30)
     pmax = jnp.max(s, axis=-1, keepdims=True)
+    if sinks is not None:
+        sb = jnp.asarray(sinks, jnp.float32).reshape(hkv, g)[None, :, :, None]
+        pmax = jnp.maximum(pmax, sb)
     pexp = jnp.exp(s - pmax)
     pexp = jnp.where(valid[:, None, None, :], pexp, 0.0)
     den = jnp.sum(pexp, axis=-1, keepdims=True)
+    if sinks is not None:
+        den = den + jnp.exp(sb - pmax)
     out = jnp.einsum("bgxk,bgkd->bgxd", pexp / jnp.maximum(den, 1e-30),
                      v.astype(jnp.float32))
     return out.astype(q.dtype)
@@ -103,8 +127,13 @@ def decode_ref(q, k, v, lengths, *, window: int | None = None,
 def attention_ref_chunked(q, k, v, *, causal: bool = False,
                           window: int | None = None,
                           logit_scale: float | None = None,
+                          softcap: float | None = None, sinks=None,
                           chunk: int = 1024):
-    """Online-softmax over KV chunks (flash algorithm in pure XLA)."""
+    """Online-softmax over KV chunks (flash algorithm in pure XLA).
+
+    ``softcap``/``sinks`` follow :func:`attention_ref`; the sink folds into
+    the final rescale exactly like the flash kernel's store epilogue.
+    """
     b, h, sq, d = q.shape
     _, hkv, skv, _ = k.shape
     group = h // hkv
@@ -124,6 +153,8 @@ def attention_ref_chunked(q, k, v, *, causal: bool = False,
         m, l, acc = carry
         kc, vc, ci = inp
         s = jnp.einsum("bgxqd,bgcd->bgxqc", qf, kc.astype(jnp.float32)) * scale
+        if softcap:
+            s = cap_logits(s, softcap)
         kpos = ci * chunk + jnp.arange(chunk)[None, :]
         mask = jnp.ones((sq, chunk), bool)
         if causal:
@@ -147,5 +178,10 @@ def attention_ref_chunked(q, k, v, *, causal: bool = False,
     (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
                                   (ks, vs, jnp.arange(nc)),
                                   unroll=scan_unroll())
-    out = acc / jnp.maximum(l, 1e-30)
+    if sinks is not None:
+        sb = jnp.asarray(sinks, jnp.float32).reshape(
+            hkv, group)[None, :, :, None, None]
+        out, _ = softmax_finalize(acc, m, l, sink=sb)
+    else:
+        out = acc / jnp.maximum(l, 1e-30)
     return out.reshape(b, h, sq, d).astype(q.dtype)

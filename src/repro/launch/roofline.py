@@ -187,11 +187,25 @@ def fusion_cell_report(cfg, shape) -> dict:
               prenorm=norm_kind)
     h = getattr(cfg, "num_heads", 0)
     d = getattr(cfg, "head_dim", 0) or 0
-    if dm and h and d and getattr(cfg, "rope_style", "none") == "half":
+    if dm and h and d:
         hkv = getattr(cfg, "num_kv_heads", h) or h
-        chain("qkv_rope", "qkv_rope", (tokens, dm, h, hkv, d))
-        chain("norm_qkv_rope", "qkv_rope", (tokens, dm, h, hkv, d),
-              prenorm=norm_kind)
+        if getattr(cfg, "rope_style", "none") == "half":
+            chain("qkv_rope", "qkv_rope", (tokens, dm, h, hkv, d))
+            chain("norm_qkv_rope", "qkv_rope", (tokens, dm, h, hkv, d),
+                  prenorm=norm_kind)
+        else:
+            # rope-free archs (BERT/Whisper/enc-dec, 'partial' rope): the
+            # packed-QKV chain only wins through the folded pre-norm, so
+            # only the norm_* cell is informative (DESIGN.md §12)
+            chain("norm_qkv", "qkv", (tokens, dm, h, hkv, d),
+                  prenorm=norm_kind)
+        # the attention op's own fused-vs-unfused plan (flash kernel vs
+        # materialized-scores eager path, DESIGN.md §12); softcap widens
+        # the unfused side's pass count
+        softcap = bool(getattr(cfg, "attn_logit_softcap", None))
+        chain("attention", "attention",
+              (shape.global_batch, h, hkv, shape.seq_len, shape.seq_len, d),
+              causal=True, softcap=softcap)
     return report
 
 

@@ -170,6 +170,88 @@ def fused_project_qkv_rope(cfg, p, x, positions, mode, prenorm=None):
             _split_heads(v.reshape(b, s, hkv * hd), hkv, hd))
 
 
+def fused_project_qkv(cfg, p, x, mode, prenorm=None):
+    """Rope-free fused QKV projection (DESIGN.md §10, §12): the packed q|k
+    GEMM and the v GEMM each fold the block's pre-norm into their A-tile
+    prologue, so BERT/Whisper/enc-dec self-attention blocks — whose
+    ``rope_style`` disqualifies the rope-store fusion — stop paying the
+    standalone-norm round trip.
+
+    The rope-free fusion only *wins* through the folded norm (without a
+    prenorm the fused and eager plans stream identical bytes), so this
+    returns None unless ``prenorm`` is given AND the chain model picks the
+    norm-fused 'qkv' plan AND a VMEM-legal prologue policy exists; callers
+    then fall back to the standalone norm + ``project_qkv``. A non-None
+    return always means ``prenorm`` was consumed.
+    """
+    from repro.kernels.gemm import Epilogue, gemm_fused
+    from .common import resolve_norm_prologue
+
+    if p["wqk"].ndim != 2:
+        return None
+    b, s, d = x.shape
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    has_bias = "bqk" in p
+    qk_ep = Epilogue(bias=has_bias)
+    resolved = resolve_norm_prologue(
+        cfg, prenorm, kind="qkv", plan_shape=(b * s, d, h, hkv, hd),
+        gemm_shape=(b * s, (h + hkv) * hd, d), dtype=str(x.dtype),
+        epilogue=qk_ep)
+    if resolved is None:
+        return None
+    prologue, pro_kw, qk_policy = resolved
+    kw = dict(prologue=prologue, **pro_kw)
+
+    x2 = x.reshape(b * s, d)
+    qk = gemm_fused(x2, p["wqk"], epilogue=qk_ep, bias=p.get("bqk"),
+                    policy=qk_policy, out_dtype=x.dtype, mode=mode, **kw)
+    v = gemm_fused(x2, p["wv"], epilogue=Epilogue(bias=has_bias),
+                   bias=p.get("bv"), out_dtype=x.dtype, mode=mode, **kw)
+    q = qk[:, : h * hd].reshape(b, s, h * hd)
+    k = qk[:, h * hd:].reshape(b, s, hkv * hd)
+    return (_split_heads(q, h, hd), _split_heads(k, hkv, hd),
+            _split_heads(v.reshape(b, s, hkv * hd), hkv, hd))
+
+
+def project_qkv_heads(cfg, p, x, positions=None, *, mode: str,
+                      prenorm=None, use_rope: bool = True):
+    """The self-attention QKV plan ladder (DESIGN.md §12), shared by
+    ``attention_layer`` and the block-level prefill paths (lm/encdec):
+    always returns rotated (q, k, v) heads and always consumes ``prenorm``.
+
+    Rungs, each guarded by the chain model's modeled dma_bytes:
+      1. ``fused_project_qkv_rope`` — norm + packed q|k GEMM + rope store,
+         'half'-style rope only;
+      2. ``fused_project_qkv`` + ``_apply_rope`` — the norm still folds
+         into the packed GEMM when rope can't ride the store ('partial' /
+         'none' styles, or the rope plan lost);
+      3. standalone ``apply_prenorm`` + ``project_qkv`` + ``_apply_rope``
+         (the reference path, and the pallas fallback).
+    """
+    from .common import apply_prenorm
+
+    if use_rope and positions is None:
+        positions = jnp.arange(x.shape[1])
+    if mode != "reference":
+        if use_rope and cfg.rope_style == "half":
+            qkv = fused_project_qkv_rope(cfg, p, x, positions, mode,
+                                         prenorm=prenorm)
+            if qkv is not None:
+                return qkv
+        qkv = fused_project_qkv(cfg, p, x, mode, prenorm=prenorm)
+        if qkv is not None:
+            q, k, v = qkv
+            if use_rope:
+                q, k = _apply_rope(cfg, q, k, positions, mode)
+            return q, k, v
+    if prenorm is not None:
+        x = apply_prenorm(cfg, x, prenorm)
+    q, k, v = project_qkv(cfg, p, x)
+    if use_rope:
+        q, k = _apply_rope(cfg, q, k, positions, mode)
+    return q, k, v
+
+
 def attention_layer(cfg, p, x, *, causal: bool = True,
                     window: int | None = None, kv_input=None,
                     positions=None, mode: str = "reference",
@@ -180,7 +262,13 @@ def attention_layer(cfg, p, x, *, causal: bool = True,
     ``common.norm_params``) ``x`` is the *pre-norm* residual stream: the
     pallas modes fold the norm into the fused QKV GEMM's A-tile prologue
     (DESIGN.md §10) when the chain model picks that plan; otherwise the
-    standalone norm runs here before the projections.
+    standalone norm runs here before the projections. Self-attention
+    resolves through the ``project_qkv_heads`` plan ladder (rope-fused,
+    norm-fused rope-free, standalone); cross-attention (``kv_input``)
+    keeps the standalone projections.
+
+    ``cfg.attn_logit_softcap`` threads through to the attention op as its
+    softcap epilogue stage (gemma2-style tanh cap, DESIGN.md §12).
 
     Block sizes are no longer hard-coded here: with ``policy=None`` the op
     resolves a KernelPolicy from the analytic autotuner per shape-bucket
@@ -189,26 +277,16 @@ def attention_layer(cfg, p, x, *, causal: bool = True,
     """
     from .common import apply_prenorm
 
-    s = x.shape[1]
-    qkv = None
-    if use_rope and kv_input is None:
-        if positions is None:
-            positions = jnp.arange(s)
-        if mode != "reference":
-            # fused QKV→RoPE megakernel (DESIGN.md §9-§10); a non-None
-            # return consumed the prenorm (fused or applied internally)
-            qkv = fused_project_qkv_rope(cfg, p, x, positions, mode,
-                                         prenorm=prenorm)
-    if qkv is not None:
-        q, k, v = qkv
+    if kv_input is None:
+        q, k, v = project_qkv_heads(cfg, p, x, positions, mode=mode,
+                                    prenorm=prenorm, use_rope=use_rope)
     else:
         if prenorm is not None:
             x = apply_prenorm(cfg, x, prenorm)
         q, k, v = project_qkv(cfg, p, x, kv_input)
-        if use_rope and kv_input is None:
-            q, k = _apply_rope(cfg, q, k, positions, mode)
     out = attention_op(q, k, v, causal=causal, window=window,
-                       policy=policy, mode=mode)
+                       policy=policy, mode=mode,
+                       softcap=getattr(cfg, "attn_logit_softcap", None))
     return _merge_heads(out) @ p["wo"]
 
 
@@ -283,6 +361,7 @@ def decode_attention_layer(cfg, p, x, cache: dict, pos, *,
         lengths = jnp.broadcast_to(pos + 1, (b,))
 
     out = attention_decode(q, k, v, lengths, window=window, policy=policy,
+                           softcap=getattr(cfg, "attn_logit_softcap", None),
                            mode=mode).astype(x.dtype)
     return _merge_heads(out) @ p["wo"], cache
 
@@ -344,5 +423,7 @@ def paged_decode_attention_layer(cfg, p, x, cache: dict, page_table, lengths,
     cache = {"k_pages": k_pages, "v_pages": v_pages}
     out = attention_decode_paged(q, k_pages, v_pages, page_table, lengths + 1,
                                  window=window, policy=policy,
+                                 softcap=getattr(cfg, "attn_logit_softcap",
+                                                 None),
                                  mode=mode).astype(x.dtype)
     return _merge_heads(out) @ p["wo"], cache

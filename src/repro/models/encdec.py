@@ -14,7 +14,7 @@ from .common import (ParamDef, apply_norm, cast_params, cross_entropy_loss,
                      mlp_defs, mlp_forward, norm_defs, norm_params)
 from .attention import (attn_defs, attention_layer, decode_attention_layer,
                         init_attn_cache, prefill_attn_cache, project_qkv,
-                        _merge_heads)
+                        project_qkv_heads, _merge_heads)
 from repro.kernels.attention import attention as attention_op
 
 
@@ -144,14 +144,20 @@ def encdec_prefill(cfg, params, batch, cache, *, mode="reference"):
 
     def body(h, xs):
         p, self_c, cross_c = xs
-        hn = apply_norm(cfg, h, p, "ln1")
-        q, k, v = project_qkv(cfg, p["attn"], hn)
-        o = attention_op(q, k, v, causal=True, mode=mode)
+        # rope-free self-attention routes through the same fused-QKV plan
+        # ladder as the dense LM prefill (DESIGN.md §12): ln1 folds into
+        # the packed q|k GEMM's prologue when the 'qkv' chain plan wins
+        q, k, v = project_qkv_heads(cfg, p["attn"], h, mode=mode,
+                                    prenorm=norm_params(p, "ln1"),
+                                    use_rope=False)
+        o = attention_op(q, k, v, causal=True, mode=mode,
+                         softcap=getattr(cfg, "attn_logit_softcap", None))
         self_c = prefill_attn_cache(cfg, self_c, k, v, s, None)
         h = h + _merge_heads(o) @ p["attn"]["wo"]
         hn = apply_norm(cfg, h, p, "lnx")
         qx, kx, vx = project_qkv(cfg, p["xattn"], hn, kv_input=enc_out)
-        ox = attention_op(qx, kx, vx, causal=False, mode=mode)
+        ox = attention_op(qx, kx, vx, causal=False, mode=mode,
+                          softcap=getattr(cfg, "attn_logit_softcap", None))
         cross_c = {"k": kx, "v": vx}
         h = h + _merge_heads(ox) @ p["xattn"]["wo"]
         h = mlp_forward(cfg, p["mlp"], h, mode=mode, residual=h,

@@ -41,8 +41,10 @@ def encoder_forward(cfg, params, batch, *, mode="reference", remat=False,
     x = x + params["pos"][:s].astype(cfg.compute_dtype)
 
     def body(h, p):
-        # pre-norm stream routed straight in (DESIGN.md §10): the pallas
-        # modes fold ln1/ln2 into the QKV / MLP-up GEMM prologues
+        # pre-norm stream routed straight in (DESIGN.md §10, §12): the
+        # pallas modes fold ln1/ln2 into the QKV / MLP-up GEMM prologues —
+        # rope-free blocks now fuse through the 'qkv' plan ladder instead
+        # of falling back to the standalone norm
         a = attention_layer(cfg, p["attn"], h, causal=False, mode=mode,
                             use_rope=False, prenorm=norm_params(p, "ln1"))
         h = h + a

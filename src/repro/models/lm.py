@@ -18,8 +18,8 @@ from .common import (ParamDef, apply_norm, cast_params, cross_entropy_loss,
 from .attention import (attn_defs, attention_layer, decode_attention_layer,
                         init_attn_cache, init_paged_attn_cache,
                         paged_decode_attention_layer, paged_prefill_attn_cache,
-                        prefill_attn_cache, project_qkv,
-                        _apply_rope, _merge_heads)
+                        prefill_attn_cache, project_qkv_heads,
+                        _merge_heads)
 from repro.kernels.attention import attention as attention_op
 from .moe import moe_defs, moe_forward
 from .ssm import (ssm_defs, ssm_forward, ssm_prefill, ssm_decode_step,
@@ -321,10 +321,12 @@ def block_prefill(cfg, kind, p, x, cache, *, positions, mode="reference",
     s = x.shape[1]
     if kind in ("attn", "local", "moe"):
         window = _block_window(cfg, kind)
-        h = apply_norm(cfg, x, p, "ln1")
-        q, k, v = project_qkv(cfg, p["attn"], h)
-        q, k = _apply_rope(cfg, q, k, positions, mode)
-        o = attention_op(q, k, v, causal=True, window=window, mode=mode)
+        # the same fused-QKV plan ladder as block_forward (DESIGN.md §12);
+        # k comes back rotated, which is exactly the cache convention
+        q, k, v = project_qkv_heads(cfg, p["attn"], x, positions, mode=mode,
+                                    prenorm=norm_params(p, "ln1"))
+        o = attention_op(q, k, v, causal=True, window=window, mode=mode,
+                         softcap=getattr(cfg, "attn_logit_softcap", None))
         cache = prefill_attn_cache(cfg, cache, k, v, s, window)
         x = x + cfg.residual_scale * (_merge_heads(o) @ p["attn"]["wo"])
         if kind == "moe":
@@ -508,10 +510,12 @@ def block_prefill_paged(cfg, kind, p, x, cache, *, page_rows, slot,
     slot. Returns (x, cache)."""
     if kind in ("attn", "local", "moe"):
         window = _block_window(cfg, kind)
-        h = apply_norm(cfg, x, p, "ln1")
-        q, k, v = project_qkv(cfg, p["attn"], h)
-        q, k = _apply_rope(cfg, q, k, positions, mode)
-        o = attention_op(q, k, v, causal=True, window=window, mode=mode)
+        # same fused plan ladder as the dense block_prefill; rotated k
+        # lands in the pages (the cache convention)
+        q, k, v = project_qkv_heads(cfg, p["attn"], x, positions, mode=mode,
+                                    prenorm=norm_params(p, "ln1"))
+        o = attention_op(q, k, v, causal=True, window=window, mode=mode,
+                         softcap=getattr(cfg, "attn_logit_softcap", None))
         cache = paged_prefill_attn_cache(cfg, cache, k, v, page_rows)
         x = x + cfg.residual_scale * (_merge_heads(o) @ p["attn"]["wo"])
         if kind == "moe":

@@ -1,0 +1,477 @@
+"""Attention under the chain-spec protocol (DESIGN.md §12).
+
+Coverage per the acceptance bar:
+  * softcap (gemma2 tanh cap) + attention-sink epilogue parity: flash
+    fwd/bwd and both decode kernels vs the jnp references, including the
+    differentiable dsink path;
+  * saved-preact attention backward anchored against an f32 ground truth
+    (kernel grads no worse than the bf16 reference path's);
+  * the prefill-side fused QKV plan ladder: cached k/v parity vs the
+    standalone norm+project+rope path across rope_style x GQA x window,
+    and dense-vs-paged fused prefill cache parity;
+  * launch counts: a default llama-style decoder attention sublayer is
+    exactly 2 fused GEMMs + 1 flash launch forward (no standalone norm,
+    no standalone rope), and 1 flash bwd + 4 fused bwd GEMM launches
+    backward;
+  * select_fusion picks the fused attention plan purely from modeled
+    dma_bytes, with >= 1.2x modeled traffic reduction on the paper's
+    d=64 and GQA-backward headline cells.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import importlib
+
+from repro.configs.base import ModelConfig
+from repro.core import autotune
+from repro.kernels.attention import (attention, attention_decode,
+                                     attention_decode_paged, attention_ref,
+                                     decode_ref, AttnEpilogue,
+                                     ATTN_EPILOGUE_NONE)
+from repro.kernels.attention import ops as attn_ops
+from repro.kernels.gemm import backward as gemm_backward
+from repro.models import attention as mattn
+from repro.models import common as mcommon
+from repro.models.attention import (attn_defs, project_qkv,
+                                    project_qkv_heads, _apply_rope)
+from repro.models.common import (apply_prenorm, init_params, norm_defs,
+                                 norm_params)
+
+# `repro.kernels` re-exports a `gemm` *function*, which shadows the submodule
+# attribute — resolve the module object explicitly for monkeypatching
+gemm_pkg = importlib.import_module("repro.kernels.gemm")
+
+
+def _rand(key, shape, dtype=jnp.float32, scale=0.5):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale
+    return x.astype(dtype)
+
+
+def _qkv(b=2, h=4, hkv=2, s=256, d=64, dtype=jnp.float32):
+    return (_rand(0, (b, h, s, d), dtype), _rand(1, (b, hkv, s, d), dtype),
+            _rand(2, (b, hkv, s, d), dtype))
+
+
+# ---------------------------------------------------------------------------
+# Epilogue protocol object
+# ---------------------------------------------------------------------------
+
+class TestAttnEpilogue:
+    def test_identity_and_describe(self):
+        assert ATTN_EPILOGUE_NONE.is_identity
+        assert ATTN_EPILOGUE_NONE.describe() == "none"
+        ep = AttnEpilogue(softcap=30.0, sink=True)
+        assert not ep.is_identity
+        assert "softcap" in ep.describe() and "sink" in ep.describe()
+        assert ep.operand_names() == ("sinks",)
+        assert ep.extra_read_bytes(16) == 64  # one f32 logit per head
+
+    def test_hashable_and_jit_static(self):
+        # the epilogue rides jit static_argnames and the autotune bucket
+        assert hash(AttnEpilogue(softcap=30.0)) == hash(AttnEpilogue(
+            softcap=30.0))
+        assert AttnEpilogue() == ATTN_EPILOGUE_NONE
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            AttnEpilogue(softcap=-1.0)
+
+    def test_policy_carries_attention_epilogue(self):
+        ep = AttnEpilogue(softcap=30.0, sink=True)
+        pol = autotune.select_policy("attention_fwd", (2, 4, 256, 256, 64),
+                                     "float32", causal=True, epilogue=ep)
+        assert pol.epilogue is ep
+        # the sink operand joins the policy's operand blocks as a (1, 1) tile
+        base = autotune.select_policy("attention_fwd", (2, 4, 256, 256, 64),
+                                      "float32", causal=True)
+        blocks = pol.operand_blocks()
+        assert len(blocks) == len(base.operand_blocks()) + 1
+        assert blocks[-1][0] == (1, 1)
+
+
+# ---------------------------------------------------------------------------
+# Softcap + sink kernel parity (fwd, bwd, decode, paged decode)
+# ---------------------------------------------------------------------------
+
+class TestEpilogueParity:
+    @pytest.mark.parametrize("causal", [False, True])
+    @pytest.mark.parametrize("softcap,sink", [(30.0, False), (None, True),
+                                              (20.0, True)])
+    def test_fwd_matches_reference(self, causal, softcap, sink):
+        q, k, v = _qkv()
+        sinks = _rand(3, (4,), scale=1.0) if sink else None
+        ref = attention_ref(q, k, v, causal=causal, softcap=softcap,
+                            sinks=sinks)
+        out = attention(q, k, v, causal=causal, softcap=softcap, sinks=sinks,
+                        mode="pallas_interpret")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5)
+
+    def test_windowed_softcap_matches_reference(self):
+        q, k, v = _qkv()
+        ref = attention_ref(q, k, v, causal=True, window=128, softcap=25.0)
+        out = attention(q, k, v, causal=True, window=128, softcap=25.0,
+                        mode="pallas_interpret")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5)
+
+    @pytest.mark.parametrize("softcap,sink", [(25.0, False), (None, True),
+                                              (25.0, True)])
+    def test_bwd_matches_reference_autodiff(self, softcap, sink):
+        """The saved-preact transpose (softcap grad factor recomputed
+        in-kernel, dsink from the (out, lse) residuals) vs jax autodiff of
+        the jnp reference."""
+        q, k, v = _qkv()
+        sinks = _rand(3, (4,), scale=1.0) if sink else None
+        argnums = (0, 1, 2, 3) if sink else (0, 1, 2)
+
+        def loss(fn):
+            return lambda *a: jnp.sum(fn(*a) ** 2)
+
+        gk = jax.grad(loss(lambda q, k, v, *s: attention(
+            q, k, v, causal=True, softcap=softcap,
+            sinks=s[0] if s else None, mode="pallas_interpret")),
+            argnums=argnums)(q, k, v, *((sinks,) if sink else ()))
+        gr = jax.grad(loss(lambda q, k, v, *s: attention_ref(
+            q, k, v, causal=True, softcap=softcap,
+            sinks=s[0] if s else None)),
+            argnums=argnums)(q, k, v, *((sinks,) if sink else ()))
+        for a, b in zip(gk, gr):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=5e-5)
+
+    @pytest.mark.parametrize("softcap,sink", [(25.0, False), (None, True),
+                                              (25.0, True)])
+    def test_decode_matches_reference(self, softcap, sink):
+        b, h, hkv, s, d = 2, 4, 2, 128, 64
+        q = _rand(0, (b, h, 1, d))
+        k, v = _rand(1, (b, hkv, s, d)), _rand(2, (b, hkv, s, d))
+        sinks = _rand(3, (h,), scale=1.0) if sink else None
+        lengths = jnp.array([s, s - 17], jnp.int32)
+        ref = decode_ref(q.reshape(b, hkv, h // hkv, d), k, v, lengths,
+                         softcap=softcap, sinks=sinks).reshape(b, h, 1, d)
+        out = attention_decode(q, k, v, lengths, softcap=softcap,
+                               sinks=sinks, mode="pallas_interpret")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5)
+
+    def test_paged_decode_softcap_sink(self):
+        from repro.serve import kv_cache as kvc
+        b, h, hkv, d, page, mp = 2, 4, 2, 64, 16, 4
+        n_pages = 1 + b * mp
+        k_pages = _rand(1, (n_pages, hkv, page, d))
+        v_pages = _rand(2, (n_pages, hkv, page, d))
+        pt = jnp.arange(1, 1 + b * mp, dtype=jnp.int32).reshape(b, mp)
+        q = _rand(0, (b, h, 1, d))
+        sinks = _rand(3, (h,), scale=1.0)
+        lengths = jnp.array([mp * page, mp * page - 9], jnp.int32)
+        ref = attention_decode_paged(q, k_pages, v_pages, pt, lengths,
+                                     softcap=25.0, sinks=sinks,
+                                     mode="reference")
+        out = attention_decode_paged(q, k_pages, v_pages, pt, lengths,
+                                     softcap=25.0, sinks=sinks,
+                                     mode="pallas_interpret")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5)
+
+    def test_softcap_actually_changes_output(self):
+        # guard against the cap silently not being applied anywhere
+        q, k, v = _qkv(s=128)
+        a = attention(q, k, v, causal=True, mode="pallas_interpret")
+        b = attention(q, k, v, causal=True, softcap=1.0,
+                      mode="pallas_interpret")
+        assert float(jnp.max(jnp.abs(a - b))) > 1e-4
+
+
+class TestBwdF32Anchor:
+    def test_bf16_grads_anchor_to_f32_truth(self):
+        """Paper Fig. 8 family: the bf16 kernel backward must track the f32
+        ground truth at least as well as the bf16 jnp reference does."""
+        q, k, v = _qkv(b=1, h=4, hkv=1, s=256, d=64, dtype=jnp.bfloat16)
+        qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+
+        def loss(fn):
+            return lambda q, k, v: jnp.sum(fn(q, k, v).astype(jnp.float32)
+                                           ** 2)
+
+        g_truth = jax.grad(loss(lambda *a: attention_ref(
+            *a, causal=True, softcap=20.0)), argnums=(0, 1, 2))(qf, kf, vf)
+        g_ref = jax.grad(loss(lambda *a: attention_ref(
+            *a, causal=True, softcap=20.0)), argnums=(0, 1, 2))(q, k, v)
+        g_ker = jax.grad(loss(lambda *a: attention(
+            *a, causal=True, softcap=20.0, mode="pallas_interpret")),
+            argnums=(0, 1, 2))(q, k, v)
+        for t, r, kk in zip(g_truth, g_ref, g_ker):
+            t = np.asarray(t, np.float32)
+            ref_err = np.abs(np.asarray(r, np.float32) - t).max()
+            ker_err = np.abs(np.asarray(kk, np.float32) - t).max()
+            assert ker_err <= 2.0 * ref_err + 1e-3, (ker_err, ref_err)
+
+
+# ---------------------------------------------------------------------------
+# Prefill-side fused QKV plan ladder
+# ---------------------------------------------------------------------------
+
+def _cfg(rope_style="half", hkv=2, norm="rmsnorm", **kw):
+    return ModelConfig(name="t", family="lm", num_layers=2, d_model=256,
+                       num_heads=2, num_kv_heads=hkv, d_ff=512,
+                       vocab_size=512, head_dim=128, mlp_act="swiglu",
+                       norm=norm, rope_style=rope_style, max_seq_len=256,
+                       compute_dtype="float32", **kw)
+
+
+def _attn_params(cfg, key=0):
+    defs = dict(attn_defs(cfg, "attn"))
+    defs.update(norm_defs(cfg, "ln1"))
+    return init_params(defs, jax.random.PRNGKey(key))
+
+
+class TestFusedPrefillParity:
+    @pytest.mark.parametrize("rope_style", ["half", "partial", "none"])
+    @pytest.mark.parametrize("hkv", [2, 1])
+    def test_ladder_matches_standalone(self, rope_style, hkv):
+        """The cached k (and v) coming out of the fused plan ladder must
+        match the standalone norm+project+rope path — the cache stores
+        ROTATED k, so whichever rung fires has to hand back the same
+        heads."""
+        cfg = _cfg(rope_style=rope_style, hkv=hkv)
+        p = _attn_params(cfg)
+        x = _rand(9, (2, 128, 256))
+        positions = jnp.arange(128)
+        prenorm = norm_params(p, "ln1")
+
+        hn = apply_prenorm(cfg, x, prenorm)
+        q0, k0, v0 = project_qkv(cfg, p["attn"], hn)
+        q0, k0 = _apply_rope(cfg, q0, k0, positions, "reference")
+        q1, k1, v1 = project_qkv_heads(cfg, p["attn"], x, positions,
+                                       mode="pallas_interpret",
+                                       prenorm=prenorm)
+        for a, b in ((q0, q1), (k0, k1), (v0, v1)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=5e-4)
+
+    def test_windowed_prefill_cache_parity(self):
+        """Ring-cache prefill through the fused ladder vs reference."""
+        from repro.models.lm import lm_init_cache, lm_prefill
+        from repro.models.lm import lm_param_defs
+        cfg = _cfg(block_pattern=("local",), attn_window=64)
+        params = init_params(lm_param_defs(cfg), jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 128), 0, 512)
+        cache = lm_init_cache(cfg, 2, 128)
+        c_r, l_r = lm_prefill(cfg, params, toks, cache, mode="reference")
+        c_p, l_p = lm_prefill(cfg, params, toks, cache,
+                              mode="pallas_interpret")
+        for a, b in zip(jax.tree.leaves(c_r), jax.tree.leaves(c_p)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32), atol=5e-3)
+        np.testing.assert_allclose(np.asarray(l_r), np.asarray(l_p),
+                                   atol=5e-3)
+
+    def test_dense_and_paged_fused_prefill_caches_agree(self):
+        """block_prefill and block_prefill_paged route through the same
+        fused-QKV ladder: the k/v they cache must agree (dense slots vs
+        gathered pages)."""
+        from repro.models.lm import (lm_init_cache, lm_init_paged_cache,
+                                     lm_param_defs, lm_prefill,
+                                     lm_prefill_paged)
+        from repro.serve import kv_cache as kvc
+        cfg = _cfg()
+        params = init_params(lm_param_defs(cfg), jax.random.PRNGKey(0))
+        s, page, mp = 64, 16, 4
+        toks = jax.random.randint(jax.random.PRNGKey(1), (1, s), 0, 512)
+
+        dc = lm_init_cache(cfg, 1, s)
+        dc, dlog = lm_prefill(cfg, params, toks, dc, mode="pallas_interpret")
+        pc = lm_init_paged_cache(cfg, 1, 1 + mp, page)
+        page_rows = jnp.arange(1, 1 + mp, dtype=jnp.int32)
+        pc, plog = lm_prefill_paged(cfg, params, toks, pc, page_rows, 0, s,
+                                    mode="pallas_interpret")
+
+        d_leaves = jax.tree.leaves(dc)  # stacked dense cache leaves (k, v)
+        p_leaves = jax.tree.leaves(pc)
+        assert len(d_leaves) == len(p_leaves) == 2  # k and v stacks
+        pt = page_rows[None]
+        for dense, pages in zip(d_leaves, p_leaves):
+            for layer in range(cfg.num_layers):
+                gathered = kvc.gather_pages(pages[layer], pt)
+                np.testing.assert_allclose(
+                    np.asarray(gathered[:, :, :s], np.float32),
+                    np.asarray(dense[layer][:, :, :s], np.float32),
+                    atol=2e-4)
+        np.testing.assert_allclose(np.asarray(dlog), np.asarray(plog),
+                                   atol=5e-3)
+
+    def test_softcap_threads_through_model(self):
+        """configs/base.py attn_logit_softcap reaches the kernels: the same
+        params produce different logits with the cap on, and ref/pallas
+        stay in parity with it on."""
+        from repro.models.lm import lm_forward, lm_param_defs
+        cfg = _cfg(attn_logit_softcap=1.0)
+        params = init_params(lm_param_defs(cfg), jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0, 512)
+        l_cap, _ = lm_forward(cfg, params, toks, mode="reference")
+        l_ref, _ = lm_forward(dataclasses.replace(cfg,
+                                                  attn_logit_softcap=None),
+                              params, toks, mode="reference")
+        assert float(jnp.max(jnp.abs(l_cap - l_ref))) > 1e-3
+        l_pk, _ = lm_forward(cfg, params, toks, mode="pallas_interpret")
+        np.testing.assert_allclose(np.asarray(l_pk), np.asarray(l_cap),
+                                   atol=5e-3)
+
+    def test_decode_layer_honors_softcap(self):
+        from repro.models.attention import (decode_attention_layer,
+                                            init_attn_cache,
+                                            prefill_attn_cache)
+        cfg = _cfg(attn_logit_softcap=1.0)
+        p = _attn_params(cfg)
+        cache = init_attn_cache(cfg, 2, 32, None, jnp.float32)
+        # real context in the cache — with an empty cache the softmax has a
+        # single logit and capping is invisible by construction
+        k = _rand(6, (2, cfg.num_kv_heads, 16, cfg.head_dim))
+        v = _rand(7, (2, cfg.num_kv_heads, 16, cfg.head_dim))
+        cache = prefill_attn_cache(cfg, cache, k, v, 16, None)
+        x = _rand(5, (2, 1, 256))
+        o_cap, _ = decode_attention_layer(cfg, p["attn"], x, cache, 16,
+                                          mode="pallas_interpret")
+        cfg0 = dataclasses.replace(cfg, attn_logit_softcap=None)
+        o_ref, _ = decode_attention_layer(cfg0, p["attn"], x, cache, 16,
+                                          mode="pallas_interpret")
+        assert float(jnp.max(jnp.abs(o_cap - o_ref))) > 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Launch counts: a decoder attention sublayer is ~3 fused kernels
+# ---------------------------------------------------------------------------
+
+class _Counter:
+    """Monkeypatch a module attribute with a counting passthrough."""
+
+    def __init__(self, module, name):
+        self.module, self.name = module, name
+        self.orig = getattr(module, name)
+        self.calls = 0
+
+    def __enter__(self):
+        def counted(*a, **kw):
+            self.calls += 1
+            return self.orig(*a, **kw)
+        setattr(self.module, self.name, counted)
+        return self
+
+    def __exit__(self, *exc):
+        setattr(self.module, self.name, self.orig)
+
+
+class TestLaunchCounts:
+    def test_attention_sublayer_is_three_fused_launches_forward(self):
+        """Default llama-style decoder block, forward: the attention
+        sublayer traces to exactly 2 fused GEMM launches (packed q|k with
+        norm+rope folded in, v) + 1 flash launch — no standalone norm, no
+        standalone rope."""
+        cfg = _cfg()
+        p = _attn_params(cfg)
+        x = _rand(9, (2, 128, 256))
+        with _Counter(gemm_pkg, "gemm_fused") as g, \
+                _Counter(attn_ops, "flash_attention_fwd") as f, \
+                _Counter(mcommon, "apply_prenorm") as n, \
+                _Counter(mattn, "_apply_rope") as r:
+            mattn.attention_layer(cfg, p["attn"], x, causal=True,
+                                  mode="pallas_interpret",
+                                  prenorm=norm_params(p, "ln1"))
+        assert g.calls == 2, g.calls
+        assert f.calls == 1, f.calls
+        assert n.calls == 0, n.calls
+        assert r.calls == 0, r.calls
+
+    def test_attention_sublayer_backward_launches(self):
+        """jax.grad over the sublayer: 1 flash bwd launch + the fused bwd
+        GEMM pair per fwd GEMM (dA+dB for the packed q|k GEMM and the v
+        GEMM) — no oracle recompute."""
+        cfg = _cfg()
+        p = _attn_params(cfg)
+        x = _rand(9, (2, 128, 256))
+
+        def loss(x):
+            return jnp.sum(mattn.attention_layer(
+                cfg, p["attn"], x, causal=True, mode="pallas_interpret",
+                prenorm=norm_params(p, "ln1")) ** 2)
+
+        with _Counter(attn_ops, "flash_attention_bwd") as fb, \
+                _Counter(gemm_backward, "_gemm_bwd_da") as da, \
+                _Counter(gemm_backward, "_gemm_bwd_db") as db:
+            jax.grad(loss)(x)
+        assert fb.calls == 1, fb.calls
+        assert da.calls == 2, da.calls
+        assert db.calls == 2, db.calls
+
+    def test_gqa_backward_launches(self):
+        cfg = _cfg(hkv=1)
+        p = _attn_params(cfg)
+        x = _rand(9, (2, 128, 256))
+
+        def loss(x):
+            return jnp.sum(mattn.attention_layer(
+                cfg, p["attn"], x, causal=True, mode="pallas_interpret",
+                prenorm=norm_params(p, "ln1")) ** 2)
+
+        with _Counter(attn_ops, "flash_attention_bwd") as fb:
+            jax.grad(loss)(x)
+        assert fb.calls == 1, fb.calls
+
+
+# ---------------------------------------------------------------------------
+# Fusion plans from modeled dma_bytes
+# ---------------------------------------------------------------------------
+
+class TestAttentionFusionPlans:
+    def test_fused_plan_wins_from_bytes_alone(self):
+        plan = autotune.select_fusion("attention", (2, 4, 2, 1024, 1024, 64),
+                                      "bfloat16", causal=True)
+        assert plan["plan"] == "fused"
+        assert plan["fused_bytes"] < plan["unfused_bytes"]
+
+    def test_headline_cells_reduction(self):
+        """HipKittens' headline cells: d=64 forward and GQA backward must
+        model >= 1.2x traffic reduction (the unfused/fused ratio ~ 4S/d)."""
+        d64 = autotune.select_fusion("attention",
+                                     (16, 16, 16, 2048, 2048, 64),
+                                     "bfloat16", causal=True)
+        assert d64["plan"] == "fused"
+        assert d64["traffic_reduction"] >= 1.2, d64["traffic_reduction"]
+        gqa_bwd = autotune.select_fusion("attention",
+                                         (16, 64, 8, 2048, 2048, 128),
+                                         "bfloat16", causal=True,
+                                         backward=True)
+        assert gqa_bwd["plan"] == "fused"
+        assert gqa_bwd["traffic_reduction"] >= 1.2, \
+            gqa_bwd["traffic_reduction"]
+
+    def test_softcap_widens_unfused_side(self):
+        base = autotune.select_fusion("attention", (2, 4, 4, 512, 512, 64),
+                                      "bfloat16", causal=True)
+        capped = autotune.select_fusion("attention", (2, 4, 4, 512, 512, 64),
+                                        "bfloat16", causal=True, softcap=True)
+        assert capped["unfused_bytes"] > base["unfused_bytes"]
+        assert capped["fused_bytes"] == base["fused_bytes"]
+
+    def test_qkv_kind_needs_the_norm_to_win(self):
+        """Rope-free packed QKV only beats the eager two-GEMM path through
+        the folded pre-norm."""
+        shape = (4096, 1024, 8, 8, 128)
+        plain = autotune.select_fusion("qkv", shape, "bfloat16")
+        normed = autotune.select_fusion("qkv", shape, "bfloat16",
+                                        prenorm="rmsnorm")
+        assert plain["plan"] == "unfused"
+        assert normed["plan"] == "fused"
+
+    def test_attention_op_honors_plan(self):
+        """attention() consults the plan; the fused plan routes the flash
+        kernel (counted), never the eager reference."""
+        q, k, v = _qkv(s=128)
+        with _Counter(attn_ops, "flash_attention_fwd") as f:
+            attention(q, k, v, causal=True, mode="pallas_interpret")
+        assert f.calls == 1
