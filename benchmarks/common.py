@@ -15,21 +15,38 @@ import time
 
 import jax
 
+from repro import obs
+
 # When non-None, emit() also appends structured rows here (benchmarks.run
 # uses this to write machine-readable BENCH_<key>.json artifacts next to
 # the CSV stream, so the perf trajectory is diffable across commits).
 _CAPTURE: list | None = None
+# Telemetry capture bracketing the same window: begin_capture() opens an
+# obs.capture(), end_capture() closes it and parks the recorder so
+# write_bench_json() can embed the summary + export the trace files.
+_OBS_CM = None
+_LAST_REC: obs.Recorder | None = None
 
 
 def begin_capture() -> None:
-    global _CAPTURE
+    global _CAPTURE, _OBS_CM, _LAST_REC
     _CAPTURE = []
+    _OBS_CM = obs.capture()
+    _LAST_REC = _OBS_CM.__enter__()
 
 
 def end_capture() -> list:
-    global _CAPTURE
+    global _CAPTURE, _OBS_CM
     rows, _CAPTURE = _CAPTURE or [], None
+    if _OBS_CM is not None:
+        _OBS_CM.__exit__(None, None, None)
+        _OBS_CM = None
     return rows
+
+
+def last_recorder() -> obs.Recorder | None:
+    """The telemetry recorder from the most recent capture window."""
+    return _LAST_REC
 
 
 def parse_derived(derived: str) -> dict:
@@ -51,12 +68,26 @@ def parse_derived(derived: str) -> dict:
 
 
 def write_bench_json(key: str, rows: list, out_dir: str | None = None) -> str:
-    """Write BENCH_<key>.json (dir from $BENCH_OUT, default cwd)."""
+    """Write BENCH_<key>.json (dir from $BENCH_OUT, default cwd).
+
+    When a telemetry capture bracketed the bench (begin/end_capture), the
+    journal summary is embedded as a ``telemetry`` block and the full trace
+    is exported beside it as TRACE_<key>.json (Chrome-trace/Perfetto) and
+    COUNTERS_<key>.json (flat counters + launch counts).
+    """
     out_dir = out_dir or os.environ.get("BENCH_OUT", ".")
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"BENCH_{key}.json")
+    payload = {"bench": key, "rows": rows}
+    rec = _LAST_REC
+    if rec is not None:
+        payload["telemetry"] = rec.summary()
+        obs.export_chrome_trace(rec, os.path.join(out_dir,
+                                                  f"TRACE_{key}.json"))
+        obs.export_counters(rec, os.path.join(out_dir,
+                                              f"COUNTERS_{key}.json"))
     with open(path, "w") as f:
-        json.dump({"bench": key, "rows": rows}, f, indent=1, sort_keys=True)
+        json.dump(payload, f, indent=1, sort_keys=True)
     return path
 
 

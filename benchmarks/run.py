@@ -5,9 +5,12 @@ reference path; derived carries the modeled TPU-v5e reproduction numbers
 (this container has no TPU — see DESIGN.md §7 / EXPERIMENTS.md §Roofline).
 
 Each bench also writes a machine-readable ``BENCH_<key>.json`` (rows +
-parsed derived fields; directory from ``$BENCH_OUT``, default cwd) so the
-perf trajectory can be tracked across commits — CI uploads them as
-artifacts.
+parsed derived fields + a ``telemetry`` block from the launch journal;
+directory from ``$BENCH_OUT``, default cwd) so the perf trajectory can be
+tracked across commits — CI uploads them as artifacts. Beside each bench
+JSON land ``TRACE_<key>.json`` (Chrome-trace/Perfetto, load at
+https://ui.perfetto.dev) and ``COUNTERS_<key>.json`` (flat counters),
+validated in CI by ``tools/trace_check.py``.
 """
 from __future__ import annotations
 

@@ -27,6 +27,8 @@ import dataclasses
 import math
 from typing import Iterable, Optional
 
+from repro import obs
+
 from . import perf_model as pm
 from . import tiles
 from .grid_swizzle import ROW_MAJOR, SwizzleConfig, dma_bytes
@@ -484,6 +486,11 @@ def refine_with_cache_model(sig: OpSignature, policies: Iterable[KernelPolicy],
 
 _POLICY_CACHE: dict = {}
 _CACHE_STATS = {"hits": 0, "misses": 0}
+# Audit records live beside the memo caches so a cache *hit* can still
+# replay the original decision into the telemetry journal (cached=True) —
+# the decision is identical, the rescoring cost is zero (DESIGN.md §13).
+_POLICY_AUDIT: dict = {}
+_PLAN_AUDIT: dict = {}
 
 
 def select_policy(op: str, shape, dtype="bfloat16", *, causal: bool = False,
@@ -511,6 +518,12 @@ def select_policy(op: str, shape, dtype="bfloat16", *, causal: bool = False,
     hit = _POLICY_CACHE.get(key)
     if hit is not None:
         _CACHE_STATS["hits"] += 1
+        if obs.enabled():
+            audit = _POLICY_AUDIT.get(key)
+            if audit is not None:
+                obs.plan_decision("policy", op, sig.shape, sig.dtype,
+                                  audit["chosen"], audit["candidates"],
+                                  cached=True)
         return hit
     _CACHE_STATS["misses"] += 1
 
@@ -524,6 +537,20 @@ def select_policy(op: str, shape, dtype="bfloat16", *, causal: bool = False,
         finalists = scored[: min(8, len(scored))]
         best = refine_with_cache_model(sig, finalists)[0][0]
     _POLICY_CACHE[key] = best
+    # audit: the winner + the top losing candidates with their modeled
+    # time/bytes (bounded — a full candidate set can be hundreds deep)
+    cand_audit = []
+    for p in scored[:8]:
+        s = score_policy(sig, p, chip)
+        cand_audit.append({"policy": p.schedule.name,
+                           "blocks": [p.block_m, p.block_n, p.block_k],
+                           "time_s": s.time_s, "dma_bytes": s.dma_bytes,
+                           "chosen": p is best})
+    audit = {"chosen": best.describe(),
+             "candidates": cand_audit}
+    _POLICY_AUDIT[key] = audit
+    obs.plan_decision("policy", op, sig.shape, sig.dtype,
+                      audit["chosen"], audit["candidates"])
     return best
 
 
@@ -534,6 +561,8 @@ def policy_cache_stats() -> dict:
 def clear_policy_cache() -> None:
     _POLICY_CACHE.clear()
     _PLAN_CACHE.clear()
+    _POLICY_AUDIT.clear()
+    _PLAN_AUDIT.clear()
     _CACHE_STATS.update(hits=0, misses=0)
 
 
@@ -599,6 +628,12 @@ def select_fusion(kind: str, shape, dtype="bfloat16", *,
            chip.name)
     hit = _PLAN_CACHE.get(key)
     if hit is not None:
+        if obs.enabled():
+            audit = _PLAN_AUDIT.get(key)
+            if audit is not None:
+                obs.plan_decision("fusion", kind, shape, dtype,
+                                  audit["chosen"], audit["candidates"],
+                                  cached=True)
         return hit
     db = _DTYPE_BYTES.get(dtype, 2)
     if kind == "mlp":
@@ -638,6 +673,17 @@ def select_fusion(kind: str, shape, dtype="bfloat16", *,
         traffic_reduction=unfused["dma_bytes"] / max(1, fused["dma_bytes"]),
         fused=fused, unfused=unfused)
     _PLAN_CACHE[key] = plan
+    audit = {"chosen": {"plan": plan["plan"],
+                        "traffic_reduction": plan["traffic_reduction"],
+                        "prenorm": prenorm, "backward": bool(backward)},
+             "candidates": [
+                 {"plan": "fused", "dma_bytes": plan["fused_bytes"],
+                  "chosen": plan["plan"] == "fused"},
+                 {"plan": "unfused", "dma_bytes": plan["unfused_bytes"],
+                  "chosen": plan["plan"] == "unfused"}]}
+    _PLAN_AUDIT[key] = audit
+    obs.plan_decision("fusion", kind, shape, dtype,
+                      audit["chosen"], audit["candidates"])
     return plan
 
 

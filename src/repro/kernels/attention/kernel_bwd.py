@@ -35,6 +35,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import obs
 from repro.core import tiles
 from repro.core.policy import (KernelPolicy, legacy_attention_blocks,
                                resolve_policy)
@@ -261,6 +262,20 @@ def flash_attention_bwd(q, k, v, out, lse, do, *,
     if epilogue is None:
         epilogue = (policy.epilogue if policy.epilogue is not None
                     else ATTN_EPILOGUE_NONE)
+    if obs.enabled():
+        from repro.core import autotune
+        b, h, sq, d = q.shape
+        skv = k.shape[2]
+        sig = autotune.OpSignature("attention_bwd", (b, h, sq, skv, d),
+                                   str(q.dtype), causal=causal,
+                                   epilogue=policy.epilogue)
+        obs.launch("attention_bwd",
+                   variant="causal" if causal else "",
+                   grid=(b, h, max(1, sq // policy.block_q)),
+                   policy=policy, chain=str(epilogue.describe()),
+                   dma_bytes=autotune.score_policy(sig, policy).dma_bytes,
+                   flops=int(10 * b * h * sq * skv * d
+                             * (0.5 if causal else 1.0)))
     return _flash_bwd(q, k, v, out, lse, do, policy=policy, causal=causal,
                       window=window, logit_scale=logit_scale,
                       epilogue=epilogue, interpret=interpret)

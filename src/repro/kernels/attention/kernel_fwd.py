@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import obs
 from repro.core import tiles
 from repro.core.policy import (KernelPolicy, legacy_attention_blocks,
                                resolve_policy)
@@ -238,6 +239,21 @@ def flash_attention_fwd(q, k, v, *, policy: KernelPolicy | None = None,
     if epilogue is None:
         epilogue = (policy.epilogue if policy.epilogue is not None
                     else ATTN_EPILOGUE_NONE)
+    if obs.enabled():
+        from repro.core import autotune
+        b, h, sq, d = q.shape
+        skv = k.shape[2]
+        sig = autotune.OpSignature("attention_fwd", (b, h, sq, skv, d),
+                                   str(q.dtype), causal=causal,
+                                   epilogue=policy.epilogue)
+        obs.launch("attention_fwd",
+                   variant="windowed" if window else
+                   ("causal" if causal else ""),
+                   grid=(b, h, max(1, sq // policy.block_q)),
+                   policy=policy, chain=str(epilogue.describe()),
+                   dma_bytes=autotune.score_policy(sig, policy).dma_bytes,
+                   flops=int(4 * b * h * sq * skv * d
+                             * (0.5 if causal else 1.0)))
     return _flash_fwd(q, k, v, sinks, policy=policy, causal=causal,
                       window=window, logit_scale=logit_scale,
                       epilogue=epilogue, interpret=interpret)

@@ -27,6 +27,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import autotune
 from repro.core.policy import (KernelPolicy, legacy_attention_blocks,
                                make_policy, resolve_policy)
@@ -237,6 +238,15 @@ def attention_decode(q, k, v, lengths, *, window: int | None = None,
                 sink=sinks is not None)
             policy = resolve_decode_policy(b, hkv, group, slots, d, q.dtype,
                                            epilogue=epilogue)
+        if obs.enabled():
+            sig = autotune.OpSignature("attention_decode",
+                                       (b, hkv, group, slots, d),
+                                       str(q.dtype), epilogue=policy.epilogue)
+            obs.launch("attention_decode",
+                       grid=(b, hkv, max(1, slots // policy.block_kv)),
+                       policy=policy,
+                       dma_bytes=autotune.score_policy(sig, policy).dma_bytes,
+                       flops=4 * b * h * slots * d)
         out = flash_decode(qg, k, v, lengths, policy=policy, window=window,
                            logit_scale=logit_scale,
                            softcap=float(softcap) if softcap else 0.0,
@@ -282,6 +292,14 @@ def attention_decode_paged(q, k_pages, v_pages, page_table, lengths, *,
             policy = resolve_decode_policy(b, hkv, group, mp * page_size, d,
                                            q.dtype, page_size=page_size,
                                            epilogue=epilogue)
+        if obs.enabled():
+            sig = autotune.OpSignature("attention_decode",
+                                       (b, hkv, group, mp * page_size, d),
+                                       str(q.dtype), epilogue=policy.epilogue)
+            obs.launch("attention_decode", variant="paged",
+                       grid=(b, hkv, mp), policy=policy,
+                       dma_bytes=autotune.score_policy(sig, policy).dma_bytes,
+                       flops=4 * b * h * mp * page_size * d)
         out = flash_decode_paged(qg, k_pages, v_pages, page_table, lengths,
                                  policy=policy, window=window,
                                  logit_scale=logit_scale,

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import obs
 from repro.core.policy import KernelPolicy, resolve_policy
 
 
@@ -106,5 +107,13 @@ def fused_dropout_residual_layernorm(x, residual, weight, bias, seed,
                   else dict(block_rows=min(block_rows, rows), d=d))
         policy = resolve_policy("fused_norm", (rows, d), x.dtype,
                                 legacy_blocks=legacy, warn_what="fused_norm")
+    if obs.enabled():
+        from repro.core import perf_model as pm
+        obs.launch("fused_norm",
+                   grid=(max(1, rows // min(policy.block_rows, rows)),),
+                   policy=policy,
+                   dma_bytes=pm.dropout_residual_ln_traffic(
+                       rows, d, dtype_bytes=jnp.dtype(x.dtype).itemsize),
+                   flops=10 * rows * d)
     return _fused(x, residual, weight, bias, seed, policy=policy,
                   dropout_p=dropout_p, eps=eps, interpret=interpret)

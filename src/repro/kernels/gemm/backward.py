@@ -39,6 +39,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import obs
 from repro.core import autotune, tiles
 from repro.core.policy import KernelPolicy
 from .epilogue import EPILOGUE_NONE, Epilogue
@@ -447,6 +448,20 @@ def gemm_fused_bwd(a, b, extras, preacts, out, g, *, policy: KernelPolicy,
     ops = dict(zip(names, extras))
     da_pol, db_pol = policies if policies is not None else \
         resolve_bwd_policies(policy, m, n, k, a.dtype, epilogue, prologue)
+    if obs.enabled():
+        # journaled at the dispatch site (the launches themselves are jitted
+        # wrappers) — one event per bwd GEMM, same semantics the old
+        # monkeypatch counters had
+        db_bytes = jnp.dtype(a.dtype).itemsize
+        chain = f"{prologue.describe()}|{epilogue.describe()}"
+        obs.launch("gemm_bwd_da", variant="da", policy=da_pol, chain=chain,
+                   dma_bytes=autotune.gemm_bwd_traffic_bytes(
+                       da_pol, m, k, n, db_bytes, "da"),
+                   flops=2 * m * n * k)
+        obs.launch("gemm_bwd_db", variant="db", policy=db_pol, chain=chain,
+                   dma_bytes=autotune.gemm_bwd_traffic_bytes(
+                       db_pol, k, n, m, db_bytes, "db"),
+                   flops=(2 if epilogue.gate else 1) * 2 * m * n * k)
     da_out = _gemm_bwd_da(a, b, g, extras, preacts, policy=da_pol,
                           epilogue=epilogue, prologue=prologue,
                           interpret=interpret)

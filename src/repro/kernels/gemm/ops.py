@@ -21,11 +21,13 @@ from __future__ import annotations
 
 import contextlib
 import functools
+import time
 import warnings
 
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import autotune
 from repro.core.grid_swizzle import SwizzleConfig, ROW_MAJOR, best_window
 from repro.core.policy import KernelPolicy, make_policy
@@ -91,6 +93,13 @@ def gemm(a, b, *, policy: KernelPolicy | None = None,
             policy = _policy_from_swizzle(swizzle, m, n, k, a.dtype)
         else:
             policy = autotune.select_policy("gemm", (m, n, k), str(a.dtype))
+    if obs.enabled():
+        obs.launch("gemm",
+                   grid=(max(1, m // policy.block_m),
+                         max(1, n // policy.block_n)),
+                   policy=policy, flops=2 * m * n * k,
+                   dma_bytes=autotune.gemm_traffic_bytes(
+                       policy, m, n, k, jnp.dtype(a.dtype).itemsize))
     return gemm_pallas(a, b, policy=policy, out_dtype=out_dtype,
                        interpret=(mode == "pallas_interpret"))
 
@@ -310,5 +319,22 @@ def gemm_fused(a, b, *, epilogue: Epilogue = EPILOGUE_NONE,
         bwd_mode = _DEFAULT_BWD_MODE[0]
     if bwd_mode not in BWD_MODES:
         raise ValueError(f"unknown bwd_mode {bwd_mode!r}; have {BWD_MODES}")
-    return _gemm_fused(policy, out_dtype, mode == "pallas_interpret",
-                       epilogue, prologue, bwd_mode, a, b, tuple(extras))
+    timing = obs.timing_enabled()
+    t0 = time.perf_counter() if timing else 0.0
+    out = _gemm_fused(policy, out_dtype, mode == "pallas_interpret",
+                      epilogue, prologue, bwd_mode, a, b, tuple(extras))
+    if obs.enabled():
+        wall = None
+        if timing:
+            jax.block_until_ready(out)
+            wall = time.perf_counter() - t0
+        obs.launch("gemm_fused", variant=bwd_mode,
+                   grid=(max(1, m // policy.block_m),
+                         max(1, n // policy.block_n)),
+                   policy=policy,
+                   chain=f"{prologue.describe()}|{epilogue.describe()}",
+                   dma_bytes=autotune.gemm_traffic_bytes(
+                       policy, m, n, k, jnp.dtype(a.dtype).itemsize),
+                   flops=(2 if epilogue.gate else 1) * 2 * m * n * k,
+                   wall_s=wall)
+    return out

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro import obs
 from repro.core import tiles
 from repro.core.policy import KernelPolicy, resolve_policy
 
@@ -73,4 +74,12 @@ def rope_pallas(x, sin, cos, *, policy: KernelPolicy | None = None,
                   else dict(block_s=min(block_s, s), d=d))
         policy = resolve_policy("rope", (b, h, s, d), x.dtype,
                                 legacy_blocks=legacy, warn_what="rope_pallas")
+    if obs.enabled():
+        from repro.core import perf_model as pm
+        b, h, s, d = x.shape
+        obs.launch("rope",
+                   grid=(b, h, max(1, s // min(policy.block_rows, s))),
+                   policy=policy,
+                   dma_bytes=pm.rope_traffic(b, h, s, d),
+                   flops=6 * b * h * s * d)
     return _rope(x, sin, cos, policy=policy, interpret=interpret)

@@ -175,24 +175,29 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     n_chips = mesh.devices.size
     t0 = time.time()
-    # full compile: proves the production config lowers + memory analysis
-    fn, args = build_cell(cfg, shape_name, mesh)
-    with mesh:
-        lowered = fn.lower(*args)
-        compiled = lowered.compile()
-        mem = rf.memory_dict(compiled)
-    # costing compiles: scan-corrected roofline terms
-    roof = _extrapolated_costs(cfg, shape_name, mesh)
-    dt = time.time() - t0
-    model_flops = rf.model_flops_per_step(cfg, shape)
-    hlo_flops_total = roof.flops_per_chip * n_chips
-    # the kernel policies this cell resolves to (autotuner choice per bucket)
-    policies = rf.policy_cell_report(cfg, shape)
-    # fused-vs-unfused modeled traffic for the hot GEMM chains, incl. the
-    # norm-prologue cells and — on train shapes — the *_bwd cells scoring
-    # the kernel-side fused backward vs the oracle-recompute VJP
-    # (DESIGN.md §9-§11)
-    fusion = rf.fusion_cell_report(cfg, shape)
+    # the whole cell runs under a telemetry capture: the plan-audit journal
+    # explains *why* each policy/fusion choice below was made (every
+    # select_policy/select_fusion verdict with its losing candidates)
+    from repro import obs
+    with obs.capture() as cap:
+        # full compile: proves the production config lowers + memory analysis
+        fn, args = build_cell(cfg, shape_name, mesh)
+        with mesh:
+            lowered = fn.lower(*args)
+            compiled = lowered.compile()
+            mem = rf.memory_dict(compiled)
+        # costing compiles: scan-corrected roofline terms
+        roof = _extrapolated_costs(cfg, shape_name, mesh)
+        dt = time.time() - t0
+        model_flops = rf.model_flops_per_step(cfg, shape)
+        hlo_flops_total = roof.flops_per_chip * n_chips
+        # the kernel policies this cell resolves to (autotuner per bucket)
+        policies = rf.policy_cell_report(cfg, shape)
+        # fused-vs-unfused modeled traffic for the hot GEMM chains, incl.
+        # the norm-prologue cells and — on train shapes — the *_bwd cells
+        # scoring the kernel-side fused backward vs the oracle-recompute
+        # VJP (DESIGN.md §9-§11)
+        fusion = rf.fusion_cell_report(cfg, shape)
     record.update(
         status="ok", n_chips=n_chips, compile_s=round(dt, 1),
         memory=mem, roofline=roof.as_dict(),
@@ -201,6 +206,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
                             if hlo_flops_total else None),
         params=cfg.param_count(), active_params=cfg.active_param_count(),
         policies=policies, fusion=fusion,
+        launches=cap.launch_counts(),
+        plan_decisions=[p.to_json() for p in cap.plans],
     )
     if verbose:
         print(f"[dryrun] {arch} × {shape_name} × {mesh_kind}: "

@@ -122,21 +122,23 @@ def policy_cell_report(cfg, shape) -> dict:
     cell, with the policy's own modeled roofline position. This is what the
     dry-run records next to the HLO-derived terms: the HLO terms say where
     the *model* sits, these say how each *kernel* plans to get there."""
+    from repro import obs
     from repro.core import autotune
 
-    policies = autotune.policies_for_model(
-        cfg, batch=shape.global_batch, seq_len=shape.seq_len)
-    dtype = getattr(cfg, "compute_dtype", "bfloat16")
-    report = {}
-    for op, pol in sorted(policies.items()):
-        entry = pol.describe()
-        sig = _policy_signature(cfg, shape, op, dtype)
-        if sig is not None:
-            score = autotune.score_policy(sig, pol)
-            entry["modeled_time_s"] = score.time_s
-            entry["modeled_dma_bytes"] = score.dma_bytes
-            entry.update(dict(score.detail))
-        report[op] = entry
+    with obs.span("roofline.policy_report", kind=getattr(shape, "kind", "")):
+        policies = autotune.policies_for_model(
+            cfg, batch=shape.global_batch, seq_len=shape.seq_len)
+        dtype = getattr(cfg, "compute_dtype", "bfloat16")
+        report = {}
+        for op, pol in sorted(policies.items()):
+            entry = pol.describe()
+            sig = _policy_signature(cfg, shape, op, dtype)
+            if sig is not None:
+                score = autotune.score_policy(sig, pol)
+                entry["modeled_time_s"] = score.time_s
+                entry["modeled_dma_bytes"] = score.dma_bytes
+                entry.update(dict(score.detail))
+            report[op] = entry
     return report
 
 
@@ -157,6 +159,7 @@ def fusion_cell_report(cfg, shape) -> dict:
     model sits, these say how much of the memory term the fused paths
     remove.
     """
+    from repro import obs
     from repro.core import autotune
 
     dtype = getattr(cfg, "compute_dtype", "bfloat16")
@@ -180,32 +183,34 @@ def fusion_cell_report(cfg, shape) -> dict:
             report[name + "_bwd"] = cell(autotune.select_fusion(
                 kind, chain_shape, dtype, backward=True, **kw))
 
-    if dm and d_ff:
-        gated = getattr(cfg, "mlp_act", "swiglu") in ("swiglu", "geglu")
-        chain("mlp", "mlp", (tokens, dm, d_ff, gated))
-        chain("norm_mlp", "mlp", (tokens, dm, d_ff, gated),
-              prenorm=norm_kind)
-    h = getattr(cfg, "num_heads", 0)
-    d = getattr(cfg, "head_dim", 0) or 0
-    if dm and h and d:
-        hkv = getattr(cfg, "num_kv_heads", h) or h
-        if getattr(cfg, "rope_style", "none") == "half":
-            chain("qkv_rope", "qkv_rope", (tokens, dm, h, hkv, d))
-            chain("norm_qkv_rope", "qkv_rope", (tokens, dm, h, hkv, d),
+    with obs.span("roofline.fusion_report", kind=getattr(shape, "kind", "")):
+        if dm and d_ff:
+            gated = getattr(cfg, "mlp_act", "swiglu") in ("swiglu", "geglu")
+            chain("mlp", "mlp", (tokens, dm, d_ff, gated))
+            chain("norm_mlp", "mlp", (tokens, dm, d_ff, gated),
                   prenorm=norm_kind)
-        else:
-            # rope-free archs (BERT/Whisper/enc-dec, 'partial' rope): the
-            # packed-QKV chain only wins through the folded pre-norm, so
-            # only the norm_* cell is informative (DESIGN.md §12)
-            chain("norm_qkv", "qkv", (tokens, dm, h, hkv, d),
-                  prenorm=norm_kind)
-        # the attention op's own fused-vs-unfused plan (flash kernel vs
-        # materialized-scores eager path, DESIGN.md §12); softcap widens
-        # the unfused side's pass count
-        softcap = bool(getattr(cfg, "attn_logit_softcap", None))
-        chain("attention", "attention",
-              (shape.global_batch, h, hkv, shape.seq_len, shape.seq_len, d),
-              causal=True, softcap=softcap)
+        h = getattr(cfg, "num_heads", 0)
+        d = getattr(cfg, "head_dim", 0) or 0
+        if dm and h and d:
+            hkv = getattr(cfg, "num_kv_heads", h) or h
+            if getattr(cfg, "rope_style", "none") == "half":
+                chain("qkv_rope", "qkv_rope", (tokens, dm, h, hkv, d))
+                chain("norm_qkv_rope", "qkv_rope", (tokens, dm, h, hkv, d),
+                      prenorm=norm_kind)
+            else:
+                # rope-free archs (BERT/Whisper/enc-dec, 'partial' rope): the
+                # packed-QKV chain only wins through the folded pre-norm, so
+                # only the norm_* cell is informative (DESIGN.md §12)
+                chain("norm_qkv", "qkv", (tokens, dm, h, hkv, d),
+                      prenorm=norm_kind)
+            # the attention op's own fused-vs-unfused plan (flash kernel vs
+            # materialized-scores eager path, DESIGN.md §12); softcap widens
+            # the unfused side's pass count
+            softcap = bool(getattr(cfg, "attn_logit_softcap", None))
+            chain("attention", "attention",
+                  (shape.global_batch, h, hkv,
+                   shape.seq_len, shape.seq_len, d),
+                  causal=True, softcap=softcap)
     return report
 
 

@@ -17,6 +17,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels.attention import (attention as attention_op,
                                      attention_decode,
                                      attention_decode_paged)
@@ -65,6 +66,8 @@ def _apply_rope(cfg, q, k, positions, mode: str):
     """q/k: (B, H, S, hd). positions: (S,) absolute positions."""
     if cfg.rope_style == "none":
         return q, k
+    # any standalone (non-store-fused) rotation counts here, kernel or jnp
+    obs.incr("model.standalone_rope")
     hd = q.shape[-1]
     rot = hd // 2 if cfg.rope_style == "partial" else hd
     sin, cos = rope_tables(positions, rot, cfg.rope_theta)

@@ -13,6 +13,8 @@ from typing import Mapping, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+
 
 @dataclasses.dataclass(frozen=True)
 class ParamDef:
@@ -122,6 +124,9 @@ def norm_params(p, prefix: str) -> tuple:
 def apply_prenorm(cfg, x, prenorm: tuple):
     """Standalone fallback for a ``prenorm`` pair — identical math to
     apply_norm (the prologue's oracle)."""
+    # eager jnp, invisible to the kernel-launch journal — the counter is how
+    # "no standalone norm ran" is asserted through obs.capture()
+    obs.incr("model.standalone_norm")
     scale, bias = prenorm
     if getattr(cfg, "norm", "rmsnorm") == "rmsnorm":
         return rmsnorm(x, scale)

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import autotune
 from . import kv_cache as kvc
 
@@ -45,17 +46,29 @@ class GenerationResult:
     steps: int
 
 
-def _lru_get(lru: collections.OrderedDict, key, build, cap: int):
+def _lru_get(lru: collections.OrderedDict, key, build, cap: int,
+             stats: dict | None = None):
     """Get-or-build with LRU eviction — evicted entries drop their jitted
-    callables (and compiled executables) with them."""
+    callables (and compiled executables) with them. ``stats`` (an engine's
+    hits/misses/evictions dict) is also mirrored into the telemetry
+    counters when a capture is active."""
     entry = lru.get(key)
     if entry is None:
+        if stats is not None:
+            stats["misses"] += 1
+        obs.incr("engine.bucket_lru.misses")
         entry = build()
         lru[key] = entry
         while len(lru) > cap:
             lru.popitem(last=False)
+            if stats is not None:
+                stats["evictions"] += 1
+            obs.incr("engine.bucket_lru.evictions")
     else:
         lru.move_to_end(key)
+        if stats is not None:
+            stats["hits"] += 1
+        obs.incr("engine.bucket_lru.hits")
     return entry
 
 
@@ -76,6 +89,7 @@ class Engine:
         # re-compiled per prompt length.
         self._buckets: collections.OrderedDict = collections.OrderedDict()
         self._decode_jits: collections.OrderedDict = collections.OrderedDict()
+        self.lru_stats = {"hits": 0, "misses": 0, "evictions": 0}
 
     @property
     def bucket_policies(self) -> dict:
@@ -96,7 +110,7 @@ class Engine:
                         params, batch_, cache)),
             }
         return _lru_get(self._buckets, (batch, prompt_len), build,
-                        self.max_cached_buckets)
+                        self.max_cached_buckets, self.lru_stats)
 
     def _decode_fn(self, batch: int):
         model = self.model
@@ -107,7 +121,7 @@ class Engine:
                     params, tok, cache, pos),
                 donate_argnums=(2,) if self.donate_cache else ())
         return _lru_get(self._decode_jits, batch, build,
-                        self.max_cached_buckets)
+                        self.max_cached_buckets, self.lru_stats)
 
     def _sample(self, logits, temperature: float, rng):
         if temperature == 0.0:
@@ -123,21 +137,24 @@ class Engine:
         entry = self._bucket(b, s)
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         cache = self.model.init_cache(b, self.max_len)
-        if self.model.cfg.family == "encdec":
-            batch = dict(extra_batch or {}, inputs=prompts)
-            cache, logits = entry["prefill"](self.params, batch, cache)
-        else:
-            cache, logits = entry["prefill"](self.params, prompts, cache)
+        with obs.span("engine.prefill", batch=b, prompt_len=s):
+            if self.model.cfg.family == "encdec":
+                batch = dict(extra_batch or {}, inputs=prompts)
+                cache, logits = entry["prefill"](self.params, batch, cache)
+            else:
+                cache, logits = entry["prefill"](self.params, prompts, cache)
         toks = [prompts]
         rngs = jax.random.split(rng, max_new_tokens)
         decode = self._decode_fn(b)
         next_tok = self._sample(logits, temperature, rngs[0])[:, None]
-        for i in range(max_new_tokens):
-            toks.append(next_tok)
-            if i == max_new_tokens - 1:
-                break
-            cache, logits = decode(self.params, next_tok, cache, s + i)
-            next_tok = self._sample(logits, temperature, rngs[i + 1])[:, None]
+        with obs.span("engine.decode", batch=b, tokens=max_new_tokens):
+            for i in range(max_new_tokens):
+                toks.append(next_tok)
+                if i == max_new_tokens - 1:
+                    break
+                cache, logits = decode(self.params, next_tok, cache, s + i)
+                next_tok = self._sample(logits, temperature,
+                                        rngs[i + 1])[:, None]
         out = np.asarray(jnp.concatenate(toks, axis=1))
         return GenerationResult(out, s, max_new_tokens)
 
@@ -264,6 +281,10 @@ class PagedEngine:
         self.results: dict[int, np.ndarray] = {}
         self.steps = 0
         self.preemptions = 0
+        self.admissions = 0
+        self.tokens_generated = 0
+        self.peak_pages_in_use = 0
+        self.lru_stats = {"hits": 0, "misses": 0, "evictions": 0}
         # (batch_slots, page_count) -> {policies, decode}; ("prefill", S)
         # -> {policies, prefill}. LRU, compiled fns evicted with the entry.
         self._buckets: collections.OrderedDict = collections.OrderedDict()
@@ -274,7 +295,14 @@ class PagedEngine:
         return {k: e["policies"] for k, e in self._buckets.items()}
 
     def _touch(self, key, build) -> dict:
-        return _lru_get(self._buckets, key, build, self.max_cached_buckets)
+        return _lru_get(self._buckets, key, build, self.max_cached_buckets,
+                        self.lru_stats)
+
+    def _note_occupancy(self) -> None:
+        used = self.n_pages - 1 - self.alloc.free_pages
+        if used > self.peak_pages_in_use:
+            self.peak_pages_in_use = used
+        obs.gauge("engine.peak_pages_in_use", used)
 
     def _decode_bucket(self, mp_bucket: int) -> dict:
         """Compiled decode + pinned split-KV policy for a page-count bucket."""
@@ -352,13 +380,22 @@ class PagedEngine:
             # last page is zero-filled by write_prefill_pages instead.
             toks = np.asarray(req.prompt, np.int32)[None, :]
             entry = self._prefill_bucket(plen)
-            self.cache, logits = entry["prefill"](
-                self.params, jnp.asarray(toks), self.cache,
-                self.state["page_table"][slot], slot, plen)
+            with obs.span("engine.prefill", uid=req.uid, prompt_len=plen):
+                self.cache, logits = entry["prefill"](
+                    self.params, jnp.asarray(toks), self.cache,
+                    self.state["page_table"][slot], slot, plen)
             first = int(self._sample(logits)[0])
             self.slots[slot] = _Slot(req=req, n_pages=n, generated=[first],
                                      next_token=first)
             admitted += 1
+            self.admissions += 1
+            # the admission's first token is sampled off the prefill logits,
+            # not a decode step — count it here so tokens_generated covers
+            # every emitted token
+            self.tokens_generated += 1
+            obs.incr("engine.admissions")
+            obs.incr("engine.tokens_generated")
+            self._note_occupancy()
         return admitted
 
     def _try_grow(self) -> list:
@@ -397,6 +434,7 @@ class PagedEngine:
             rec.req.max_new_tokens - len(rec.generated))
         self.pending.appendleft(cont)
         self.preemptions += 1
+        obs.incr("engine.preemptions")
         del self.slots[slot]
 
     def _retire(self, slot: int, rec: _Slot) -> None:
@@ -440,18 +478,25 @@ class PagedEngine:
         max_pages = max(r.n_pages for r in self.slots.values())
         mp_bucket = min(self.max_pages_per_seq, _pow2(max_pages))
         entry = self._decode_bucket(mp_bucket)
+        self._note_occupancy()
 
         tokens = np.zeros((self.batch_slots, 1), np.int32)
         for slot, rec in self.slots.items():
             tokens[slot, 0] = rec.next_token
-        self.cache, logits = entry["decode"](
-            self.params, jnp.asarray(tokens), self.cache,
-            self.state["page_table"][:, :mp_bucket], self.state["lengths"])
-        self.state["lengths"] = self.state["lengths"] + jnp.asarray(
-            [1 if s in self.slots else 0 for s in range(self.batch_slots)],
-            jnp.int32)
-        sampled = self._sample(logits)
+        n_active = len(self.slots)
+        with obs.span("engine.decode_step", active_slots=n_active,
+                      mp_bucket=mp_bucket):
+            self.cache, logits = entry["decode"](
+                self.params, jnp.asarray(tokens), self.cache,
+                self.state["page_table"][:, :mp_bucket],
+                self.state["lengths"])
+            self.state["lengths"] = self.state["lengths"] + jnp.asarray(
+                [1 if s in self.slots else 0
+                 for s in range(self.batch_slots)], jnp.int32)
+            sampled = self._sample(logits)
         self.steps += 1
+        self.tokens_generated += n_active
+        obs.incr("engine.tokens_generated", n_active)
 
         for slot in list(self.slots):
             rec = self.slots[slot]
@@ -462,8 +507,25 @@ class PagedEngine:
                 self._retire(slot, rec)
         return bool(self.slots or self.pending)
 
+    def report(self) -> dict:
+        """Engine-level metrics (the run report, DESIGN.md §13): counts are
+        cumulative since construction, mirrored into the telemetry counters
+        whenever a capture is active."""
+        return {
+            "steps": self.steps,
+            "admissions": self.admissions,
+            "preemptions": self.preemptions,
+            "tokens_generated": self.tokens_generated,
+            "peak_pages_in_use": self.peak_pages_in_use,
+            "page_pool_size": self.n_pages - 1,
+            "bucket_lru": dict(self.lru_stats),
+            "completed": len(self.results),
+        }
+
     def run(self) -> dict:
-        """Drive :meth:`step` until idle; returns {uid: tokens} results."""
-        while self.step():
-            pass
+        """Drive :meth:`step` until idle; returns {uid: tokens} results.
+        :meth:`report` carries the run's engine metrics."""
+        with obs.span("engine.run"):
+            while self.step():
+                pass
         return self.results

@@ -17,6 +17,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import autotune
 from repro.optim import AdamWConfig, adamw_update, ef_compress
 from repro.distributed.sharding import batch_specs
@@ -147,6 +148,9 @@ def pin_bucket_policies(model, batch: dict, pinned: dict,
         pols = autotune.policies_for_model(model.cfg, batch=key[0],
                                            seq_len=key[1])
         pinned[key] = pols
+        if obs.enabled():   # guard: no f-string on the disabled path
+            obs.incr("trainer.bucket_pins")
+            obs.incr(f"trainer.bucket_pins.{key[0]}x{key[1]}")
         desc = "; ".join(f"{op}={p.schedule.name}{tuple(p.describe()['blocks'])}"
                          for op, p in sorted(pols.items()))
         log(f"[trainer] bucket {key}: pinned kernel policies "
@@ -202,9 +206,11 @@ def train_loop(model, data_iter, num_steps: int, opt_cfg: AdamWConfig, *,
             t0 = time.perf_counter()
             if failure_injector is not None:
                 failure_injector.maybe_fail(step)
-            state, metrics = step_fn(state, batch)
-            loss = float(jax.device_get(metrics["loss"]))
+            with obs.span("trainer.step", step=step):
+                state, metrics = step_fn(state, batch)
+                loss = float(jax.device_get(metrics["loss"]))
             dt = time.perf_counter() - t0
+            obs.incr("trainer.steps")
             if watchdog is not None:
                 watchdog.observe(step, dt)
             losses.append(loss)

@@ -157,30 +157,20 @@ class TestKernelBackward:
 
     def test_default_path_runs_fused_launches(self):
         """jax.grad on the default path traces BOTH bwd GEMMs through the
-        fused Pallas launches — no jnp-oracle recompute."""
-        calls = {"da": 0, "db": 0}
-        orig_da, orig_db = gemm_backward._gemm_bwd_da, gemm_backward._gemm_bwd_db
+        fused Pallas launches — no jnp-oracle recompute. Counted through
+        the telemetry journal (obs.capture), which records one
+        gemm_bwd_da/gemm_bwd_db event per fused bwd dispatch."""
+        from repro import obs
 
-        def count_da(*a, **kw):
-            calls["da"] += 1
-            return orig_da(*a, **kw)
-
-        def count_db(*a, **kw):
-            calls["db"] += 1
-            return orig_db(*a, **kw)
-
-        gemm_backward._gemm_bwd_da = count_da
-        gemm_backward._gemm_bwd_db = count_db
-        try:
-            a = _rand(0, (128, 128))
-            b2 = _rand(2, (128, 128))
-            ep = Epilogue(activation="silu", gate=True)
+        a = _rand(0, (128, 128))
+        b2 = _rand(2, (128, 128))
+        ep = Epilogue(activation="silu", gate=True)
+        with obs.capture() as cap:
             jax.grad(lambda a_: _loss(a_, a, (b2,), ["b2"], ep,
                                       Prologue()))(a)
-        finally:
-            gemm_backward._gemm_bwd_da = orig_da
-            gemm_backward._gemm_bwd_db = orig_db
-        assert calls["da"] == 1 and calls["db"] == 1, calls
+        counts = cap.launch_counts()
+        assert cap.count("gemm_bwd_da") == 1, counts
+        assert cap.count("gemm_bwd_db") == 1, counts
 
     def test_swizzle_invariance_of_gradients(self):
         """Grid order must never change gradients either: the bwd launches

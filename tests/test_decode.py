@@ -320,6 +320,16 @@ class TestPagedEngine:
         results = eng.run()
         assert eng.preemptions > 0
         assert eng.alloc.free_pages == eng.n_pages - 1
+        # the run report carries the same story: forced preemption, a pool
+        # that actually filled, and the bucket-LRU stats block
+        rep = eng.report()
+        assert rep["preemptions"] == eng.preemptions > 0
+        assert rep["admissions"] >= len(reqs)   # re-admits count too
+        assert 0 < rep["peak_pages_in_use"] <= rep["page_pool_size"] == 4
+        assert rep["tokens_generated"] >= sum(r.max_new_tokens
+                                              for r in reqs)
+        assert set(rep["bucket_lru"]) == {"hits", "misses", "evictions"}
+        assert rep["completed"] == len(reqs)
         fixed = Engine(model, params, max_len=64)
         for r in reqs:
             want = fixed.generate(r.prompt[None, :], r.max_new_tokens)

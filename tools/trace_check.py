@@ -1,0 +1,140 @@
+"""Trace check: validate the telemetry artifacts the bench runner emits.
+
+Every bench run writes, beside each ``BENCH_<key>.json``:
+
+  * ``TRACE_<key>.json``    — Chrome-trace/Perfetto JSON (``traceEvents``)
+  * ``COUNTERS_<key>.json`` — flat counters + launch counts
+
+CI runs this after the bench smoke (.github/workflows/ci.yml, trace-check
+step) so a malformed exporter can't silently ship unloadable traces. Three
+checks per file set:
+
+  1. **Chrome-trace schema** — top level is an object with a ``traceEvents``
+     list; every event carries ``name``/``ph``/``pid``/``ts`` with sane
+     types; ``X`` events carry ``dur``; ``C`` events carry a numeric
+     ``args.value``. This is the subset both chrome://tracing and Perfetto
+     require to load a file.
+  2. **Counters schema** — ``counters`` maps str -> number and ``launches``
+     maps str -> non-negative int (the stable key contract BENCH json
+     consumers rely on).
+  3. **Bench embedding** — when the matching ``BENCH_<key>.json`` is
+     present, its ``telemetry.launches`` block must agree with the
+     counters file's ``launches``.
+
+Run from the repo root: ``python tools/trace_check.py [dir]`` (default:
+``$BENCH_OUT`` or cwd). Exits non-zero listing every violation.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import sys
+
+_PHASES = {"B", "E", "X", "i", "I", "C", "M", "b", "e", "n", "s", "t", "f"}
+
+
+def check_trace(path: pathlib.Path) -> list[str]:
+    errs = []
+    try:
+        doc = json.loads(path.read_text())
+    except Exception as e:  # noqa: BLE001 — a parse failure IS the finding
+        return [f"{path.name}: not valid JSON ({e})"]
+    if not isinstance(doc, dict) or not isinstance(
+            doc.get("traceEvents"), list):
+        return [f"{path.name}: missing top-level traceEvents list"]
+    for i, ev in enumerate(doc["traceEvents"]):
+        where = f"{path.name}: traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            errs.append(f"{where}: not an object")
+            continue
+        if not isinstance(ev.get("name"), str) or not ev.get("name"):
+            errs.append(f"{where}: missing/empty name")
+        ph = ev.get("ph")
+        if ph not in _PHASES:
+            errs.append(f"{where}: bad phase {ph!r}")
+        if not isinstance(ev.get("pid"), int):
+            errs.append(f"{where}: missing integer pid")
+        if not isinstance(ev.get("ts"), (int, float)):
+            errs.append(f"{where}: missing numeric ts")
+        if ph == "X" and not isinstance(ev.get("dur"), (int, float)):
+            errs.append(f"{where}: 'X' event without numeric dur")
+        if ph == "C":
+            val = (ev.get("args") or {}).get("value")
+            if not isinstance(val, (int, float)):
+                errs.append(f"{where}: 'C' event without numeric args.value")
+    return errs
+
+
+def check_counters(path: pathlib.Path) -> list[str]:
+    errs = []
+    try:
+        doc = json.loads(path.read_text())
+    except Exception as e:  # noqa: BLE001
+        return [f"{path.name}: not valid JSON ({e})"]
+    if not isinstance(doc, dict):
+        return [f"{path.name}: top level is not an object"]
+    counters = doc.get("counters")
+    if not isinstance(counters, dict):
+        errs.append(f"{path.name}: missing counters object")
+    else:
+        for k, v in counters.items():
+            if not isinstance(k, str) or not isinstance(v, (int, float)):
+                errs.append(f"{path.name}: counters[{k!r}] = {v!r} "
+                            "is not str -> number")
+    launches = doc.get("launches")
+    if not isinstance(launches, dict):
+        errs.append(f"{path.name}: missing launches object")
+    else:
+        for k, v in launches.items():
+            if (not isinstance(k, str) or not isinstance(v, int)
+                    or isinstance(v, bool) or v < 0):
+                errs.append(f"{path.name}: launches[{k!r}] = {v!r} "
+                            "is not str -> non-negative int")
+    return errs
+
+
+def check_bench_embedding(counters_path: pathlib.Path) -> list[str]:
+    key = counters_path.name[len("COUNTERS_"):]
+    bench = counters_path.parent / f"BENCH_{key}"
+    if not bench.exists():
+        return []
+    try:
+        want = json.loads(counters_path.read_text()).get("launches")
+        got = (json.loads(bench.read_text()).get("telemetry") or {}) \
+            .get("launches")
+    except Exception as e:  # noqa: BLE001
+        return [f"{bench.name}: not valid JSON ({e})"]
+    if got is None:
+        return [f"{bench.name}: no telemetry.launches block"]
+    if got != want:
+        return [f"{bench.name}: telemetry.launches disagrees with "
+                f"{counters_path.name} ({got} != {want})"]
+    return []
+
+
+def main(argv: list[str]) -> int:
+    out_dir = pathlib.Path(argv[1] if len(argv) > 1
+                           else os.environ.get("BENCH_OUT", "."))
+    traces = sorted(out_dir.glob("TRACE_*.json"))
+    counters = sorted(out_dir.glob("COUNTERS_*.json"))
+    if not traces and not counters:
+        print(f"trace-check: no TRACE_*/COUNTERS_* files in {out_dir}",
+              file=sys.stderr)
+        return 1
+    errs: list[str] = []
+    for p in traces:
+        errs += check_trace(p)
+    for p in counters:
+        errs += check_counters(p)
+        errs += check_bench_embedding(p)
+    for e in errs:
+        print(f"trace-check: {e}", file=sys.stderr)
+    if not errs:
+        print(f"trace-check: OK ({len(traces)} traces, "
+              f"{len(counters)} counter files in {out_dir})")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
