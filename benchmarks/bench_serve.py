@@ -1,0 +1,156 @@
+"""Serving fast-path benchmark: prefix cache, chunked prefill, speculation.
+
+vLLM-class throughput features over the paged engine (DESIGN.md §14), on
+the smoke LM with measured XLA-CPU wall clock for scale and modeled-v5e
+numbers as the deliverable (DESIGN.md §7):
+
+  * ``serve_slots_b{N}`` — end-to-end tokens/s as active slots grow (the
+    continuous-batching curve).
+  * ``serve_prefix_warm`` — every request repeats one system prompt; after
+    a priming run the trie serves the shared pages, so ``hit_rate`` is 1.0
+    and ``prefill_traffic_reduction`` is the modeled cold/warm GEMM-work
+    ratio (the CI floor is 2x).
+  * ``serve_chunked`` — fixed-size chunks interleave with decode;
+    ``stall_frac`` is the modeled worst decode-step stall (one chunk) as a
+    fraction of one full-prompt prefill — bounded below 1.0 by
+    construction.
+  * ``serve_spec_selfdraft`` — draft == target, so every proposal verifies
+    and ``mean_tokens_per_round`` == spec_tokens; the modeled
+    ``verify_speedup`` is the serial-vs-verify KV-stream ratio.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import perf_model as pm
+from repro.models.api import build_model
+from repro.serve.engine import PagedEngine, Request
+from .common import emit
+
+# modeled-v5e shape for the derived columns (an 8B-class GQA LM; the smoke
+# LM only provides the measured XLA-CPU scale)
+MODELED = dict(d_model=4096, n_layers=32, num_heads=32, kv_heads=8,
+               head_dim=128, d_ff=12800)
+
+
+def _build():
+    cfg = get_config("granite-8b", smoke=True)
+    model = build_model(cfg, mode="reference")
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _run(eng, reqs) -> float:
+    """Submit + run to idle; returns wall seconds."""
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.perf_counter()
+    eng.run()
+    return time.perf_counter() - t0
+
+
+def _reqs(cfg, n, plen, max_new, *, prefix=None, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for uid in range(n):
+        tail_len = plen - (len(prefix) if prefix is not None else 0)
+        tail = rng.integers(0, cfg.vocab_size, tail_len).astype(np.int32)
+        prompt = (np.concatenate([prefix, tail]) if prefix is not None
+                  else tail)
+        out.append(Request(uid, prompt, max_new))
+    return out
+
+
+def _throughput(cfg, model, params, slots, n_req, plen, max_new):
+    eng = PagedEngine(model, params, batch_slots=slots, page_size=8,
+                      max_pages_per_seq=8)
+    wall = _run(eng, _reqs(cfg, n_req, plen, max_new))
+    rep = eng.report()
+    dec = pm.decode_step_model(batch=slots, kv_heads=MODELED["kv_heads"],
+                               group=MODELED["num_heads"]
+                               // MODELED["kv_heads"],
+                               kv_len=plen + max_new,
+                               head_dim=MODELED["head_dim"], block_kv=256)
+    modeled_tps = slots / (dec["time_s"] * MODELED["n_layers"])
+    emit(f"serve_slots_b{slots}", wall * 1e6,
+         f"tokens_per_s={rep['tokens_generated'] / wall:.1f};"
+         f"modeled_v5e_tokens_per_s={modeled_tps:.0f};"
+         f"steps={rep['steps']};admissions={rep['admissions']}")
+
+
+def _prefix_cell(cfg, model, params, plen, suffix, max_new):
+    sys_prompt = np.arange(1, plen - suffix + 1, dtype=np.int32) \
+        % cfg.vocab_size
+    eng = PagedEngine(model, params, batch_slots=2, page_size=8,
+                      max_pages_per_seq=8, n_pages=64, prefix_cache=True)
+    # priming run populates the trie; the measured cell is all warm
+    _run(eng, _reqs(cfg, 1, plen, 2, prefix=sys_prompt, seed=1))
+    eng.prefix.lookups = eng.prefix.hits = eng.prefix.matched_tokens = 0
+    wall = _run(eng, _reqs(cfg, 4, plen, max_new, prefix=sys_prompt, seed=2))
+    rep = eng.report()["prefix_cache"]
+    cold = pm.serve_prefill_model(tokens=1024, total_tokens=1024, **MODELED)
+    warm = pm.serve_prefill_model(
+        tokens=1024 * suffix // plen, total_tokens=1024, **MODELED)
+    emit("serve_prefix_warm", wall * 1e6,
+         f"hit_rate={rep['hit_rate']:.2f};"
+         f"matched_tokens={rep['matched_tokens']};"
+         f"pages_held={rep['pages_held']};"
+         f"prefill_traffic_reduction="
+         f"{cold['gemm_flops'] / warm['gemm_flops']:.2f}x")
+
+
+def _chunked_cell(cfg, model, params, plen, chunk, max_new):
+    eng = PagedEngine(model, params, batch_slots=2, page_size=8,
+                      max_pages_per_seq=8, chunk_tokens=chunk)
+    wall = _run(eng, _reqs(cfg, 3, plen, max_new, seed=3))
+    rep = eng.report()["chunked_prefill"]
+    full = pm.serve_prefill_model(tokens=1024, total_tokens=1024, **MODELED)
+    one = pm.serve_prefill_model(tokens=1024 * chunk // plen,
+                                 total_tokens=1024, **MODELED)
+    emit("serve_chunked", wall * 1e6,
+         f"chunk_tokens={chunk};chunks={rep['chunks']};"
+         f"modeled_stall_us={one['time_s'] * 1e6:.1f};"
+         f"modeled_full_prefill_us={full['time_s'] * 1e6:.1f};"
+         f"stall_frac={one['time_s'] / full['time_s']:.3f}")
+
+
+def _spec_cell(cfg, model, params, plen, k, max_new):
+    eng = PagedEngine(model, params, batch_slots=2, page_size=8,
+                      max_pages_per_seq=8, draft_model=model,
+                      draft_params=params, spec_tokens=k)
+    wall = _run(eng, _reqs(cfg, 3, plen, max_new, seed=4))
+    rep = eng.report()["speculative"]
+    sv = pm.spec_verify_model(batch=2, kv_heads=MODELED["kv_heads"],
+                              group=MODELED["num_heads"]
+                              // MODELED["kv_heads"],
+                              kv_len=4096, head_dim=MODELED["head_dim"],
+                              block_kv=256, q_tokens=k,
+                              mean_accepted=rep["mean_tokens_per_round"])
+    emit("serve_spec_selfdraft", wall * 1e6,
+         f"k={k};rounds={rep['rounds']};"
+         f"accept_rate={rep['accept_rate']:.2f};"
+         f"mean_tokens_per_round={rep['mean_tokens_per_round']:.2f};"
+         f"modeled_verify_speedup={sv['speedup_vs_serial']:.2f}x")
+
+
+def main() -> None:
+    smoke = bool(os.environ.get("BENCH_SMOKE"))
+    cfg, model, params = _build()
+    if smoke:
+        slot_counts, n_req, plen, max_new, chunk, k = (1, 2), 3, 24, 4, 8, 3
+    else:
+        slot_counts, n_req, plen, max_new, chunk, k = (1, 2, 4), 6, 48, 8, 16, 4
+    for slots in slot_counts:
+        _throughput(cfg, model, params, slots, n_req, plen, max_new)
+    _prefix_cell(cfg, model, params, plen, suffix=8, max_new=max_new)
+    _chunked_cell(cfg, model, params, plen, chunk, max_new)
+    _spec_cell(cfg, model, params, plen, k, max_new)
+
+
+if __name__ == "__main__":
+    main()

@@ -611,3 +611,83 @@ def attention_chain_bwd_model(*, batch: int, heads: int, kv_heads: int,
         total = recompute + passes * smat + operands + writes
         flops *= 1.5                             # the fwd recompute
     return _chain_dict(total, flops, fused, dtype_bytes, chip)
+
+
+# ---------------------------------------------------------------------------
+# Serving-path models (DESIGN.md §14): prefill traffic under prefix caching
+# and the speculative verify round. These put modeled-v5e numbers behind the
+# serve benchmark's derived columns, the same way decode_step_model backs
+# the decode sweep.
+# ---------------------------------------------------------------------------
+
+
+def serve_prefill_model(*, tokens: int, total_tokens: int, d_model: int,
+                        n_layers: int, num_heads: int, kv_heads: int,
+                        head_dim: int, d_ff: int, dtype_bytes: int = 2,
+                        chip: ChipSpec = V5E) -> dict:
+    """Model one prompt prefill that computes ``tokens`` new positions of a
+    ``total_tokens``-long prompt.
+
+    ``tokens == total_tokens`` is the cold path; ``tokens < total_tokens``
+    is the prefix-cached suffix path (the cached prefix contributes KV
+    stream to the suffix's attention but no QKV/MLP compute and no KV
+    writes). Weights stream once per launch regardless of token count, so
+    short suffixes are weight-bound — exactly why prefix caching pays: the
+    per-token GEMM work (``flops``) is what the hit removes.
+    """
+    w_attn = (d_model * (num_heads + 2 * kv_heads) * head_dim
+              + num_heads * head_dim * d_model)
+    w_mlp = 3 * d_model * d_ff                   # gate/up/down
+    weight_bytes = n_layers * (w_attn + w_mlp) * dtype_bytes
+    # activations round-trip per computed token; new KV is written once,
+    # and the suffix's attention re-streams the cached prefix KV
+    act_bytes = n_layers * tokens * (6 * d_model
+                                     + 2 * kv_heads * head_dim) * dtype_bytes
+    prefix_kv_bytes = (n_layers * 2 * kv_heads * head_dim
+                       * (total_tokens - tokens) * dtype_bytes)
+    gemm_flops = n_layers * 2.0 * tokens * (w_attn + w_mlp)
+    # causal attention over the full (cached + computed) context; the mean
+    # visible prefix of the computed span is total - tokens/2
+    attn_flops = (n_layers * 4.0 * num_heads * head_dim * tokens
+                  * (total_tokens - tokens / 2.0))
+    flops = gemm_flops + attn_flops
+    dma_bytes = weight_bytes + act_bytes + prefix_kv_bytes
+    compute_s = flops / chip.peak_flops(dtype_bytes)
+    memory_s = dma_bytes / chip.hbm_bw
+    return dict(tokens=tokens, total_tokens=total_tokens, flops=flops,
+                gemm_flops=gemm_flops, dma_bytes=int(dma_bytes),
+                weight_bytes=int(weight_bytes), compute_s=compute_s,
+                memory_s=memory_s, time_s=max(compute_s, memory_s),
+                bound="compute" if compute_s >= memory_s else "memory")
+
+
+def spec_verify_model(*, batch: int, kv_heads: int, group: int, kv_len: int,
+                      head_dim: int, block_kv: int, q_tokens: int,
+                      mean_accepted: float, draft_cost_frac: float = 0.15,
+                      dtype_bytes: int = 2, chip: ChipSpec = V5E) -> dict:
+    """Model one speculative round against serial decode.
+
+    The verify launch streams the KV pool ONCE for ``q_tokens`` query rows
+    (they ride in the q tile next to the GQA group), where serial decode
+    would stream it ``mean_accepted`` times — that traffic ratio is the
+    whole speedup, bounded by the acceptance rate. ``draft_cost_frac`` is
+    one draft micro-step's cost relative to a target decode step (a k-times
+    smaller draft ≈ 1/k the weight+KV stream).
+    """
+    verify = decode_step_model(batch=batch, kv_heads=kv_heads,
+                               group=group * q_tokens, kv_len=kv_len,
+                               head_dim=head_dim, block_kv=block_kv,
+                               dtype_bytes=dtype_bytes, chip=chip)
+    serial = decode_step_model(batch=batch, kv_heads=kv_heads, group=group,
+                               kv_len=kv_len, head_dim=head_dim,
+                               block_kv=block_kv, dtype_bytes=dtype_bytes,
+                               chip=chip)
+    round_s = verify["time_s"] * (1.0 + draft_cost_frac * q_tokens)
+    serial_s = mean_accepted * serial["time_s"]
+    return dict(q_tokens=q_tokens, mean_accepted=mean_accepted,
+                verify_time_s=verify["time_s"], round_time_s=round_s,
+                serial_time_s=serial_s,
+                speedup_vs_serial=serial_s / round_s if round_s else 0.0,
+                kv_stream_ratio=(mean_accepted * serial["kv_bytes"]
+                                 / verify["kv_bytes"]
+                                 if verify["kv_bytes"] else 0.0))

@@ -55,18 +55,20 @@ MASK_VALUE = -1e30
 def _split_partials(q, k, v, valid, scale, softcap: float = 0.0):
     """Partial attention of one KV split.
 
-    q: (G, D) f32, k/v: (bkv, D), valid: (bkv,) bool. ``softcap``: tanh
-    logit cap applied in-split (0 = off). Returns unnormalized
-    (o (G, D) f32, m (G,), l (G,)); a fully-masked split yields
-    (0, MASK_VALUE, 0) which the combine weights to zero.
+    q: (G, D) f32, k/v: (bkv, D), valid: (bkv,) bool — or (G, bkv) bool
+    when rows carry different positions (multi-token verify queries).
+    ``softcap``: tanh logit cap applied in-split (0 = off). Returns
+    unnormalized (o (G, D) f32, m (G,), l (G,)); a fully-masked split
+    yields (0, MASK_VALUE, 0) which the combine weights to zero.
     """
     s = jax.lax.dot_general(q, k.astype(jnp.float32), (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
     s = cap_logits(s, softcap)
-    s = jnp.where(valid[None, :], s, MASK_VALUE)
+    vmask = valid if valid.ndim == 2 else valid[None, :]
+    s = jnp.where(vmask, s, MASK_VALUE)
     m = jnp.max(s, axis=1)
     p = jnp.exp(s - m[:, None])
-    p = jnp.where(valid[None, :], p, 0.0)
+    p = jnp.where(vmask, p, 0.0)
     l = jnp.sum(p, axis=1)
     o = jax.lax.dot_general(p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
                             preferred_element_type=jnp.float32)
@@ -129,15 +131,34 @@ def _decode_kernel(lengths_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
 
 def _decode_kernel_paged(page_table_ref, lengths_ref, q_ref, k_ref, v_ref,
                          o_ref, m_ref, l_ref, *, page_size: int, scale: float,
-                         window: int | None, softcap: float = 0.0):
-    """Paged variant: grid (B, Hkv, max_pages); one physical page per step."""
+                         window: int | None, softcap: float = 0.0,
+                         q_tokens: int = 1):
+    """Paged variant: grid (B, Hkv, max_pages); one physical page per step.
+
+    ``q_tokens`` > 1 is the speculative-verify shape: the q tile packs
+    T = q_tokens query positions per GQA group row-major (row = g*T + t),
+    token t sitting at absolute position ``length - T + t``, so each row
+    gets its own causal (and window) mask.
+    """
     b = pl.program_id(0)
     j = pl.program_id(2)
     length = lengths_ref[b]
-    idx = j * page_size + jax.lax.broadcasted_iota(jnp.int32, (page_size,), 0)
-    valid = idx < length
-    if window is not None:
-        valid &= (length - 1 - idx) < window
+    if q_tokens == 1:
+        idx = j * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (page_size,), 0)
+        valid = idx < length
+        if window is not None:
+            valid &= (length - 1 - idx) < window
+    else:
+        rows = q_ref.shape[2]
+        pos_row = length - q_tokens + (
+            jax.lax.broadcasted_iota(jnp.int32, (rows, page_size), 0)
+            % q_tokens)
+        idx = j * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (rows, page_size), 1)
+        valid = idx <= pos_row
+        if window is not None:
+            valid &= (pos_row - idx) < window
     o, m, l = _split_partials(q_ref[0, 0].astype(jnp.float32),
                               k_ref[0, 0], v_ref[0, 0], valid, scale, softcap)
     o_ref[0, 0, 0] = o
@@ -223,13 +244,13 @@ def flash_decode(q, k, v, lengths, *, policy: KernelPolicy,
 @functools.partial(
     jax.jit,
     static_argnames=("policy", "window", "logit_scale", "softcap",
-                     "interpret"),
+                     "interpret", "q_tokens"),
 )
 def flash_decode_paged(q, k_pages, v_pages, page_table, lengths, *,
                        policy: KernelPolicy, window: int | None = None,
                        logit_scale: float | None = None,
                        softcap: float = 0.0, sinks=None,
-                       interpret: bool = True):
+                       interpret: bool = True, q_tokens: int = 1):
     """Split-KV decode over a paged KV pool (one split == one page).
 
     q: (B, Hkv, G, D); k_pages/v_pages: (P, Hkv, page_size, D) physical
@@ -237,6 +258,11 @@ def flash_decode_paged(q, k_pages, v_pages, page_table, lengths, *,
     page for never-written entries); lengths: (B,) tokens written so far.
     ``softcap``/``sinks`` as in :func:`flash_decode`. Returns
     (B, Hkv, G, D) in q.dtype.
+
+    ``q_tokens`` > 1: G packs group * q_tokens rows (row = g*T + t) and
+    row t attends through position ``lengths - q_tokens + t`` — the
+    speculative-decoding verify step, which streams the KV pool exactly
+    once for all T tokens.
     """
     b, hkv, g, d = q.shape
     n_pages, _, page_size, _ = k_pages.shape
@@ -255,7 +281,8 @@ def flash_decode_paged(q, k_pages, v_pages, page_table, lengths, *,
     out_specs, out_shapes = _partial_specs(b, hkv, mp, g, d)
 
     kernel = functools.partial(_decode_kernel_paged, page_size=page_size,
-                               scale=scale, window=window, softcap=softcap)
+                               scale=scale, window=window, softcap=softcap,
+                               q_tokens=q_tokens)
     o, m, l = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(

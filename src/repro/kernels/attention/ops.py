@@ -179,8 +179,8 @@ def attention(q, k, v, *, causal: bool = False, window: int | None = None,
 def resolve_decode_policy(batch: int, kv_heads: int, group: int, kv_len: int,
                           head_dim: int, dtype, *,
                           page_size: int | None = None,
-                          epilogue: AttnEpilogue | None = None
-                          ) -> KernelPolicy:
+                          epilogue: AttnEpilogue | None = None,
+                          q_tokens: int = 1) -> KernelPolicy:
     """The decode policy for a launch signature (DESIGN.md §5 / §8).
 
     Contiguous caches go through the autotuner (the split size is the one
@@ -197,9 +197,13 @@ def resolve_decode_policy(batch: int, kv_heads: int, group: int, kv_len: int,
         return autotune.select_policy(
             "attention_decode", (batch, kv_heads, group, kv_len, head_dim),
             str(dtype), epilogue=ep)
-    pol = make_policy("attention_decode", block_m=group, block_n=page_size,
-                      block_k=head_dim, in_dtype=str(jnp.dtype(dtype)),
-                      name="paged", epilogue=ep)
+    # q tile rows = GQA group × verify tokens (q_tokens > 1 is the
+    # speculative verify step — same paged split, taller q tile)
+    pol = make_policy("attention_decode", block_m=group * q_tokens,
+                      block_n=page_size, block_k=head_dim,
+                      in_dtype=str(jnp.dtype(dtype)),
+                      name="paged" if q_tokens == 1 else f"paged_q{q_tokens}",
+                      epilogue=ep)
     pol.check()
     return pol
 
@@ -261,19 +265,29 @@ def attention_decode_paged(q, k_pages, v_pages, page_table, lengths, *,
                            logit_scale: float | None = None,
                            softcap: float | None = None, sinks=None,
                            mode: str = "pallas_interpret"):
-    """Single-token decode attention over a paged KV pool.
+    """Decode attention (1 or T query tokens) over a paged KV pool.
 
-    q: (B, H, 1, D); k_pages/v_pages: (P, Hkv, page_size, D);
-    page_table: (B, MP) physical page ids (0 = reserved null page);
-    lengths: (B,). ``softcap``/``sinks`` follow :func:`attention`. Returns
-    (B, H, 1, D) in q.dtype. mode="reference" gathers the pages into a
-    contiguous view and runs the einsum oracle.
+    q: (B, H, T, D) — T == 1 is plain decode; T > 1 is the speculative
+    verify step, where token t of sequence b sits at absolute position
+    ``lengths[b] - T + t`` (i.e. ``lengths`` counts the KV *including* the
+    T verify tokens already appended). k_pages/v_pages:
+    (P, Hkv, page_size, D); page_table: (B, MP) physical page ids (0 =
+    reserved null page); lengths: (B,). ``softcap``/``sinks`` follow
+    :func:`attention`. Returns (B, H, T, D) in q.dtype. mode="reference"
+    gathers the pages into a contiguous view and runs the einsum oracle.
     """
-    b, h, _, d = q.shape
+    b, h, t, d = q.shape
     hkv, page_size = k_pages.shape[1], k_pages.shape[2]
     mp = page_table.shape[1]
     group = h // hkv
-    qg = q.reshape(b, hkv, group, d)
+    if t == 1:
+        qg = q.reshape(b, hkv, group, d)
+    else:
+        # pack verify tokens group-major: row = g*T + t
+        qg = q.reshape(b, hkv, group, t, d).reshape(b, hkv, group * t, d)
+        if sinks is not None:
+            sinks = jnp.repeat(jnp.asarray(sinks).reshape(hkv, group), t,
+                               axis=1).reshape(-1)
     lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32).reshape(-1),
                                (b,))
     if mode == "reference":
@@ -283,7 +297,7 @@ def attention_decode_paged(q, k_pages, v_pages, page_table, lengths, *,
         out = decode_ref(qg, gather_pages(k_pages, page_table),
                          gather_pages(v_pages, page_table), lengths,
                          window=window, logit_scale=logit_scale,
-                         softcap=softcap, sinks=sinks)
+                         softcap=softcap, sinks=sinks, q_tokens=t)
     else:
         if policy is None:
             epilogue = AttnEpilogue(
@@ -291,19 +305,20 @@ def attention_decode_paged(q, k_pages, v_pages, page_table, lengths, *,
                 sink=sinks is not None)
             policy = resolve_decode_policy(b, hkv, group, mp * page_size, d,
                                            q.dtype, page_size=page_size,
-                                           epilogue=epilogue)
+                                           epilogue=epilogue, q_tokens=t)
         if obs.enabled():
             sig = autotune.OpSignature("attention_decode",
-                                       (b, hkv, group, mp * page_size, d),
+                                       (b, hkv, group * t, mp * page_size, d),
                                        str(q.dtype), epilogue=policy.epilogue)
             obs.launch("attention_decode", variant="paged",
                        grid=(b, hkv, mp), policy=policy,
                        dma_bytes=autotune.score_policy(sig, policy).dma_bytes,
-                       flops=4 * b * h * mp * page_size * d)
+                       flops=4 * b * h * t * mp * page_size * d)
         out = flash_decode_paged(qg, k_pages, v_pages, page_table, lengths,
                                  policy=policy, window=window,
                                  logit_scale=logit_scale,
                                  softcap=float(softcap) if softcap else 0.0,
                                  sinks=sinks,
-                                 interpret=mode == "pallas_interpret")
-    return out.reshape(b, h, 1, d)
+                                 interpret=mode == "pallas_interpret",
+                                 q_tokens=t)
+    return out.reshape(b, h, t, d)

@@ -84,8 +84,9 @@ def ring_positions(lengths, slots: int):
 
 def decode_ref(q, k, v, lengths, *, window: int | None = None,
                logit_scale: float | None = None,
-               softcap: float | None = None, sinks=None):
-    """Single-token decode oracle over a (possibly ring) KV cache.
+               softcap: float | None = None, sinks=None,
+               q_tokens: int = 1):
+    """Decode oracle (1 or T query tokens) over a (possibly ring) KV cache.
 
     q: (B, Hkv, G, D) — the GQA group packed into the q rows (G = H // Hkv;
     MHA is G == 1 with Hkv == H). k, v: (B, Hkv, S, D) ring cache;
@@ -94,13 +95,28 @@ def decode_ref(q, k, v, lengths, *, window: int | None = None,
     (B, Hkv, G, D) in q.dtype. Matches the pre-subsystem einsum decode path
     bitwise for non-empty sequences; empty rows (lengths == 0) return zeros
     (with a sink, all mass lands on the sink, which attends to nothing).
+
+    ``q_tokens`` > 1 (speculative verify): G packs group * T rows
+    group-major (row = g*T + t); row t's causal horizon is position
+    ``lengths - T + t``, matching the paged kernel's verify mask.
     """
     b, hkv, g, d = q.shape
     slots = k.shape[2]
     actual, valid = ring_positions(lengths, slots)
-    if window is not None:
-        pos = jnp.asarray(lengths, jnp.int32)[:, None] - 1
-        valid &= (pos - actual) < window
+    if q_tokens == 1:
+        if window is not None:
+            pos = jnp.asarray(lengths, jnp.int32)[:, None] - 1
+            valid &= (pos - actual) < window
+        vmask = valid[:, None, None, :]
+    else:
+        row_t = jnp.arange(g) % q_tokens                        # (X,)
+        pos_row = (jnp.asarray(lengths, jnp.int32)[:, None]
+                   - q_tokens + row_t[None, :])                 # (B, X)
+        vmask = valid[:, None, None, :] & (
+            actual[:, None, None, :] <= pos_row[:, None, :, None])
+        if window is not None:
+            vmask &= (pos_row[:, None, :, None]
+                      - actual[:, None, None, :]) < window
     scale = logit_scale if logit_scale is not None else d ** -0.5
     s = jnp.einsum("bgxd,bgkd->bgxk", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
@@ -109,13 +125,13 @@ def decode_ref(q, k, v, lengths, *, window: int | None = None,
     # -1e30 (not -inf) so fully-masked rows stay NaN-free; for rows with at
     # least one valid slot exp(-1e30 - max) underflows to exactly 0.0, so
     # the result is bitwise identical to -inf masking.
-    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    s = jnp.where(vmask, s, -1e30)
     pmax = jnp.max(s, axis=-1, keepdims=True)
     if sinks is not None:
         sb = jnp.asarray(sinks, jnp.float32).reshape(hkv, g)[None, :, :, None]
         pmax = jnp.maximum(pmax, sb)
     pexp = jnp.exp(s - pmax)
-    pexp = jnp.where(valid[:, None, None, :], pexp, 0.0)
+    pexp = jnp.where(vmask, pexp, 0.0)
     den = jnp.sum(pexp, axis=-1, keepdims=True)
     if sinks is not None:
         den = den + jnp.exp(sb - pmax)

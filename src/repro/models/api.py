@@ -34,9 +34,13 @@ class Model:
     # paged decode surface (decoder-only LM/VLM backbones; DESIGN.md §8):
     #   init_paged_cache(batch_slots, n_pages, page_size) -> cache
     #   prefill_paged(params, tokens, cache, page_rows, slot, true_len)
+    #   prefill_paged_chunk(params, tokens, cache, page_rows, start,
+    #                       last_index) — chunked/suffix prefill (§14)
     #   decode_step_paged(params, token, cache, page_table, lengths)
+    #     (token (B, T): T > 1 is the speculative verify step)
     init_paged_cache: Optional[Callable] = None
     prefill_paged: Optional[Callable] = None
+    prefill_paged_chunk: Optional[Callable] = None
     decode_step_paged: Optional[Callable] = None
     # {op: KernelPolicy} resolved at build time for the config's default
     # bucket — inspectable summary of what the kernels will do; exact
@@ -175,6 +179,8 @@ def _build_model(cfg: ModelConfig, *, mode: Optional[str] = None, mesh=None,
             decode_step=functools.partial(_lm.lm_decode_step, cfg, **kw),
             init_paged_cache=functools.partial(_lm.lm_init_paged_cache, cfg),
             prefill_paged=functools.partial(_lm.lm_prefill_paged, cfg, **kw),
+            prefill_paged_chunk=functools.partial(_lm.lm_prefill_paged_chunk,
+                                                  cfg, **kw),
             decode_step_paged=functools.partial(_lm.lm_decode_step_paged,
                                                 cfg, **kw),
         )
@@ -194,6 +200,8 @@ def _build_model(cfg: ModelConfig, *, mode: Optional[str] = None, mesh=None,
         decode_step=functools.partial(_lm.lm_decode_step, cfg, **kw),
         init_paged_cache=functools.partial(_lm.lm_init_paged_cache, cfg),
         prefill_paged=functools.partial(_lm.lm_prefill_paged, cfg, **kw),
+        prefill_paged_chunk=functools.partial(_lm.lm_prefill_paged_chunk,
+                                              cfg, **kw),
         decode_step_paged=functools.partial(_lm.lm_decode_step_paged,
                                             cfg, **kw),
     )

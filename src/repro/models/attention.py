@@ -379,25 +379,36 @@ def init_paged_attn_cache(cfg, n_pages: int, page_size: int, dtype) -> dict:
                           cfg.head_dim, dtype)
 
 
-def paged_prefill_attn_cache(cfg, cache: dict, k, v, page_rows) -> dict:
-    """Write one sequence's prefill k/v (1, Hkv, S, hd) into its pages."""
+def paged_prefill_attn_cache(cfg, cache: dict, k, v, page_rows,
+                             start_page=0) -> dict:
+    """Write one sequence's prefill k/v (1, Hkv, S, hd) into its pages.
+
+    ``start_page`` (traced ok) offsets the write within the page-table row
+    — chunk c of a chunked prefill passes its first page index."""
     from repro.serve.kv_cache import write_prefill_pages
     k_pages, v_pages = write_prefill_pages(cache["k_pages"], cache["v_pages"],
-                                           k, v, page_rows)
+                                           k, v, page_rows,
+                                           start_page=start_page)
     return {"k_pages": k_pages, "v_pages": v_pages}
 
 
 def _apply_rope_positions(cfg, q, k, positions):
-    """RoPE with one position per batch element (the paged decode step,
-    where each sequence sits at its own length). q/k: (B, H, 1, hd);
-    positions: (B,). Matches ``_apply_rope``'s reference path exactly for
-    uniform positions."""
+    """RoPE with per-batch-element positions (the paged decode step, where
+    each sequence sits at its own length). q/k: (B, H, T, hd); positions:
+    (B,) for T == 1, or (B, T) when each token carries its own position
+    (chunked prefill / speculative verify). Matches ``_apply_rope``'s
+    reference path exactly for uniform positions."""
     if cfg.rope_style == "none":
         return q, k
     hd = q.shape[-1]
     rot = hd // 2 if cfg.rope_style == "partial" else hd
-    sin, cos = rope_tables(positions, rot, cfg.rope_theta)
-    sin, cos = sin[:, None, None, :], cos[:, None, None, :]
+    if positions.ndim == 1:
+        sin, cos = rope_tables(positions, rot, cfg.rope_theta)
+        sin, cos = sin[:, None, None, :], cos[:, None, None, :]
+    else:
+        b, t = positions.shape
+        sin, cos = rope_tables(positions.reshape(-1), rot, cfg.rope_theta)
+        sin, cos = (sin.reshape(b, 1, t, rot), cos.reshape(b, 1, t, rot))
 
     def rot_fn(x):
         out = rope_ref(x[..., :rot], sin, cos)
@@ -412,19 +423,22 @@ def paged_decode_attention_layer(cfg, p, x, cache: dict, page_table, lengths,
                                  *, window: int | None = None,
                                  use_rope: bool = True,
                                  mode: str = "reference", policy=None):
-    """One-token decode over the paged cache. x: (B, 1, D); ``lengths``:
-    (B,) tokens written so far (this token lands at position lengths[b]).
-    Inactive slots (empty page-table rows) write into the reserved null
-    page and read back zeros. Returns (out (B,1,D), new_cache)."""
+    """Decode (1 or T tokens) over the paged cache. x: (B, T, D);
+    ``lengths``: (B,) tokens written so far (token t lands at position
+    lengths[b] + t; T > 1 is the speculative verify step). Inactive slots
+    (empty page-table rows) write into the reserved null page and read back
+    zeros. Returns (out (B,T,D), new_cache)."""
     from repro.serve.kv_cache import append_paged_kv
+    t = x.shape[1]
     q, k_new, v_new = project_qkv(cfg, p, x)
     lengths = jnp.asarray(lengths, jnp.int32)
     if use_rope:
-        q, k_new = _apply_rope_positions(cfg, q, k_new, lengths)
+        positions = lengths if t == 1 else lengths[:, None] + jnp.arange(t)
+        q, k_new = _apply_rope_positions(cfg, q, k_new, positions)
     k_pages, v_pages = append_paged_kv(cache["k_pages"], cache["v_pages"],
                                        k_new, v_new, page_table, lengths)
     cache = {"k_pages": k_pages, "v_pages": v_pages}
-    out = attention_decode_paged(q, k_pages, v_pages, page_table, lengths + 1,
+    out = attention_decode_paged(q, k_pages, v_pages, page_table, lengths + t,
                                  window=window, policy=policy,
                                  softcap=getattr(cfg, "attn_logit_softcap",
                                                  None),

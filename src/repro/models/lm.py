@@ -21,6 +21,7 @@ from .attention import (attn_defs, attention_layer, decode_attention_layer,
                         prefill_attn_cache, project_qkv_heads,
                         _merge_heads)
 from repro.kernels.attention import attention as attention_op
+from repro.kernels.attention import attention_decode_paged
 from .moe import moe_defs, moe_forward
 from .ssm import (ssm_defs, ssm_forward, ssm_prefill, ssm_decode_step,
                   init_ssm_cache)
@@ -594,6 +595,111 @@ def lm_prefill_paged(cfg, params, tokens, cache, page_rows, slot, true_len,
     return cache, logits[:, 0]
 
 
+def _attention_only(cfg) -> bool:
+    """True when every layer is attention-family (attn/local/moe blocks).
+
+    The serving fast paths — chunked prefill, prefix reuse, multi-token
+    verify — all rely on the KV cache being position-addressable pages.
+    Recurrent state (ssm/rg) is a single constant-size scan state per slot:
+    it cannot be re-entered mid-prompt, shared by prefix, or stepped T
+    tokens at once, so those stacks keep the exact-length one-shot paths.
+    """
+    return all(cfg.layer_kind(i) in ("attn", "local", "moe")
+               for i in range(cfg.num_layers))
+
+
+def block_prefill_paged_chunk(cfg, kind, p, x, cache, *, page_rows, start,
+                              positions, mode="reference", mesh=None,
+                              data_axes=("data",)):
+    """One layer of chunked prefill: the chunk's k/v land in the sequence's
+    pages at page offset ``start // page_size`` and the chunk's queries
+    attend to everything already in the pages (previous chunks + this one)
+    through the multi-token paged-decode mask. Attention-family only."""
+    window = _block_window(cfg, kind)
+    c = x.shape[1]
+    q, k, v = project_qkv_heads(cfg, p["attn"], x, positions, mode=mode,
+                                prenorm=norm_params(p, "ln1"))
+    page_size = cache["k_pages"].shape[2]
+    cache = paged_prefill_attn_cache(cfg, cache, k, v, page_rows,
+                                     start_page=start // page_size)
+    o = attention_decode_paged(
+        q, cache["k_pages"], cache["v_pages"],
+        jnp.asarray(page_rows, jnp.int32)[None, :],
+        jnp.asarray(start + c, jnp.int32).reshape(1),
+        window=window, mode=mode,
+        softcap=getattr(cfg, "attn_logit_softcap", None)).astype(x.dtype)
+    x = x + cfg.residual_scale * (_merge_heads(o) @ p["attn"]["wo"])
+    if kind == "moe":
+        h = apply_norm(cfg, x, p, "ln2")
+        m, _ = moe_forward(cfg, p["moe"], h, mesh=mesh,
+                           data_axes=data_axes, mode=mode)
+        x = x + cfg.residual_scale * m
+    else:
+        x = mlp_forward(cfg, p["mlp"], x, mode=mode, residual=x,
+                        residual_scale=cfg.residual_scale,
+                        prenorm=norm_params(p, "ln2"))
+    return x, cache
+
+
+def lm_prefill_paged_chunk(cfg, params, tokens, cache, page_rows, start,
+                           last_index, *, mode="reference", mesh=None,
+                           data_axes=("data",)):
+    """Prefill ONE chunk of one sequence into the shared paged cache.
+
+    tokens: (1, C) — chunk C must be a whole number of pages; ``start``
+    (traced ok) is the chunk's first absolute position (a page multiple);
+    ``last_index`` (traced ok) indexes the final true token within the
+    chunk (its logits seed sampling — meaningful on the last chunk only).
+    One compiled instance per chunk length C serves every chunk index and
+    every suffix offset: prefix-cache admission reuses it with ``start`` =
+    the matched prefix length. Returns (cache, logits (1, V)).
+
+    Attention-family stacks only (see :func:`_attention_only`): recurrent
+    state cannot be re-entered mid-prompt, so hybrid archs keep the
+    exact-length :func:`lm_prefill_paged`.
+    """
+    if not _attention_only(cfg):
+        raise ValueError(
+            "chunked paged prefill requires an attention-only stack; "
+            f"{cfg.name} has recurrent layers — use lm_prefill_paged")
+    params = cast_params(params, cfg.compute_dtype)
+    x = params["embed"][tokens].astype(cfg.compute_dtype) * cfg.emb_scale
+    start = jnp.asarray(start, jnp.int32)
+    positions = start + jnp.arange(tokens.shape[1])
+    kw = dict(page_rows=page_rows, start=start, positions=positions,
+              mode=mode, mesh=mesh, data_axes=data_axes)
+    layout = _layout(cfg)
+    if layout[0] == "scan":
+        _, pattern, _ = layout
+
+        def body(h, xs):
+            group_params, group_cache = xs
+            new = []
+            for kind, layer_params, layer_cache in zip(pattern, group_params,
+                                                       group_cache):
+                h, nc = block_prefill_paged_chunk(cfg, kind, layer_params, h,
+                                                  layer_cache, **kw)
+                new.append(nc)
+            return h, tuple(new)
+
+        from repro.util import scan_unroll
+        x, cache_t = jax.lax.scan(body, x, (_scan_params(cfg, params, layout),
+                                            _scan_cache(cfg, cache, layout)),
+                                  unroll=scan_unroll())
+        cache = _unscan_cache(cfg, cache_t, layout)
+    else:
+        new = {}
+        for i in range(cfg.num_layers):
+            key = f"layer_{i:03d}"
+            x, new[key] = block_prefill_paged_chunk(cfg, cfg.layer_kind(i),
+                                                    params[key], x,
+                                                    cache[key], **kw)
+        cache = new
+    x_last = jax.lax.dynamic_slice_in_dim(x, last_index, 1, axis=1)
+    logits = _logits(cfg, params, x_last)
+    return cache, logits[:, 0]
+
+
 def block_decode_paged(cfg, kind, p, x, cache, page_table, lengths, *,
                        mode="reference", mesh=None, data_axes=("data",)):
     rs = cfg.residual_scale
@@ -628,11 +734,16 @@ def lm_decode_step_paged(cfg, params, token, cache, page_table, lengths, *,
                          mode="reference", mesh=None, data_axes=("data",)):
     """One decode step for every batch slot over the paged cache.
 
-    token: (B, 1) int32; page_table: (B, MP); lengths: (B,) tokens written
-    so far per slot (each slot's new token lands at position lengths[b]).
-    Inactive slots decode against the null page and produce ignorable
-    logits. Returns (cache, logits (B, V)).
+    token: (B, T) int32 — T == 1 is plain decode (each slot's token lands
+    at position lengths[b], logits return as (B, V)); T > 1 is the
+    speculative verify step (token t lands at lengths[b] + t, logits
+    return as (B, T, V); attention-only stacks). Inactive slots decode
+    against the null page and produce ignorable logits.
     """
+    if token.shape[1] > 1 and not _attention_only(cfg):
+        raise ValueError(
+            "multi-token paged decode (speculative verify) requires an "
+            f"attention-only stack; {cfg.name} has recurrent layers")
     params = cast_params(params, cfg.compute_dtype)
     x = params["embed"][token].astype(cfg.compute_dtype) * cfg.emb_scale
     layout = _layout(cfg)
@@ -666,4 +777,6 @@ def lm_decode_step_paged(cfg, params, token, cache, page_table, lengths, *,
                                             mesh=mesh, data_axes=data_axes)
         cache = new
     logits = _logits(cfg, params, x)
+    if token.shape[1] > 1:
+        return cache, logits          # (B, T, V) — speculative verify
     return cache, logits[:, 0]

@@ -81,19 +81,20 @@ class Engine:
         self.mesh = mesh
         self.donate_cache = donate_cache
         self.max_cached_buckets = max_cached_buckets
-        # (batch, prompt_len) bucket -> {policies, prefill}; LRU — least-
-        # recently-used buckets are evicted together with their compiled
-        # functions once the cap is exceeded. The decode step's traced
-        # shapes depend only on batch (token (B,1), max_len cache), so its
-        # jits live in a separate per-batch LRU rather than being
-        # re-compiled per prompt length.
+        # ONE LRU for every compiled-fn kind, under one shared cap:
+        # (batch, prompt_len) -> {policies, prefill} and ("decode", batch)
+        # -> {policies, decode}. The decode step's traced shapes depend
+        # only on batch (token (B,1), max_len cache), so it gets its own
+        # key kind rather than a per-prompt-length recompile — but it
+        # competes for the same cap as the prefill buckets, so a long tail
+        # of prompt lengths can no longer bloat the cache past the cap.
         self._buckets: collections.OrderedDict = collections.OrderedDict()
-        self._decode_jits: collections.OrderedDict = collections.OrderedDict()
         self.lru_stats = {"hits": 0, "misses": 0, "evictions": 0}
 
     @property
     def bucket_policies(self) -> dict:
-        """{(batch, prompt_len): {op: KernelPolicy}} of the live buckets."""
+        """{key: {op: KernelPolicy}} of the live buckets — prefill keys are
+        (batch, prompt_len), decode keys are ("decode", batch)."""
         return {k: e["policies"] for k, e in self._buckets.items()}
 
     def _bucket(self, batch: int, prompt_len: int) -> dict:
@@ -113,15 +114,22 @@ class Engine:
                         self.max_cached_buckets, self.lru_stats)
 
     def _decode_fn(self, batch: int):
-        model = self.model
+        model, cfg = self.model, self.model.cfg
 
         def build():
-            return jax.jit(
-                lambda params, tok, cache, pos: model.decode_step(
-                    params, tok, cache, pos),
-                donate_argnums=(2,) if self.donate_cache else ())
-        return _lru_get(self._decode_jits, batch, build,
-                        self.max_cached_buckets, self.lru_stats)
+            from repro.kernels.attention import resolve_decode_policy
+            hkv = cfg.num_kv_heads
+            return {
+                "policies": {"attention_decode": resolve_decode_policy(
+                    batch, hkv, cfg.num_heads // hkv, self.max_len,
+                    cfg.head_dim, cfg.compute_dtype)},
+                "decode": jax.jit(
+                    lambda params, tok, cache, pos: model.decode_step(
+                        params, tok, cache, pos),
+                    donate_argnums=(2,) if self.donate_cache else ()),
+            }
+        return _lru_get(self._buckets, ("decode", batch), build,
+                        self.max_cached_buckets, self.lru_stats)["decode"]
 
     def _sample(self, logits, temperature: float, rng):
         if temperature == 0.0:
@@ -161,9 +169,23 @@ class Engine:
 
 @dataclasses.dataclass
 class Request:
+    """One generation request.
+
+    Sampling contract (docs/serving.md): ``temperature=None`` inherits the
+    engine's default; 0.0 is greedy argmax — bitwise deterministic, no rng
+    consumed. For temperature > 0, ``seed`` pins a per-request PRNG stream:
+    :class:`PagedEngine` folds the sequence's absolute position into
+    ``PRNGKey(seed)`` per emitted token, so the draw is independent of
+    batch composition and admission order. Unseeded sampled requests draw
+    from the engine's shared stream (reproducible per engine ``rng`` but
+    schedule-dependent). :class:`RequestQueue` batches share one stream
+    seeded by the batch's first seeded request.
+    """
     uid: int
     prompt: np.ndarray
     max_new_tokens: int
+    temperature: Optional[float] = None      # None = engine default
+    seed: Optional[int] = None
 
 
 class RequestQueue:
@@ -186,6 +208,11 @@ class RequestQueue:
     def submit(self, req: Request) -> None:
         self.pending[self._bucket(len(req.prompt))].append(req)
 
+    @property
+    def engine_temperature(self) -> float:
+        """The engine's default temperature (dense Engine: greedy)."""
+        return getattr(self.engine, "temperature", 0.0)
+
     def flush(self, *, force: bool = False) -> int:
         """Serve full (or, with ``force``, padded partial) batches.
 
@@ -197,25 +224,44 @@ class RequestQueue:
         """
         served = 0
         for bucket, reqs in self.pending.items():
-            while len(reqs) >= self.batch_size or (force and reqs):
-                group = reqs[: self.batch_size]
-                del reqs[: self.batch_size]
-                n_real = len(group)
-                while len(group) < self.batch_size:   # pad the last batch
-                    group.append(group[-1])
-                prompts = np.stack([
-                    np.pad(r.prompt, (bucket - len(r.prompt), 0))
-                    for r in group])
-                max_new = max(r.max_new_tokens for r in group)
-                result = self.engine.generate(prompts, max_new)
-                for r, row in zip(group[:n_real], result.tokens[:n_real]):
-                    if r.uid in self.results:
-                        warnings.warn(
-                            f"RequestQueue: duplicate uid {r.uid} — "
-                            "overwriting previous result", stacklevel=2)
-                    self.results[r.uid] = row[bucket - len(r.prompt):]
-                served += n_real
+            # partition by effective temperature (order-preserving): one
+            # compiled batch shares one sampling config, so mixing greedy
+            # and sampled requests in a batch would silently ignore the
+            # per-request temperature (the bug this plumbing fixes)
+            by_temp: dict = {}
+            for r in reqs:
+                t = (r.temperature if r.temperature is not None
+                     else self.engine_temperature)
+                by_temp.setdefault(t, []).append(r)
+            reqs[:] = []
+            for temp, treqs in by_temp.items():
+                while len(treqs) >= self.batch_size or (force and treqs):
+                    group = treqs[: self.batch_size]
+                    del treqs[: self.batch_size]
+                    served += self._serve_batch(bucket, group, temp)
+                reqs.extend(treqs)            # leftovers wait for more
         return served
+
+    def _serve_batch(self, bucket: int, group: list, temperature: float
+                     ) -> int:
+        n_real = len(group)
+        while len(group) < self.batch_size:   # pad the last batch
+            group.append(group[-1])
+        prompts = np.stack([
+            np.pad(r.prompt, (bucket - len(r.prompt), 0))
+            for r in group])
+        max_new = max(r.max_new_tokens for r in group)
+        seeds = [r.seed for r in group[:n_real] if r.seed is not None]
+        rng = jax.random.PRNGKey(seeds[0]) if seeds else None
+        result = self.engine.generate(prompts, max_new,
+                                      temperature=temperature, rng=rng)
+        for r, row in zip(group[:n_real], result.tokens[:n_real]):
+            if r.uid in self.results:
+                warnings.warn(
+                    f"RequestQueue: duplicate uid {r.uid} — "
+                    "overwriting previous result", stacklevel=2)
+            self.results[r.uid] = row[bucket - len(r.prompt):]
+        return n_real
 
 
 # ---------------------------------------------------------------------------
@@ -229,6 +275,16 @@ class _Slot:
     n_pages: int                 # pages currently backing the sequence
     generated: list              # sampled token ids (ints)
     next_token: int              # token to feed at the next decode step
+    pages: list = dataclasses.field(default_factory=list)
+    # next prompt position to prefill; -1 once prefill is complete. A slot
+    # mid-prefill is masked out of the shared decode step (its page-table
+    # row and length are zeroed for that launch) so decode appends cannot
+    # scribble over pages the chunk loop is still filling.
+    prefill_cursor: int = -1
+
+    @property
+    def prefilling(self) -> bool:
+        return self.prefill_cursor >= 0
 
 
 def _pow2(x: int) -> int:
@@ -250,12 +306,27 @@ class PagedEngine:
     freed and a continuation request rejoins the queue front). Retirement:
     a slot that reaches ``max_new_tokens`` frees its pages and its result
     appears in :attr:`results` — its neighbours never notice.
+
+    Serving fast paths (DESIGN.md §14, all opt-in; defaults reproduce the
+    plain engine bitwise):
+      * ``prefix_cache=True`` — full KV pages of completed prompts are kept
+        in a refcounted trie; later prompts sharing a page-aligned prefix
+        skip its prefill and share the physical pages.
+      * ``chunk_tokens=C`` — prompts prefill in fixed C-token chunks, one
+        per step, interleaved with decode (the mid-prefill slot is masked
+        out of the shared decode launch), bounding decode stall per step.
+      * ``draft_model=... , spec_tokens=k`` — greedy speculative decoding:
+        the draft proposes k-1 tokens, the target verifies them in a single
+        k-token decode, and each round emits 1..k tokens per sequence.
     """
 
     def __init__(self, model, params, *, batch_slots: int = 4,
                  page_size: int = 64, max_pages_per_seq: int = 8,
                  n_pages: Optional[int] = None, temperature: float = 0.0,
-                 rng=None, max_cached_buckets: int = 8):
+                 rng=None, max_cached_buckets: int = 8,
+                 prefix_cache: bool = False,
+                 chunk_tokens: Optional[int] = None,
+                 draft_model=None, draft_params=None, spec_tokens: int = 0):
         if model.init_paged_cache is None:
             raise ValueError(
                 f"{model.cfg.name}: no paged decode surface (decoder-only "
@@ -272,8 +343,47 @@ class PagedEngine:
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
         self.max_cached_buckets = max_cached_buckets
 
+        # ---- serving fast paths (DESIGN.md §14; all off by default —
+        # defaults reproduce the exact-length one-shot engine bitwise) ----
+        attn_only = all(model.cfg.layer_kind(i) in ("attn", "local", "moe")
+                        for i in range(model.cfg.num_layers))
+        if prefix_cache and not attn_only:
+            raise ValueError(
+                "prefix caching shares position-addressable KV pages; "
+                f"{model.cfg.name} has recurrent layers")
+        if chunk_tokens is not None:
+            if not attn_only:
+                raise ValueError(
+                    "chunked prefill re-enters the prompt mid-stream; "
+                    f"{model.cfg.name}'s recurrent state cannot")
+            if chunk_tokens <= 0 or chunk_tokens % page_size:
+                raise ValueError(
+                    f"chunk_tokens={chunk_tokens} must be a positive "
+                    f"multiple of page_size={page_size}")
+        self.prefix = kvc.PrefixCache(page_size) if prefix_cache else None
+        self.chunk_tokens = chunk_tokens
+        self.draft_model = draft_model
+        self.draft_params = draft_params
+        self.spec_tokens = spec_tokens
+        if draft_model is not None:
+            if spec_tokens < 2:
+                raise ValueError("speculative decoding needs spec_tokens"
+                                 " >= 2 (1 draft + 1 correction minimum)")
+            if not attn_only:
+                raise ValueError("speculative verify needs an attention-"
+                                 f"only stack; {model.cfg.name} is hybrid")
+            if temperature != 0.0:
+                raise ValueError(
+                    "speculative decoding acceptance is defined for greedy "
+                    "sampling (temperature=0.0) in this engine")
+            if draft_model.cfg.vocab_size != model.cfg.vocab_size:
+                raise ValueError("draft and target must share a vocabulary")
+        self._spec = draft_model is not None
+
         self.cache = model.init_paged_cache(batch_slots, self.n_pages,
                                             page_size)
+        self.draft_cache = (draft_model.init_paged_cache(
+            batch_slots, self.n_pages, page_size) if self._spec else None)
         self.alloc = kvc.PageAllocator(self.n_pages)
         self.state = kvc.init_page_state(batch_slots, max_pages_per_seq)
         self.slots: dict[int, _Slot] = {}       # slot id -> active record
@@ -283,10 +393,19 @@ class PagedEngine:
         self.preemptions = 0
         self.admissions = 0
         self.tokens_generated = 0
+        self.chunks_prefilled = 0
+        self.spec_rounds = 0
+        self.spec_proposed = 0
+        self.spec_accepted = 0
+        self.spec_emitted = 0
+        self.spec_participations = 0    # (slot, round) pairs
         self.peak_pages_in_use = 0
         self.lru_stats = {"hits": 0, "misses": 0, "evictions": 0}
-        # (batch_slots, page_count) -> {policies, decode}; ("prefill", S)
-        # -> {policies, prefill}. LRU, compiled fns evicted with the entry.
+        # One LRU, one cap, many key kinds: (batch_slots, page_count) ->
+        # decode, ("prefill", S) -> exact prefill, ("chunk", C) -> chunked/
+        # suffix prefill, ("verify", page_count) -> k-token verify, and
+        # "draft_*" twins of each for the speculative draft model.
+        # Compiled fns are evicted with their entry.
         self._buckets: collections.OrderedDict = collections.OrderedDict()
 
     # -- bucket pinning ----------------------------------------------------
@@ -304,10 +423,11 @@ class PagedEngine:
             self.peak_pages_in_use = used
         obs.gauge("engine.peak_pages_in_use", used)
 
-    def _decode_bucket(self, mp_bucket: int) -> dict:
+    def _decode_bucket(self, mp_bucket: int, *, draft: bool = False) -> dict:
         """Compiled decode + pinned split-KV policy for a page-count bucket."""
         from repro.kernels.attention import resolve_decode_policy
-        model, cfg = self.model, self.model.cfg
+        model = self.draft_model if draft else self.model
+        cfg = model.cfg
 
         def build():
             hkv = cfg.num_kv_heads
@@ -323,10 +443,13 @@ class PagedEngine:
                                                 lens),
                     donate_argnums=(2,)),   # pools are the dominant buffers
             }
-        return self._touch((self.batch_slots, mp_bucket), build)
+        key = (("draft_decode", mp_bucket) if draft
+               else (self.batch_slots, mp_bucket))
+        return self._touch(key, build)
 
-    def _prefill_bucket(self, padded_len: int) -> dict:
-        model = self.model
+    def _prefill_bucket(self, padded_len: int, *, draft: bool = False
+                        ) -> dict:
+        model = self.draft_model if draft else self.model
 
         def build():
             return {
@@ -339,24 +462,104 @@ class PagedEngine:
                                             slot, n),
                     donate_argnums=(2,)),
             }
-        return self._touch(("prefill", padded_len), build)
+        key = ("draft_prefill" if draft else "prefill", padded_len)
+        return self._touch(key, build)
+
+    def _chunk_bucket(self, chunk_len: int, *, draft: bool = False) -> dict:
+        """Compiled chunk/suffix prefill: ONE instance per chunk length
+        serves every chunk index and every prefix-match offset (``start``
+        and ``last_index`` are traced operands, not trace constants)."""
+        from repro.kernels.attention import resolve_decode_policy
+        model = self.draft_model if draft else self.model
+        cfg = model.cfg
+
+        def build():
+            hkv = cfg.num_kv_heads
+            policy = resolve_decode_policy(
+                1, hkv, cfg.num_heads // hkv,
+                self.max_pages_per_seq * self.page_size, cfg.head_dim,
+                cfg.compute_dtype, page_size=self.page_size,
+                q_tokens=chunk_len)
+            return {
+                "policies": {"attention_decode": policy},
+                "chunk": jax.jit(
+                    lambda params, toks, cache, rows, start, last:
+                        model.prefill_paged_chunk(params, toks, cache, rows,
+                                                  start, last),
+                    donate_argnums=(2,)),
+            }
+        key = ("draft_chunk" if draft else "chunk", chunk_len)
+        return self._touch(key, build)
+
+    def _verify_bucket(self, mp_bucket: int) -> dict:
+        """Compiled k-token verify step (the speculative target pass)."""
+        from repro.kernels.attention import resolve_decode_policy
+        model, cfg = self.model, self.model.cfg
+
+        def build():
+            hkv = cfg.num_kv_heads
+            policy = resolve_decode_policy(
+                self.batch_slots, hkv, cfg.num_heads // hkv,
+                mp_bucket * self.page_size, cfg.head_dim, cfg.compute_dtype,
+                page_size=self.page_size, q_tokens=self.spec_tokens)
+            return {
+                "policies": {"attention_decode": policy},
+                "verify": jax.jit(
+                    lambda params, toks, cache, pt, lens:
+                        model.decode_step_paged(params, toks, cache, pt,
+                                                lens),
+                    donate_argnums=(2,)),
+            }
+        return self._touch(("verify", mp_bucket), build)
 
     # -- request lifecycle -------------------------------------------------
     def submit(self, req: Request) -> None:
         total = len(req.prompt) + req.max_new_tokens
+        if self._spec:
+            # a verify round may overshoot the budget by up to
+            # spec_tokens - 1 stale positions before retirement truncates
+            total += self.spec_tokens
         cap = min(self.max_pages_per_seq, self.n_pages - 1) * self.page_size
         if total > cap:
             raise ValueError(
                 f"request {req.uid}: {total} tokens exceed per-sequence "
                 f"capacity {cap} (max_pages_per_seq * page_size)")
+        if self._spec and (req.temperature not in (None, 0.0)):
+            raise ValueError(
+                f"request {req.uid}: speculative decoding requires greedy "
+                "requests (temperature 0.0)")
         self.pending.append(req)
 
-    def _sample(self, logits) -> np.ndarray:
-        if self.temperature == 0.0:
-            return np.asarray(jnp.argmax(logits, axis=-1))
-        self.rng, sub = jax.random.split(self.rng)
-        return np.asarray(jax.random.categorical(
-            sub, logits / self.temperature, axis=-1))
+    def _effective_temperature(self, req: Request) -> float:
+        return self.temperature if req.temperature is None else req.temperature
+
+    def _sample_slot(self, logits_row, req: Request, position: int) -> int:
+        """Sample one token for one sequence (docs/serving.md contract).
+
+        ``position`` is the token's absolute sequence position — the
+        fold_in index for seeded requests, so the draw is invariant to
+        batch composition, admission order, and recompute preemption.
+        """
+        t = self._effective_temperature(req)
+        if t == 0.0:
+            return int(jnp.argmax(logits_row))
+        if req.seed is not None:
+            key = jax.random.fold_in(jax.random.PRNGKey(req.seed), position)
+        else:
+            self.rng, key = jax.random.split(self.rng)
+        return int(jax.random.categorical(key, logits_row / t))
+
+    def _match_prefix(self, req: Request) -> list:
+        """Trie lookup (pages retained for the caller) + counters."""
+        if self.prefix is None:
+            return []
+        matched = self.prefix.match(req.prompt, self.alloc)
+        obs.incr("engine.prefix.lookups")
+        if matched:
+            obs.incr("engine.prefix.hits")
+            obs.incr("engine.prefix.tokens_saved",
+                     len(matched) * self.page_size)
+        return matched
 
     def _admit(self) -> int:
         """Move pending requests into free slots; returns how many joined."""
@@ -366,54 +569,142 @@ class PagedEngine:
             if not free:
                 break
             req = self.pending[0]
-            n = kvc.num_pages_needed(len(req.prompt), self.page_size)
-            if not self.alloc.can_alloc(n):
-                break                       # wait for a retirement
+            plen = len(req.prompt)
+            n = kvc.num_pages_needed(plen, self.page_size)
+            matched = self._match_prefix(req)       # retained for this slot
+            n_new = n - len(matched)
+            if not self.alloc.can_alloc(n_new):
+                if self.prefix is not None:
+                    self.prefix.evict(self.alloc,
+                                      n_new - self.alloc.free_pages)
+                if not self.alloc.can_alloc(n_new):
+                    if matched:
+                        self.alloc.free(matched)    # drop this admission's
+                    break                           # refs; wait for retire
             self.pending.popleft()
             slot = free[0]
-            pages = self.alloc.alloc(n)
-            plen = len(req.prompt)
-            self.state = kvc.assign_slot(self.state, slot, pages, plen)
-            # exact-length prefill (compiled per prompt length): padding the
-            # tokens to a page multiple would contaminate recurrent-layer
-            # (ssm/rglru) slot state with the pad positions; the partial
-            # last page is zero-filled by write_prefill_pages instead.
-            toks = np.asarray(req.prompt, np.int32)[None, :]
-            entry = self._prefill_bucket(plen)
-            with obs.span("engine.prefill", uid=req.uid, prompt_len=plen):
-                self.cache, logits = entry["prefill"](
-                    self.params, jnp.asarray(toks), self.cache,
-                    self.state["page_table"][slot], slot, plen)
-            first = int(self._sample(logits)[0])
-            self.slots[slot] = _Slot(req=req, n_pages=n, generated=[first],
-                                     next_token=first)
+            pages = matched + self.alloc.alloc(n_new)
+            matched_len = len(matched) * self.page_size
+            if matched or self.chunk_tokens is not None:
+                # suffix/chunked prefill through the compiled chunk fn:
+                # only positions >= matched_len are computed. Without
+                # chunking the whole suffix goes in one padded chunk now;
+                # with chunking the slot joins mid-prefill and advances
+                # one chunk per step.
+                self.state = kvc.assign_slot(self.state, slot, pages,
+                                             matched_len)
+                rec = _Slot(req=req, n_pages=n, generated=[], next_token=-1,
+                            pages=pages, prefill_cursor=matched_len)
+                self.slots[slot] = rec
+                if self.chunk_tokens is None:
+                    self._advance_prefill(slot, rec)   # completes in one go
+            else:
+                # exact-length prefill (compiled per prompt length): padding
+                # the tokens to a page multiple would contaminate recurrent-
+                # layer (ssm/rglru) slot state with the pad positions; the
+                # partial last page is zero-filled by write_prefill_pages.
+                self.state = kvc.assign_slot(self.state, slot, pages, plen)
+                toks = np.asarray(req.prompt, np.int32)[None, :]
+                entry = self._prefill_bucket(plen)
+                with obs.span("engine.prefill", uid=req.uid, prompt_len=plen):
+                    self.cache, logits = entry["prefill"](
+                        self.params, jnp.asarray(toks), self.cache,
+                        self.state["page_table"][slot], slot, plen)
+                if self._spec:
+                    dentry = self._prefill_bucket(plen, draft=True)
+                    self.draft_cache, _ = dentry["prefill"](
+                        self.draft_params, jnp.asarray(toks),
+                        self.draft_cache, self.state["page_table"][slot],
+                        slot, plen)
+                first = self._sample_slot(logits[0], req, plen)
+                self.slots[slot] = _Slot(req=req, n_pages=n,
+                                         generated=[first], next_token=first,
+                                         pages=pages)
+                # the admission's first token is sampled off the prefill
+                # logits, not a decode step — count it here so
+                # tokens_generated covers every emitted token
+                self.tokens_generated += 1
+                obs.incr("engine.tokens_generated")
+                if self.prefix is not None:
+                    self.prefix.insert(req.prompt, pages, self.alloc)
             admitted += 1
             self.admissions += 1
-            # the admission's first token is sampled off the prefill logits,
-            # not a decode step — count it here so tokens_generated covers
-            # every emitted token
-            self.tokens_generated += 1
             obs.incr("engine.admissions")
-            obs.incr("engine.tokens_generated")
             self._note_occupancy()
         return admitted
 
-    def _try_grow(self) -> list:
+    def _advance_prefill(self, slot: int, rec: _Slot) -> None:
+        """Run ONE prefill chunk for a mid-prefill slot (the whole padded
+        suffix at once when interleaved chunking is off). On the final
+        chunk: sample the first token, mark the slot decode-ready, and
+        register the prompt's full pages in the prefix trie."""
+        req = rec.req
+        plen = len(req.prompt)
+        start = rec.prefill_cursor
+        if self.chunk_tokens is not None:
+            c = self.chunk_tokens
+        else:
+            c = _pow2(kvc.num_pages_needed(plen - start,
+                                           self.page_size)) * self.page_size
+        end = min(plen, start + c)
+        toks = np.zeros((1, c), np.int32)
+        toks[0, : end - start] = np.asarray(req.prompt[start:end], np.int32)
+        last = (plen - 1 - start) if end == plen else 0
+        entry = self._chunk_bucket(c)
+        with obs.span("engine.prefill_chunk", uid=req.uid, start=start,
+                      chunk=c):
+            self.cache, logits = entry["chunk"](
+                self.params, jnp.asarray(toks), self.cache,
+                self.state["page_table"][slot],
+                jnp.int32(start), jnp.int32(last))
+        if self._spec:
+            dentry = self._chunk_bucket(c, draft=True)
+            self.draft_cache, _ = dentry["chunk"](
+                self.draft_params, jnp.asarray(toks), self.draft_cache,
+                self.state["page_table"][slot],
+                jnp.int32(start), jnp.int32(last))
+        self.chunks_prefilled += 1
+        obs.incr("engine.chunks_prefilled")
+        self.state["lengths"] = self.state["lengths"].at[slot].set(
+            min(end, plen))
+        if end >= plen:
+            rec.prefill_cursor = -1
+            first = self._sample_slot(logits[0], req, plen)
+            rec.generated = [first]
+            rec.next_token = first
+            self.tokens_generated += 1
+            obs.incr("engine.tokens_generated")
+            if self.prefix is not None:
+                self.prefix.insert(req.prompt, rec.pages, self.alloc)
+        else:
+            rec.prefill_cursor = end
+
+    def _try_grow(self, tokens_ahead: int = 1) -> list:
         """Allocate next pages for slots crossing a page boundary; returns
-        the slots whose growth the exhausted pool could not cover."""
+        the slots whose growth the exhausted pool could not cover.
+        ``tokens_ahead`` > 1 (speculative rounds) reserves headroom for the
+        whole verify block. Mid-prefill slots already hold every page their
+        prompt needs, so they never grow (and never stall)."""
         stalled = []
         lengths = np.asarray(self.state["lengths"])   # one host transfer
         for slot in sorted(self.slots):
             rec = self.slots[slot]
-            need = int(lengths[slot]) + 1
-            if need > rec.n_pages * self.page_size:
+            if rec.prefilling:
+                continue
+            need = int(lengths[slot]) + tokens_ahead
+            while need > rec.n_pages * self.page_size:
+                if not self.alloc.can_alloc(1) and self.prefix is not None:
+                    # cached-but-unreferenced prefix pages are reclaimable
+                    self.prefix.evict(self.alloc, 1)
                 if self.alloc.can_alloc(1):
                     page = self.alloc.alloc(1)[0]
                     self.state["page_table"] = \
                         self.state["page_table"].at[slot, rec.n_pages].set(page)
+                    rec.pages.append(page)
                     rec.n_pages += 1
                 else:
                     stalled.append(slot)
+                    break
         return stalled
 
     def _preempt(self, slot: int) -> None:
@@ -422,39 +713,169 @@ class PagedEngine:
         := the remaining tokens — at the front of the queue. Re-admission
         re-prefills the lost KV; greedy decoding makes the continuation
         exact. Retirement later rebuilds the full result from the
-        continuation's (longer) prompt, so the output is unchanged."""
+        continuation's (longer) prompt, so the output is unchanged.
+
+        Frees drop one reference per page: pages shared with the prefix
+        trie (or another sequence) survive with their remaining refs, so a
+        preemption never invalidates a neighbour's prefix."""
         rec = self.slots[slot]
-        row = np.asarray(self.state["page_table"][slot])
-        self.alloc.free([int(p) for p in row[: rec.n_pages]])
+        self.alloc.free(rec.pages)
         self.state = kvc.release_slot(self.state, slot)
+        gen = rec.generated[: rec.req.max_new_tokens]
         cont = Request(
             rec.req.uid,
             np.concatenate([np.asarray(rec.req.prompt, np.int32),
-                            np.asarray(rec.generated, np.int32)]),
-            rec.req.max_new_tokens - len(rec.generated))
+                            np.asarray(gen, np.int32)]),
+            max(0, rec.req.max_new_tokens - len(gen)),
+            temperature=rec.req.temperature,
+            seed=rec.req.seed)
         self.pending.appendleft(cont)
         self.preemptions += 1
         obs.incr("engine.preemptions")
         del self.slots[slot]
 
     def _retire(self, slot: int, rec: _Slot) -> None:
-        row = np.asarray(self.state["page_table"][slot])
-        self.alloc.free([int(p) for p in row[: rec.n_pages]])
+        self.alloc.free(rec.pages)      # per-page ref drop, not a hard free
         self.state = kvc.release_slot(self.state, slot)
+        gen = rec.generated[: rec.req.max_new_tokens]   # spec overshoot
         self.results[rec.req.uid] = np.concatenate(
             [np.asarray(rec.req.prompt, np.int32),
-             np.asarray(rec.generated, np.int32)])
+             np.asarray(gen, np.int32)])
         del self.slots[slot]
 
-    def step(self) -> bool:
-        """Admit, decode one token for every active slot, retire finished.
+    def _launch_views(self, active: list, mp_bucket: int):
+        """(page_table, lengths, act) for a decode/verify launch. Mid-prefill
+        slots are masked out by zeroing their rows: masked rows write to the
+        null page and attend to nothing, so a chunk-interleaved slot never
+        perturbs the batch it shares a launch with. With no mid-prefill
+        slots the views are passed through untouched (the bitwise-identical
+        fast path)."""
+        pt = self.state["page_table"][:, :mp_bucket]
+        lens = self.state["lengths"]
+        act = np.zeros((self.batch_slots,), np.int32)
+        for s in active:
+            act[s] = 1
+        act = jnp.asarray(act)
+        if any(r.prefilling for r in self.slots.values()):
+            pt = pt * act[:, None]
+            lens = lens * act
+        return pt, lens, act
 
-        Returns False when there is nothing left to do (idle engine).
-        """
+    def _decode_one(self, active: list, mp_bucket: int) -> None:
+        """One single-token decode step for every decode-ready slot."""
+        entry = self._decode_bucket(mp_bucket)
+        pt, lens, act = self._launch_views(active, mp_bucket)
+        tokens = np.zeros((self.batch_slots, 1), np.int32)
+        for slot in active:
+            tokens[slot, 0] = self.slots[slot].next_token
+        n_active = len(active)
+        with obs.span("engine.decode_step", active_slots=n_active,
+                      mp_bucket=mp_bucket):
+            self.cache, logits = entry["decode"](
+                self.params, jnp.asarray(tokens), self.cache, pt, lens)
+            self.state["lengths"] = self.state["lengths"] + act
+            sampled = {}
+            greedy = None
+            for slot in active:
+                rec = self.slots[slot]
+                if self._effective_temperature(rec.req) == 0.0:
+                    if greedy is None:      # one batched argmax for all
+                        greedy = np.asarray(jnp.argmax(logits, axis=-1))
+                    sampled[slot] = int(greedy[slot])
+                else:
+                    pos = len(rec.req.prompt) + len(rec.generated)
+                    sampled[slot] = self._sample_slot(logits[slot], rec.req,
+                                                      pos)
+        self.tokens_generated += n_active
+        obs.incr("engine.tokens_generated", n_active)
+        for slot in active:
+            rec = self.slots[slot]
+            rec.generated.append(sampled[slot])
+            rec.next_token = sampled[slot]
+
+    def _spec_round(self, active: list, mp_bucket: int) -> None:
+        """One speculative round: k draft micro-steps propose d1..d_{k-1},
+        the target verifies [t0, d1..d_{k-1}] in a single k-token decode,
+        and each sequence keeps the longest agreeing prefix plus the
+        target's first divergent token (1..k tokens per round).
+
+        The draft runs k appends (the last feeds d_{k-1} with its logits
+        discarded) so the draft cache has no hole at the round's final
+        position. Rejected positions leave stale KV above the accepted
+        length in both pools; the next round's appends start at the new
+        length and cover every stale position before anything reads it."""
+        k = self.spec_tokens
+        dentry = self._decode_bucket(mp_bucket, draft=True)
+        ventry = self._verify_bucket(mp_bucket)
+        pt, lens, act = self._launch_views(active, mp_bucket)
+        base = np.asarray(self.state["lengths"])
+
+        proposals = {s: [] for s in active}
+        cur = np.zeros((self.batch_slots, 1), np.int32)
+        for s in active:
+            cur[s, 0] = self.slots[s].next_token
+        with obs.span("engine.spec_draft", active_slots=len(active),
+                      k=k, mp_bucket=mp_bucket):
+            for i in range(k):
+                self.draft_cache, dlogits = dentry["decode"](
+                    self.draft_params, jnp.asarray(cur), self.draft_cache,
+                    pt, lens + i * act if i else lens)
+                if i == k - 1:
+                    break               # KV-only append for d_{k-1}
+                greedy = np.asarray(jnp.argmax(dlogits, axis=-1))
+                for s in active:
+                    proposals[s].append(int(greedy[s]))
+                    cur[s, 0] = int(greedy[s])
+
+        vt = np.zeros((self.batch_slots, k), np.int32)
+        for s in active:
+            vt[s, 0] = self.slots[s].next_token
+            vt[s, 1:] = proposals[s]
+        with obs.span("engine.spec_verify", active_slots=len(active),
+                      k=k, mp_bucket=mp_bucket):
+            self.cache, vlogits = ventry["verify"](
+                self.params, jnp.asarray(vt), self.cache, pt, lens)
+        preds = np.asarray(jnp.argmax(vlogits, axis=-1))    # (B, k)
+
+        new_lengths = base.copy()
+        for s in active:
+            rec = self.slots[s]
+            ds, ps = proposals[s], preds[s]
+            j = 0
+            while j < k - 1 and ds[j] == int(ps[j]):
+                j += 1
+            emitted = ds[:j] + [int(ps[j])]
+            rec.generated.extend(emitted)
+            rec.next_token = emitted[-1]
+            new_lengths[s] = int(base[s]) + j + 1
+            self.spec_proposed += k - 1
+            self.spec_accepted += j
+            self.spec_emitted += len(emitted)
+            self.spec_participations += 1
+            self.tokens_generated += len(emitted)
+            obs.incr("engine.tokens_generated", len(emitted))
+        self.state["lengths"] = jnp.asarray(new_lengths, jnp.int32)
+        self.spec_rounds += 1
+        obs.incr("engine.spec.rounds")
+        obs.incr("engine.spec.proposed", (k - 1) * len(active))
+        obs.incr("engine.spec.accepted",
+                 sum(int(new_lengths[s] - base[s]) - 1 for s in active))
+
+    def step(self) -> bool:
+        """Admit, advance mid-prefill slots by one chunk, decode one step
+        (or one speculative round) for every decode-ready slot, retire
+        finished. Returns False when there is nothing left to do."""
         self._admit()
+        # chunk-interleaved prefill: one fixed-size chunk per slot per step
+        # bounds the decode stall at one chunk instead of one full prompt
+        for slot in sorted(self.slots):
+            rec = self.slots[slot]
+            if rec.prefilling:
+                self._advance_prefill(slot, rec)
         # retire slots that completed at admission (max_new_tokens == 1)
         for slot in [s for s, r in self.slots.items()
-                     if len(r.generated) >= r.req.max_new_tokens]:
+                     if not r.prefilling
+                     and len(r.generated) >= r.req.max_new_tokens]:
             self._retire(slot, self.slots[slot])
         if not self.slots:
             if self.pending:
@@ -469,40 +890,31 @@ class PagedEngine:
         # page growth; on pool exhaustion preempt the youngest stalled slot
         # (freeing its pages) until the survivors fit. A lone slot never
         # stalls: submit() bounds any single sequence to the pool size.
-        stalled = self._try_grow()
+        ahead = self.spec_tokens if self._spec else 1
+        stalled = self._try_grow(ahead)
         while stalled:
             self._preempt(stalled[-1])
-            stalled = self._try_grow()
+            stalled = self._try_grow(ahead)
         if not self.slots:
             return bool(self.pending)   # everything preempted; re-admit next
-        max_pages = max(r.n_pages for r in self.slots.values())
+        active = [s for s, r in sorted(self.slots.items())
+                  if not r.prefilling]
+        if not active:
+            self.steps += 1
+            return True                 # all slots mid-prefill; decode next
+        max_pages = max(self.slots[s].n_pages for s in active)
         mp_bucket = min(self.max_pages_per_seq, _pow2(max_pages))
-        entry = self._decode_bucket(mp_bucket)
         self._note_occupancy()
-
-        tokens = np.zeros((self.batch_slots, 1), np.int32)
-        for slot, rec in self.slots.items():
-            tokens[slot, 0] = rec.next_token
-        n_active = len(self.slots)
-        with obs.span("engine.decode_step", active_slots=n_active,
-                      mp_bucket=mp_bucket):
-            self.cache, logits = entry["decode"](
-                self.params, jnp.asarray(tokens), self.cache,
-                self.state["page_table"][:, :mp_bucket],
-                self.state["lengths"])
-            self.state["lengths"] = self.state["lengths"] + jnp.asarray(
-                [1 if s in self.slots else 0
-                 for s in range(self.batch_slots)], jnp.int32)
-            sampled = self._sample(logits)
+        if self._spec:
+            self._spec_round(active, mp_bucket)
+        else:
+            self._decode_one(active, mp_bucket)
         self.steps += 1
-        self.tokens_generated += n_active
-        obs.incr("engine.tokens_generated", n_active)
 
         for slot in list(self.slots):
             rec = self.slots[slot]
-            tok = int(sampled[slot])
-            rec.generated.append(tok)
-            rec.next_token = tok
+            if rec.prefilling:
+                continue
             if len(rec.generated) >= rec.req.max_new_tokens:
                 self._retire(slot, rec)
         return bool(self.slots or self.pending)
@@ -511,7 +923,7 @@ class PagedEngine:
         """Engine-level metrics (the run report, DESIGN.md §13): counts are
         cumulative since construction, mirrored into the telemetry counters
         whenever a capture is active."""
-        return {
+        out = {
             "steps": self.steps,
             "admissions": self.admissions,
             "preemptions": self.preemptions,
@@ -521,6 +933,32 @@ class PagedEngine:
             "bucket_lru": dict(self.lru_stats),
             "completed": len(self.results),
         }
+        if self.prefix is not None:
+            p = self.prefix
+            out["prefix_cache"] = {
+                "lookups": p.lookups,
+                "hits": p.hits,
+                "hit_rate": p.hits / p.lookups if p.lookups else 0.0,
+                "matched_tokens": p.matched_tokens,
+                "pages_held": p.pages_held,
+            }
+        if self.chunk_tokens is not None:
+            out["chunked_prefill"] = {"chunk_tokens": self.chunk_tokens,
+                                      "chunks": self.chunks_prefilled}
+        if self._spec:
+            out["speculative"] = {
+                "k": self.spec_tokens,
+                "rounds": self.spec_rounds,
+                "proposed": self.spec_proposed,
+                "accepted": self.spec_accepted,
+                "accept_rate": (self.spec_accepted / self.spec_proposed
+                                if self.spec_proposed else 0.0),
+                # emitted tokens per sequence per verify round, in [1, k]
+                "mean_tokens_per_round":
+                    (self.spec_emitted / self.spec_participations
+                     if self.spec_participations else 0.0),
+            }
+        return out
 
     def run(self) -> dict:
         """Drive :meth:`step` until idle; returns {uid: tokens} results.

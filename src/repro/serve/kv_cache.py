@@ -25,6 +25,7 @@ Split of responsibilities:
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 
 import jax.numpy as jnp
@@ -55,25 +56,30 @@ def init_page_state(batch_slots: int, max_pages: int) -> dict:
 # ---------------------------------------------------------------------------
 
 def append_paged_kv(k_pages, v_pages, k_new, v_new, page_table, lengths):
-    """Append one token's K/V per sequence at its write position.
+    """Append T tokens' K/V per sequence at its write position.
 
-    k_new/v_new: (B, kv_heads, 1, head_dim); the write lands in page
-    ``page_table[b, lengths[b] // page_size]`` at offset
-    ``lengths[b] % page_size``. Inactive slots (empty table rows) scatter
-    into the reserved null page — duplicate null-page writes race but the
-    null page is never read unmasked, so the race is benign.
+    k_new/v_new: (B, kv_heads, T, head_dim); token t of sequence b lands in
+    page ``page_table[b, (lengths[b]+t) // page_size]`` at offset
+    ``(lengths[b]+t) % page_size``. T is a static shape, so the multi-token
+    case (speculative verify) unrolls to T single-token scatters. Inactive
+    slots (empty table rows) scatter into the reserved null page —
+    duplicate null-page writes race but the null page is never read
+    unmasked, so the race is benign.
     """
     b = k_new.shape[0]
+    t_tokens = k_new.shape[2]
     page_size = k_pages.shape[2]
     lengths = jnp.asarray(lengths, jnp.int32)
-    pidx = page_table[jnp.arange(b), lengths // page_size]
-    off = lengths % page_size
-    k_pages = k_pages.at[pidx, :, off].set(k_new[:, :, 0, :])
-    v_pages = v_pages.at[pidx, :, off].set(v_new[:, :, 0, :])
+    for t in range(t_tokens):
+        pos = lengths + t
+        pidx = page_table[jnp.arange(b), pos // page_size]
+        off = pos % page_size
+        k_pages = k_pages.at[pidx, :, off].set(k_new[:, :, t, :])
+        v_pages = v_pages.at[pidx, :, off].set(v_new[:, :, t, :])
     return k_pages, v_pages
 
 
-def write_prefill_pages(k_pages, v_pages, k, v, page_rows):
+def write_prefill_pages(k_pages, v_pages, k, v, page_rows, start_page=0):
     """Write one sequence's prefill K/V into its allocated pages.
 
     k/v: (1, kv_heads, S, head_dim); ``page_rows``: (max_pages,) — the
@@ -81,6 +87,12 @@ def write_prefill_pages(k_pages, v_pages, k, v, page_rows):
     S is padded up to a whole number of pages; tokens past the true length
     are garbage until overwritten by appends, and stay masked by
     ``lengths`` until then.
+
+    ``start_page`` (traced ok) offsets the destination within the row:
+    chunked prefill writes chunk c of C tokens with
+    ``start_page = c * C // page_size`` and the same compiled function
+    serves every chunk index. Rows past the end of ``page_rows`` read as
+    the null page, so a padded final chunk writes harmlessly to page 0.
     """
     _, hkv, s, d = k.shape
     page_size = k_pages.shape[2]
@@ -92,7 +104,15 @@ def write_prefill_pages(k_pages, v_pages, k, v, page_rows):
     # (1, hkv, n*page, d) -> (n, hkv, page, d)
     kr = k.reshape(hkv, n, page_size, d).transpose(1, 0, 2, 3)
     vr = v.reshape(hkv, n, page_size, d).transpose(1, 0, 2, 3)
-    rows = jnp.asarray(page_rows, jnp.int32)[:n]
+    all_rows = jnp.asarray(page_rows, jnp.int32)
+    if isinstance(start_page, int) and start_page == 0:
+        rows = all_rows[:n]
+    else:
+        idx = jnp.asarray(start_page, jnp.int32) + jnp.arange(n)
+        # rows beyond the table read as null page (absorbs padded chunks)
+        rows = jnp.where(idx < all_rows.shape[0],
+                         all_rows[jnp.clip(idx, 0, all_rows.shape[0] - 1)],
+                         NULL_PAGE)
     return k_pages.at[rows].set(kr), v_pages.at[rows].set(vr)
 
 
@@ -112,12 +132,21 @@ def gather_pages(pages, page_table):
 
 @dataclasses.dataclass
 class PageAllocator:
-    """Free-list allocator over physical pages 1..n_pages-1 (0 = null)."""
+    """Refcounted free-list allocator over pages 1..n_pages-1 (0 = null).
+
+    ``alloc`` hands out pages with refcount 1; ``retain`` adds a reference
+    (prefix-cache sharing: a matched page is held by the trie *and* every
+    sequence whose table row points at it); ``free`` drops one reference
+    and only returns the page to the free list when the count hits zero.
+    Freeing an unallocated page is a hard error — double frees corrupt
+    shared prefixes silently otherwise.
+    """
 
     n_pages: int
 
     def __post_init__(self):
         self._free = list(range(self.n_pages - 1, 0, -1))  # pop() -> low ids
+        self._refs = [0] * self.n_pages
 
     @property
     def free_pages(self) -> int:
@@ -131,15 +160,149 @@ class PageAllocator:
             raise MemoryError(
                 f"paged KV cache exhausted: need {n} pages, "
                 f"{len(self._free)} free of {self.n_pages - 1}")
-        return [self._free.pop() for _ in range(n)]
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._refs[p] = 1
+        return pages
+
+    def retain(self, page: int) -> int:
+        """Add a reference to an already-allocated page; returns new count."""
+        if not 0 < page < self.n_pages:
+            raise ValueError(f"retaining invalid page id {page}")
+        if self._refs[page] == 0:
+            raise ValueError(f"retaining unallocated page {page}")
+        self._refs[page] += 1
+        return self._refs[page]
+
+    def refcount(self, page: int) -> int:
+        if not 0 <= page < self.n_pages:
+            raise ValueError(f"invalid page id {page}")
+        return self._refs[page]
 
     def free(self, pages) -> None:
         for p in pages:
             if not 0 < p < self.n_pages:
                 raise ValueError(f"freeing invalid page id {p}")
-            if p in self._free:
+            if self._refs[p] == 0:
                 raise ValueError(f"double free of page {p}")
-            self._free.append(p)
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                self._free.append(p)
+
+
+class PrefixCache:
+    """Trie of immutable full KV pages keyed by their exact token content.
+
+    Each node is one *full* page of a previously prefilled prompt, keyed by
+    the chain of page-token-tuples leading to it — exact token match, no
+    hash collisions. A node holds one reference on its page (via
+    :meth:`PageAllocator.retain` at insert), so cached pages survive the
+    sequences that created them and are handed out to later requests whose
+    prompts share the prefix.
+
+    COW rule: only whole pages are ever shared, and :meth:`match` stops at
+    ``(len(tokens) - 1) // page_size`` full pages so at least the final
+    prompt token is always recomputed privately (its logits seed the first
+    sampled token). Decode appends land at positions >= the matched region,
+    i.e. in private pages — shared pages are immutable by construction.
+
+    Eviction is LRU over *leaf* nodes whose page is referenced only by the
+    trie (refcount 1): interior nodes are never dropped before their
+    children, so no cached page becomes unreachable.
+    """
+
+    def __init__(self, page_size: int):
+        self.page_size = page_size
+        self._nodes = collections.OrderedDict()  # key -> {page, children}
+        self.lookups = 0
+        self.hits = 0
+        self.matched_tokens = 0
+
+    def __len__(self):
+        return len(self._nodes)
+
+    @property
+    def pages_held(self) -> int:
+        return len(self._nodes)
+
+    def _key_chain(self, tokens):
+        """Full-page token tuples of ``tokens``, shareable region only."""
+        n_share = max(0, (len(tokens) - 1) // self.page_size)
+        ps = self.page_size
+        return [tuple(int(t) for t in tokens[i * ps:(i + 1) * ps])
+                for i in range(n_share)]
+
+    def match(self, tokens, alloc: PageAllocator) -> list:
+        """Longest cached page-prefix of ``tokens``; retains each hit.
+
+        Returns the list of matched physical page ids (possibly empty).
+        Every returned page has had ``alloc.retain`` called on it — the
+        caller owns one reference per page and must ``free`` them when the
+        sequence retires or is preempted.
+        """
+        self.lookups += 1
+        pages, key = [], ()
+        for chunk in self._key_chain(tokens):
+            key = key + (chunk,)
+            node = self._nodes.get(key)
+            if node is None:
+                break
+            alloc.retain(node["page"])
+            self._nodes.move_to_end(key)
+            pages.append(node["page"])
+        if pages:
+            self.hits += 1
+            self.matched_tokens += len(pages) * self.page_size
+        return pages
+
+    def insert(self, tokens, pages, alloc: PageAllocator) -> int:
+        """Register ``tokens``'s full pages (backed by ``pages``) for reuse.
+
+        ``pages`` is the sequence's page-table prefix (one id per page of
+        the prompt). Nodes already present are skipped (the sequence got
+        those exact pages from :meth:`match`); new nodes retain their page
+        so it outlives the sequence. Returns the number of new nodes.
+        """
+        added = 0
+        key = ()
+        for i, chunk in enumerate(self._key_chain(tokens)):
+            key = key + (chunk,)
+            node = self._nodes.get(key)
+            if node is not None:
+                self._nodes.move_to_end(key)
+                continue
+            alloc.retain(pages[i])
+            self._nodes[key] = {"page": int(pages[i]), "children": 0}
+            if len(key) > 1:
+                self._nodes[key[:-1]]["children"] += 1
+            added += 1
+        return added
+
+    def evict(self, alloc: PageAllocator, need: int) -> int:
+        """Drop up to ``need`` LRU leaf pages held only by the trie.
+
+        Returns how many pages were actually returned to the free list.
+        Pages still referenced by a live sequence (refcount > 1) are
+        skipped — dropping the trie's reference would not free them and
+        would orphan a shareable page.
+        """
+        freed = 0
+        progress = True
+        while freed < need and progress:
+            progress = False
+            for key in list(self._nodes):  # OrderedDict: LRU first
+                node = self._nodes[key]
+                if node["children"] or alloc.refcount(node["page"]) != 1:
+                    continue
+                alloc.free([node["page"]])
+                del self._nodes[key]
+                if len(key) > 1:
+                    self._nodes[key[:-1]]["children"] -= 1
+                freed += 1
+                progress = True
+                if freed >= need:
+                    break
+        return freed
 
 
 def assign_slot(state: dict, slot: int, pages, prompt_len: int) -> dict:

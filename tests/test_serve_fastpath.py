@@ -1,0 +1,365 @@
+"""Serving fast paths (DESIGN.md §14): refcounted pages, prefix cache,
+chunked prefill, speculative decoding — each against the dense engine's
+greedy output, plus the sampling contract and the multi-token verify
+kernel against the einsum oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels.attention import attention_decode_paged
+from repro.models.api import build_model
+from repro.serve import kv_cache as kvc
+from repro.serve.engine import Engine, PagedEngine, Request
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# allocator refcounts + prefix trie units
+# ---------------------------------------------------------------------------
+class TestRefcounts:
+    def test_retain_defers_free(self):
+        alloc = kvc.PageAllocator(4)
+        a, b_ = alloc.alloc(2)
+        assert alloc.refcount(a) == 1
+        assert alloc.retain(a) == 2
+        alloc.free([a, b_])            # drops one ref each
+        assert alloc.refcount(a) == 1  # still held
+        assert alloc.refcount(b_) == 0
+        assert alloc.free_pages == 2   # b_ + the never-allocated 3rd page
+        alloc.free([a])
+        assert alloc.free_pages == 3
+        with pytest.raises(ValueError):
+            alloc.free([a])            # double free
+        with pytest.raises(ValueError):
+            alloc.retain(b_)           # retain of an unallocated page
+
+    def test_retain_rejects_invalid_ids(self):
+        alloc = kvc.PageAllocator(4)
+        for bad in (0, -1, 4):
+            with pytest.raises(ValueError):
+                alloc.retain(bad)
+
+
+class TestPrefixCache:
+    def test_match_stops_before_final_token(self):
+        """COW rule: the page holding the final prompt token is never
+        shared, so admission always has fresh logits to sample from."""
+        alloc = kvc.PageAllocator(8)
+        trie = kvc.PrefixCache(page_size=4)
+        toks = list(range(8))                      # exactly 2 full pages
+        pages = alloc.alloc(2)
+        trie.insert(toks, pages, alloc)
+        assert trie.pages_held == 1                # (8-1)//4 = 1 shareable
+        assert trie.match(toks, alloc) == pages[:1]
+        alloc.free(pages[:1])                      # drop match's retain
+        # a 9-token prompt may share 2 full pages, but page 2 was never
+        # inserted (it held toks[7], the 8-token prompt's final token)
+        assert trie.match(toks + [9], alloc) == pages[:1]
+        alloc.free(pages[:1])
+        pages3 = alloc.alloc(1)
+        trie.insert(toks + [9], pages + pages3, alloc)
+        got = trie.match(toks + [9, 10], alloc)
+        assert got == pages                        # both pages now cached
+        alloc.free(got)
+
+    def test_divergent_tails_share_common_prefix_only(self):
+        alloc = kvc.PageAllocator(16)
+        trie = kvc.PrefixCache(page_size=4)
+        a = [1, 2, 3, 4, 5, 6, 7, 8, 9]
+        b = [1, 2, 3, 4, 9, 9, 9, 9, 9]
+        pa, pb = alloc.alloc(3), alloc.alloc(3)
+        trie.insert(a, pa, alloc)
+        trie.insert(b, pb, alloc)
+        assert trie.pages_held == 3            # shared head + 2 tails
+        got = trie.match([1, 2, 3, 4, 5, 6, 7, 8, 0, 0], alloc)
+        assert got == pa[:2]
+        alloc.free(got)
+
+    def test_evict_leaf_first_and_respects_refs(self):
+        alloc = kvc.PageAllocator(8)
+        trie = kvc.PrefixCache(page_size=2)
+        toks = [1, 2, 3, 4, 5]                 # two shareable pages
+        pages = alloc.alloc(3)
+        trie.insert(toks, pages, alloc)
+        alloc.free(pages)                      # the inserting seq retires
+        held = trie.match(toks, alloc)         # simulate an active borrower
+        assert trie.evict(alloc, 2) == 0       # all pages referenced
+        alloc.free(held)
+        assert trie.evict(alloc, 1) == 1       # leaf (deepest) goes first
+        assert trie.pages_held == 1
+        assert alloc.refcount(pages[0]) == 1   # interior survives
+
+
+# ---------------------------------------------------------------------------
+# multi-token (verify) decode kernel vs the einsum oracle
+# ---------------------------------------------------------------------------
+class TestMultiTokenKernel:
+    @pytest.mark.parametrize("window", [None, 8])
+    def test_paged_verify_matches_reference(self, window):
+        rng = np.random.default_rng(5)
+        P, hkv, page, d, h, b, mp, t = 9, 2, 16, 32, 4, 2, 4, 3
+        kp = jnp.asarray(rng.normal(size=(P, hkv, page, d)), jnp.float32)
+        vp = jnp.asarray(rng.normal(size=(P, hkv, page, d)), jnp.float32)
+        q = jnp.asarray(rng.normal(size=(b, h, t, d)), jnp.float32)
+        pt = jnp.array([[3, 1, 7, 0], [2, 5, 0, 0]], jnp.int32)
+        lens = jnp.array([55, 20], jnp.int32)   # lengths AFTER the t appends
+        ref = attention_decode_paged(q, kp, vp, pt, lens, window=window,
+                                     mode="reference")
+        ker = attention_decode_paged(q, kp, vp, pt, lens, window=window,
+                                     mode="pallas_interpret")
+        assert ref.shape == (b, h, t, d)
+        np.testing.assert_allclose(np.asarray(ker), np.asarray(ref),
+                                   atol=5e-6)
+
+    def test_verify_rows_match_serial_single_token(self):
+        """Row t of a T-token verify equals a 1-token decode at the same
+        position — the property speculative acceptance relies on."""
+        rng = np.random.default_rng(6)
+        P, hkv, page, d, h, t = 6, 2, 8, 16, 4, 3
+        kp = jnp.asarray(rng.normal(size=(P, hkv, page, d)), jnp.float32)
+        vp = jnp.asarray(rng.normal(size=(P, hkv, page, d)), jnp.float32)
+        q = jnp.asarray(rng.normal(size=(1, h, t, d)), jnp.float32)
+        pt = jnp.array([[2, 4, 1, 0]], jnp.int32)
+        multi = attention_decode_paged(q, kp, vp, pt,
+                                       jnp.array([14], jnp.int32),
+                                       mode="reference")
+        for i in range(t):
+            one = attention_decode_paged(q[:, :, i:i + 1], kp, vp, pt,
+                                         jnp.array([12 + i], jnp.int32),
+                                         mode="reference")
+            np.testing.assert_array_equal(np.asarray(multi[:, :, i]),
+                                          np.asarray(one[:, :, 0]))
+
+
+# ---------------------------------------------------------------------------
+# engine fast paths: bitwise greedy parity vs the dense engine
+# ---------------------------------------------------------------------------
+ARCHS = ["granite-8b", "mixtral-8x7b"]          # GQA and windowed+moe
+
+
+def _setup(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg, mode="reference")
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _shared_prefix_reqs(cfg, n=3, prefix_len=17, max_new=5, seed=0):
+    rng = np.random.default_rng(seed)
+    head = rng.integers(0, cfg.vocab_size, prefix_len).astype(np.int32)
+    return [Request(uid, np.concatenate(
+        [head, rng.integers(0, cfg.vocab_size, 5 + uid).astype(np.int32)]),
+        max_new) for uid in range(n)]
+
+
+def _check_parity(model, params, reqs, max_len=64, **engine_kw):
+    eng = PagedEngine(model, params, batch_slots=2, page_size=8,
+                      max_pages_per_seq=4, **engine_kw)
+    for r in reqs:
+        eng.submit(Request(r.uid, r.prompt, r.max_new_tokens))
+    results = eng.run()
+    fixed = Engine(model, params, max_len=max_len)
+    for r in reqs:
+        want = fixed.generate(r.prompt[None, :], r.max_new_tokens).tokens[0]
+        np.testing.assert_array_equal(results[r.uid], want)
+    return eng
+
+
+class TestFastPathParity:
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_prefix_cached_matches_dense(self, arch):
+        cfg, model, params = _setup(arch)
+        eng = _check_parity(model, params, _shared_prefix_reqs(cfg),
+                            prefix_cache=True)
+        rep = eng.report()["prefix_cache"]
+        assert rep["hits"] >= 1 and rep["matched_tokens"] >= 8
+        # retiring every sequence returns its refs; the trie keeps its own
+        assert eng.alloc.free_pages == eng.n_pages - 1 - rep["pages_held"]
+
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_chunked_prefill_matches_dense(self, arch):
+        cfg, model, params = _setup(arch)
+        eng = _check_parity(model, params, _shared_prefix_reqs(cfg),
+                            chunk_tokens=8)
+        assert eng.report()["chunked_prefill"]["chunks"] >= 3
+        assert eng.alloc.free_pages == eng.n_pages - 1
+
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_speculative_selfdraft_matches_dense(self, arch):
+        cfg, model, params = _setup(arch)
+        eng = _check_parity(model, params, _shared_prefix_reqs(cfg),
+                            draft_model=model, draft_params=params,
+                            spec_tokens=3)
+        rep = eng.report()["speculative"]
+        assert rep["accept_rate"] == 1.0           # draft == target
+        assert rep["mean_tokens_per_round"] == 3.0
+
+    def test_speculative_divergent_draft_matches_dense(self):
+        """A draft with different weights proposes wrong tokens; rejection
+        must still leave exactly the target's greedy output."""
+        cfg, model, params = _setup("granite-8b")
+        draft_params = model.init(jax.random.PRNGKey(7))
+        eng = _check_parity(model, params, _shared_prefix_reqs(cfg),
+                            draft_model=model, draft_params=draft_params,
+                            spec_tokens=3)
+        rep = eng.report()["speculative"]
+        assert 0.0 <= rep["accept_rate"] < 1.0
+        assert 1.0 <= rep["mean_tokens_per_round"] <= 3.0
+
+    def test_all_fast_paths_stacked(self):
+        cfg, model, params = _setup("granite-8b")
+        _check_parity(model, params, _shared_prefix_reqs(cfg),
+                      prefix_cache=True, chunk_tokens=8,
+                      draft_model=model, draft_params=params, spec_tokens=3)
+
+    def test_spec_rejects_sampled_requests(self):
+        cfg, model, params = _setup("granite-8b")
+        eng = PagedEngine(model, params, batch_slots=2, page_size=8,
+                          max_pages_per_seq=4, draft_model=model,
+                          draft_params=params, spec_tokens=2)
+        with pytest.raises(ValueError):
+            eng.submit(Request(0, np.arange(4, dtype=np.int32), 2,
+                               temperature=0.7))
+        with pytest.raises(ValueError):
+            PagedEngine(model, params, temperature=0.5, draft_model=model,
+                        draft_params=params, spec_tokens=2)
+
+    def test_recurrent_arch_rejects_fast_paths(self):
+        cfg, model, params = _setup("mamba2-130m")
+        for kw in ({"prefix_cache": True}, {"chunk_tokens": 8},
+                   {"draft_model": model, "draft_params": params,
+                    "spec_tokens": 2}):
+            with pytest.raises(ValueError):
+                PagedEngine(model, params, page_size=8, **kw)
+
+
+# ---------------------------------------------------------------------------
+# preemption + shared pages
+# ---------------------------------------------------------------------------
+class TestPreemptionSharing:
+    def test_preempted_slot_does_not_free_shared_pages(self):
+        """Forced preemption under a tiny pool with an active prefix trie:
+        the victim's frees are ref drops, so pages a neighbour (or the
+        trie) still references survive, and every result stays exact."""
+        cfg, model, params = _setup("granite-8b")
+        rng = np.random.default_rng(11)
+        head = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+        reqs = [Request(u, np.concatenate(
+            [head, rng.integers(0, cfg.vocab_size, 2 + u).astype(np.int32)]),
+            10) for u in range(2)]
+        eng = PagedEngine(model, params, batch_slots=2, page_size=4,
+                          max_pages_per_seq=6, n_pages=8,   # 7-page pool
+                          prefix_cache=True)
+        for r in reqs:
+            eng.submit(Request(r.uid, r.prompt, r.max_new_tokens))
+        results = eng.run()
+        assert eng.preemptions > 0
+        held = eng.report()["prefix_cache"]["pages_held"]
+        assert held >= 1
+        assert eng.alloc.free_pages == eng.n_pages - 1 - held
+        fixed = Engine(model, params, max_len=64)
+        for r in reqs:
+            want = fixed.generate(r.prompt[None, :],
+                                  r.max_new_tokens).tokens[0]
+            np.testing.assert_array_equal(results[r.uid], want)
+
+    def test_trie_eviction_unblocks_admission(self):
+        """A full trie must yield unreferenced pages back to admissions
+        instead of deadlocking the pool."""
+        cfg, model, params = _setup("granite-8b")
+        eng = PagedEngine(model, params, batch_slots=1, page_size=4,
+                          max_pages_per_seq=4, n_pages=6,   # 5-page pool
+                          prefix_cache=True)
+        rng = np.random.default_rng(12)
+        for uid in range(3):        # distinct prompts: the trie fills up
+            eng.submit(Request(uid, rng.integers(
+                0, cfg.vocab_size, 9).astype(np.int32), 3))
+        results = eng.run()
+        assert sorted(results) == [0, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# sampling contract (per-request temperature + seed)
+# ---------------------------------------------------------------------------
+class TestSamplingContract:
+    def test_seeded_request_invariant_to_batchmates(self):
+        """Same (seed, temperature) request produces the same tokens no
+        matter what shares its batch — the fold_in(position) contract."""
+        cfg, model, params = _setup("granite-8b")
+        probe = Request(0, np.arange(1, 7, dtype=np.int32), 5,
+                        temperature=0.8, seed=123)
+
+        def run_with(extra):
+            eng = PagedEngine(model, params, batch_slots=2, page_size=8,
+                              max_pages_per_seq=4)
+            eng.submit(Request(0, probe.prompt, probe.max_new_tokens,
+                               temperature=0.8, seed=123))
+            for r in extra:
+                eng.submit(r)
+            return eng.run()[0]
+
+        alone = run_with([])
+        rng = np.random.default_rng(13)
+        crowd = run_with([Request(9, rng.integers(
+            0, cfg.vocab_size, 11).astype(np.int32), 7)])
+        np.testing.assert_array_equal(alone, crowd)
+
+    def test_greedy_rider_unaffected_by_sampled_neighbour(self):
+        cfg, model, params = _setup("granite-8b")
+        greedy = Request(0, np.arange(2, 9, dtype=np.int32), 4)
+        eng = PagedEngine(model, params, batch_slots=2, page_size=8,
+                          max_pages_per_seq=4, temperature=0.0)
+        eng.submit(Request(0, greedy.prompt, 4))
+        eng.submit(Request(1, np.arange(1, 5, dtype=np.int32), 4,
+                           temperature=1.0, seed=5))
+        results = eng.run()
+        fixed = Engine(model, params, max_len=32)
+        want = fixed.generate(greedy.prompt[None, :], 4).tokens[0]
+        np.testing.assert_array_equal(results[0], want)
+
+    def test_seeded_sampling_survives_preemption(self):
+        """Recompute preemption replays the same fold_in positions, so a
+        seeded request's output is preemption-invariant."""
+        cfg, model, params = _setup("granite-8b")
+        prompt = np.arange(1, 5, dtype=np.int32)
+        big = PagedEngine(model, params, batch_slots=2, page_size=4,
+                          max_pages_per_seq=6)
+        big.submit(Request(0, prompt, 10, temperature=0.9, seed=42))
+        want = big.run()[0]
+        rng = np.random.default_rng(14)
+        tight = PagedEngine(model, params, batch_slots=2, page_size=4,
+                            max_pages_per_seq=6, n_pages=7)   # forces preempt
+        tight.submit(Request(0, prompt, 10, temperature=0.9, seed=42))
+        tight.submit(Request(1, rng.integers(
+            0, cfg.vocab_size, 4).astype(np.int32), 10))
+        got = tight.run()[0]
+        assert tight.preemptions > 0
+        np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# unified bucket LRU
+# ---------------------------------------------------------------------------
+class TestUnifiedLRU:
+    def test_paged_engine_bucket_kinds_share_one_lru(self):
+        cfg, model, params = _setup("granite-8b")
+        eng = PagedEngine(model, params, batch_slots=2, page_size=8,
+                          max_pages_per_seq=4, chunk_tokens=8,
+                          draft_model=model, draft_params=params,
+                          spec_tokens=3)
+        eng.submit(Request(0, np.arange(1, 11, dtype=np.int32), 4))
+        eng.run()
+        kinds = {k[0] if isinstance(k[0], str) else "decode"
+                 for k in eng.bucket_policies}
+        # the target's k-token verify step replaces its 1-token decode
+        assert {"chunk", "draft_chunk", "verify", "draft_decode"} <= kinds
+
+    def test_dense_engine_decode_in_shared_lru(self):
+        cfg, model, params = _setup("granite-8b")
+        eng = Engine(model, params, max_len=32, max_cached_buckets=3)
+        eng.generate(np.ones((1, 4), np.int32), 2)
+        assert ("decode", 1) in eng.bucket_policies
+        assert (1, 4) in eng.bucket_policies
