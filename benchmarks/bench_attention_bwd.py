@@ -11,7 +11,7 @@ import jax.numpy as jnp
 from repro.core import autotune
 from repro.core import perf_model as pm
 from repro.kernels.attention import attention
-from .common import time_fn, emit
+from .common import measure_cell, emit
 
 
 def main() -> None:
@@ -32,7 +32,7 @@ def main() -> None:
                 fn = jax.jit(jax.grad(lambda q, k, v: attention(
                     q, k, v, causal=causal, mode="reference").sum(),
                     argnums=(0, 1, 2)))
-                us = time_fn(fn, q, k, v, warmup=2, iters=5)
+                us = measure_cell(fn, q, k, v, warmup=2, iters=5)["us"]
                 # fused flash backward vs recompute+materialized-scores
                 # chain, planned from modeled dma_bytes (DESIGN.md §12)
                 plan = autotune.select_fusion(

@@ -29,7 +29,7 @@ import jax.numpy as jnp
 
 from repro.core import autotune
 from repro.kernels.attention import attention, attention_ref
-from .common import time_fn, emit
+from .common import measure_cell, emit
 
 CELLS = (("mha", 16, 16, 128), ("mha_d64", 16, 16, 64),
          ("gqa", 64, 8, 128), ("gqa_d64", 64, 8, 64))
@@ -69,7 +69,7 @@ def main() -> None:
     sinks = jax.random.normal(ks[3], (h,), jnp.float32)
     ref_fn = jax.jit(lambda q, k, v, sinks: attention_ref(
         q, k, v, causal=True, softcap=20.0, sinks=sinks))
-    us_ref = time_fn(ref_fn, q, k, v, sinks, warmup=2, iters=5)
+    us_ref = measure_cell(ref_fn, q, k, v, sinks, warmup=2, iters=5)["us"]
     out = attention(q, k, v, causal=True, softcap=20.0, sinks=sinks,
                     mode="pallas_interpret")
     err = float(jnp.abs(out - ref_fn(q, k, v, sinks)).max())

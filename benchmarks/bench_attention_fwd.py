@@ -12,7 +12,7 @@ import jax.numpy as jnp
 from repro.core import autotune
 from repro.core import perf_model as pm
 from repro.kernels.attention import attention
-from .common import time_fn, emit
+from .common import measure_cell, emit
 
 
 def main() -> None:
@@ -33,7 +33,7 @@ def main() -> None:
                 v = jax.random.normal(ks[2], k.shape)
                 fn = jax.jit(lambda q, k, v: attention(
                     q, k, v, causal=causal, mode="reference"))
-                us = time_fn(fn, q, k, v, warmup=2, iters=5)
+                us = measure_cell(fn, q, k, v, warmup=2, iters=5)["us"]
                 # fusion plan from modeled dma_bytes (DESIGN.md §12): flash
                 # megakernel vs materialized-scores eager chain
                 plan = autotune.select_fusion(

@@ -1,0 +1,53 @@
+"""Calibration drift bench: measured-vs-analytic ranking agreement.
+
+Runs the interpret-path calibration sweep (docs/autotuning.md) and emits
+one row per op family plus the fitted chip coefficients:
+
+  * ``calib_sweep``      — wall-clock of the whole calibrate() run;
+    derived carries cell/candidate counts and the drift-gate verdict.
+  * ``calib_<family>``   — per-op-family top-1 agreement and mean Spearman
+    rank correlation between analytic and measured candidate rankings
+    (the same numbers tools/drift_check.py gates CI on).
+  * ``calib_fitted_chip``— the least-squares-recovered ChipSpec
+    coefficients, as ratios to the analytic V5E defaults.
+
+``$BENCH_SMOKE`` selects the CI-sized sweep.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.core import calibrate as cal
+from repro.core import perf_model as pm
+from .common import emit, measure_cell
+
+
+def main() -> None:
+    smoke = bool(os.environ.get("BENCH_SMOKE"))
+    out: dict = {}
+
+    def run():
+        out["report"] = cal.calibrate(smoke=smoke, arch="cpu")
+
+    us = measure_cell(run, warmup=0, iters=1)["us"]
+    report = out["report"]
+    drift = cal.check_drift(report)
+    n_cands = sum(len(c["candidates"]) for c in report["cells"].values())
+    emit("calib_sweep", us,
+         f"cells={len(report['cells'])};candidates={n_cands};"
+         f"fusion={len(report['fusion'])};"
+         f"drift={'ok' if drift['ok'] else 'VIOLATED'}")
+    for op, fam in sorted(drift["families"].items()):
+        emit(f"calib_{op}", us / max(1, drift["n_cells"]) * fam["cells"],
+             f"top1={fam['top1_agreement']:.2f};"
+             f"spearman={fam['mean_spearman']:.3f};cells={fam['cells']}")
+    chip = report["chip"]
+    emit("calib_fitted_chip", 0.0,
+         f"flops_ratio={chip['peak_flops_bf16'] / pm.V5E.peak_flops_bf16:.3f};"
+         f"bw_ratio={chip['hbm_bw'] / pm.V5E.hbm_bw:.3f};"
+         f"step_us={chip['step_overhead_s'] * 1e6:.2f};"
+         f"decode_ramp={chip['decode_saturation_steps']}")
+
+
+if __name__ == "__main__":
+    main()

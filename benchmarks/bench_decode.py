@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from repro.core import autotune
 from repro.core import perf_model as pm
 from repro.kernels.attention import attention_decode
-from .common import time_fn, emit
+from .common import measure_cell, emit
 
 
 def _modeled(b, hkv, group, skv, d, block_kv):
@@ -38,7 +38,7 @@ def _row(name, b, h, hkv, skv, d, *, page_size=None):
 
     fn = jax.jit(lambda q, k, v: attention_decode(q, k, v, lengths,
                                                   mode="reference"))
-    us = time_fn(fn, q, k, v)
+    us = measure_cell(fn, q, k, v)["us"]
 
     if page_size is None:
         pol = autotune.select_policy("attention_decode",

@@ -30,7 +30,7 @@ import jax.numpy as jnp
 from repro.core import autotune
 from repro.kernels.gemm import default_bwd_mode
 from repro.models.common import mlp_forward, norm_params
-from .common import time_fn, emit
+from .common import measure_cell, emit
 
 
 class _MlpCfg:
@@ -88,7 +88,7 @@ def main() -> None:
          "w_out": jax.random.normal(ks[4], (f, d), jnp.float32) * 0.05}
     ref_fn = jax.jit(lambda x, res: mlp_forward(
         cfg, p, x, mode="reference", residual=res, residual_scale=0.5))
-    us_ref = time_fn(ref_fn, x, res)
+    us_ref = measure_cell(ref_fn, x, res)["us"]
     out = mlp_forward(cfg, p, x, mode="pallas_interpret", residual=res,
                       residual_scale=0.5)
     err = float(jnp.abs(out - ref_fn(x, res)).max())
@@ -104,7 +104,7 @@ def main() -> None:
     norm_ref_fn = jax.jit(lambda x, res: mlp_forward(
         cfg, p, x, mode="reference", residual=res, residual_scale=0.5,
         prenorm=pn))
-    us_norm_ref = time_fn(norm_ref_fn, x, res)
+    us_norm_ref = measure_cell(norm_ref_fn, x, res)["us"]
     out = mlp_forward(cfg, p, x, mode="pallas_interpret", residual=res,
                       residual_scale=0.5, prenorm=pn)
     err = float(jnp.abs(out - norm_ref_fn(x, res)).max())

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from repro.core import autotune
 from repro.core import perf_model as pm
 from repro.kernels.gemm import gemm, gemm_ref
-from .common import time_fn, emit, gemm_candidate_sweep
+from .common import measure_cell, emit, gemm_candidate_sweep
 
 
 SIZES = (1024, 2048, 4096, 8192)
@@ -38,7 +38,7 @@ def main() -> None:
         a = jax.random.normal(jax.random.PRNGKey(0), (n, n), jnp.bfloat16)
         b = jax.random.normal(jax.random.PRNGKey(1), (n, n), jnp.bfloat16)
         ref = jax.jit(lambda a, b: gemm_ref(a, b))
-        us = time_fn(ref, a, b)
+        us = measure_cell(ref, a, b)["us"]
         for pol, selected in gemm_candidate_sweep((n, n, n)):
             m = pm.gemm_step_model(pol.schedule, k_total=n)
             emit(f"gemm_bf16_{n}x{n}x{n}_b{pol.block_m}x{pol.block_n}"

@@ -22,7 +22,7 @@ from repro.kernels.fused_norm import (dropout_residual_layernorm,
                                       fused_dropout_residual_layernorm_ref)
 from repro.kernels.fused_norm.ref import dropout_keep_mask_ref
 from repro.kernels.rope import rope, rope_ref, rope_tables
-from .common import time_fn, emit
+from .common import measure_cell, emit
 
 
 def unfused(x, r, w, b, seed, p):
@@ -52,8 +52,8 @@ def main() -> None:
         fused = jax.jit(lambda x, r, w, b: fused_dropout_residual_layernorm_ref(
             x, r, w, b, 7, dropout_p=0.1))
         unf = jax.jit(lambda x, r, w, b: unfused(x, r, w, b, 7, 0.1))
-        us_f = time_fn(fused, x, r, w, b)
-        us_u = time_fn(unf, x, r, w, b)
+        us_f = measure_cell(fused, x, r, w, b)["us"]
+        us_u = measure_cell(unf, x, r, w, b)["us"]
         # modeled bytes from perf_model (the same accounting select_fusion
         # ranks plans with) — not hand-computed constants
         bytes_fused = pm.dropout_residual_ln_traffic(rows, d, fused=True)
@@ -77,7 +77,7 @@ def main() -> None:
         xq = jax.random.normal(ks[0], (bsz, heads, seq, hd))
         sin, cos = rope_tables(jnp.arange(seq), hd)
         fn = jax.jit(lambda x: rope_ref(x, sin, cos))
-        us = time_fn(fn, xq)
+        us = measure_cell(fn, xq)["us"]
         bytes_fused = pm.rope_traffic(bsz, heads, seq, hd, fused=True)
         bytes_unfused = pm.rope_traffic(bsz, heads, seq, hd, fused=False)
         out_k = rope(xq, sin, cos, mode="pallas_interpret")

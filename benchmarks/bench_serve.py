@@ -21,7 +21,6 @@ numbers as the deliverable (DESIGN.md §7):
 from __future__ import annotations
 
 import os
-import time
 
 import jax
 import numpy as np
@@ -30,7 +29,7 @@ from repro.configs import get_config
 from repro.core import perf_model as pm
 from repro.models.api import build_model
 from repro.serve.engine import PagedEngine, Request
-from .common import emit
+from .common import emit, measure_cell
 
 # modeled-v5e shape for the derived columns (an 8B-class GQA LM; the smoke
 # LM only provides the measured XLA-CPU scale)
@@ -49,9 +48,8 @@ def _run(eng, reqs) -> float:
     """Submit + run to idle; returns wall seconds."""
     for r in reqs:
         eng.submit(r)
-    t0 = time.perf_counter()
-    eng.run()
-    return time.perf_counter() - t0
+    # one-shot: the run consumes the queue, so no warmup/repeat
+    return measure_cell(eng.run, warmup=0, iters=1)["seconds"]
 
 
 def _reqs(cfg, n, plen, max_new, *, prefix=None, seed=0):

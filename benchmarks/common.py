@@ -91,17 +91,29 @@ def write_bench_json(key: str, rows: list, out_dir: str | None = None) -> str:
     return path
 
 
-def time_fn(fn, *args, warmup: int = 3, iters: int = 10) -> float:
-    """Median wall time of fn(*args) in microseconds (blocks on results)."""
+def measure_cell(fn, *args, warmup: int = 3, iters: int = 10) -> dict:
+    """Measure one bench cell: wall-clock stats of ``fn(*args)``.
+
+    The single timing loop every bench module shares — tests enforce that
+    no bench module keeps a stray ``time.perf_counter`` loop of its own,
+    so methodology changes (trimming, counter bracketing) land everywhere
+    at once. ``warmup=0, iters=1`` is the one-shot path for side-effectful
+    cells (e.g. an engine run that consumes its queue).
+
+    Returns ``{"us": median microseconds, "seconds": median seconds,
+    "min_us": best iteration, "iters": iters}``.
+    """
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     times = []
-    for _ in range(iters):
+    for _ in range(max(1, iters)):
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         times.append(time.perf_counter() - t0)
     times.sort()
-    return times[len(times) // 2] * 1e6
+    med = times[len(times) // 2]
+    return {"us": med * 1e6, "seconds": med, "min_us": times[0] * 1e6,
+            "iters": len(times)}
 
 
 def emit(name: str, us: float, derived: str) -> None:

@@ -1,7 +1,10 @@
-"""Config registry: ``get_config('<arch-id>'[, smoke=True])``."""
+"""Config registry: ``get_config('<arch-id>'[, smoke=True])``, plus the
+shipped pretuned-table resolver (``pretuned_table_path`` /
+``load_shipped_pretuned`` — docs/autotuning.md)."""
 from __future__ import annotations
 
 import importlib
+import os
 
 from .base import (ModelConfig, MoEConfig, SSMConfig, RGLRUConfig,  # noqa: F401
                    ShapeConfig, KernelsConfig, ALL_SHAPES, TRAIN_4K,
@@ -55,3 +58,29 @@ def get_shape(name: str) -> ShapeConfig:
         if s.name == name:
             return s
     raise KeyError(name)
+
+
+_PRETUNED_DIR = os.path.join(os.path.dirname(__file__), "pretuned")
+
+
+def pretuned_table_path(arch: str | None = None) -> str | None:
+    """Path of the shipped pretuned policy table for ``arch`` (default: the
+    active jax backend), or None when no table was calibrated for it.
+    Tables are written by ``tools/calibrate.py`` and live next to the model
+    configs so a checkout carries its calibration."""
+    if arch is None:
+        import jax
+        arch = jax.default_backend()
+    path = os.path.join(_PRETUNED_DIR, f"{arch}.json")
+    return path if os.path.exists(path) else None
+
+
+def load_shipped_pretuned(arch: str | None = None) -> bool:
+    """Install the shipped pretuned table for ``arch`` into the autotuner.
+    Returns False (leaving selection analytic) when no table is shipped or
+    the table is rejected (schema/arch mismatch — see the obs counters)."""
+    path = pretuned_table_path(arch)
+    if path is None:
+        return False
+    from repro.core import autotune
+    return autotune.load_pretuned(path, arch=arch)

@@ -32,16 +32,17 @@ from repro import obs
 from . import perf_model as pm
 from . import tiles
 from .grid_swizzle import ROW_MAJOR, SwizzleConfig, dma_bytes
-from .policy import KernelPolicy, OP_KINDS, make_policy
+from .policy import KernelPolicy, OP_KINDS, make_policy, policy_from_spec
 from .schedule import Schedule
 
 _DTYPE_BYTES = {"bfloat16": 2, "float16": 2, "float32": 4, "int8": 1,
                 "float8_e4m3fn": 1, "float8_e5m2": 1}
 
-# Per-grid-step fixed cost (s): models the pipeline bubble / bookkeeping of a
-# Pallas grid step. Only its *relative* effect matters: it breaks ties toward
-# fewer, larger blocks for memory-bound 1-D ops.
-_STEP_OVERHEAD_S = 1e-6
+# The per-grid-step fixed cost and the vector-unit throughput both live on
+# ChipSpec now (calibratable, DESIGN.md §15): chip.step_overhead_s models the
+# pipeline bubble / bookkeeping of a Pallas grid step (only its *relative*
+# effect matters: it breaks ties toward fewer, larger blocks for memory-bound
+# 1-D ops); chip.vector_throughput() prices softmax/norm vector work.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -395,14 +396,14 @@ def score_policy(sig: OpSignature, policy: KernelPolicy,
                 norm_elems = m * n          # the (M, K) store tiles, once
             else:
                 norm_elems = (n // policy.block_n) * m * k
-            compute_s += norm_elems * ops / (chip.peak_flops_bf16 / 16)
+            compute_s += norm_elems * ops / chip.vector_throughput()
         if sig.op == "gemm_bwd":
             traffic = gemm_bwd_traffic_bytes(policy, m, n, k, dtype_bytes,
                                              sig.variant)
         else:
             traffic = gemm_traffic_bytes(policy, m, n, k, dtype_bytes)
         memory_s = traffic / chip.hbm_bw
-        time_s = max(compute_s, memory_s) + n_blocks * _STEP_OVERHEAD_S
+        time_s = max(compute_s, memory_s) + n_blocks * chip.step_overhead_s
         return PolicyScore(time_s, traffic,
                            (("bound", step["bound"]),
                             ("ai", round(step["arithmetic_intensity"], 1))))
@@ -425,7 +426,7 @@ def score_policy(sig: OpSignature, policy: KernelPolicy,
             traffic *= 2
         if policy.epilogue is not None:
             traffic += policy.epilogue.extra_read_bytes(h)
-        time_s += b * h * nq * (skv // policy.block_kv) * _STEP_OVERHEAD_S
+        time_s += b * h * nq * (skv // policy.block_kv) * chip.step_overhead_s
         return PolicyScore(time_s, traffic, (("bound", step["bound"]),))
 
     if sig.op == "attention_decode":
@@ -446,15 +447,15 @@ def score_policy(sig: OpSignature, policy: KernelPolicy,
         rows, d = sig.shape
         traffic = 4 * rows * d * dtype_bytes
         steps = rows // policy.block_rows
-        return PolicyScore(traffic / chip.hbm_bw + steps * _STEP_OVERHEAD_S,
-                           traffic)
+        return PolicyScore(traffic / chip.hbm_bw
+                           + steps * chip.step_overhead_s, traffic)
 
     if sig.op == "rope":
         b, h, s, d = sig.shape
         traffic = b * h * s * d * (2 * dtype_bytes + 8)  # x/out + f32 tables
         steps = b * h * (s // policy.block_rows)
-        return PolicyScore(traffic / chip.hbm_bw + steps * _STEP_OVERHEAD_S,
-                           traffic)
+        return PolicyScore(traffic / chip.hbm_bw
+                           + steps * chip.step_overhead_s, traffic)
 
     raise AssertionError(sig.op)
 
@@ -481,6 +482,161 @@ def refine_with_cache_model(sig: OpSignature, policies: Iterable[KernelPolicy],
 
 
 # ---------------------------------------------------------------------------
+# Pretuned policy tables (DESIGN.md §15): measurement-grounded winners from
+# repro.core.calibrate, persisted as versioned JSON and consulted AHEAD of
+# the analytic ranking. The table also carries a fitted ChipSpec, which
+# becomes the default chip for every subsequent analytic score — so even
+# cells the table doesn't pin are ranked with measured coefficients.
+# ---------------------------------------------------------------------------
+
+PRETUNED_SCHEMA_VERSION = 1
+
+# Module-global like the memo caches: one pretuned table per process. ``gen``
+# is the calibration-table generation counter — it is part of every memo key
+# below, so installing/refreshing/clearing a table invalidates all cached
+# winners in-process (the PR 9 staleness fix) without flushing audits by hand.
+_PRETUNED: dict = {"table": None, "chip": None, "gen": 0}
+
+
+def pretuned_generation() -> int:
+    return _PRETUNED["gen"]
+
+
+def active_pretuned() -> Optional[dict]:
+    """The installed pretuned table, or None."""
+    return _PRETUNED["table"]
+
+
+def active_chip() -> pm.ChipSpec:
+    """The chip every ``chip=None`` ranking resolves against: the installed
+    table's fitted ChipSpec when present, else the analytic V5E defaults."""
+    chip = _PRETUNED["chip"]
+    return chip if chip is not None else pm.V5E
+
+
+def chip_from_dict(d: dict) -> pm.ChipSpec:
+    """Rebuild a ChipSpec from a pretuned table's coefficient dict (unknown
+    keys ignored — forward-compatible with fitted fields we don't have)."""
+    fields = {f.name: f for f in dataclasses.fields(pm.ChipSpec)}
+    kw = {}
+    for k, v in d.items():
+        if k not in fields:
+            continue
+        if fields[k].type in ("int", int):
+            v = int(round(v))
+        kw[k] = v
+    return dataclasses.replace(pm.V5E, **kw)
+
+
+def _chain_str(chain) -> str:
+    """Stable string form of an epilogue/prologue chain for cell keys.
+    Chains expose deterministic ``describe()`` short strings; None is the
+    identity."""
+    if chain is None:
+        return "none"
+    d = chain.describe()
+    return d if isinstance(d, str) else str(d)
+
+
+def pretuned_cell_key(sig: OpSignature) -> str:
+    """The table key of one policy cell: shape-BUCKET × dtype × chain, as a
+    stable string (buckets, not raw shapes, so a table cell covers the same
+    launches the in-process memo would)."""
+    op, shape, dtype, causal, ep, pro, variant = sig.bucket()
+    parts = [op, "x".join(str(x) for x in shape), dtype,
+             "causal" if causal else "full",
+             f"ep={_chain_str(ep)}", f"pro={_chain_str(pro)}"]
+    if variant:
+        parts.append(f"var={variant}")
+    return "|".join(parts)
+
+
+def pretuned_fusion_key(kind: str, bucket_shape: tuple, dtype: str, *,
+                        residual: bool, prenorm: str, backward: bool,
+                        causal: bool, softcap: bool, sink: bool) -> str:
+    """The table key of one fusion-plan cell (mirrors select_fusion's memo)."""
+    return "|".join([kind, "x".join(str(x) for x in bucket_shape), dtype,
+                     f"res={int(residual)}", f"pre={prenorm}",
+                     f"bwd={int(backward)}", f"causal={int(causal)}",
+                     f"cap={int(softcap)}", f"sink={int(sink)}"])
+
+
+def install_pretuned(table: dict, *, arch: Optional[str] = None) -> bool:
+    """Validate and install a pretuned table; True iff installed.
+
+    A schema-version or arch mismatch REJECTS the table (counter-logged,
+    previous state untouched) and every selection falls back to the analytic
+    ranking — a table fitted on other hardware must never pin winners here.
+    ``arch`` overrides the expected platform (defaults to the active JAX
+    backend).
+    """
+    if int(table.get("schema_version", -1)) != PRETUNED_SCHEMA_VERSION:
+        obs.incr("autotune.pretuned_rejected_schema")
+        return False
+    expect = arch
+    if expect is None:
+        try:
+            import jax
+            expect = jax.default_backend()
+        except Exception:  # pragma: no cover - jax is a hard dep in practice
+            expect = None
+    if expect is not None and table.get("arch") != expect:
+        obs.incr("autotune.pretuned_rejected_arch")
+        return False
+    chip_d = table.get("chip")
+    _PRETUNED.update(table=table,
+                     chip=chip_from_dict(chip_d) if chip_d else None)
+    _PRETUNED["gen"] += 1
+    obs.incr("autotune.pretuned_installed")
+    return True
+
+
+def load_pretuned(path, *, arch: Optional[str] = None) -> bool:
+    """Load a pretuned table from a JSON file and install it."""
+    import json
+    with open(path) as f:
+        table = json.load(f)
+    return install_pretuned(table, arch=arch)
+
+
+def use_pretuned(table_or_path, *, arch: Optional[str] = None) -> bool:
+    """Install a pretuned table given either a report dict or a JSON path —
+    the single entry point serve/train expose as ``pretuned=``."""
+    if isinstance(table_or_path, dict):
+        return install_pretuned(table_or_path, arch=arch)
+    return load_pretuned(table_or_path, arch=arch)
+
+
+def clear_pretuned() -> None:
+    """Drop the installed table (and its fitted chip); bumps the generation
+    so memoized pretuned winners can't survive."""
+    if _PRETUNED["table"] is not None or _PRETUNED["chip"] is not None:
+        _PRETUNED.update(table=None, chip=None)
+        _PRETUNED["gen"] += 1
+
+
+def _sig_fits(sig: OpSignature, pol: KernelPolicy) -> bool:
+    """A pinned policy must still tile THIS launch's exact shape and fit
+    VMEM — guards hand-edited tables and bucket-rounding edge cases."""
+    if sig.op in ("gemm", "gemm_bwd"):
+        m, n, k = sig.shape
+        ok = pol.fits(m, n, k)
+    elif sig.op in ("attention_fwd", "attention_bwd"):
+        _, _, sq, skv, d = sig.shape
+        ok = pol.fits(sq, skv) and pol.block_k == d
+    elif sig.op == "attention_decode":
+        _, _, g, skv, d = sig.shape
+        ok = pol.block_m == g and skv % pol.block_n == 0 and pol.block_k == d
+    elif sig.op == "fused_norm":
+        rows, d = sig.shape
+        ok = rows % pol.block_rows == 0 and pol.block_k == d
+    else:  # rope
+        _, _, s, d = sig.shape
+        ok = s % pol.block_rows == 0 and pol.block_k == d
+    return ok and pol.is_legal()
+
+
+# ---------------------------------------------------------------------------
 # Memoized selection
 # ---------------------------------------------------------------------------
 
@@ -497,7 +653,7 @@ def select_policy(op: str, shape, dtype="bfloat16", *, causal: bool = False,
                   epilogue=None, prologue=None, variant: str = "",
                   swizzle: Optional[SwizzleConfig] = None,
                   cache_sim: bool = False,
-                  chip: pm.ChipSpec = pm.V5E) -> KernelPolicy:
+                  chip: Optional[pm.ChipSpec] = None) -> KernelPolicy:
     """The tuned policy for an op signature; memoized per shape-bucket.
 
     ``epilogue``/``prologue`` (gemm/gemm_bwd only) make the candidate set
@@ -507,14 +663,24 @@ def select_policy(op: str, shape, dtype="bfloat16", *, causal: bool = False,
     still searched (the legacy ``gemm(swizzle=...)`` shim and the bwd
     launches, which inherit the fwd traversal, resolve through this).
 
+    ``chip=None`` resolves against :func:`active_chip` — the calibrated
+    ChipSpec when a pretuned table is installed. An installed table is also
+    consulted for a pinned WINNER first (measurement-grounded, DESIGN.md
+    §15); analytic ranking is the fallback on any cell miss, and pinning is
+    bypassed entirely when the caller constrains the search (``swizzle=`` /
+    ``cache_sim=True``) since table winners were measured unconstrained.
+
     Raises ValueError if no candidate is legal — which a recompute-path
     norm prologue *can* hit (its full-K A tile may not fit VMEM for huge
     feature dims): callers fall back to the standalone-norm plan then.
     """
+    if chip is None:
+        chip = active_chip()
     sig = OpSignature(op, tuple(int(x) for x in shape), str(dtype),
                       causal=causal, epilogue=epilogue, prologue=prologue,
                       variant=variant)
-    key = sig.bucket() + (swizzle, bool(cache_sim), chip.name)
+    key = sig.bucket() + (swizzle, bool(cache_sim), chip.name,
+                          _PRETUNED["gen"])
     hit = _POLICY_CACHE.get(key)
     if hit is not None:
         _CACHE_STATS["hits"] += 1
@@ -526,6 +692,31 @@ def select_policy(op: str, shape, dtype="bfloat16", *, causal: bool = False,
                                   cached=True)
         return hit
     _CACHE_STATS["misses"] += 1
+
+    table = _PRETUNED["table"]
+    if table is not None and swizzle is None and not cache_sim:
+        cell = (table.get("cells") or {}).get(pretuned_cell_key(sig))
+        if cell is None:
+            obs.incr("autotune.pretuned_cell_miss")
+        else:
+            pinned = policy_from_spec(cell["policy"], epilogue=epilogue,
+                                      prologue=prologue)
+            if _sig_fits(sig, pinned):
+                obs.incr("autotune.pretuned_hit")
+                _POLICY_CACHE[key] = pinned
+                audit = {"chosen": dict(pinned.describe(), pretuned=True),
+                         "candidates": [
+                             {"policy": pinned.schedule.name,
+                              "blocks": [pinned.block_m, pinned.block_n,
+                                         pinned.block_k],
+                              "time_s": cell.get("measured_time_s"),
+                              "dma_bytes": None, "chosen": True,
+                              "pretuned": True}]}
+                _POLICY_AUDIT[key] = audit
+                obs.plan_decision("policy", op, sig.shape, sig.dtype,
+                                  audit["chosen"], audit["candidates"])
+                return pinned
+            obs.incr("autotune.pretuned_illegal")
 
     cands = candidate_policies(sig, swizzle=swizzle)
     if not cands:
@@ -561,9 +752,76 @@ def policy_cache_stats() -> dict:
 def clear_policy_cache() -> None:
     _POLICY_CACHE.clear()
     _PLAN_CACHE.clear()
+    _BWD_ROUTE_CACHE.clear()
     _POLICY_AUDIT.clear()
     _PLAN_AUDIT.clear()
     _CACHE_STATS.update(hits=0, misses=0)
+
+
+# ---------------------------------------------------------------------------
+# Backward routing (DESIGN.md §15): fused kernel bwd vs the oracle VJP
+# ---------------------------------------------------------------------------
+
+_BWD_ROUTE_CACHE: dict = {}
+
+
+def select_bwd_mode(m: int, n: int, k: int, *, dtype: str = "bfloat16",
+                    epilogue=None, prologue=None,
+                    chip: Optional[pm.ChipSpec] = None) -> str:
+    """Route ``gemm_fused(bwd_mode='auto')`` per shape bucket: 'kernel'
+    (the fused chain-transpose launches) or 'reference' (the jnp-oracle
+    recompute VJP).
+
+    The decision comes from :func:`perf_model.gemm_bwd_route_model` — a
+    roofline comparison of the two paths plus a peak-memory residency
+    penalty on the kernel path's saved preactivations. Train-shaped cells
+    (k ≳ 1024) keep the kernel path; degenerate cells (tiny contraction
+    dim, so saved preacts dominate the traffic) route to the oracle.
+    Memoized per (pow2-bucketed m, n, k, dtype, chain); the decision is
+    journaled as a ``bwd_route`` plan decision so tests audit it without
+    monkeypatching.
+    """
+    if chip is None:
+        chip = active_chip()
+    m, n, k = int(m), int(n), int(k)
+    m_bucket = 1 << max(0, (m - 1).bit_length())  # batch-like dim
+    key = (m_bucket, n, k, str(dtype), _chain_str(epilogue),
+           _chain_str(prologue), chip.name, _PRETUNED["gen"])
+    hit = _BWD_ROUTE_CACHE.get(key)
+    if hit is not None:
+        if obs.enabled():
+            obs.plan_decision("bwd_route", "gemm_bwd", (m, n, k),
+                              str(dtype), {"mode": hit, "cached": True},
+                              cached=True)
+        return hit
+    db = _DTYPE_BYTES.get(str(dtype), 2)
+    n_saved = 0
+    preact_bytes = db
+    gated = bool(getattr(epilogue, "gate", False))
+    if epilogue is not None and getattr(epilogue, "needs_saved_preact",
+                                        False):
+        n_saved = int(getattr(epilogue, "saved_accumulators", 1))
+        if getattr(epilogue, "preact_keeps_f32", False):
+            preact_bytes = 4
+    prenorm = bool(prologue is not None
+                   and not getattr(prologue, "is_identity", True))
+    route = pm.gemm_bwd_route_model(m=m_bucket, n=n, k=k, dtype_bytes=db,
+                                    n_saved=n_saved,
+                                    preact_bytes=preact_bytes,
+                                    gated=gated, prenorm=prenorm, chip=chip)
+    mode = route["route"]
+    _BWD_ROUTE_CACHE[key] = mode
+    obs.plan_decision(
+        "bwd_route", "gemm_bwd", (m, n, k), str(dtype),
+        {"mode": mode, "kernel_score": route["kernel_score"],
+         "reference_score": route["reference_score"],
+         "peak_save_bytes": route["peak_save_bytes"]},
+        [{"mode": "kernel", "time_s": route["kernel_time_s"],
+          "score": route["kernel_score"], "chosen": mode == "kernel"},
+         {"mode": "reference", "time_s": route["reference_time_s"],
+          "score": route["reference_score"],
+          "chosen": mode == "reference"}])
+    return mode
 
 
 # ---------------------------------------------------------------------------
@@ -578,8 +836,13 @@ def select_fusion(kind: str, shape, dtype="bfloat16", *,
                   backward: bool = False,
                   causal: bool = False, softcap: bool = False,
                   sink: bool = False,
-                  chip: pm.ChipSpec = pm.V5E) -> dict:
+                  chip: Optional[pm.ChipSpec] = None) -> dict:
     """Pick the fused or unfused execution plan for a model-layer chain.
+
+    ``chip=None`` resolves against :func:`active_chip` (the calibrated
+    ChipSpec when a pretuned table is installed), and an installed table
+    pins the fused/unfused DECISION for cells it carries (the byte models
+    still fill in the returned plan dict) — see docs/autotuning.md.
 
     The decision is made *purely* by comparing the two plans' modeled HBM
     traffic (``perf_model.mlp_chain_model`` / ``qkv_rope_chain_model`` /
@@ -620,12 +883,14 @@ def select_fusion(kind: str, shape, dtype="bfloat16", *,
     Returns {plan: 'fused'|'unfused', fused_bytes, unfused_bytes,
     traffic_reduction, fused: <model dict>, unfused: <model dict>}.
     """
+    if chip is None:
+        chip = active_chip()
     dtype = str(dtype)
     shape = tuple(int(x) for x in shape)
     tokens = 1 << max(0, (shape[0] - 1).bit_length())  # pow2 bucket
     key = (kind, (tokens,) + shape[1:], dtype, bool(residual), prenorm,
            bool(backward), bool(causal), bool(softcap), bool(sink),
-           chip.name)
+           chip.name, _PRETUNED["gen"])
     hit = _PLAN_CACHE.get(key)
     if hit is not None:
         if obs.enabled():
@@ -635,6 +900,20 @@ def select_fusion(kind: str, shape, dtype="bfloat16", *,
                                   audit["chosen"], audit["candidates"],
                                   cached=True)
         return hit
+    pinned_plan = None
+    table = _PRETUNED["table"]
+    if table is not None:
+        fkey = pretuned_fusion_key(kind, (tokens,) + shape[1:], dtype,
+                                   residual=bool(residual), prenorm=prenorm,
+                                   backward=bool(backward),
+                                   causal=bool(causal),
+                                   softcap=bool(softcap), sink=bool(sink))
+        cell = (table.get("fusion") or {}).get(fkey)
+        if cell is None:
+            obs.incr("autotune.pretuned_fusion_miss")
+        elif cell.get("plan", {}).get("plan") in ("fused", "unfused"):
+            pinned_plan = cell["plan"]["plan"]
+            obs.incr("autotune.pretuned_fusion_hit")
     db = _DTYPE_BYTES.get(dtype, 2)
     if kind == "mlp":
         _, d, f, gated = shape
@@ -672,10 +951,16 @@ def select_fusion(kind: str, shape, dtype="bfloat16", *,
         fused_bytes=fused["dma_bytes"], unfused_bytes=unfused["dma_bytes"],
         traffic_reduction=unfused["dma_bytes"] / max(1, fused["dma_bytes"]),
         fused=fused, unfused=unfused)
+    if pinned_plan is not None:
+        # the measured table pins the decision; the byte models above still
+        # fill in the plan dict every caller reads
+        plan["plan"] = pinned_plan
+        plan["pretuned"] = True
     _PLAN_CACHE[key] = plan
     audit = {"chosen": {"plan": plan["plan"],
                         "traffic_reduction": plan["traffic_reduction"],
-                        "prenorm": prenorm, "backward": bool(backward)},
+                        "prenorm": prenorm, "backward": bool(backward),
+                        **({"pretuned": True} if pinned_plan else {})},
              "candidates": [
                  {"plan": "fused", "dma_bytes": plan["fused_bytes"],
                   "chosen": plan["plan"] == "fused"},

@@ -1,0 +1,562 @@
+"""Measurement-grounded calibration of the analytic autotuner (DESIGN.md §15).
+
+"Bringing Auto-tuning to HIP" (PAPERS.md) shows the measured optimum on AMD
+routinely diverges from modeled rankings; KernelBench makes the same case for
+grounding kernel claims in measurement. This module is the repo's empirical
+layer over :mod:`repro.core.autotune`:
+
+  1. **Measure** — :func:`calibrate` times ``candidate_policies(sig)`` per
+     (op, shape-bucket, dtype, chain) cell. On real hardware the measurement
+     is wall-clock (``measure_fn``); locally/CI it is the interpret-path
+     proxy: a :class:`CalibrationRig` prices each candidate's proxy counters
+     (MXU flops, vector ops, DMA bytes, grid steps — the geometry facts a
+     hardware counter would report, extracted by :func:`policy_features`)
+     with rig constants deliberately different from the analytic V5E
+     defaults, while ``execute=True`` additionally runs each cell's winner
+     once in interpret mode under ``obs.capture()`` so the journal carries
+     real launches.
+  2. **Fit** — :func:`fit_chip` recovers the :class:`~repro.core.perf_model.
+     ChipSpec` coefficients (MXU/vector throughput, HBM bandwidth, per-step
+     overhead) by least squares over the measured sweep, plus the decode
+     ramp constant by 1-D search; deterministic under a fixed seed.
+  3. **Persist** — the returned report IS a pretuned policy table
+     (versioned JSON keyed shape-bucket×dtype×chain) that
+     ``autotune.install_pretuned`` / ``load_pretuned`` consult ahead of the
+     analytic ranking. ``tools/calibrate.py`` writes it;
+     ``configs/pretuned/`` ships one per arch.
+  4. **Gate** — :func:`check_drift` asserts the analytic and measured
+     rankings agree (top-1 within tolerance, Spearman rank correlation per
+     op family) so the model stays honest as kernels evolve;
+     ``tools/drift_check.py`` wires it into CI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import zlib
+from typing import Callable, Iterable, Optional
+
+import numpy as np
+
+from repro import obs
+
+from . import autotune
+from . import perf_model as pm
+from .autotune import OpSignature
+from .policy import KernelPolicy, policy_spec
+
+SCHEMA_VERSION = autotune.PRETUNED_SCHEMA_VERSION
+
+_DTYPE_BYTES = autotune._DTYPE_BYTES
+
+
+# ---------------------------------------------------------------------------
+# Proxy counters: the geometry facts of one launch, model-independent.
+# ---------------------------------------------------------------------------
+
+
+def policy_features(sig: OpSignature, policy: KernelPolicy) -> dict:
+    """Proxy counters for one (sig, policy) launch — what a hardware counter
+    would report, derived purely from geometry (no chip constants):
+
+      mxu_flops   bf16-equivalent MXU work, alignment-derated (so fp8/fp32
+                  and ragged tiles cost what the systolic array charges)
+      vector_ops  elementwise-unit work (softmax / fused-norm recompute)
+      dma_bytes   HBM→VMEM traffic under the policy's traversal order
+      grid_steps  Pallas grid steps (each pays the fixed pipeline cost)
+
+    Decode cells also report ``kv_bytes``/``other_bytes`` split out, because
+    the split-KV stream rides the saturation ramp while the combine traffic
+    does not.
+    """
+    db = _DTYPE_BYTES.get(sig.dtype, 2)
+    rel = pm.V5E.peak_flops(db) / pm.V5E.peak_flops_bf16  # dtype speed ratio
+
+    if sig.op in ("gemm", "gemm_bwd"):
+        m, n, k = sig.shape
+        eff = pm.mxu_efficiency(policy.block_m, policy.block_n,
+                                policy.block_k)
+        n_acc = 2 if (policy.epilogue is not None
+                      and getattr(policy.epilogue, "gate", False)) else 1
+        flops = n_acc * 2.0 * m * n * k / (max(eff, 1e-9) * rel)
+        vector = 0.0
+        pro = policy.prologue
+        if pro is not None and not getattr(pro, "is_identity", True):
+            ops = 3.0 if getattr(pro, "precomputed_stats", False) else 8.0
+            if sig.op == "gemm_bwd" and sig.variant == "da":
+                vector = m * n * ops
+            else:
+                vector = (n // policy.block_n) * m * k * ops
+        if sig.op == "gemm_bwd":
+            traffic = autotune.gemm_bwd_traffic_bytes(policy, m, n, k, db,
+                                                      sig.variant)
+        else:
+            traffic = autotune.gemm_traffic_bytes(policy, m, n, k, db)
+        steps = (m // policy.block_m) * (n // policy.block_n)
+        return dict(mxu_flops=flops, vector_ops=vector, dma_bytes=traffic,
+                    grid_steps=steps)
+
+    if sig.op in ("attention_fwd", "attention_bwd"):
+        b, h, sq, skv, d = sig.shape
+        kv_frac = 0.5 if sig.causal else 1.0
+        flops = 4.0 * b * h * sq * skv * d * kv_frac / rel
+        vector = 5.0 * b * h * sq * skv * kv_frac
+        nq = sq // policy.block_q
+        traffic = int(b * h * (nq * kv_frac * 2 * skv * d + 2 * sq * d) * db)
+        if sig.op == "attention_bwd":
+            flops *= 2.5
+            traffic *= 2
+        if policy.epilogue is not None:
+            traffic += policy.epilogue.extra_read_bytes(h)
+        steps = b * h * nq * (skv // policy.block_kv)
+        return dict(mxu_flops=flops, vector_ops=vector, dma_bytes=traffic,
+                    grid_steps=steps)
+
+    if sig.op == "attention_decode":
+        b, hkv, g, skv, d = sig.shape
+        n_splits = max(1, skv // policy.block_kv)
+        steps = b * hkv * n_splits
+        kv_bytes = 2 * b * hkv * skv * d * db
+        partial = b * hkv * n_splits * (g * d + 2 * g) * 4
+        qo = 2 * b * hkv * g * d * db
+        other = 2 * partial + qo
+        return dict(mxu_flops=0.0, vector_ops=0.0,
+                    dma_bytes=kv_bytes + other, grid_steps=steps,
+                    kv_bytes=kv_bytes, other_bytes=other)
+
+    if sig.op == "fused_norm":
+        rows, d = sig.shape
+        return dict(mxu_flops=0.0, vector_ops=0.0,
+                    dma_bytes=4 * rows * d * db,
+                    grid_steps=rows // policy.block_rows)
+
+    if sig.op == "rope":
+        b, h, s, d = sig.shape
+        return dict(mxu_flops=0.0, vector_ops=0.0,
+                    dma_bytes=b * h * s * d * (2 * db + 8),
+                    grid_steps=b * h * (s // policy.block_rows))
+
+    raise AssertionError(sig.op)
+
+
+# ---------------------------------------------------------------------------
+# The interpret-path measurement proxy.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationRig:
+    """Deterministic stand-in hardware for the interpret path.
+
+    Prices :func:`policy_features` with its own constants — deliberately
+    *different* from the analytic V5E defaults (a slightly slower, more
+    overhead-prone chip) so the calibration pipeline has real coefficients
+    to recover and the drift gate compares two genuinely distinct models.
+    ``jitter`` adds a seeded relative perturbation per (cell, candidate) —
+    zero by default so shipped tables are reproducible bit-for-bit;
+    non-zero values stay deterministic under a fixed ``seed`` (the noise is
+    keyed by content hash, not by RNG call order).
+
+    On real hardware none of this runs: pass ``measure_fn`` to
+    :func:`calibrate` and candidates are wall-clock timed instead.
+    """
+
+    mxu_flops: float = 0.85 * 197e12
+    vector_flops: float = 0.85 * 197e12 / 20.0
+    hbm_bw: float = 0.9 * 819e9
+    step_overhead_s: float = 1.3e-6
+    decode_saturation_steps: int = 10
+    jitter: float = 0.0
+    seed: int = 0
+
+    def time(self, sig: OpSignature, policy: KernelPolicy) -> float:
+        f = policy_features(sig, policy)
+        if sig.op == "attention_decode":
+            util = min(1.0, f["grid_steps"] / self.decode_saturation_steps)
+            t = (f["kv_bytes"] / (self.hbm_bw * util)
+                 + f["other_bytes"] / self.hbm_bw
+                 + f["grid_steps"] * self.step_overhead_s)
+        else:
+            compute = (f["mxu_flops"] / self.mxu_flops
+                       + f["vector_ops"] / self.vector_flops)
+            t = (max(compute, f["dma_bytes"] / self.hbm_bw)
+                 + f["grid_steps"] * self.step_overhead_s)
+        if self.jitter:
+            key = (f"{self.seed}|{autotune.pretuned_cell_key(sig)}|"
+                   f"{policy.block_m}x{policy.block_n}x{policy.block_k}"
+                   f"b{policy.n_buffers}")
+            u = (zlib.crc32(key.encode()) % 10000) / 10000.0 * 2.0 - 1.0
+            t *= 1.0 + self.jitter * u
+        return t
+
+    def describe(self) -> dict:
+        return {k: getattr(self, k) for k in
+                ("mxu_flops", "vector_flops", "hbm_bw", "step_overhead_s",
+                 "decode_saturation_steps", "jitter", "seed")}
+
+
+def _execute_cell(sig: OpSignature, policy: KernelPolicy) -> int:
+    """Run one launch of (sig, policy) in interpret mode under the active
+    obs capture, so calibration journals REAL launches, not just modeled
+    numbers. Returns the kernel-launch count observed. Function-level kernel
+    imports keep repro.core free of a kernels dependency at import time."""
+    import jax.numpy as jnp
+
+    def zeros(shape, dtype=None):
+        return jnp.zeros(shape, dtype or sig.dtype)
+
+    with obs.capture() as rec:
+        if sig.op == "gemm":
+            m, n, k = sig.shape
+            from repro.kernels.gemm.ops import gemm
+            gemm(zeros((m, k)), zeros((k, n)), policy=policy
+                 ).block_until_ready()
+        elif sig.op == "attention_fwd":
+            from repro.kernels.attention.ops import attention
+            b, h, sq, skv, d = sig.shape
+            attention(zeros((b, h, sq, d)), zeros((b, h, skv, d)),
+                      zeros((b, h, skv, d)), causal=sig.causal,
+                      policy=policy).block_until_ready()
+        elif sig.op == "attention_decode":
+            from repro.kernels.attention.ops import attention_decode
+            b, hkv, g, skv, d = sig.shape
+            attention_decode(zeros((b, hkv * g, 1, d)),
+                             zeros((b, hkv, skv, d)),
+                             zeros((b, hkv, skv, d)),
+                             jnp.full((b,), skv, jnp.int32),
+                             policy=policy).block_until_ready()
+        elif sig.op == "rope":
+            from repro.kernels.rope.ops import rope
+            from repro.kernels.rope.ref import rope_tables
+            b, h, s, d = sig.shape
+            sin, cos = rope_tables(jnp.arange(s), d)
+            rope(zeros((b, h, s, d)), sin, cos,
+                 policy=policy).block_until_ready()
+        else:
+            return 0  # fused_norm / bwd launches: proxy-only cells
+    n = sum(rec.launch_counts().values())
+    obs.incr("calibrate.executed_launches", n)
+    return n
+
+
+# ---------------------------------------------------------------------------
+# The calibration sweep.
+# ---------------------------------------------------------------------------
+
+
+def default_sweep(smoke: bool = False) -> list:
+    """The bench-aligned cell set: one OpSignature per (op, shape, chain)
+    cell the drift gate covers. ``smoke`` keeps the CI-sized subset."""
+    from repro.kernels.gemm.epilogue import Epilogue
+
+    cells = [
+        OpSignature("gemm", (512, 512, 512)),
+        OpSignature("gemm", (1024, 1024, 1024)),
+        OpSignature("gemm", (1024, 2048, 1024),
+                    epilogue=Epilogue(activation="silu", gate=True)),
+        OpSignature("gemm", (1024, 1024, 2048),
+                    epilogue=Epilogue(residual=True, scale=True)),
+        OpSignature("attention_fwd", (1, 4, 512, 512, 64), causal=True),
+        OpSignature("attention_decode", (4, 2, 4, 1024, 64)),
+        OpSignature("fused_norm", (2048, 1024), dtype="float32"),
+        OpSignature("rope", (1, 4, 512, 64), dtype="float32"),
+    ]
+    if not smoke:
+        cells += [
+            OpSignature("gemm", (2048, 2048, 1024)),
+            OpSignature("gemm", (4096, 4096, 2048)),
+            OpSignature("attention_fwd", (1, 4, 1024, 1024, 128),
+                        causal=True),
+            OpSignature("attention_fwd", (2, 8, 512, 512, 64), causal=False),
+            OpSignature("attention_decode", (8, 4, 4, 2048, 128)),
+            OpSignature("fused_norm", (4096, 2048), dtype="float32"),
+            OpSignature("rope", (2, 8, 1024, 128), dtype="float32"),
+        ]
+    return cells
+
+
+_FUSION_CELLS = [
+    # (kind, shape, kwargs) — the chain-plan decisions worth pinning
+    ("mlp", (4096, 2048, 8192, 1), dict(prenorm="rmsnorm")),
+    ("mlp", (4096, 2048, 8192, 1), dict(prenorm="rmsnorm", backward=True)),
+    ("qkv_rope", (4096, 2048, 16, 4, 128), dict(prenorm="rmsnorm")),
+    ("attention", (1, 16, 4, 1024, 1024, 128), dict(causal=True)),
+]
+
+def _cell_is_executable(sig: OpSignature) -> bool:
+    """Cells cheap enough to run in CPU interpret mode for launch
+    journaling when ``execute=True`` (per-op work caps, not one element
+    count — a 256^3 gemm and a 4k-seq attention cost very differently)."""
+    if sig.op == "gemm":
+        if sig.epilogue is not None or sig.prologue is not None:
+            return False  # chain operands (b2/scale/...) need model tensors
+        m, n, k = sig.shape
+        return m * n * k <= 2 ** 25
+    if sig.op == "attention_fwd":
+        b, h, sq, skv, _ = sig.shape
+        return b * h * sq * skv <= 2 ** 22
+    if sig.op == "attention_decode":
+        b, hkv, _, skv, d = sig.shape
+        return b * hkv * skv * d <= 2 ** 22
+    if sig.op == "rope":
+        return math.prod(sig.shape) <= 2 ** 21
+    return False
+
+
+# ---------------------------------------------------------------------------
+# Coefficient fitting.
+# ---------------------------------------------------------------------------
+
+
+def fit_chip(samples: list, decode_samples: list, *,
+             arch: str = "cpu") -> tuple:
+    """Least-squares fit of the ChipSpec coefficients from measurements.
+
+    ``samples``: (features, time_s) pairs of non-decode cells. The linear
+    model t ≈ F/peak + V/vec + B/bw + S*step is fit by ``numpy.lstsq`` over
+    the whole sweep; each recovered coefficient falls back to the analytic
+    default when the sweep doesn't constrain it (column identically zero or
+    a non-physical negative estimate). ``decode_samples``: (features,
+    time_s) of decode cells; the saturation ramp is recovered by 1-D search
+    (the ramp enters through min(1, steps/ramp) — not linear, so lstsq
+    can't see it). Deterministic: pure numpy on sorted inputs.
+
+    Returns (chip_coefficients_dict, fit_info_dict).
+    """
+    defaults = dict(peak_flops_bf16=pm.V5E.peak_flops_bf16,
+                    vector_flops=pm.V5E.peak_flops_bf16 / 16,
+                    hbm_bw=pm.V5E.hbm_bw,
+                    step_overhead_s=1e-6,
+                    decode_saturation_steps=pm.DECODE_SATURATION_STEPS)
+    info: dict = {"n_samples": len(samples),
+                  "n_decode_samples": len(decode_samples)}
+    out = dict(defaults)
+    if samples:
+        a = np.array([[f["mxu_flops"], f["vector_ops"], f["dma_bytes"],
+                       f["grid_steps"]] for f, _ in samples])
+        t = np.array([v for _, v in samples])
+        # column scaling keeps lstsq well-conditioned across ~1e12 ranges
+        scale = np.where(np.abs(a).max(axis=0) > 0, np.abs(a).max(axis=0), 1)
+        coef, residual, *_ = np.linalg.lstsq(a / scale, t, rcond=None)
+        coef = coef / scale
+        info["lstsq_residual"] = float(residual[0]) if len(residual) else 0.0
+        names = ("peak_flops_bf16", "vector_flops", "hbm_bw",
+                 "step_overhead_s")
+        for i, name in enumerate(names):
+            c = float(coef[i])
+            constrained = bool(np.abs(a[:, i]).max() > 0)
+            if not constrained or c <= 0:
+                info[f"{name}_fallback"] = True
+                continue
+            out[name] = c if name == "step_overhead_s" else 1.0 / c
+    if decode_samples:
+        best = (math.inf, defaults["decode_saturation_steps"])
+        for ramp in range(1, 33):
+            sse = 0.0
+            for f, v in decode_samples:
+                util = min(1.0, f["grid_steps"] / ramp)
+                pred = (f["kv_bytes"] / (out["hbm_bw"] * util)
+                        + f["other_bytes"] / out["hbm_bw"]
+                        + f["grid_steps"] * out["step_overhead_s"])
+                sse += (pred - v) ** 2
+            if sse < best[0]:
+                best = (sse, ramp)
+        out["decode_saturation_steps"] = best[1]
+        info["decode_ramp_sse"] = best[0]
+    out["name"] = f"{arch}_calibrated"
+    return out, info
+
+
+# ---------------------------------------------------------------------------
+# The calibration run.
+# ---------------------------------------------------------------------------
+
+
+def _default_arch() -> str:
+    try:
+        import jax
+        return jax.default_backend()
+    except Exception:  # pragma: no cover
+        return "cpu"
+
+
+def calibrate(cells: Optional[Iterable[OpSignature]] = None, *,
+              rig: Optional[CalibrationRig] = None,
+              measure_fn: Optional[Callable] = None,
+              execute: bool = False, smoke: bool = False,
+              top_k: int = 12, seed: int = 0,
+              arch: Optional[str] = None) -> dict:
+    """Run the measurement sweep and return the pretuned-table report.
+
+    Per cell: enumerate ``candidate_policies``, keep the ``top_k`` by
+    analytic rank (the analytic winner is always candidate 0, so agreement
+    is measured where it matters), measure each — ``measure_fn(sig,
+    policy) -> seconds`` on real hardware, else the :class:`CalibrationRig`
+    proxy — and pin the measured winner. Fusion-plan cells are scored once
+    (the plan choice is byte-model-driven and chip-independent) and pinned
+    verbatim. Coefficients are fit over the full sweep. The returned dict
+    is both the drift-check report and the installable pretuned table.
+    """
+    arch = arch or _default_arch()
+    rig = rig or CalibrationRig(seed=seed)
+    measure = measure_fn or rig.time
+    cells = list(cells) if cells is not None else default_sweep(smoke=smoke)
+
+    report: dict = {"schema_version": SCHEMA_VERSION, "arch": arch,
+                    "seed": seed, "rig": rig.describe(),
+                    "cells": {}, "fusion": {}}
+    samples: list = []
+    decode_samples: list = []
+    for sig in sorted(cells, key=lambda s: autotune.pretuned_cell_key(s)):
+        cands = autotune.candidate_policies(sig)
+        if not cands:
+            continue
+        scored = sorted(
+            ((autotune.score_policy(sig, p, pm.V5E), p) for p in cands),
+            key=lambda sp: sp[0].rank_key(sp[1]))[:top_k]
+        rows = []
+        for score, pol in scored:
+            t = float(measure(sig, pol))
+            feats = policy_features(sig, pol)
+            rows.append({"blocks": [pol.block_m, pol.block_n, pol.block_k],
+                         "n_buffers": pol.n_buffers,
+                         "schedule": pol.schedule.name,
+                         "spec": policy_spec(pol),
+                         "measured_time_s": t,
+                         "analytic_time_s": score.time_s,
+                         "dma_bytes": score.dma_bytes})
+            if sig.op == "attention_decode":
+                decode_samples.append((feats, t))
+            else:
+                samples.append((feats, t))
+        win_i = min(range(len(rows)),
+                    key=lambda i: (rows[i]["measured_time_s"],
+                                   rows[i]["analytic_time_s"], i))
+        winner = scored[win_i][1]
+        key = autotune.pretuned_cell_key(sig)
+        cell = {"sig": sig_to_json(sig),
+                "policy": rows[win_i]["spec"],
+                "measured_time_s": rows[win_i]["measured_time_s"],
+                "analytic_time_s": rows[win_i]["analytic_time_s"],
+                "analytic_best_time_s": rows[0]["analytic_time_s"],
+                "candidates": [{k2: v for k2, v in r.items() if k2 != "spec"}
+                               for r in rows]}
+        if execute and _cell_is_executable(sig):
+            cell["executed_launches"] = _execute_cell(sig, winner)
+        report["cells"][key] = cell
+        obs.incr("calibrate.cells")
+
+    for kind, shape, kw in _FUSION_CELLS:
+        tokens = 1 << max(0, (shape[0] - 1).bit_length())
+        plan = autotune.select_fusion(kind, shape, "bfloat16",
+                                      chip=pm.V5E, **kw)
+        fkey = autotune.pretuned_fusion_key(
+            kind, (tokens,) + tuple(shape[1:]), "bfloat16",
+            residual=kw.get("residual", True),
+            prenorm=kw.get("prenorm", "none"),
+            backward=kw.get("backward", False),
+            causal=kw.get("causal", False),
+            softcap=kw.get("softcap", False), sink=kw.get("sink", False))
+        report["fusion"][fkey] = {
+            "kind": kind, "shape": list(shape), "kwargs": dict(kw),
+            "plan": {k2: v for k2, v in plan.items()
+                     if k2 not in ("fused", "unfused")}}
+
+    chip, fit_info = fit_chip(sorted(samples, key=lambda s: s[1]),
+                              sorted(decode_samples, key=lambda s: s[1]),
+                              arch=arch)
+    report["chip"] = chip
+    report["fit"] = fit_info
+    return report
+
+
+def sig_to_json(sig: OpSignature) -> dict:
+    return {"op": sig.op, "shape": list(sig.shape), "dtype": sig.dtype,
+            "causal": sig.causal,
+            "epilogue": autotune._chain_str(sig.epilogue),
+            "prologue": autotune._chain_str(sig.prologue),
+            "variant": sig.variant}
+
+
+def save_report(report: dict, path) -> None:
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+
+# ---------------------------------------------------------------------------
+# The drift gate.
+# ---------------------------------------------------------------------------
+
+
+def spearman(xs, ys) -> float:
+    """Spearman rank correlation with average-rank tie handling."""
+    def ranks(v):
+        v = np.asarray(v, dtype=float)
+        order = np.argsort(v, kind="stable")
+        r = np.empty(len(v))
+        r[order] = np.arange(len(v), dtype=float)
+        # average tied ranks
+        for val in np.unique(v):
+            mask = v == val
+            r[mask] = r[mask].mean()
+        return r
+
+    rx, ry = ranks(xs), ranks(ys)
+    sx, sy = rx.std(), ry.std()
+    if sx == 0 or sy == 0:
+        return 1.0  # all-tied rankings can't disagree
+    return float(((rx - rx.mean()) * (ry - ry.mean())).mean() / (sx * sy))
+
+
+def check_drift(report: dict, *, top1_tol: float = 0.05,
+                min_spearman: float = 0.8) -> dict:
+    """Does the analytic ranking agree with the measured one?
+
+    Per cell: the measured winner's *analytic* time must be within
+    ``top1_tol`` of the analytic best (a tolerant top-1 so modeled
+    near-ties can't flap the gate). Per op family: the mean per-cell
+    Spearman rank correlation over measured candidates must reach
+    ``min_spearman``. Pure JSON math — re-runs on any saved report.
+
+    Returns {ok, n_cells, families: {op: {cells, top1_agreement,
+    mean_spearman}}, violations: [str, ...]}.
+    """
+    fams: dict = {}
+    violations = []
+    for key, cell in sorted(report.get("cells", {}).items()):
+        op = cell["sig"]["op"]
+        f = fams.setdefault(op, {"cells": 0, "top1_ok": 0, "rhos": []})
+        f["cells"] += 1
+        cands = cell["candidates"]
+        analytic = [c["analytic_time_s"] for c in cands]
+        measured = [c["measured_time_s"] for c in cands]
+        best_analytic = min(analytic)
+        win_i = min(range(len(cands)),
+                    key=lambda i: (measured[i], analytic[i], i))
+        if analytic[win_i] <= (1.0 + top1_tol) * best_analytic:
+            f["top1_ok"] += 1
+        else:
+            violations.append(
+                f"{key}: measured winner blocks="
+                f"{cands[win_i]['blocks']} has analytic time "
+                f"{analytic[win_i]:.3e}s vs best {best_analytic:.3e}s "
+                f"(> {1 + top1_tol:.2f}x)")
+        if len(cands) >= 3:
+            f["rhos"].append(spearman(measured, analytic))
+    families = {}
+    for op, f in sorted(fams.items()):
+        agree = f["top1_ok"] / f["cells"]
+        rho = (sum(f["rhos"]) / len(f["rhos"])) if f["rhos"] else 1.0
+        families[op] = {"cells": f["cells"], "top1_agreement": agree,
+                        "mean_spearman": rho}
+        if agree < 1.0:
+            pass  # the per-cell violation above already names the cell
+        if rho < min_spearman:
+            violations.append(
+                f"family {op}: mean Spearman {rho:.3f} < {min_spearman}")
+    return {"ok": not violations, "n_cells": sum(f["cells"]
+                                                 for f in fams.values()),
+            "top1_tol": top1_tol, "min_spearman": min_spearman,
+            "families": families, "violations": violations}

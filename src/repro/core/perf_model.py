@@ -17,6 +17,13 @@ from .schedule import Schedule
 
 @dataclasses.dataclass(frozen=True)
 class ChipSpec:
+    """Roofline constants — every coefficient the calibration subsystem can
+    re-fit from measurement lives here (DESIGN.md §15): MXU and vector
+    throughput, HBM bandwidth, the per-grid-step overhead, and the decode
+    pipeline's saturation ramp. ``repro.core.calibrate.fit_chip`` produces a
+    replacement ChipSpec by least squares over a measured sweep;
+    ``autotune.active_chip()`` swaps it in for every subsequent ranking."""
+
     name: str = "tpu_v5e"
     peak_flops_bf16: float = 197e12      # FLOP/s per chip
     hbm_bw: float = 819e9                # B/s
@@ -24,6 +31,11 @@ class ChipSpec:
     ici_links: int = 4                   # links per chip on a 2D torus
     vmem_bytes: int = tiles.VMEM_BYTES
     mxu_dim: int = 128
+    # --- calibratable coefficients (defaults reproduce the analytic model
+    # exactly; a fitted chip overrides them) ---
+    vector_flops: float = 0.0            # 0 -> peak_flops_bf16 / 16
+    step_overhead_s: float = 1e-6        # fixed cost per Pallas grid step
+    decode_saturation_steps: int = 8     # split-KV pipeline ramp constant
 
     def peak_flops(self, dtype_bytes: int = 2) -> float:
         # v5e matrix unit: int8 is 2x bf16; fp32 via passes ≈ 1/4.
@@ -32,6 +44,10 @@ class ChipSpec:
         if dtype_bytes == 4:
             return self.peak_flops_bf16 / 4
         return self.peak_flops_bf16
+
+    def vector_throughput(self) -> float:
+        """Elementwise-unit FLOP/s (softmax/norm vector work)."""
+        return self.vector_flops or self.peak_flops_bf16 / 16
 
 
 V5E = ChipSpec()
@@ -143,7 +159,8 @@ def best_output_tile(vmem_budget: int, n_buffers: int, block_k: int,
 # next K/V block behind the current (tiny) compute step. Below this the
 # prologue/epilogue bubbles dominate — the reason split-KV exists: when
 # batch*kv_heads is small, splitting the KV axis manufactures grid
-# parallelism so the DMA engine stays busy.
+# parallelism so the DMA engine stays busy. These module constants are the
+# uncalibrated defaults; a fitted ChipSpec overrides both per-chip.
 DECODE_SATURATION_STEPS = 8
 # Per-grid-step fixed cost (s): pipeline bookkeeping per Pallas step. Matches
 # the autotuner's step-overhead scale.
@@ -169,11 +186,11 @@ def decode_step_model(*, batch: int, kv_heads: int, group: int,
     # q/o traffic + the per-split partials the combine step re-reads
     partial_bytes = batch * kv_heads * n_splits * (group * head_dim + 2 * group) * 4
     qo_bytes = 2 * batch * kv_heads * group * head_dim * dtype_bytes
-    util = min(1.0, n_steps / DECODE_SATURATION_STEPS)
+    util = min(1.0, n_steps / chip.decode_saturation_steps)
     stream_s = kv_bytes / (chip.hbm_bw * util)
     combine_s = 2 * partial_bytes / chip.hbm_bw  # written then re-read
     total = (stream_s + qo_bytes / chip.hbm_bw + combine_s
-             + n_steps * DECODE_STEP_OVERHEAD_S)
+             + n_steps * chip.step_overhead_s)
     flops = 4.0 * batch * kv_heads * group * kv_len * head_dim
     return dict(block_kv=block_kv, n_splits=n_splits, n_steps=n_steps,
                 kv_bytes=kv_bytes, partial_bytes=partial_bytes,
@@ -508,7 +525,7 @@ def attention_step_model(*, block_q: int, block_kv: int, head_dim: int,
     flops_per_kv = 2 * block_q * block_kv * head_dim * 2  # qk^T and pv
     vector_ops = block_q * block_kv * 5                   # softmax vector work
     compute_s = (flops_per_kv / chip.peak_flops(dtype_bytes)
-                 + vector_ops / (chip.peak_flops_bf16 / 16))
+                 + vector_ops / chip.vector_throughput())
     dma = (block_kv * head_dim * 2) * dtype_bytes          # K and V blocks
     memory_s = dma / chip.hbm_bw
     steady = max(compute_s, memory_s)
@@ -611,6 +628,74 @@ def attention_chain_bwd_model(*, batch: int, heads: int, kv_heads: int,
         total = recompute + passes * smat + operands + writes
         flops *= 1.5                             # the fwd recompute
     return _chain_dict(total, flops, fused, dtype_bytes, chip)
+
+
+# ---------------------------------------------------------------------------
+# Backward-mode routing model (DESIGN.md §15; unblocks PR 5's deferred
+# bwd-plan-aware routing). Scores gemm_fused's two VJP strategies on a
+# common scale so `bwd_mode="auto"` can pick per shape:
+#   kernel     the kernel-side fused chain transpose — lower bwd traffic,
+#              but the fwd must SAVE the raw preactivations, which charges a
+#              peak-memory residency term (those tensors sit in HBM from fwd
+#              until bwd; on a training step that residency is what OOMs
+#              first, so it is priced, not just counted).
+#   reference  the oracle-recompute VJP (remat): ~1.5x the FLOPs (the fwd
+#              chain re-materializes) and eager per-op traffic, but nothing
+#              saved — zero residency.
+# Degenerate shapes (tiny K, huge M·N) make the kernel plan's saved-preact
+# traffic + residency dominate its GEMM savings; there the oracle wins.
+# ---------------------------------------------------------------------------
+
+# Seconds charged per byte-of-residency/hbm_bw: how much one byte parked in
+# HBM between fwd and bwd "costs" relative to streaming it once. 4x ≈ the
+# activation-lifetime/step-time ratio of the pipelined trainer — enough to
+# flip degenerate cells without disturbing train-shaped ones (k >= ~1024
+# stays on the kernel path at V5E ratios).
+PEAK_RESIDENCY_FACTOR = 4.0
+
+
+def gemm_bwd_route_model(*, m: int, n: int, k: int, dtype_bytes: int = 2,
+                         n_saved: int = 0, preact_bytes: int = 2,
+                         gated: bool = False, prenorm: bool = False,
+                         chip: ChipSpec = V5E) -> dict:
+    """Score the fused-kernel vs oracle-recompute VJP for one gemm_fused
+    call of shape (m, k) @ (k, n) with ``n_saved`` saved preactivation
+    accumulators of ``preact_bytes``/element.
+
+    Returns both strategies' roofline times plus the residency-priced
+    ``score`` each; ``route`` is the argmin. The byte models mirror
+    mlp_chain_bwd_model's counting at single-GEMM granularity.
+    """
+    a_b = m * k * dtype_bytes
+    g_b = m * n * dtype_bytes
+    w_b = k * n * dtype_bytes * (2 if gated else 1)
+    save_b = n_saved * m * n * preact_bytes
+    # kernel plan: fwd writes the saves; dA reads g + weights + saves, writes
+    # dA; dB reads A + g + saves, writes dB (dual-output when gated). A
+    # folded prenorm re-reads raw A in the dA launch for the norm transpose.
+    da_b = g_b + w_b + save_b + a_b
+    db_b = a_b + g_b + save_b + w_b
+    kernel_bytes = save_b + da_b + db_b + (a_b if prenorm else 0)
+    kernel_flops = (2 if gated else 1) * 4.0 * m * n * k
+    # oracle plan: remat the eager fwd chain, then each op's materialized
+    # transpose — per-op reads/writes of the (m, n) intermediates dominate.
+    n_up = 2 if gated else 1
+    recompute_b = a_b + w_b + (n_up + 2) * g_b
+    bwd_gemms_b = (g_b + w_b + a_b) + (a_b + g_b + w_b)
+    chain_b = 3 * n_up * g_b          # per-stage transpose passes
+    ref_bytes = recompute_b + bwd_gemms_b + chain_b
+    ref_flops = 1.5 * kernel_flops    # the bwd pairs + the fwd recompute
+    pf = chip.peak_flops(dtype_bytes)
+    kernel_t = max(kernel_flops / pf, kernel_bytes / chip.hbm_bw)
+    ref_t = max(ref_flops / pf, ref_bytes / chip.hbm_bw)
+    residency_s = PEAK_RESIDENCY_FACTOR * save_b / chip.hbm_bw
+    kernel_score = kernel_t + residency_s
+    return dict(kernel_bytes=int(kernel_bytes), reference_bytes=int(ref_bytes),
+                kernel_flops=kernel_flops, reference_flops=ref_flops,
+                kernel_time_s=kernel_t, reference_time_s=ref_t,
+                peak_save_bytes=int(save_b), residency_s=residency_s,
+                kernel_score=kernel_score, reference_score=ref_t,
+                route="kernel" if kernel_score <= ref_t else "reference")
 
 
 # ---------------------------------------------------------------------------

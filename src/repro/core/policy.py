@@ -294,6 +294,52 @@ def make_policy(op: str, *, block_m: int, block_n: int = 0, block_k: int = 0,
                         epilogue=epilogue, prologue=prologue)
 
 
+def policy_spec(policy: KernelPolicy) -> dict:
+    """JSON-able, bitwise-reconstructible spec of a policy's schedule /
+    swizzle / dtype axes (for the pretuned tables of DESIGN.md §15).
+
+    The chain objects are deliberately NOT serialized: a pretuned-table cell
+    is looked up under a key that already encodes the chain (its
+    ``describe()`` strings), and :func:`policy_from_spec` re-attaches the
+    caller's *live* epilogue/prologue objects — they carry callables that
+    have no stable JSON form.
+    """
+    s, sw = policy.schedule, policy.swizzle
+    return {
+        "op": policy.op,
+        "schedule": {"name": s.name, "n_buffers": s.n_buffers,
+                     "block_m": s.block_m, "block_n": s.block_n,
+                     "block_k": s.block_k,
+                     "producer_fraction": s.producer_fraction},
+        "swizzle": {"window": sw.window, "chunk": sw.chunk,
+                    "n_xcd": sw.n_xcd,
+                    "enable_chiplet": sw.enable_chiplet,
+                    "enable_window": sw.enable_window},
+        "in_dtype": policy.in_dtype,
+        "acc_dtype": policy.acc_dtype,
+    }
+
+
+def policy_from_spec(spec: dict, *, epilogue: Optional[object] = None,
+                     prologue: Optional[object] = None) -> KernelPolicy:
+    """Inverse of :func:`policy_spec`; round-trips bitwise (frozen-dataclass
+    equality) when the same chain objects are re-attached."""
+    sc = spec["schedule"]
+    sched = Schedule(sc["name"], n_buffers=int(sc["n_buffers"]),
+                     block_m=int(sc["block_m"]), block_n=int(sc["block_n"]),
+                     block_k=int(sc["block_k"]),
+                     producer_fraction=float(sc.get("producer_fraction", 0.0)))
+    sw = spec["swizzle"]
+    swizzle = SwizzleConfig(window=int(sw["window"]), chunk=int(sw["chunk"]),
+                            n_xcd=int(sw["n_xcd"]),
+                            enable_chiplet=bool(sw["enable_chiplet"]),
+                            enable_window=bool(sw["enable_window"]))
+    return KernelPolicy(op=spec["op"], schedule=sched, swizzle=swizzle,
+                        in_dtype=spec["in_dtype"],
+                        acc_dtype=spec.get("acc_dtype", "float32"),
+                        epilogue=epilogue, prologue=prologue)
+
+
 def legacy_policy(op: str, *, warn_what: str = "", **blocks) -> KernelPolicy:
     """Deprecation shim: construct an explicit policy from the pre-policy
     loose-int keyword arguments (block_m/block_n/block_k/block_q/block_kv/

@@ -107,7 +107,7 @@ def gemm(a, b, *, policy: KernelPolicy | None = None,
 # Default backward path for gemm_fused (DESIGN.md §11): 'kernel' runs the
 # hand-written chain transpose as fused Pallas launches; 'reference' keeps
 # the jnp-oracle recompute VJP as the grad oracle.
-BWD_MODES = ("kernel", "reference")
+BWD_MODES = ("kernel", "reference", "auto")
 _DEFAULT_BWD_MODE = ["kernel"]
 
 
@@ -239,7 +239,10 @@ def gemm_fused(a, b, *, epilogue: Epilogue = EPILOGUE_NONE,
     hand-written chain transpose as fused Pallas launches — both bwd GEMMs
     with the transposed epilogue as a prologue on g and the norm recomputed
     tile-wise; ``"reference"`` keeps the jnp-oracle recompute VJP (the grad
-    oracle). 'reference' *mode* always differentiates the oracle directly.
+    oracle); ``"auto"`` routes per shape bucket via
+    ``autotune.select_bwd_mode`` (docs/autotuning.md) — kernel on
+    train-shaped cells, oracle on degenerate ones. 'reference' *mode*
+    always differentiates the oracle directly.
 
     Per prologue flag: any norm → ``gamma`` (K,) row scale; ``beta`` →
     (K,) layernorm bias row; ``precomputed_stats`` → ``rstd`` (M,) (and
@@ -319,6 +322,14 @@ def gemm_fused(a, b, *, epilogue: Epilogue = EPILOGUE_NONE,
         bwd_mode = _DEFAULT_BWD_MODE[0]
     if bwd_mode not in BWD_MODES:
         raise ValueError(f"unknown bwd_mode {bwd_mode!r}; have {BWD_MODES}")
+    if bwd_mode == "auto":
+        # plan-aware routing (DESIGN.md §15): the roofline + peak-memory
+        # model sends degenerate cells (tiny-K: saved preacts dominate) to
+        # the oracle VJP and train-shaped cells to the fused kernel bwd.
+        # Journaled as a 'bwd_route' plan decision, memoized per bucket.
+        bwd_mode = autotune.select_bwd_mode(m, n, k, dtype=str(a.dtype),
+                                            epilogue=epilogue,
+                                            prologue=prologue)
     timing = obs.timing_enabled()
     t0 = time.perf_counter() if timing else 0.0
     out = _gemm_fused(policy, out_dtype, mode == "pallas_interpret",

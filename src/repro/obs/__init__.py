@@ -95,10 +95,12 @@ class SpanEvent:
 
 @dataclass
 class PlanDecision:
-    """One autotuner verdict. ``kind`` is "policy" (select_policy) or
-    "fusion" (select_fusion); ``candidates`` lists every scored loser
-    with its modeled time/bytes so the choice is explainable after the
-    fact. ``cached`` marks a memo replay (same decision, zero rescoring)."""
+    """One autotuner verdict. ``kind`` is "policy" (select_policy),
+    "fusion" (select_fusion), or "bwd_route" (select_bwd_mode — the
+    bwd_mode='auto' kernel-vs-oracle routing); ``candidates`` lists every
+    scored loser with its modeled time/bytes so the choice is explainable
+    after the fact. ``cached`` marks a memo replay (same decision, zero
+    rescoring)."""
     kind: str
     op: str
     shape: tuple
@@ -154,6 +156,11 @@ class Recorder:
 
     def counter(self, name: str) -> float:
         return self.counters.get(name, 0.0)
+
+    def plans_of(self, kind: str) -> list:
+        """Plan decisions of one kind ('policy' | 'fusion' | 'bwd_route'),
+        in journal order."""
+        return [p for p in self.plans if p.kind == kind]
 
     def summary(self) -> dict:
         """The ``telemetry`` block embedded in BENCH_<key>.json."""

@@ -74,7 +74,12 @@ def _lru_get(lru: collections.OrderedDict, key, build, cap: int,
 
 class Engine:
     def __init__(self, model, params, *, max_len: int = 4096, mesh=None,
-                 donate_cache: bool = True, max_cached_buckets: int = 8):
+                 donate_cache: bool = True, max_cached_buckets: int = 8,
+                 pretuned=None):
+        if pretuned is not None:
+            # install the calibrated table (path or report dict) before any
+            # bucket pins, so every pinned policy set sees it
+            autotune.use_pretuned(pretuned)
         self.model = model
         self.params = params
         self.max_len = max_len
@@ -326,7 +331,12 @@ class PagedEngine:
                  rng=None, max_cached_buckets: int = 8,
                  prefix_cache: bool = False,
                  chunk_tokens: Optional[int] = None,
-                 draft_model=None, draft_params=None, spec_tokens: int = 0):
+                 draft_model=None, draft_params=None, spec_tokens: int = 0,
+                 pretuned=None):
+        if pretuned is not None:
+            # calibrated policy table (path or report dict), installed
+            # before the first page-count bucket pins its split-KV policy
+            autotune.use_pretuned(pretuned)
         if model.init_paged_cache is None:
             raise ValueError(
                 f"{model.cfg.name}: no paged decode surface (decoder-only "

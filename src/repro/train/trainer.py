@@ -165,8 +165,13 @@ def train_loop(model, data_iter, num_steps: int, opt_cfg: AdamWConfig, *,
                failure_injector: Optional[FailureInjector] = None,
                watchdog: Optional[StragglerWatchdog] = None,
                max_restarts: int = 3, log_every: int = 10,
+               pretuned=None,
                log: Callable = print) -> TrainLoopResult:
     rng = rng if rng is not None else jax.random.PRNGKey(0)
+    if pretuned is not None:
+        # calibrated policy table (path or report dict); installed before
+        # the first bucket pin so pinned policies come from measurement
+        autotune.use_pretuned(pretuned)
     step_fn = make_train_step(model, opt_cfg, mesh=mesh, zero1=zero1,
                               grad_compress=grad_compress,
                               microbatches=microbatches)

@@ -342,3 +342,100 @@ class TestTrainerSmoke:
         # train parity against a truth curve). Tight early, bounded late.
         np.testing.assert_allclose(lk[:4], lo[:4], rtol=2e-3, atol=2e-3)
         assert np.abs(lk - lo).max() < 0.2, (lk.tolist(), lo.tolist())
+
+
+class TestBwdRouting:
+    """``bwd_mode="auto"`` (docs/autotuning.md): plan-aware routing between
+    the fused kernel backward and the oracle VJP, asserted through the
+    ``bwd_route`` plan-audit journal — no monkeypatching."""
+
+    def setup_method(self):
+        autotune.clear_policy_cache()
+
+    @staticmethod
+    def _routes(cap):
+        return cap.plans_of("bwd_route")
+
+    def test_auto_routes_oracle_on_degenerate_shape(self):
+        """Tiny contraction dim with an activation epilogue: the saved
+        preacts dominate the kernel path's traffic + peak memory, so auto
+        picks the oracle VJP — and its grads are bitwise the reference
+        path's."""
+        from repro import obs
+
+        a = _rand(0, (512, 128))
+        b = _rand(1, (128, 512))
+        b2 = _rand(2, (128, 512))
+        ep = Epilogue(activation="silu", gate=True)
+        with obs.capture() as cap:
+            g_auto = jax.grad(lambda a_: _loss(a_, b, (b2,), ["b2"], ep,
+                                               Prologue(), bwd="auto"))(a)
+        routes = self._routes(cap)
+        assert routes and routes[0].chosen["mode"] == "reference", routes
+        assert cap.count("gemm_bwd_da") == 0
+        assert cap.count("gemm_bwd_db") == 0
+        g_ref = jax.grad(lambda a_: _loss(a_, b, (b2,), ["b2"], ep,
+                                          Prologue(), bwd="reference"))(a)
+        np.testing.assert_array_equal(np.asarray(g_auto),
+                                      np.asarray(g_ref))
+
+    def test_auto_routes_kernel_on_train_shape(self):
+        """Train-shaped contraction dim: the fused chain transpose wins the
+        roofline, and the journal shows both fused bwd GEMM launches."""
+        from repro import obs
+
+        a = _rand(0, (256, 1024))
+        b = _rand(1, (1024, 256))
+        b2 = _rand(2, (1024, 256))
+        ep = Epilogue(activation="silu", gate=True)
+        with obs.capture() as cap:
+            jax.grad(lambda a_: _loss(a_, b, (b2,), ["b2"], ep,
+                                      Prologue(), bwd="auto"))(a)
+        routes = self._routes(cap)
+        assert routes and routes[0].chosen["mode"] == "kernel", routes
+        assert cap.count("gemm_bwd_da") == 1
+        assert cap.count("gemm_bwd_db") == 1
+
+    def test_auto_as_session_default(self):
+        """default_bwd_mode("auto") routes every layer that doesn't pass
+        bwd_mode — the model-level lever."""
+        from repro import obs
+
+        a = _rand(0, (512, 128))
+        b = _rand(1, (128, 512))
+        b2 = _rand(2, (128, 512))
+        ep = Epilogue(activation="silu", gate=True)
+        with default_bwd_mode("auto"):
+            with obs.capture() as cap:
+                jax.grad(lambda a_: _loss(a_, b, (b2,), ["b2"], ep,
+                                          Prologue()))(a)
+        routes = self._routes(cap)
+        assert routes and routes[0].chosen["mode"] == "reference"
+
+    def test_route_decision_is_memoized_and_replayed(self):
+        from repro import obs
+
+        with obs.capture() as cap:
+            first = autotune.select_bwd_mode(512, 512, 128, dtype="float32",
+                                             epilogue=Epilogue(
+                                                 activation="silu"))
+            second = autotune.select_bwd_mode(512, 512, 128,
+                                              dtype="float32",
+                                              epilogue=Epilogue(
+                                                  activation="silu"))
+        assert first == second == "reference"
+        routes = self._routes(cap)
+        assert len(routes) == 2
+        assert not routes[0].cached and routes[1].cached
+
+    def test_route_model_crossover(self):
+        """The analytic route model itself: reference wins only while the
+        contraction dim is small relative to the save-stream traffic."""
+        from repro.core import perf_model as pm
+
+        small = pm.gemm_bwd_route_model(m=2048, n=512, k=8, n_saved=1)
+        big = pm.gemm_bwd_route_model(m=4096, n=4096, k=2048, n_saved=1)
+        assert small["route"] == "reference"
+        assert big["route"] == "kernel"
+        assert small["peak_save_bytes"] > 0
+        assert big["kernel_score"] < big["reference_score"]

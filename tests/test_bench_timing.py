@@ -1,0 +1,58 @@
+"""Bench timing is consolidated: every bench module measures through
+``benchmarks.common.measure_cell`` — no stray ``time.perf_counter`` loops,
+so methodology changes (trimming, counter bracketing) land everywhere at
+once."""
+import pathlib
+
+import pytest
+
+BENCH_DIR = pathlib.Path(__file__).resolve().parent.parent / "benchmarks"
+BENCH_MODULES = sorted(p for p in BENCH_DIR.glob("bench_*.py"))
+
+
+def test_bench_modules_exist():
+    assert len(BENCH_MODULES) >= 8
+
+
+@pytest.mark.parametrize("path", BENCH_MODULES, ids=lambda p: p.stem)
+def test_no_stray_timing_loops(path):
+    src = path.read_text()
+    assert "perf_counter" not in src, (
+        f"{path.name} rolls its own timing loop; use "
+        "benchmarks.common.measure_cell")
+    assert "time_fn" not in src, (
+        f"{path.name} uses the removed time_fn; use measure_cell")
+
+
+@pytest.mark.parametrize("path", BENCH_MODULES, ids=lambda p: p.stem)
+def test_timing_goes_through_measure_cell(path):
+    src = path.read_text()
+    times_something = "import time" in src or "measure_cell" in src
+    if times_something:
+        assert "measure_cell" in src
+
+
+def test_only_common_touches_the_clock():
+    offenders = [p.name for p in BENCH_DIR.glob("*.py")
+                 if p.name != "common.py" and "perf_counter" in p.read_text()]
+    assert not offenders
+
+
+class TestMeasureCell:
+    def test_median_path(self):
+        from benchmarks.common import measure_cell
+
+        calls = []
+        res = measure_cell(lambda: calls.append(1), warmup=2, iters=5)
+        assert len(calls) == 7
+        assert res["iters"] == 5
+        assert res["us"] >= res["min_us"] >= 0
+        assert res["seconds"] == pytest.approx(res["us"] / 1e6)
+
+    def test_one_shot_path(self):
+        from benchmarks.common import measure_cell
+
+        calls = []
+        res = measure_cell(lambda: calls.append(1), warmup=0, iters=1)
+        assert len(calls) == 1  # side-effectful cells run exactly once
+        assert res["iters"] == 1

@@ -1,0 +1,317 @@
+"""Calibration subsystem tests (DESIGN.md §15): pretuned-table round-trip
+through select_policy, schema/arch fallback with logged counters,
+coefficient-fit determinism, and the drift gate on clean vs. perturbed
+reports."""
+import copy
+import json
+import math
+
+import pytest
+
+from repro import obs
+from repro.core import autotune
+from repro.core import calibrate as cal
+from repro.core import perf_model as pm
+from repro.core.autotune import OpSignature
+from repro.core.policy import policy_from_spec
+
+
+@pytest.fixture(autouse=True)
+def _clean_caches():
+    autotune.clear_policy_cache()
+    autotune.clear_pretuned()
+    yield
+    autotune.clear_policy_cache()
+    autotune.clear_pretuned()
+
+
+@pytest.fixture(scope="module")
+def smoke_report():
+    autotune.clear_policy_cache()
+    return cal.calibrate(smoke=True, seed=0, arch="cpu")
+
+
+# ---------------------------------------------------------------------------
+# Report shape and determinism
+# ---------------------------------------------------------------------------
+
+
+class TestCalibrate:
+    def test_report_covers_sweep(self, smoke_report):
+        r = smoke_report
+        assert r["schema_version"] == autotune.PRETUNED_SCHEMA_VERSION
+        assert r["arch"] == "cpu"
+        ops = {c["sig"]["op"] for c in r["cells"].values()}
+        assert {"gemm", "attention_fwd", "attention_decode",
+                "fused_norm", "rope"} <= ops
+        assert r["fusion"]  # chain plans pinned too
+        for cell in r["cells"].values():
+            assert cell["candidates"], "every cell measures candidates"
+            # candidate 0 is the analytic winner by construction
+            best = min(c["analytic_time_s"] for c in cell["candidates"])
+            assert cell["candidates"][0]["analytic_time_s"] == best
+
+    def test_report_is_json_serializable(self, smoke_report):
+        json.loads(json.dumps(smoke_report))
+
+    def test_deterministic_under_fixed_seed(self, smoke_report):
+        again = cal.calibrate(smoke=True, seed=0, arch="cpu")
+        assert again == smoke_report
+
+    def test_jittered_rig_is_deterministic(self):
+        rig = cal.CalibrationRig(jitter=0.2, seed=7)
+        sig = OpSignature("gemm", (512, 512, 512))
+        pol = autotune.candidate_policies(sig)[0]
+        assert rig.time(sig, pol) == rig.time(sig, pol)
+        base = cal.CalibrationRig().time(sig, pol)
+        assert rig.time(sig, pol) != base  # the jitter actually perturbs
+        assert math.isclose(rig.time(sig, pol), base, rel_tol=0.25)
+
+
+class TestFit:
+    def test_recovers_additive_coefficients(self):
+        # Samples built from a known additive law must be recovered
+        # near-exactly: t = F/a + V/b + B/c + S*d.
+        a, b, c, d = 150e12, 9e12, 700e9, 2e-6
+        feats = [
+            dict(mxu_flops=1e12, vector_ops=1e9, dma_bytes=1e9,
+                 grid_steps=64),
+            dict(mxu_flops=4e12, vector_ops=8e9, dma_bytes=2e9,
+                 grid_steps=256),
+            dict(mxu_flops=2e11, vector_ops=5e10, dma_bytes=8e9,
+                 grid_steps=16),
+            dict(mxu_flops=9e12, vector_ops=2e8, dma_bytes=5e8,
+                 grid_steps=1024),
+            dict(mxu_flops=3e12, vector_ops=3e9, dma_bytes=6e9,
+                 grid_steps=128),
+        ]
+        samples = [(f, f["mxu_flops"] / a + f["vector_ops"] / b
+                    + f["dma_bytes"] / c + f["grid_steps"] * d)
+                   for f in feats]
+        chip, info = cal.fit_chip(samples, [], arch="cpu")
+        assert chip["name"] == "cpu_calibrated"
+        assert math.isclose(chip["peak_flops_bf16"], a, rel_tol=1e-6)
+        assert math.isclose(chip["vector_flops"], b, rel_tol=1e-6)
+        assert math.isclose(chip["hbm_bw"], c, rel_tol=1e-6)
+        assert math.isclose(chip["step_overhead_s"], d, rel_tol=1e-6)
+
+    def test_recovers_decode_ramp(self):
+        # Decode samples generated with ramp=12 and the default bw/step
+        # (no linear samples, so the lstsq stage keeps defaults).
+        bw, step, ramp = pm.V5E.hbm_bw, 1e-6, 12
+        ds = []
+        for steps, kv in [(2, 1 << 20), (6, 1 << 22), (12, 1 << 23),
+                          (24, 1 << 24), (32, 1 << 24)]:
+            f = dict(grid_steps=steps, kv_bytes=float(kv),
+                     other_bytes=float(kv // 16))
+            util = min(1.0, steps / ramp)
+            ds.append((f, f["kv_bytes"] / (bw * util)
+                       + f["other_bytes"] / bw + steps * step))
+        chip, _ = cal.fit_chip([], ds, arch="cpu")
+        assert chip["decode_saturation_steps"] == ramp
+
+    def test_empty_sweep_falls_back_to_analytic_defaults(self):
+        chip, info = cal.fit_chip([], [], arch="cpu")
+        assert chip["peak_flops_bf16"] == pm.V5E.peak_flops_bf16
+        assert chip["hbm_bw"] == pm.V5E.hbm_bw
+        assert info["n_samples"] == 0
+
+    def test_fitted_chip_installs_as_chipspec(self, smoke_report):
+        chip = autotune.chip_from_dict(smoke_report["chip"])
+        assert isinstance(chip, pm.ChipSpec)
+        assert chip.name == "cpu_calibrated"
+        assert chip.peak_flops_bf16 > 0 and chip.hbm_bw > 0
+        assert chip.vector_throughput() > 0
+
+
+# ---------------------------------------------------------------------------
+# Pretuned table round-trip through select_policy
+# ---------------------------------------------------------------------------
+
+
+class TestPretunedRoundTrip:
+    def test_write_load_select_returns_pinned_winner(self, smoke_report,
+                                                     tmp_path):
+        path = tmp_path / "CALIB_cpu.json"
+        cal.save_report(smoke_report, path)
+        assert autotune.load_pretuned(path, arch="cpu")
+
+        sig = OpSignature("gemm", (512, 512, 512))
+        key = autotune.pretuned_cell_key(sig)
+        cell = smoke_report["cells"][key]
+        expected = policy_from_spec(cell["policy"])
+        with obs.capture() as rec:
+            got = autotune.select_policy("gemm", (512, 512, 512))
+        # bitwise: frozen-dataclass equality over every schedule/swizzle
+        # field, not just the block shape
+        assert got == expected
+        assert rec.counter("autotune.pretuned_hit") == 1
+
+    def test_pinned_winner_rides_chains(self, smoke_report, tmp_path):
+        from repro.kernels.gemm.epilogue import Epilogue
+        cal.save_report(smoke_report, tmp_path / "t.json")
+        assert autotune.load_pretuned(tmp_path / "t.json", arch="cpu")
+        ep = Epilogue(activation="silu", gate=True)
+        got = autotune.select_policy("gemm", (1024, 2048, 1024),
+                                     epilogue=ep)
+        sig = OpSignature("gemm", (1024, 2048, 1024), epilogue=ep)
+        cell = smoke_report["cells"][autotune.pretuned_cell_key(sig)]
+        assert got == policy_from_spec(cell["policy"], epilogue=ep)
+        assert got.epilogue is ep  # live chain object re-attached
+
+    def test_cell_miss_falls_through_to_analytic(self, smoke_report):
+        assert autotune.install_pretuned(smoke_report, arch="cpu")
+        shape = (768, 768, 768)  # not in the smoke sweep
+        with obs.capture() as rec:
+            got = autotune.select_policy("gemm", shape)
+        assert rec.counter("autotune.pretuned_cell_miss") == 1
+        autotune.clear_pretuned()
+        autotune.clear_policy_cache()
+        assert got == autotune.select_policy("gemm", shape)
+
+    def test_install_invalidates_memoized_selection(self, smoke_report):
+        # Satellite fix: the memo key carries the table generation, so a
+        # cached analytic pick cannot shadow a freshly installed table.
+        sig = OpSignature("gemm", (512, 512, 512))
+        analytic = autotune.select_policy("gemm", (512, 512, 512))
+        assert autotune.policy_cache_stats()["size"] >= 1
+        gen = autotune.pretuned_generation()
+        assert autotune.install_pretuned(smoke_report, arch="cpu")
+        assert autotune.pretuned_generation() == gen + 1
+        cell = smoke_report["cells"][autotune.pretuned_cell_key(sig)]
+        pinned = policy_from_spec(cell["policy"])
+        got = autotune.select_policy("gemm", (512, 512, 512))
+        assert got == pinned
+        # (analytic may coincide with pinned; the point is the re-lookup)
+        autotune.clear_pretuned()
+        assert autotune.select_policy("gemm", (512, 512, 512)) == analytic
+
+    def test_pinning_skipped_for_pinned_swizzle_and_cache_sim(
+            self, smoke_report):
+        assert autotune.install_pretuned(smoke_report, arch="cpu")
+        from repro.core.policy import ROW_MAJOR
+        got = autotune.select_policy("gemm", (512, 512, 512),
+                                     swizzle=ROW_MAJOR)
+        assert got.swizzle == ROW_MAJOR
+
+
+class TestPretunedRejection:
+    def test_schema_mismatch_falls_back_with_counter(self, smoke_report):
+        bad = copy.deepcopy(smoke_report)
+        bad["schema_version"] = autotune.PRETUNED_SCHEMA_VERSION + 1
+        with obs.capture() as rec:
+            assert not autotune.install_pretuned(bad, arch="cpu")
+        assert rec.counter("autotune.pretuned_rejected_schema") == 1
+        assert autotune.active_pretuned() is None
+        # selection still works, purely analytic
+        assert autotune.select_policy("gemm", (512, 512, 512)) is not None
+
+    def test_arch_mismatch_falls_back_with_counter(self, smoke_report):
+        other = copy.deepcopy(smoke_report)
+        other["arch"] = "mi355x"
+        with obs.capture() as rec:
+            assert not autotune.install_pretuned(other, arch="cpu")
+        assert rec.counter("autotune.pretuned_rejected_arch") == 1
+        assert autotune.active_pretuned() is None
+
+    def test_rejection_keeps_previous_table(self, smoke_report):
+        assert autotune.install_pretuned(smoke_report, arch="cpu")
+        gen = autotune.pretuned_generation()
+        bad = copy.deepcopy(smoke_report)
+        bad["schema_version"] = 999
+        assert not autotune.install_pretuned(bad, arch="cpu")
+        assert autotune.active_pretuned() is smoke_report
+        assert autotune.pretuned_generation() == gen
+
+    def test_fitted_chip_drives_analytic_fallback(self, smoke_report):
+        # On a cell miss the analytic ranking runs with the *fitted* chip.
+        assert autotune.install_pretuned(smoke_report, arch="cpu")
+        assert autotune.active_chip().name == "cpu_calibrated"
+        autotune.clear_pretuned()
+        assert autotune.active_chip() is pm.V5E
+
+
+# ---------------------------------------------------------------------------
+# The drift gate
+# ---------------------------------------------------------------------------
+
+
+class TestDriftGate:
+    def test_clean_report_passes(self, smoke_report):
+        res = cal.check_drift(smoke_report)
+        assert res["ok"], res["violations"]
+        assert res["n_cells"] == len(smoke_report["cells"])
+        for fam in res["families"].values():
+            assert fam["mean_spearman"] >= 0.8
+
+    def test_perturbed_report_fails(self):
+        # A hand-built report where measurement contradicts the model: the
+        # measured winner carries 2x the analytic best, and the rankings
+        # anti-correlate.
+        report = {"cells": {"gemm|synthetic": {
+            "sig": {"op": "gemm"},
+            "candidates": [
+                {"blocks": [128, 128, 128], "measured_time_s": 3.0,
+                 "analytic_time_s": 1.0},
+                {"blocks": [256, 256, 256], "measured_time_s": 2.0,
+                 "analytic_time_s": 2.0},
+                {"blocks": [512, 512, 512], "measured_time_s": 1.0,
+                 "analytic_time_s": 3.0},
+            ]}}}
+        res = cal.check_drift(report)
+        assert not res["ok"]
+        assert any("measured winner" in v for v in res["violations"])
+        assert any("Spearman" in v for v in res["violations"])
+
+    def test_perturbing_real_report_trips_gate(self, smoke_report):
+        bad = copy.deepcopy(smoke_report)
+        # invert every measured ranking
+        for cell in bad["cells"].values():
+            times = sorted(c["measured_time_s"] for c in cell["candidates"])
+            for c, t in zip(cell["candidates"], reversed(times)):
+                c["measured_time_s"] = t
+        assert not cal.check_drift(bad)["ok"]
+
+    def test_top1_tolerance_absorbs_near_ties(self):
+        # The top two swap (a 4% modeled near-tie); the tail agrees, so
+        # rank correlation stays high (rho = 0.9 over 5 candidates) and
+        # only the top-1 tolerance decides the gate.
+        cands = [
+            {"blocks": [1], "measured_time_s": 1.01, "analytic_time_s": 1.00},
+            {"blocks": [2], "measured_time_s": 1.00, "analytic_time_s": 1.04},
+            {"blocks": [3], "measured_time_s": 2.00, "analytic_time_s": 2.00},
+            {"blocks": [4], "measured_time_s": 3.00, "analytic_time_s": 3.00},
+            {"blocks": [5], "measured_time_s": 4.00, "analytic_time_s": 4.00},
+        ]
+        report = {"cells": {"gemm|tie": {"sig": {"op": "gemm"},
+                                         "candidates": cands}}}
+        assert cal.check_drift(report, top1_tol=0.05)["ok"]
+        assert not cal.check_drift(report, top1_tol=0.01)["ok"]
+
+
+class TestSpearman:
+    def test_perfect_and_reversed(self):
+        assert cal.spearman([1, 2, 3, 4],
+                            [10, 20, 30, 40]) == pytest.approx(1.0)
+        assert cal.spearman([1, 2, 3, 4],
+                            [40, 30, 20, 10]) == pytest.approx(-1.0)
+
+    def test_ties_average(self):
+        rho = cal.spearman([1, 1, 2], [1, 2, 3])
+        assert -1.0 <= rho <= 1.0
+        assert cal.spearman([5, 5, 5], [1, 2, 3]) == 1.0  # all-tied: agree
+
+
+# ---------------------------------------------------------------------------
+# Execution path: obs journal carries real launches
+# ---------------------------------------------------------------------------
+
+
+class TestExecute:
+    def test_executed_cells_journal_launches(self):
+        cells = [OpSignature("gemm", (256, 256, 256), dtype="float32")]
+        with obs.capture() as rec:
+            report = cal.calibrate(cells=cells, execute=True, arch="cpu")
+        [cell] = report["cells"].values()
+        assert cell["executed_launches"] >= 1
+        assert rec.counter("calibrate.executed_launches") >= 1

@@ -1,0 +1,72 @@
+#!/usr/bin/env python
+"""Run the calibration sweep and write CALIB_*.json pretuned tables.
+
+Usage:
+    PYTHONPATH=src python tools/calibrate.py --out calib/ [--smoke]
+        [--execute] [--seed 0] [--arch cpu] [--jitter 0.0] [--top-k 12]
+
+Writes ``CALIB_<arch>.json`` into ``--out`` — a file that is both the
+drift-check report (per-candidate measured + analytic times) and an
+installable pretuned policy table (``autotune.load_pretuned`` /
+``configs.pretuned_table_path``). Run ``tools/drift_check.py <out-dir>``
+afterwards to gate the analytic model against the measurements.
+
+On CPU/CI the measurement is the interpret-path proxy rig (see
+``repro.core.calibrate``); ``--execute`` additionally runs each small
+cell's winner once in interpret mode so the obs journal records real
+kernel launches. On real hardware, wire a wall-clock ``measure_fn``
+instead of the rig.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default="calib", help="output directory")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized sweep (BENCH_SMOKE cells only)")
+    ap.add_argument("--execute", action="store_true",
+                    help="run small cells in interpret mode under obs")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--arch", default=None,
+                    help="arch tag (default: jax.default_backend())")
+    ap.add_argument("--jitter", type=float, default=0.0,
+                    help="seeded relative measurement noise for the rig")
+    ap.add_argument("--top-k", type=int, default=12,
+                    help="candidates measured per cell (by analytic rank)")
+    args = ap.parse_args(argv)
+
+    from repro import obs
+    from repro.core import calibrate as cal
+
+    rig = cal.CalibrationRig(jitter=args.jitter, seed=args.seed)
+    with obs.capture() as rec:
+        report = cal.calibrate(rig=rig, execute=args.execute,
+                               smoke=args.smoke, top_k=args.top_k,
+                               seed=args.seed, arch=args.arch)
+    report["obs_counters"] = {k: v for k, v in sorted(
+        rec.counters.items()) if k.startswith("calibrate.")}
+
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out, f"CALIB_{report['arch']}.json")
+    cal.save_report(report, path)
+
+    drift = cal.check_drift(report)
+    print(f"wrote {path}: {len(report['cells'])} cells, "
+          f"{len(report['fusion'])} fusion plans, "
+          f"fitted chip {report['chip']['name']}")
+    print(json.dumps(drift["families"], indent=1, sort_keys=True))
+    if not drift["ok"]:
+        print("DRIFT VIOLATIONS (gate will fail):", file=sys.stderr)
+        for v in drift["violations"]:
+            print(f"  {v}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

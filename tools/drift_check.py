@@ -1,0 +1,76 @@
+#!/usr/bin/env python
+"""Drift gate: assert the analytic perf model still matches measurement.
+
+Usage:
+    PYTHONPATH=src python tools/drift_check.py <calib-dir-or-json> ...
+        [--top1-tol 0.05] [--min-spearman 0.8]
+
+Reads every ``CALIB_*.json`` report produced by ``tools/calibrate.py``
+(each candidate carries both ``measured_time_s`` and ``analytic_time_s``,
+so this is pure JSON math — no model re-evaluation) and enforces, per
+bench-sweep cell and per op family:
+
+  * top-1 agreement — the measured winner's analytic time is within
+    ``--top1-tol`` of the analytic best, and
+  * rank fidelity — mean Spearman rank correlation between analytic and
+    measured candidate rankings is at least ``--min-spearman``.
+
+Exits non-zero listing every violation. CI runs this as a required step
+after the calibrate-smoke sweep; a red gate means the analytic model has
+drifted from what the kernels actually do — recalibrate or fix the model
+(docs/autotuning.md walks through both).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def _collect(paths):
+    files = []
+    for p in paths:
+        if os.path.isdir(p):
+            files.extend(sorted(glob.glob(os.path.join(p, "CALIB_*.json"))))
+        else:
+            files.append(p)
+    return files
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="+",
+                    help="CALIB_*.json files or directories holding them")
+    ap.add_argument("--top1-tol", type=float, default=0.05)
+    ap.add_argument("--min-spearman", type=float, default=0.8)
+    args = ap.parse_args(argv)
+
+    from repro.core.calibrate import check_drift
+
+    files = _collect(args.paths)
+    if not files:
+        print("drift_check: no CALIB_*.json reports found", file=sys.stderr)
+        return 2
+
+    failed = False
+    for path in files:
+        with open(path) as f:
+            report = json.load(f)
+        res = check_drift(report, top1_tol=args.top1_tol,
+                          min_spearman=args.min_spearman)
+        status = "OK" if res["ok"] else "DRIFT"
+        print(f"{path}: {status} ({res['n_cells']} cells)")
+        for op, fam in sorted(res["families"].items()):
+            print(f"  {op:18s} cells={fam['cells']:3d} "
+                  f"top1={fam['top1_agreement']:.2f} "
+                  f"spearman={fam['mean_spearman']:.3f}")
+        for v in res["violations"]:
+            print(f"  VIOLATION: {v}", file=sys.stderr)
+            failed = True
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
