@@ -1,0 +1,112 @@
+"""Distributed fused-execution sweep (DESIGN.md §16).
+
+Modeled plan decisions for the sharded hot chains, from the same byte
+models ``select_fusion`` ranks with — no hard-coded preference:
+
+* MoE train cells: the per-rank expert MLP chain under EP (all_to_all
+  dispatch) and TP (all_reduce epilogue), fused vs unfused with the
+  interconnect term riding both plans. The acceptance bars (CI-asserted
+  from ``BENCH_distributed.json``) are ``plan == fused`` and
+  ``traffic_reduction >= 1.2`` on every train cell.
+* Ring collective-GEMM cells: ring-overlapped vs gather-then-GEMM for the
+  two Megatron TP collectives on train shapes. Bars: ``plan == fused``
+  and ``overlap_fraction > 0`` on every cell.
+* The sequence-parallel KV term: the partial-softmax all-reduce a decode
+  step pays when ``cache_specs`` shards the KV sequence dim over 'model'.
+
+``us_per_call`` is 0.0 throughout — these are modeled-TPU rows (the
+container has no TPU; DESIGN.md §7), the same convention as
+``bench_fused_mlp``.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.core import autotune
+from repro.core import perf_model as pm
+from repro.distributed.sharding import ShardSpec
+from .common import emit
+
+
+def _spec(n_shards: int, dim: str, collective: str) -> ShardSpec:
+    return ShardSpec(mesh=(("model", n_shards),),
+                     partition=((dim, "model"),), collective=collective)
+
+
+def _moe_cells(smoke: bool):
+    # (label, tokens, d_model, d_ff, n_shards, dim, collective)
+    # EP keeps the full d_ff per expert; TP shards d_ff |model|-ways.
+    cells = [
+        ("moe_ep_s4096_d2048", 4096, 2048, 8192, 4, "expert", "all_to_all"),
+        ("moe_tp_s4096_d2048", 4096, 2048, 8192 // 4, 4, "ffn", "all_reduce"),
+    ]
+    if not smoke:
+        cells += [
+            ("moe_ep_s8192_d4096", 8192, 4096, 16384, 8, "expert",
+             "all_to_all"),
+            ("moe_tp_s8192_d4096", 8192, 4096, 16384 // 8, 8, "ffn",
+             "all_reduce"),
+        ]
+    return cells
+
+
+def _ring_cells(smoke: bool):
+    # (label, m, n, k, n_shards, collective)
+    cells = [
+        ("ring_ag_4096", 4096, 4096, 4096, 4, "all_gather"),
+        ("ring_rs_4096", 4096, 4096, 4096, 4, "reduce_scatter"),
+    ]
+    if not smoke:
+        cells += [
+            ("ring_ag_8192", 8192, 8192, 8192, 8, "all_gather"),
+            ("ring_rs_8192", 8192, 8192, 8192, 8, "reduce_scatter"),
+        ]
+    return cells
+
+
+def main() -> None:
+    smoke = bool(os.environ.get("BENCH_SMOKE"))
+
+    for label, seq, d, f, ns, dim, coll in _moe_cells(smoke):
+        shard = _spec(ns, dim, coll)
+        plan = autotune.select_fusion("mlp", (seq, d, f, 1), "bfloat16",
+                                      residual=False, shard=shard)
+        emit(label, 0.0,
+             f"plan={plan['plan']};"
+             f"shards={ns};collective={coll};"
+             f"fused_mb={plan['fused_bytes'] / 2**20:.1f};"
+             f"unfused_mb={plan['unfused_bytes'] / 2**20:.1f};"
+             f"traffic_reduction={plan['traffic_reduction']:.2f}x;"
+             f"collective_mb={plan['collective_bytes'] / 2**20:.1f};"
+             f"overlap_fraction={plan['overlap_fraction']:.3f}")
+
+    for label, m, n, k, ns, coll in _ring_cells(smoke):
+        shard = _spec(ns, "rows" if coll == "all_gather" else "contract",
+                      coll)
+        plan = autotune.select_fusion("gemm_collective", (m, n, k),
+                                      "bfloat16", shard=shard)
+        chosen = plan["fused"] if plan["plan"] == "fused" else plan["unfused"]
+        emit(label, 0.0,
+             f"plan={plan['plan']};"
+             f"shards={ns};collective={coll};"
+             f"ring_steps={chosen.get('ring_steps', 1)};"
+             f"fused_mb={plan['fused_bytes'] / 2**20:.1f};"
+             f"unfused_mb={plan['unfused_bytes'] / 2**20:.1f};"
+             f"traffic_reduction={plan['traffic_reduction']:.2f}x;"
+             f"collective_mb={plan['collective_bytes'] / 2**20:.1f};"
+             f"overlap_fraction={plan['overlap_fraction']:.3f}")
+
+    # sequence-parallel KV decode: the tiny all-reduce the partial softmax
+    # pays for a |model|-fold KV-memory cut (cache_specs)
+    for batch, heads, hd, ns in ((8, 32, 128, 4),):
+        rows = batch * heads
+        coll = pm.partial_softmax_allreduce_model(rows=rows, head_dim=hd,
+                                                  n_shards=ns)
+        emit(f"seqpar_kv_b{batch}_h{heads}", 0.0,
+             f"shards={ns};wire_kb={coll['wire_bytes'] / 1024:.1f};"
+             f"collective_us={coll['collective_s'] * 1e6:.2f};"
+             f"steps={coll['steps']}")
+
+
+if __name__ == "__main__":
+    main()

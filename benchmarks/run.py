@@ -19,8 +19,8 @@ import traceback
 
 from . import (bench_gemm, bench_attention_fwd, bench_attention_bwd,
                bench_attention_fusion, bench_calibration, bench_decode,
-               bench_fused_mlp, bench_memory_bound, bench_schedules,
-               bench_grid_swizzle, bench_serve)
+               bench_distributed, bench_fused_mlp, bench_memory_bound,
+               bench_schedules, bench_grid_swizzle, bench_serve)
 from .common import begin_capture, end_capture, write_bench_json
 
 # (display name, json key, entry point)
@@ -36,6 +36,7 @@ BENCHES = [
     ("Tab2_Tab3_schedules", "schedules", bench_schedules.main),
     ("Tab4_grid_swizzle", "grid_swizzle", bench_grid_swizzle.main),
     ("Serve_fastpath", "serve", bench_serve.main),
+    ("Sec16_distributed", "distributed", bench_distributed.main),
     ("Sec6_calibration", "calibration", bench_calibration.main),
 ]
 

@@ -81,6 +81,14 @@ class OpSignature:
     block to full K (the streamed A tile spans whole rows, the fwd rule);
     a rope epilogue pins the dim its g tiles rotate along to whole heads
     (dA: the contraction block; dB: the out-column block).
+
+    ``shard`` (DESIGN.md §16) is the launch's
+    :class:`repro.distributed.sharding.ShardSpec` — mesh axes × operand
+    partition × collective — carried opaquely like the chains. It joins
+    the bucket so a sharded launch never shares a memo cell with its
+    single-device twin (the candidate set is the same — per-rank local
+    shapes are what's scored — but the plan audit and pretuned tables key
+    on it).
     """
 
     op: str
@@ -90,6 +98,7 @@ class OpSignature:
     epilogue: Optional[object] = None
     prologue: Optional[object] = None
     variant: str = ""
+    shard: Optional[object] = None
 
     def __post_init__(self):
         if self.op not in OP_KINDS:
@@ -122,7 +131,7 @@ class OpSignature:
         else:
             shape = tuple(self.shape)
         return (self.op, shape, self.dtype, self.causal, self.epilogue,
-                self.prologue, self.variant)
+                self.prologue, self.variant, self.shard)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -538,27 +547,44 @@ def _chain_str(chain) -> str:
     return d if isinstance(d, str) else str(d)
 
 
+def _shard_str(shard) -> str:
+    """Stable string form of a ShardSpec for cell keys / plan audits
+    (duck-typed: core never imports repro.distributed)."""
+    if shard is None:
+        return "none"
+    describe = getattr(shard, "describe", None)
+    return describe() if callable(describe) else str(shard)
+
+
 def pretuned_cell_key(sig: OpSignature) -> str:
     """The table key of one policy cell: shape-BUCKET × dtype × chain, as a
     stable string (buckets, not raw shapes, so a table cell covers the same
     launches the in-process memo would)."""
-    op, shape, dtype, causal, ep, pro, variant = sig.bucket()
+    op, shape, dtype, causal, ep, pro, variant, shard = sig.bucket()
     parts = [op, "x".join(str(x) for x in shape), dtype,
              "causal" if causal else "full",
              f"ep={_chain_str(ep)}", f"pro={_chain_str(pro)}"]
     if variant:
         parts.append(f"var={variant}")
+    if shard is not None:
+        parts.append(f"shard={_shard_str(shard)}")
     return "|".join(parts)
 
 
 def pretuned_fusion_key(kind: str, bucket_shape: tuple, dtype: str, *,
                         residual: bool, prenorm: str, backward: bool,
-                        causal: bool, softcap: bool, sink: bool) -> str:
-    """The table key of one fusion-plan cell (mirrors select_fusion's memo)."""
-    return "|".join([kind, "x".join(str(x) for x in bucket_shape), dtype,
-                     f"res={int(residual)}", f"pre={prenorm}",
-                     f"bwd={int(backward)}", f"causal={int(causal)}",
-                     f"cap={int(softcap)}", f"sink={int(sink)}"])
+                        causal: bool, softcap: bool, sink: bool,
+                        shard=None) -> str:
+    """The table key of one fusion-plan cell (mirrors select_fusion's memo).
+    Unsharded cells keep the historical key so shipped tables stay valid;
+    a ShardSpec appends its stable token."""
+    parts = [kind, "x".join(str(x) for x in bucket_shape), dtype,
+             f"res={int(residual)}", f"pre={prenorm}",
+             f"bwd={int(backward)}", f"causal={int(causal)}",
+             f"cap={int(softcap)}", f"sink={int(sink)}"]
+    if shard is not None:
+        parts.append(f"shard={_shard_str(shard)}")
+    return "|".join(parts)
 
 
 def install_pretuned(table: dict, *, arch: Optional[str] = None) -> bool:
@@ -651,6 +677,7 @@ _PLAN_AUDIT: dict = {}
 
 def select_policy(op: str, shape, dtype="bfloat16", *, causal: bool = False,
                   epilogue=None, prologue=None, variant: str = "",
+                  shard=None,
                   swizzle: Optional[SwizzleConfig] = None,
                   cache_sim: bool = False,
                   chip: Optional[pm.ChipSpec] = None) -> KernelPolicy:
@@ -659,6 +686,11 @@ def select_policy(op: str, shape, dtype="bfloat16", *, causal: bool = False,
     ``epilogue``/``prologue`` (gemm/gemm_bwd only) make the candidate set
     and the traffic model chain-aware; the returned policy carries them.
     ``variant`` ('da'|'db', gemm_bwd only) names the fused-backward launch.
+    ``shard`` (a :class:`~repro.distributed.sharding.ShardSpec`, DESIGN.md
+    §16) marks the launch as one rank of a sharded op: the shape passed in
+    is the per-rank LOCAL shape (which is what the candidate set and the
+    traffic model should score), and the spec joins the memo key + audit so
+    a sharded launch never aliases its single-device twin's cell.
     ``swizzle`` pins the traversal order while the block/pipeline axes are
     still searched (the legacy ``gemm(swizzle=...)`` shim and the bwd
     launches, which inherit the fwd traversal, resolve through this).
@@ -678,7 +710,7 @@ def select_policy(op: str, shape, dtype="bfloat16", *, causal: bool = False,
         chip = active_chip()
     sig = OpSignature(op, tuple(int(x) for x in shape), str(dtype),
                       causal=causal, epilogue=epilogue, prologue=prologue,
-                      variant=variant)
+                      variant=variant, shard=shard)
     key = sig.bucket() + (swizzle, bool(cache_sim), chip.name,
                           _PRETUNED["gen"])
     hit = _POLICY_CACHE.get(key)
@@ -835,7 +867,7 @@ def select_fusion(kind: str, shape, dtype="bfloat16", *,
                   residual: bool = True, prenorm: str = "none",
                   backward: bool = False,
                   causal: bool = False, softcap: bool = False,
-                  sink: bool = False,
+                  sink: bool = False, shard=None,
                   chip: Optional[pm.ChipSpec] = None) -> dict:
     """Pick the fused or unfused execution plan for a model-layer chain.
 
@@ -873,6 +905,19 @@ def select_fusion(kind: str, shape, dtype="bfloat16", *,
     GEMM's A-tile prologue (DESIGN.md §10), the unfused plan runs the
     standalone norm pass in front of the eager chain.
 
+    ``shard`` (a :class:`~repro.distributed.sharding.ShardSpec`, DESIGN.md
+    §16) makes the decision sharding-aware: the spec joins the memo /
+    pretuned keys, the chain's collective rides both plans as an
+    interconnect term priced from the ICI roofline and folded into
+    ``dma_bytes`` in HBM-equivalent units (the ranking stays bytes-only),
+    and the returned plan carries ``collective_bytes`` / ``collective_s`` /
+    ``overlap_fraction`` for the chosen side. ``shape`` stays the per-rank
+    LOCAL chain shape. The extra kind ``'gemm_collective'`` (shape
+    (m, n, k), full logical GEMM; requires a shard with an all_gather or
+    reduce_scatter collective) scores the ring-overlapped collective GEMM
+    against the gather-then-GEMM baseline
+    (``perf_model.collective_gemm_model``).
+
     ``backward=True`` scores the chain's *training backward* instead
     (DESIGN.md §11): the fused side is the kernel-side chain transpose
     (saved-preact streams + two fused bwd GEMM launches per fwd GEMM, norm
@@ -890,7 +935,7 @@ def select_fusion(kind: str, shape, dtype="bfloat16", *,
     tokens = 1 << max(0, (shape[0] - 1).bit_length())  # pow2 bucket
     key = (kind, (tokens,) + shape[1:], dtype, bool(residual), prenorm,
            bool(backward), bool(causal), bool(softcap), bool(sink),
-           chip.name, _PRETUNED["gen"])
+           shard, chip.name, _PRETUNED["gen"])
     hit = _PLAN_CACHE.get(key)
     if hit is not None:
         if obs.enabled():
@@ -907,7 +952,8 @@ def select_fusion(kind: str, shape, dtype="bfloat16", *,
                                    residual=bool(residual), prenorm=prenorm,
                                    backward=bool(backward),
                                    causal=bool(causal),
-                                   softcap=bool(softcap), sink=bool(sink))
+                                   softcap=bool(softcap), sink=bool(sink),
+                                   shard=shard)
         cell = (table.get("fusion") or {}).get(fkey)
         if cell is None:
             obs.incr("autotune.pretuned_fusion_miss")
@@ -942,8 +988,35 @@ def select_fusion(kind: str, shape, dtype="bfloat16", *,
                           causal=causal, softcap=softcap, sink=sink,
                           dtype_bytes=db, fused=fused, chip=chip)
                     for fused in (True, False)]
+    elif kind == "gemm_collective":
+        if shard is None or getattr(shard, "collective", "none") not in \
+                ("all_gather", "reduce_scatter"):
+            raise ValueError(
+                "gemm_collective needs a ShardSpec with an all_gather or "
+                f"reduce_scatter collective, got shard={shard!r}")
+        _, n, k = shape
+        variants = [pm.collective_gemm_model(
+                        m=tokens, n=n, k=k, n_shards=shard.n_shards,
+                        dtype_bytes=db, variant=shard.collective,
+                        fused=fused, chip=chip)
+                    for fused in (True, False)]
     else:
         raise ValueError(f"unknown fusion kind {kind!r}")
+    if (shard is not None and kind != "gemm_collective"
+            and getattr(shard, "collective", "none") != "none"):
+        # the §16 interconnect term: the chain's collective rides BOTH
+        # plans (the wire bytes are plan-invariant for a given sharding —
+        # the plans differ on HBM traffic), priced from the ICI roofline
+        # and folded into dma_bytes in HBM-equivalent units so the
+        # decision below stays bytes-only. all_to_all chains (expert
+        # dispatch) pay the wire twice: out and back.
+        act_bytes = tokens * shape[1] * db
+        if shard.collective == "all_to_all":
+            act_bytes *= 2
+        variants = [pm.collective_chain_model(
+                        v, collective=shard.collective, nbytes=act_bytes,
+                        n_shards=shard.n_shards, chip=chip)
+                    for v in variants]
     fused, unfused = variants
     plan = dict(
         plan=("fused" if fused["dma_bytes"] < unfused["dma_bytes"]
@@ -956,10 +1029,19 @@ def select_fusion(kind: str, shape, dtype="bfloat16", *,
         # fill in the plan dict every caller reads
         plan["plan"] = pinned_plan
         plan["pretuned"] = True
+    if shard is not None:
+        chosen = fused if plan["plan"] == "fused" else unfused
+        plan.update(shard=_shard_str(shard),
+                    collective_bytes=chosen.get("collective_bytes", 0),
+                    collective_s=chosen.get("collective_s", 0.0),
+                    overlap_fraction=chosen.get("overlap_fraction", 0.0))
     _PLAN_CACHE[key] = plan
     audit = {"chosen": {"plan": plan["plan"],
                         "traffic_reduction": plan["traffic_reduction"],
                         "prenorm": prenorm, "backward": bool(backward),
+                        **({"shard": plan["shard"],
+                            "overlap_fraction": plan["overlap_fraction"]}
+                           if shard is not None else {}),
                         **({"pretuned": True} if pinned_plan else {})},
              "candidates": [
                  {"plan": "fused", "dma_bytes": plan["fused_bytes"],
@@ -978,7 +1060,8 @@ def select_fusion(kind: str, shape, dtype="bfloat16", *,
 
 def policies_for_model(cfg, *, batch: int, seq_len: int,
                        dtype: Optional[str] = None,
-                       decode_len: Optional[int] = None) -> dict:
+                       decode_len: Optional[int] = None,
+                       shard=None) -> dict:
     """Resolve the kernel policies a model built from ``cfg`` will use for a
     (batch, seq_len) bucket. Returns {op_kind: KernelPolicy}; attention-free
     architectures get only the 1-D policies.
@@ -986,7 +1069,13 @@ def policies_for_model(cfg, *, batch: int, seq_len: int,
     ``decode_len`` is the KV-cache slot count of the decode step (an engine
     passes its max_len); the split-KV decode policy resolves against it.
     Windowed layers keep a smaller ring cache and re-resolve their exact
-    shape through the same memoized autotuner at trace time."""
+    shape through the same memoized autotuner at trace time.
+
+    ``shard`` (ShardSpec) additionally warms + journals the SHARDED fusion
+    plans this bucket will execute (the per-rank MoE expert chain and the
+    prenorm-MLP chain with the interconnect term), so a training run's
+    plan audit shows the sharded decisions at pin time rather than deep in
+    the first traced step."""
     dtype = dtype or getattr(cfg, "compute_dtype", "bfloat16")
     h = getattr(cfg, "num_heads", 0)
     d = getattr(cfg, "head_dim", 0) or 0
@@ -1042,6 +1131,19 @@ def policies_for_model(cfg, *, batch: int, seq_len: int,
         out["gemm_mlp_down"] = select_policy(
             "gemm", (tokens, dm, d_ff), dtype,
             epilogue=Epilogue(residual=True, scale=True))
+        if shard is not None:
+            # the sharded plans this bucket executes (DESIGN.md §16): the
+            # residual-free per-rank expert chain for MoE configs, the
+            # plain prenorm chain otherwise — journaled at pin time
+            ns = max(1, shard.n_shards)
+            if getattr(cfg, "moe", None) is not None:
+                loc_f = d_ff if shard.collective == "all_to_all" \
+                    else max(1, d_ff // ns)
+                select_fusion("mlp", (tokens, dm, loc_f, gated), dtype,
+                              residual=False, shard=shard)
+            else:
+                select_fusion("mlp", (tokens, dm, d_ff, gated), dtype,
+                              prenorm=norm_kind, shard=shard)
     return out
 
 

@@ -276,6 +276,23 @@ def default_sweep(smoke: bool = False) -> list:
     return cells
 
 
+def _shard_cells():
+    """Sharded fusion cells (DESIGN.md §16) — built lazily so core only
+    touches repro.distributed when a calibration actually runs."""
+    from repro.distributed.sharding import ShardSpec
+    ep = ShardSpec(mesh=(("model", 4),), partition=(("expert", "model"),),
+                   collective="all_to_all")
+    tp = ShardSpec(mesh=(("model", 4),), partition=(("ffn", "model"),),
+                   collective="all_reduce")
+    ring = ShardSpec(mesh=(("model", 4),), partition=(("rows", "model"),),
+                     collective="all_gather")
+    return [
+        ("mlp", (4096, 2048, 8192, 1), dict(residual=False, shard=ep)),
+        ("mlp", (4096, 2048, 2048, 1), dict(residual=False, shard=tp)),
+        ("gemm_collective", (4096, 4096, 4096), dict(shard=ring)),
+    ]
+
+
 _FUSION_CELLS = [
     # (kind, shape, kwargs) — the chain-plan decisions worth pinning
     ("mlp", (4096, 2048, 8192, 1), dict(prenorm="rmsnorm")),
@@ -447,7 +464,7 @@ def calibrate(cells: Optional[Iterable[OpSignature]] = None, *,
         report["cells"][key] = cell
         obs.incr("calibrate.cells")
 
-    for kind, shape, kw in _FUSION_CELLS:
+    for kind, shape, kw in _FUSION_CELLS + _shard_cells():
         tokens = 1 << max(0, (shape[0] - 1).bit_length())
         plan = autotune.select_fusion(kind, shape, "bfloat16",
                                       chip=pm.V5E, **kw)
@@ -457,9 +474,12 @@ def calibrate(cells: Optional[Iterable[OpSignature]] = None, *,
             prenorm=kw.get("prenorm", "none"),
             backward=kw.get("backward", False),
             causal=kw.get("causal", False),
-            softcap=kw.get("softcap", False), sink=kw.get("sink", False))
+            softcap=kw.get("softcap", False), sink=kw.get("sink", False),
+            shard=kw.get("shard"))
         report["fusion"][fkey] = {
-            "kind": kind, "shape": list(shape), "kwargs": dict(kw),
+            "kind": kind, "shape": list(shape),
+            "kwargs": {k2: (autotune._shard_str(v) if k2 == "shard" else v)
+                       for k2, v in kw.items()},
             "plan": {k2: v for k2, v in plan.items()
                      if k2 not in ("fused", "unfused")}}
 
@@ -476,7 +496,8 @@ def sig_to_json(sig: OpSignature) -> dict:
             "causal": sig.causal,
             "epilogue": autotune._chain_str(sig.epilogue),
             "prologue": autotune._chain_str(sig.prologue),
-            "variant": sig.variant}
+            "variant": sig.variant,
+            "shard": autotune._shard_str(sig.shard)}
 
 
 def save_report(report: dict, path) -> None:

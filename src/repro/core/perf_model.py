@@ -776,3 +776,150 @@ def spec_verify_model(*, batch: int, kv_heads: int, group: int, kv_len: int,
                 kv_stream_ratio=(mean_accepted * serial["kv_bytes"]
                                  / verify["kv_bytes"]
                                  if verify["kv_bytes"] else 0.0))
+
+
+# ---------------------------------------------------------------------------
+# Collective chain models (DESIGN.md §16): the interconnect term.
+#
+# The fusion subsystem's decisions stay bytes-driven (select_fusion ranks
+# plans from modeled dma_bytes alone); these helpers extend that discipline
+# across chips. A collective's wire bytes are priced against the ICI
+# roofline (chip.ici_bw_per_link * chip.ici_links) and expressed back in
+# HBM-time-equivalent bytes, so a sharded plan's score is still "modeled
+# bytes" — just bytes on two fabrics. The overlap columns model the paper's
+# DMA/MMA async-worker pattern one level up: a ring collective's hops hide
+# under the fused panel launches they feed.
+# ---------------------------------------------------------------------------
+
+
+def collective_wire_bytes(kind: str, nbytes: float, n_shards: int) -> float:
+    """Per-chip wire bytes of one ring collective over ``n_shards``.
+
+    ``nbytes`` is the full logical buffer (all_gather output / reduce_scatter
+    input / all_to_all local send buffer). Ring algorithms move (n-1)/n of
+    it per chip; all_reduce = reduce_scatter + all_gather moves it twice.
+    """
+    if n_shards <= 1 or kind == "none":
+        return 0.0
+    frac = (n_shards - 1) / n_shards
+    if kind == "all_reduce":
+        return 2.0 * nbytes * frac
+    if kind in ("all_gather", "reduce_scatter", "all_to_all"):
+        return nbytes * frac
+    raise ValueError(f"unknown collective kind {kind!r}")
+
+
+def collective_model(kind: str, nbytes: float, *, n_shards: int,
+                     chip: ChipSpec = V5E) -> dict:
+    """One collective's wire bytes + ICI-roofline time + ring step count."""
+    wire = collective_wire_bytes(kind, nbytes, n_shards)
+    bw = chip.ici_bw_per_link * chip.ici_links
+    return dict(kind=kind, wire_bytes=int(wire), collective_s=wire / bw,
+                steps=max(0, n_shards - 1))
+
+
+def hbm_equivalent_bytes(wire_bytes: float, chip: ChipSpec = V5E) -> float:
+    """Wire bytes expressed in HBM-time-equivalent bytes — the unit that
+    lets select_fusion keep ranking sharded plans from bytes alone."""
+    return wire_bytes * chip.hbm_bw / (chip.ici_bw_per_link * chip.ici_links)
+
+
+def collective_chain_model(chain: dict, *, collective: str, nbytes: float,
+                           n_shards: int, chip: ChipSpec = V5E) -> dict:
+    """Attach one collective's interconnect term to a §9-§12 chain dict.
+
+    Returns a new chain dict where ``dma_bytes`` additionally carries the
+    wire bytes in HBM-equivalent units (``hbm_dma_bytes`` keeps the pure
+    HBM term), ``time_s`` is the overlapped step time, and
+    ``overlap_fraction`` is the share of the collective hidden under the
+    chain's compute/memory time (0 when there is nothing to hide behind).
+    """
+    coll = collective_model(collective, nbytes, n_shards=n_shards, chip=chip)
+    d = dict(chain)
+    cs = coll["collective_s"]
+    chain_s = d["time_s"]
+    d.update(
+        collective=collective,
+        collective_bytes=coll["wire_bytes"],
+        collective_s=cs,
+        serialized_s=chain_s + cs,
+        overlapped_s=max(chain_s, cs),
+        overlap_fraction=(min(chain_s, cs) / cs) if cs > 0 else 0.0,
+        hbm_dma_bytes=d["dma_bytes"],
+        dma_bytes=int(d["dma_bytes"]
+                      + hbm_equivalent_bytes(coll["wire_bytes"], chip)),
+        time_s=max(chain_s, cs))
+    return d
+
+
+def collective_gemm_model(*, m: int, n: int, k: int, n_shards: int,
+                          dtype_bytes: int = 2, variant: str = "all_gather",
+                          fused: bool = True, chip: ChipSpec = V5E) -> dict:
+    """Ring-overlapped collective GEMM vs gather-then-GEMM (DESIGN.md §16).
+
+    (m, n, k) is the FULL logical GEMM. ``variant``:
+      all_gather      A is row-sharded; the ring circulates A panels while
+                      each previously-arrived panel's GEMM runs.
+      reduce_scatter  the contraction dim is sharded; the ring circulates
+                      fp32 output-panel accumulators between partial-panel
+                      GEMMs.
+
+    fused=True is the ring plan: S panel launches, hop i+1 in flight under
+    panel i's compute, and no HBM round-trip for the gathered operand.
+    fused=False is the serialized baseline: run the collective, materialize
+    its result in HBM (one write + one read of the moved buffer), then one
+    big GEMM. The byte difference is what select_fusion ranks on; the
+    overlap_fraction column is the ring's hidden-communication share.
+    """
+    flops = 2.0 * m * n * k
+    gemm_bytes = float(m * k + k * n + m * n) * dtype_bytes
+    if variant == "all_gather":
+        moved = float(m * k) * dtype_bytes
+    elif variant == "reduce_scatter":
+        moved = float(m * n) * 4            # fp32 accumulator panels
+    else:
+        raise ValueError(f"unknown collective-GEMM variant {variant!r}")
+    coll = collective_model(variant, moved, n_shards=n_shards, chip=chip)
+    cs = coll["collective_s"]
+    if fused:
+        chain = _chain_dict(gemm_bytes, flops, True, dtype_bytes, chip)
+        s = max(1, n_shards)
+        step_s = chain["time_s"] / s
+        hop_s = cs / max(1, s - 1) if s > 1 else 0.0
+        overlapped = step_s + (s - 1) * max(step_s, hop_s)
+        serialized = chain["time_s"] + cs
+        hidden = max(0.0, serialized - overlapped)
+        chain.update(collective=variant,
+                     collective_bytes=coll["wire_bytes"], collective_s=cs,
+                     serialized_s=serialized, overlapped_s=overlapped,
+                     overlap_fraction=min(1.0, hidden / cs) if cs > 0 else 0.0,
+                     hbm_dma_bytes=chain["dma_bytes"],
+                     dma_bytes=int(gemm_bytes
+                                   + hbm_equivalent_bytes(coll["wire_bytes"],
+                                                          chip)),
+                     time_s=overlapped, ring_steps=s)
+        return chain
+    # gather-then-GEMM: the moved buffer round-trips HBM before the launch
+    chain = _chain_dict(gemm_bytes + 2.0 * moved, flops, False, dtype_bytes,
+                        chip)
+    chain.update(collective=variant, collective_bytes=coll["wire_bytes"],
+                 collective_s=cs, serialized_s=chain["time_s"] + cs,
+                 overlapped_s=chain["time_s"] + cs, overlap_fraction=0.0,
+                 hbm_dma_bytes=chain["dma_bytes"],
+                 dma_bytes=int(chain["dma_bytes"]
+                               + hbm_equivalent_bytes(coll["wire_bytes"],
+                                                      chip)),
+                 time_s=chain["time_s"] + cs, ring_steps=1)
+    return chain
+
+
+def partial_softmax_allreduce_model(*, rows: int, head_dim: int,
+                                    n_shards: int,
+                                    chip: ChipSpec = V5E) -> dict:
+    """The sequence-parallel KV term (cache_specs): a decode step over a
+    'model'-sharded kv axis lowers to per-shard partial softmax + one tiny
+    all-reduce of (m, l, weighted-sum) stats — (head_dim + 2) fp32 per
+    (batch, head) row."""
+    nbytes = float(rows) * (head_dim + 2) * 4
+    return collective_model("all_reduce", nbytes, n_shards=n_shards,
+                            chip=chip)

@@ -21,12 +21,101 @@ rather than fail, and report it.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from typing import Optional
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_COLLECTIVES = ("none", "all_to_all", "all_gather", "reduce_scatter",
+                "all_reduce")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardSpec:
+    """Sharding as a first-class plan dimension (DESIGN.md §16).
+
+    What the autotuner needs to know about one *sharded* launch: which mesh
+    axes participate, how the op's operands are partitioned over them, and
+    which collective the chain pays on the wire. Frozen and hashable so it
+    joins :class:`repro.core.autotune.OpSignature` and every memo key —
+    installing a different sharding invalidates cached plans the same way a
+    different dtype would.
+
+    ``mesh``       ((axis_name, size), ...) — participating axes only.
+    ``partition``  ((operand_dim_name, axis_name), ...) — which logical
+                   operand dim is split over which mesh axis ('expert',
+                   'ffn', 'tokens', 'rows', 'contract', ...).
+    ``collective`` the wire pattern of the chain: one of
+                   none | all_to_all | all_gather | reduce_scatter |
+                   all_reduce.
+    """
+
+    mesh: tuple = ()
+    partition: tuple = ()
+    collective: str = "none"
+
+    def __post_init__(self):
+        if self.collective not in _COLLECTIVES:
+            raise ValueError(f"unknown collective {self.collective!r} "
+                             f"(one of {_COLLECTIVES})")
+        names = set()
+        for entry in self.mesh:
+            name, size = entry
+            if not isinstance(name, str) or int(size) < 1:
+                raise ValueError(f"bad mesh entry {entry!r}")
+            names.add(name)
+        for entry in self.partition:
+            dim, axis = entry
+            if axis is not None and axis not in names:
+                raise ValueError(
+                    f"partition {entry!r} names axis {axis!r} not in mesh "
+                    f"{self.mesh!r}")
+
+    @property
+    def n_shards(self) -> int:
+        return math.prod(int(size) for _, size in self.mesh) if self.mesh \
+            else 1
+
+    def axis_size(self, name: str) -> int:
+        for axis, size in self.mesh:
+            if axis == name:
+                return int(size)
+        raise KeyError(name)
+
+    def describe(self) -> str:
+        """Stable compact token for memo/pretuned keys and plan audits."""
+        mesh = ",".join(f"{a}={s}" for a, s in self.mesh)
+        part = ",".join(f"{d}@{a}" for d, a in self.partition)
+        return f"{mesh}|{part}|{self.collective}"
+
+    @classmethod
+    def for_axis(cls, mesh: Mesh, axis: str, *, dim: str,
+                 collective: str) -> "ShardSpec":
+        """One-axis spec from a live jax Mesh (the shard_map common case)."""
+        return cls(mesh=((axis, int(mesh.shape[axis])),),
+                   partition=((dim, axis),), collective=collective)
+
+def train_shard_spec(cfg, mesh: Optional[Mesh],
+                     *, model_axis: str = "model") -> Optional[ShardSpec]:
+    """The ShardSpec a training step's plan decisions should carry for this
+    (cfg, mesh) — None when there is no model-parallel extent. Mirrors the
+    moe_forward impl dispatch: EP (all_to_all) when the expert dim divides
+    the axis, TP (all_reduce) otherwise; dense models price the Megatron
+    MLP all_reduce."""
+    if (mesh is None or model_axis not in mesh.axis_names
+            or mesh.shape[model_axis] == 1):
+        return None
+    moe = getattr(cfg, "moe", None)
+    if (moe is not None and getattr(moe, "shard", "expert") == "expert"
+            and moe.num_experts % mesh.shape[model_axis] == 0):
+        return ShardSpec.for_axis(mesh, model_axis, dim="expert",
+                                  collective="all_to_all")
+    return ShardSpec.for_axis(mesh, model_axis, dim="ffn",
+                              collective="all_reduce")
+
 
 LOGICAL_RULES: dict[Optional[str], tuple[str, ...]] = {
     "batch": ("pod", "data"),
@@ -72,15 +161,32 @@ def shardings_for_tree(axes_tree, shape_tree, mesh: Mesh,
                         is_leaf=lambda x: isinstance(x, tuple))
 
 
+def divisible_axes(dim: int, mesh: Mesh, axes) -> Optional[tuple]:
+    """THE shared divisibility rule: the given mesh axes iff they all exist
+    on the mesh and their product divides ``dim``; None otherwise (the
+    caller replicates). ``batch_specs``, the shard_map MoE batch spec, and
+    ``cache_specs`` all route through this so 'when do we shard a batch-like
+    dim' has exactly one answer."""
+    axes = tuple(a for a in axes if a in mesh.axis_names)
+    if not axes:
+        return None
+    size = math.prod(mesh.shape[a] for a in axes)
+    return axes if dim % size == 0 else None
+
+
+def leaf_nbytes(arr) -> int:
+    """Byte size of an array / ShapeDtypeStruct leaf (the zero1/fsdp sizing
+    rule — one definition, not a per-closure numpy reimport)."""
+    return int(math.prod(arr.shape)) * np.dtype(arr.dtype).itemsize
+
+
 def batch_specs(batch_tree, mesh: Mesh) -> dict:
     """Shard dim0 (global batch) over ('pod','data'); rest replicated.
     Falls back to replication when the batch is smaller than the DP degree
     (e.g. the long_500k single-sequence decode cell)."""
-    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-
     def one(arr):
-        size = math.prod(mesh.shape[a] for a in axes) if axes else 1
-        if axes and arr.shape[0] % size == 0:
+        axes = divisible_axes(arr.shape[0], mesh, ("pod", "data"))
+        if axes:
             return NamedSharding(mesh, P(axes, *([None] * (arr.ndim - 1))))
         return NamedSharding(mesh, P(*([None] * arr.ndim)))
     return jax.tree.map(one, batch_tree)
@@ -133,9 +239,7 @@ def fsdp_shardings(param_shardings, shape_tree, mesh: Mesh,
         return param_shardings
 
     def one(sh, arr):
-        import numpy as _np
-        nbytes = int(_np.prod(arr.shape)) * jax.numpy.dtype(arr.dtype).itemsize
-        if nbytes < min_bytes:
+        if leaf_nbytes(arr) < min_bytes:
             return sh
         out = _shard_free_dim(sh, arr.shape, mesh)
         return out if out is not None else sh
@@ -159,9 +263,9 @@ def cache_specs(cache_tree, mesh: Mesh, *, stacked: bool) -> dict:
         nd = arr.ndim
         spec = [None] * nd
         bdim = lead if nd > lead else 0
-        dsize = math.prod(mesh.shape[a] for a in daxes) if daxes else 1
-        if daxes and arr.shape[bdim] % dsize == 0:
-            spec[bdim] = daxes if len(daxes) > 1 else daxes[0]
+        baxes = divisible_axes(arr.shape[bdim], mesh, daxes)
+        if baxes:
+            spec[bdim] = baxes if len(baxes) > 1 else baxes[0]
         # attention KV caches are the 4(+1)-dim leaves: (..., Hkv, S, hd)
         if nd == 4 + lead and "model" in mesh.axis_names:
             sdim = nd - 2

@@ -4,3 +4,5 @@ from .ops import default_bwd_mode, gemm, gemm_fused  # noqa: F401
 from .ref import gemm_fused_bwd_ref, gemm_fused_ref, gemm_ref  # noqa: F401
 from .kernel import gemm_pallas  # noqa: F401
 from .backward import gemm_fused_bwd, resolve_bwd_policies  # noqa: F401
+from .collective import (gemm_collective, gemm_collective_oracle,  # noqa: F401
+                         gemm_collective_sharded)

@@ -122,12 +122,13 @@ def block_forward(cfg, kind: str, p, x, *, positions=None,
     """Returns (x, aux_loss).
 
     The pre-norm residual stream routes *unnormed* into attention_layer /
-    mlp_forward (``prenorm=`` carries the norm params): the pallas modes
-    fold the ln1/ln2 norms into the QKV / MLP-up GEMM A-tile prologues
-    (DESIGN.md §10); reference mode applies the identical standalone norm
-    inside the layer. MoE FFNs and recurrent cores keep the standalone
-    norm (shard_map fusion and non-GEMM chains are out of scope, see
-    ROADMAP deferred items).
+    mlp_forward / moe_forward (``prenorm=`` carries the norm params): the
+    pallas modes fold the ln1/ln2 norms into the QKV / MLP-up GEMM A-tile
+    prologues (DESIGN.md §10), and the shard_map MoE paths norm the
+    per-rank token slice inside the shard and run the fused expert FFN
+    under collective tracing (DESIGN.md §16); reference mode applies the
+    identical standalone norm inside the layer. Recurrent cores keep the
+    standalone norm (non-GEMM chains, see ROADMAP deferred items).
     """
     aux = jnp.zeros((), jnp.float32)
     rs = cfg.residual_scale
@@ -138,9 +139,9 @@ def block_forward(cfg, kind: str, p, x, *, positions=None,
                             prenorm=norm_params(p, "ln1"))
         x = x + rs * a
         if kind == "moe":
-            h = apply_norm(cfg, x, p, "ln2")
-            m, aux = moe_forward(cfg, p["moe"], h, mesh=mesh,
-                                 data_axes=data_axes, mode=mode)
+            m, aux = moe_forward(cfg, p["moe"], x, mesh=mesh,
+                                 data_axes=data_axes, mode=mode,
+                                 prenorm=norm_params(p, "ln2"))
             x = x + rs * m
         else:
             x = mlp_forward(cfg, p["mlp"], x, mode=mode, residual=x,
@@ -331,9 +332,9 @@ def block_prefill(cfg, kind, p, x, cache, *, positions, mode="reference",
         cache = prefill_attn_cache(cfg, cache, k, v, s, window)
         x = x + cfg.residual_scale * (_merge_heads(o) @ p["attn"]["wo"])
         if kind == "moe":
-            h = apply_norm(cfg, x, p, "ln2")
-            m, _ = moe_forward(cfg, p["moe"], h, mesh=mesh,
-                               data_axes=data_axes, mode=mode)
+            m, _ = moe_forward(cfg, p["moe"], x, mesh=mesh,
+                               data_axes=data_axes, mode=mode,
+                               prenorm=norm_params(p, "ln2"))
             x = x + cfg.residual_scale * m
         else:
             x = mlp_forward(cfg, p["mlp"], x, mode=mode, residual=x,
@@ -363,9 +364,9 @@ def block_decode(cfg, kind, p, x, cache, pos, *, mode="reference", mesh=None,
                                           mode=mode)
         x = x + rs * a
         if kind == "moe":
-            h = apply_norm(cfg, x, p, "ln2")
-            m, _ = moe_forward(cfg, p["moe"], h, mesh=mesh,
-                               data_axes=data_axes, mode=mode)
+            m, _ = moe_forward(cfg, p["moe"], x, mesh=mesh,
+                               data_axes=data_axes, mode=mode,
+                               prenorm=norm_params(p, "ln2"))
             x = x + rs * m
         else:
             x = mlp_forward(cfg, p["mlp"], x, mode=mode, residual=x,
@@ -520,9 +521,9 @@ def block_prefill_paged(cfg, kind, p, x, cache, *, page_rows, slot,
         cache = paged_prefill_attn_cache(cfg, cache, k, v, page_rows)
         x = x + cfg.residual_scale * (_merge_heads(o) @ p["attn"]["wo"])
         if kind == "moe":
-            h = apply_norm(cfg, x, p, "ln2")
-            m, _ = moe_forward(cfg, p["moe"], h, mesh=mesh,
-                               data_axes=data_axes, mode=mode)
+            m, _ = moe_forward(cfg, p["moe"], x, mesh=mesh,
+                               data_axes=data_axes, mode=mode,
+                               prenorm=norm_params(p, "ln2"))
             x = x + cfg.residual_scale * m
         else:
             x = mlp_forward(cfg, p["mlp"], x, mode=mode, residual=x,
@@ -630,9 +631,9 @@ def block_prefill_paged_chunk(cfg, kind, p, x, cache, *, page_rows, start,
         softcap=getattr(cfg, "attn_logit_softcap", None)).astype(x.dtype)
     x = x + cfg.residual_scale * (_merge_heads(o) @ p["attn"]["wo"])
     if kind == "moe":
-        h = apply_norm(cfg, x, p, "ln2")
-        m, _ = moe_forward(cfg, p["moe"], h, mesh=mesh,
-                           data_axes=data_axes, mode=mode)
+        m, _ = moe_forward(cfg, p["moe"], x, mesh=mesh,
+                           data_axes=data_axes, mode=mode,
+                           prenorm=norm_params(p, "ln2"))
         x = x + cfg.residual_scale * m
     else:
         x = mlp_forward(cfg, p["mlp"], x, mode=mode, residual=x,
@@ -710,9 +711,9 @@ def block_decode_paged(cfg, kind, p, x, cache, page_table, lengths, *,
             window=_block_window(cfg, kind), mode=mode)
         x = x + rs * a
         if kind == "moe":
-            h = apply_norm(cfg, x, p, "ln2")
-            m, _ = moe_forward(cfg, p["moe"], h, mesh=mesh,
-                               data_axes=data_axes, mode=mode)
+            m, _ = moe_forward(cfg, p["moe"], x, mesh=mesh,
+                               data_axes=data_axes, mode=mode,
+                               prenorm=norm_params(p, "ln2"))
             x = x + rs * m
         else:
             x = mlp_forward(cfg, p["mlp"], x, mode=mode, residual=x,

@@ -1,3 +1,4 @@
 from .engine import (Engine, GenerationResult, PagedEngine,  # noqa: F401
                      Request, RequestQueue)
+from .topology import ShardedPagedEngine  # noqa: F401
 from . import kv_cache  # noqa: F401

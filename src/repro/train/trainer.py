@@ -133,20 +133,26 @@ class TrainLoopResult:
 
 
 def pin_bucket_policies(model, batch: dict, pinned: dict,
-                        log: Callable = print) -> dict:
+                        log: Callable = print, mesh=None) -> dict:
     """Resolve + pin the kernel policies for this batch's compiled bucket.
 
     XLA compiles one step function per input shape; the autotuner memoizes
     one policy set per shape-bucket — pinning here makes the pairing
-    explicit and reproducible in the training log (DESIGN.md §5).
+    explicit and reproducible in the training log (DESIGN.md §5). With a
+    ``mesh`` carrying a model axis, the plan decisions are scored with the
+    sharded collective chain term (DESIGN.md §16) — a different sharding is
+    a different bucket, the same way a different dtype is.
     """
     inputs = batch.get("inputs") if isinstance(batch, dict) else batch
     if inputs is None or getattr(inputs, "ndim", 0) < 2:
         return pinned
     key = (int(inputs.shape[0]), int(inputs.shape[1]))
     if key not in pinned:
+        from repro.distributed.sharding import train_shard_spec
+
+        shard = train_shard_spec(model.cfg, mesh)
         pols = autotune.policies_for_model(model.cfg, batch=key[0],
-                                           seq_len=key[1])
+                                           seq_len=key[1], shard=shard)
         pinned[key] = pols
         if obs.enabled():   # guard: no f-string on the disabled path
             obs.incr("trainer.bucket_pins")
@@ -207,7 +213,8 @@ def train_loop(model, data_iter, num_steps: int, opt_cfg: AdamWConfig, *,
     while step < num_steps:
         try:
             batch = next(data_iter)
-            pin_bucket_policies(model, batch, pinned_policies, log=log)
+            pin_bucket_policies(model, batch, pinned_policies, log=log,
+                                mesh=mesh)
             t0 = time.perf_counter()
             if failure_injector is not None:
                 failure_injector.maybe_fail(step)
